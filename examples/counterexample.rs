@@ -1,0 +1,42 @@
+//! Figure 4 standalone demo: the finite-grid counterexample where clamped
+//! LDLQ with nearest rounding is *worse* than plain nearest rounding —
+//! the motivation for Algorithm 5 (§5.2) — and Algorithm 5 fixing it.
+//!
+//!     cargo run --release --example counterexample
+
+use quip::harness::figures::make_counterexample;
+use quip::quant::alg5;
+use quip::quant::ldlq::{ldlq, ldlq_with_feedback, round_matrix};
+use quip::quant::proxy_loss;
+use quip::quant::RoundMode;
+
+fn main() {
+    println!("finite-grid counterexample (paper Supplement C.3), 4-bit grid [0,15]:\n");
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>10}",
+        "n", "ldlq(clamp)", "near", "alg5", "ldlq/near"
+    );
+    for n in [16usize, 32, 64, 128] {
+        let (w, h) = make_counterexample(n, 16, 0.01);
+        let l = ldlq(&w, &h, 4, RoundMode::Nearest, 0);
+        let nr = round_matrix(&w, 4, RoundMode::Nearest, 0);
+        // Algorithm 5: constrained feedback + stochastic rounding.
+        let plan = alg5::solve(&h, 0.1, 300, 1e-10);
+        let a5 = ldlq_with_feedback(&w, &plan.u_dot, 4, RoundMode::Stochastic, 0);
+        let (pl, pn, pa) = (
+            proxy_loss(&l, &w, &h),
+            proxy_loss(&nr, &w, &h),
+            proxy_loss(&a5, &w, &h),
+        );
+        println!(
+            "{:>6} {:>14.2} {:>14.2} {:>14.2} {:>9.1}x",
+            n,
+            pl,
+            pn,
+            pa,
+            pl / pn
+        );
+    }
+    println!("\nclamping makes LDLQ's error-feedback explode on this adversarial (W, H);");
+    println!("Algorithm 5's norm-capped feedback stays bounded (Theorem 7).");
+}

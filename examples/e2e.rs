@@ -1,0 +1,185 @@
+//! End-to-end driver — proves all layers compose on a real workload:
+//!
+//!  1. verify the build-time training run (loss curve from train_log)
+//!  2. quantize the model with the full coordinator pipeline (QuIP 2-bit
+//!     and the OPTQ baseline)
+//!  3. evaluate perplexity + zero-shot tasks for fp32 / OPTQ / QuIP
+//!  4. execute the AOT JAX/Pallas artifact through PJRT and cross-check
+//!     its logits against the native engine
+//!  5. serve the quantized model over TCP under concurrent load and
+//!     report latency/throughput
+//!
+//!     make artifacts && cargo run --release --example e2e -- [--model s1]
+//!
+//! The run is recorded in EXPERIMENTS.md.
+
+use quip::coordinator::server::{Client, ServeEngine, Server, ServerConfig};
+use quip::engine::PjrtLm;
+use quip::harness::env::{Env, SPLITS};
+use quip::model::Transformer;
+use quip::quant::{Method, Processing, QuantConfig};
+use quip::runtime::PjrtRuntime;
+use quip::util::cli::Args;
+use quip::util::json::Json;
+use std::sync::Arc;
+
+fn main() -> quip::Result<()> {
+    let args = Args::from_env();
+    let env = Env::load(&args)?;
+    let model = args.opt_or("model", "s1");
+    let bits = args.opt_usize("bits", 2) as u32;
+    let mut record = Json::obj();
+
+    // ---- 1. the training record --------------------------------------
+    println!("=== 1. build-time training record ===");
+    let log_path = env
+        .registry
+        .root
+        .join("models")
+        .join(format!("{model}_train_log.json"));
+    let log = Json::parse(&std::fs::read_to_string(&log_path)?)?;
+    let curve = log.get("curve").and_then(|c| c.as_arr()).unwrap_or(&[]);
+    let first = curve.first().and_then(|p| p.req_f64("loss").ok()).unwrap_or(0.0);
+    let last = curve.last().and_then(|p| p.req_f64("loss").ok()).unwrap_or(0.0);
+    println!(
+        "{model}: {} steps, train loss {first:.3} → {last:.3}, val ppl {:.2}",
+        log.req_f64("steps")? as usize,
+        log.req_f64("final_val_ppl")?
+    );
+    anyhow::ensure!(last < first, "training did not reduce the loss?");
+    record.set("train_log", log.clone());
+
+    // ---- 2+3. quantize + evaluate ------------------------------------
+    println!("\n=== 2/3. quantize ({bits}-bit) + evaluate ===");
+    let ck = env.checkpoint(&model)?;
+    let fp_model = Transformer::from_checkpoint(&ck)?;
+    let fp = env.evaluate(&fp_model);
+    println!("fp32   : wiki {:.2}  ptb {:.2}  c4 {:.2}", fp.ppl["wiki"], fp.ppl["ptb"], fp.ppl["c4"]);
+    record.set("fp32", fp.to_json());
+
+    let mut quip_qm = None;
+    for (label, processing) in [
+        ("optq", Processing::baseline()),
+        ("quip", Processing::incoherent()),
+    ] {
+        let t0 = std::time::Instant::now();
+        let (qm, proxy) = env.quantize(
+            &model,
+            QuantConfig {
+                bits,
+                method: Method::Ldlq,
+                processing,
+                ..Default::default()
+            },
+        )?;
+        let mut m = Transformer::from_checkpoint(&ck)?;
+        qm.apply_to(&mut m)?;
+        let r = env.evaluate(&m);
+        println!(
+            "{label:<6} : wiki {:.2}  ptb {:.2}  c4 {:.2}  (quantized in {:.1}s, proxy {proxy:.3}, {:.2} bpw)",
+            r.ppl["wiki"], r.ppl["ptb"], r.ppl["c4"],
+            t0.elapsed().as_secs_f64(),
+            qm.bits_per_weight()
+        );
+        record.set(label, r.to_json());
+        if label == "quip" {
+            quip_qm = Some(qm);
+        }
+    }
+    let qm = quip_qm.unwrap();
+
+    // ---- 4. PJRT artifact cross-check --------------------------------
+    println!("\n=== 4. AOT artifact through PJRT (Pallas kernel inside) ===");
+    match (
+        env.registry.find_fp32(&model, 1),
+        env.registry.find_quant(&model, bits),
+    ) {
+        (Some(fspec), Some(qspec)) => {
+            let rt = PjrtRuntime::cpu()?;
+            let lm_fp = PjrtLm::fp32(&rt, fspec, &ck)?;
+            let lm_q = PjrtLm::quant(&rt, qspec, &ck, &qm)?;
+            let seq = env.splits["wiki"].tokens[..fspec.seq].to_vec();
+
+            let t0 = std::time::Instant::now();
+            let pj_fp = lm_fp.logits(&[seq.clone()])?;
+            let t_fp = t0.elapsed().as_secs_f64();
+            let t1 = std::time::Instant::now();
+            let pj_q = lm_q.logits(&[seq.clone()])?;
+            let t_q = t1.elapsed().as_secs_f64();
+
+            // Cross-check vs the native Rust forward.
+            let native_fp = fp_model.forward(&seq, None);
+            let mut mq = Transformer::from_checkpoint(&ck)?;
+            qm.apply_to(&mut mq)?;
+            let native_q = mq.forward(&seq, None);
+            let max_d = |a: &[f32], b: &[f32]| {
+                a.iter()
+                    .zip(b)
+                    .fold(0.0f64, |m, (x, y)| m.max((*x as f64 - *y as f64).abs()))
+            };
+            let d_fp = max_d(&native_fp, &pj_fp);
+            let d_q = max_d(&native_q, &pj_q);
+            println!("fp32 : PJRT {t_fp:.2}s, max|Δlogit| vs native = {d_fp:.4}");
+            println!("quant: PJRT {t_q:.2}s, max|Δlogit| vs native = {d_q:.4}");
+            anyhow::ensure!(d_fp < 0.05, "fp32 parity failed");
+            anyhow::ensure!(d_q < 0.2, "quant parity failed");
+            let mut pj = Json::obj();
+            pj.set("fp_max_delta", Json::Num(d_fp));
+            pj.set("quant_max_delta", Json::Num(d_q));
+            record.set("pjrt", pj);
+        }
+        _ => println!("(skipping — no AOT artifacts for {model} @ {bits} bits)"),
+    }
+
+    // ---- 5. serve under load ------------------------------------------
+    println!("\n=== 5. serving the quantized model ===");
+    let m = Arc::new(Transformer::from_checkpoint(&ck)?);
+    let mut server = Server::start(
+        m,
+        ServeEngine::Quant(qm),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+    )?;
+    let addr = server.addr;
+    let clients = 6usize;
+    let reqs = 5usize;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || -> quip::Result<usize> {
+                let mut cl = Client::connect(&addr)?;
+                let mut toks = 0;
+                for r in 0..reqs {
+                    let prompt: Vec<u32> =
+                        (0..5).map(|i| ((c * 13 + r * 5 + i) % 250 + 3) as u32).collect();
+                    toks += cl.request(&prompt, 16)?.0.len();
+                }
+                Ok(toks)
+            })
+        })
+        .collect();
+    let mut tokens = 0;
+    for h in handles {
+        tokens += h.join().unwrap()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{} requests / {tokens} tokens in {wall:.2}s → {:.1} tok/s; {}",
+        clients * reqs,
+        tokens as f64 / wall,
+        server.metrics.summary()
+    );
+    let mut serve = Json::obj();
+    serve.set("tokens_per_s", Json::Num(tokens as f64 / wall));
+    serve.set("metrics", server.metrics.summary());
+    record.set("serving", serve);
+    server.shutdown();
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/e2e.json", record.pretty())?;
+    println!("\nall stages green → results/e2e.json");
+    let _ = SPLITS; // (quiet unused import on --fast paths)
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: quantize one linear layer with every method × processing
+//! combination and watch incoherence processing rescue 2-bit rounding.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! No artifacts needed — weights and Hessian are synthetic.
+
+use quip::linalg::Mat;
+use quip::quant::{quantize_layer, Method, Processing, QuantConfig};
+use quip::util::rng::Rng;
+use quip::util::testkit::random_hessian;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let (m, n) = (64, 128);
+
+    // A weight matrix with outliers — the regime where plain rounding dies.
+    let mut w = Mat::from_fn(m, n, |_, _| rng.uniform(-0.05, 0.05));
+    for _ in 0..24 {
+        let (i, j) = (rng.below(m), rng.below(n));
+        w[(i, j)] = rng.uniform(-1.5, 1.5);
+    }
+    // A low-rank proxy Hessian, like real calibration Hessians (Fig 1).
+    let h = random_hessian(&mut rng, n, n / 8, 1e-3);
+
+    println!("quantizing a {m}x{n} layer, proxy loss tr((Ŵ-W)H(Ŵ-W)ᵀ):\n");
+    println!(
+        "{:<10} {:>6} {:>16} {:>16} {:>8}",
+        "method", "bits", "baseline", "incoherence", "gain"
+    );
+    for method in [Method::Nearest, Method::Ldlq, Method::LdlqRg, Method::Greedy] {
+        for bits in [2u32, 3, 4] {
+            let run = |processing: Processing| {
+                quantize_layer(
+                    &w,
+                    &h,
+                    &QuantConfig {
+                        bits,
+                        method,
+                        processing,
+                        greedy_passes: 5,
+                        ..Default::default()
+                    },
+                    42,
+                )
+                .proxy_loss
+            };
+            let base = run(Processing::baseline());
+            let incp = run(Processing::incoherent());
+            println!(
+                "{:<10} {:>6} {:>16.5} {:>16.5} {:>7.1}x",
+                method.name(),
+                bits,
+                base,
+                incp,
+                base / incp
+            );
+        }
+    }
+
+    println!("\nThe 2-bit rows are the paper's headline: LDLQ+IncP (QuIP) keeps the");
+    println!("proxy loss orders of magnitude below baseline nearest rounding.");
+}

@@ -1,0 +1,78 @@
+//! Serving demo: quantize a model, start the TCP server with the native
+//! quantized engine, fire concurrent clients, report latency/throughput.
+//!
+//!     cargo run --release --example serve -- [--model s0] [--bits 2] [--clients 8]
+
+use quip::coordinator::server::{Client, ServeEngine, Server, ServerConfig};
+use quip::harness::env::Env;
+use quip::model::Transformer;
+use quip::quant::{Method, Processing, QuantConfig};
+use quip::util::cli::Args;
+use std::sync::Arc;
+
+fn main() -> quip::Result<()> {
+    let args = Args::from_env();
+    let env = Env::load(&args)?;
+    let model = args.opt_or("model", "s0");
+    let bits = args.opt_usize("bits", 2) as u32;
+    let clients = args.opt_usize("clients", 8);
+    let reqs_per_client = args.opt_usize("requests", 8);
+    let max_tokens = args.opt_usize("max-tokens", 24);
+
+    let ck = env.checkpoint(&model)?;
+    println!("quantizing {model} to {bits} bits (QuIP)…");
+    let (qm, _) = env.quantize(
+        &model,
+        QuantConfig {
+            bits,
+            method: Method::Ldlq,
+            processing: Processing::incoherent(),
+            ..Default::default()
+        },
+    )?;
+    let m = Arc::new(Transformer::from_checkpoint(&ck)?);
+    let mut server = Server::start(
+        m,
+        ServeEngine::Quant(qm),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+    )?;
+    println!("server up on {} — {clients} clients × {reqs_per_client} requests\n", server.addr);
+
+    let addr = server.addr;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || -> quip::Result<(usize, f64)> {
+                let mut client = Client::connect(&addr)?;
+                let mut tokens = 0usize;
+                let mut lat = 0.0;
+                for r in 0..reqs_per_client {
+                    let prompt: Vec<u32> =
+                        (0..6).map(|i| ((c * 31 + r * 7 + i) % 250 + 3) as u32).collect();
+                    let (out, latency) = client.request(&prompt, max_tokens)?;
+                    tokens += out.len();
+                    lat += latency;
+                }
+                Ok((tokens, lat / reqs_per_client as f64))
+            })
+        })
+        .collect();
+    let mut total_tokens = 0usize;
+    for h in handles {
+        let (tokens, _) = h.join().unwrap()?;
+        total_tokens += tokens;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("total        : {} requests, {total_tokens} tokens in {wall:.2}s",
+             clients * reqs_per_client);
+    println!("throughput   : {:.1} tokens/s, {:.1} requests/s",
+             total_tokens as f64 / wall,
+             (clients * reqs_per_client) as f64 / wall);
+    println!("server view  : {}", server.metrics.summary());
+    server.shutdown();
+    Ok(())
+}

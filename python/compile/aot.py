@@ -1,0 +1,203 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts + manifest.json.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the rust `xla` crate) rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md). All functions are lowered with
+return_tuple=True; the rust side unwraps with `to_tuple1()`.
+
+Artifacts (under artifacts/hlo/):
+  {model}_fp32_b{B}_t{T}.hlo.txt          fp32 prefill/scoring
+  {model}_q{bits}{suffix}_b{B}_t{T}.hlo.txt  quantized forward via the
+                                          Pallas dequant-matmul kernel
+  kernel_q{bits}_m{M}_n{N}_t{T}.hlo.txt   kernel microbench artifact
+
+manifest.json describes every artifact's ordered input list so the rust
+runtime can marshal literals without guessing.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import quip_matmul
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def fp32_input_spec(cfg, b, t):
+    """Ordered inputs: tokens, then params in canonical order."""
+    spec = [("tokens", (b, t), "i32")]
+    for name in M.param_names(cfg):
+        spec.append((name, M.param_shape(cfg, name), "f32"))
+    return spec
+
+
+def qparam_fields(cfg, name, bits, incoherent):
+    """The ordered qparam fields replacing one linear weight."""
+    m, n = M.param_shape(cfg, name)
+    fields = []
+    if bits in (2, 4):
+        nw = -(-n * bits // 32)
+        fields.append(("words", (m, nw), "i32"))
+    else:
+        fields.append(("codes", (m, n), "u8"))
+    fields += [("rowscale", (m,), "f32"), ("rowoff", (m,), "f32")]
+    if incoherent:
+        pu, qu = M.balanced_factor(m)
+        pv, qv = M.balanced_factor(n)
+        fields += [
+            ("dinv", (n,), "f32"),
+            ("vL", (pv, pv), "f32"), ("vR", (qv, qv), "f32"),
+            ("vperm", (n,), "i32"),
+            ("uL", (pu, pu), "f32"), ("uR", (qu, qu), "f32"),
+            ("uperm", (m,), "i32"),
+        ]
+    return fields
+
+
+def quant_input_spec(cfg, bits, incoherent, b, t):
+    """Ordered inputs for the quantized forward + a rebuilder."""
+    linear = set(M.linear_names(cfg))
+    spec = [("tokens", "", (b, t), "i32")]
+    for name in M.param_names(cfg):
+        if name in linear:
+            for field, shape, dtype in qparam_fields(cfg, name, bits, incoherent):
+                spec.append((name, field, shape, dtype))
+        else:
+            spec.append((name, "", M.param_shape(cfg, name), "f32"))
+
+    def build(flat):
+        params, qlayers = {}, {}
+        for (name, field, _, _), arr in zip(spec[1:], flat):
+            if field:
+                qlayers.setdefault(name, {})[field] = arr
+            else:
+                params[name] = arr
+        return params, qlayers
+
+    return spec, build
+
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "u8": jnp.uint8}
+
+
+def lower_fp32(cfg, b, t):
+    spec = fp32_input_spec(cfg, b, t)
+
+    def fn(*flat):
+        tokens, rest = flat[0], flat[1:]
+        params = {name: arr for (name, _, _), arr in zip(spec[1:], rest)}
+        return (M.forward(params, tokens, cfg),)
+
+    args = [sds(shape, DTYPES[d]) for (_, shape, d) in spec]
+    return to_hlo_text(jax.jit(fn).lower(*args)), [
+        {"name": n, "field": "", "shape": list(s), "dtype": d}
+        for (n, s, d) in spec
+    ]
+
+
+def lower_quant(cfg, bits, incoherent, b, t):
+    spec, build = quant_input_spec(cfg, bits, incoherent, b, t)
+
+    def fn(*flat):
+        tokens = flat[0]
+        params, qlayers = build(flat[1:])
+        return (M.quant_forward(params, qlayers, tokens, cfg, incoherent, bits),)
+
+    args = [sds(shape, DTYPES[d]) for (_, _, shape, d) in spec]
+    return to_hlo_text(jax.jit(fn).lower(*args)), [
+        {"name": n, "field": f, "shape": list(s), "dtype": d}
+        for (n, f, s, d) in spec
+    ]
+
+
+def lower_kernel(bits, m, n, t):
+    """Standalone dequant-matmul kernel (throughput microbench)."""
+    if bits in (2, 4):
+        nw = -(-n * bits // 32)
+
+        def fn(words, x):
+            return (quip_matmul.dequant_matmul_packed(words, bits, n, x),)
+
+        args = [sds((m, nw), jnp.int32), sds((t, n), jnp.float32)]
+        spec = [{"name": "words", "field": "", "shape": [m, nw], "dtype": "i32"},
+                {"name": "x", "field": "", "shape": [t, n], "dtype": "f32"}]
+    else:
+        def fn(codes, x):
+            return (quip_matmul.dequant_matmul_u8(codes, x),)
+
+        args = [sds((m, n), jnp.uint8), sds((t, n), jnp.float32)]
+        spec = [{"name": "codes", "field": "", "shape": [m, n], "dtype": "u8"},
+                {"name": "x", "field": "", "shape": [t, n], "dtype": "f32"}]
+    return to_hlo_text(jax.jit(fn).lower(*args)), spec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="s0,s1")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the larger artifacts (CI smoke)")
+    args = ap.parse_args()
+
+    hlo_dir = os.path.join(args.out, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+
+    def emit(fname, text, entry):
+        path = os.path.join(hlo_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = f"hlo/{fname}"
+        manifest["artifacts"].append(entry)
+        print(f"wrote {fname} ({len(text)//1024} KiB)")
+
+    models = args.models.split(",")
+    for name in models:
+        cfg = M.CONFIGS[name]
+        t = 128
+        for b in ([1] if args.quick else [1, 4]):
+            text, spec = lower_fp32(cfg, b, t)
+            emit(f"{name}_fp32_b{b}_t{t}.hlo.txt", text, {
+                "kind": "fp32", "model": name, "batch": b, "seq": t,
+                "inputs": spec,
+            })
+        for bits in ([2] if args.quick else [2, 3, 4]):
+            text, spec = lower_quant(cfg, bits, True, 1, t)
+            emit(f"{name}_q{bits}_incp_b1_t{t}.hlo.txt", text, {
+                "kind": "quant", "model": name, "bits": bits,
+                "incoherent": True, "batch": 1, "seq": t, "inputs": spec,
+            })
+
+    # Kernel microbench artifacts (Table 4 companion).
+    for bits, m, n in ([(2, 512, 512)] if args.quick
+                       else [(2, 512, 512), (4, 512, 512), (3, 512, 512)]):
+        text, spec = lower_kernel(bits, m, n, 16)
+        emit(f"kernel_q{bits}_m{m}_n{n}_t16.hlo.txt", text, {
+            "kind": "kernel", "bits": bits, "m": m, "n": n, "batch": 16,
+            "inputs": spec,
+        })
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Layer 1 — the Pallas QuIP inference kernel: packed-code dequantize +
+matmul. This is the hot spot of quantized inference; it lowers (under
+interpret=True — CPU PJRT cannot run Mosaic custom-calls) into the same
+HLO as the surrounding JAX model, which `aot.py` exports for the Rust
+runtime.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the output
+rows (BM per step); each step pulls a (BM × n/16) int32 code tile into
+VMEM (~4 KiB at 2 bits for BM=128, n=512), unpacks on the VPU with
+shift/mask, and feeds an (BM × n)·(n × T) MXU matmul. The Kronecker
+incoherence transform stays *outside* the kernel as two small dense
+matmuls (MXU-friendly), exactly mirroring the rust native engine.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-row tile. 128 aligns with the MXU systolic dimension.
+BM = 128
+
+
+def _kernel(words_ref, x_ref, o_ref, *, bits: int, n: int):
+    """One grid step: o[bm, T] = unpack(words[bm, nw]) @ x[n, T]."""
+    per = 32 // bits
+    mask = (1 << bits) - 1
+    words = words_ref[...].astype(jnp.uint32)            # (bm, nw)
+    parts = [((words >> (k * bits)) & mask) for k in range(per)]
+    codes = jnp.stack(parts, axis=-1).reshape(words.shape[0], -1)
+    codes = codes[:, :n].astype(jnp.float32)             # (bm, n)
+    o_ref[...] = codes @ x_ref[...]                      # MXU matmul
+
+
+def dequant_matmul_packed(words: jnp.ndarray, bits: int, n: int,
+                          x: jnp.ndarray) -> jnp.ndarray:
+    """y[T, m] = x[T, n] · W_codesᵀ with W codes packed in int32 words.
+
+    words: (m, nw) int32, nw = ceil(n*bits/32); x: (T, n) f32.
+    Returns raw integer-code products; affine dequant is applied by the
+    caller (XLA fuses it).
+    """
+    assert bits in (2, 4)
+    m = words.shape[0]
+    t = x.shape[0]
+    xt = x.T  # (n, T)
+    bm = min(BM, m)
+    assert m % bm == 0, f"m={m} not divisible by tile {bm}"
+    grid = (m // bm,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, words.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((n, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, t), jnp.float32),
+        interpret=True,
+    )(words, xt)
+    return out.T  # (T, m)
+
+
+def _kernel_u8(codes_ref, x_ref, o_ref):
+    o_ref[...] = codes_ref[...].astype(jnp.float32) @ x_ref[...]
+
+
+def dequant_matmul_u8(codes: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """3-bit (or any ≤8-bit) path: codes held as uint8 (m, n)."""
+    m, n = codes.shape
+    t = x.shape[0]
+    bm = min(BM, m)
+    assert m % bm == 0
+    out = pl.pallas_call(
+        _kernel_u8,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, t), jnp.float32),
+        interpret=True,
+    )(codes, x.T)
+    return out.T
+
+
+def vmem_bytes(m: int, n: int, t: int, bits: int, bm: int = BM) -> int:
+    """Analytic VMEM footprint of one grid step (EXPERIMENTS.md §Perf):
+    code tile + activation panel + output tile, all resident."""
+    bm = min(bm, m)
+    words = bm * (-(-n * bits // 32)) * 4
+    xpanel = n * t * 4
+    otile = bm * t * 4
+    unpacked = bm * n * 4  # the dequantized tile before the matmul
+    return words + xpanel + otile + unpacked

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth
+pytest checks the kernels against, and the reference used by hypothesis
+sweeps.
+
+Code packing convention (shared with rust `quant::packed` at the semantic
+level; the PJRT wire format packs codes LSB-first into int32 words):
+  2-bit: 16 codes / word, 4-bit: 8 codes / word, 3-bit: uint8 codes
+  (3 does not divide 32; rust stores a cross-byte bitstream on disk and
+  unpacks to u8 before feeding PJRT).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_codes(codes: np.ndarray, bits: int) -> np.ndarray:
+    """Pack uint8 codes (m, n) into int32 words (m, ceil(n*bits/32)),
+    LSB-first within each word."""
+    assert bits in (2, 4), "packed path supports 2/4 bits"
+    per = 32 // bits
+    m, n = codes.shape
+    nw = -(-n // per)
+    padded = np.zeros((m, nw * per), dtype=np.uint32)
+    padded[:, :n] = codes.astype(np.uint32)
+    words = np.zeros((m, nw), dtype=np.uint32)
+    for k in range(per):
+        words |= padded[:, k::per] << np.uint32(k * bits)
+    return words.astype(np.int32)
+
+
+def unpack_codes_ref(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """Unpack int32 words back to float codes (m, n). jnp, so it can run
+    inside jitted reference code."""
+    per = 32 // bits
+    mask = (1 << bits) - 1
+    w = words.astype(jnp.uint32)
+    parts = [((w >> (k * bits)) & mask) for k in range(per)]
+    # interleave: codes[:, word*per + k]
+    stacked = jnp.stack(parts, axis=-1)  # (m, nw, per)
+    flat = stacked.reshape(w.shape[0], -1)
+    return flat[:, :n].astype(jnp.float32)
+
+
+def dequant_matmul_ref(codes_f32: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[t, m] = x[t, n] · codes[m, n]ᵀ — the raw integer-code matmul.
+    Affine dequantization (scales/offsets) is applied by the caller."""
+    return x @ codes_f32.T
+
+
+def dequant_matmul_packed_ref(words: jnp.ndarray, bits: int, n: int,
+                              x: jnp.ndarray) -> jnp.ndarray:
+    return dequant_matmul_ref(unpack_codes_ref(words, bits, n), x)
+
+
+def kron_apply_ref(xl: jnp.ndarray, xr: jnp.ndarray, perm: jnp.ndarray,
+                   v: jnp.ndarray) -> jnp.ndarray:
+    """y = (L ⊗ R) P v over the last axis of v (v: ..., n). Matches rust
+    `KronOrtho::apply_vec`: (P v)_i = v[perm[i]], reshape p×q, L·Z·Rᵀ."""
+    p, q = xl.shape[0], xr.shape[0]
+    vp = jnp.take(v, perm, axis=-1)
+    z = vp.reshape(v.shape[:-1] + (p, q))
+    y = jnp.einsum("ab,...bc,dc->...ad", xl, z, xr)
+    return y.reshape(v.shape)
+
+
+def kron_apply_t_ref(xl: jnp.ndarray, xr: jnp.ndarray, perm: jnp.ndarray,
+                     v: jnp.ndarray) -> jnp.ndarray:
+    """y = Pᵀ (Lᵀ ⊗ Rᵀ) v — the inverse of kron_apply_ref."""
+    p, q = xl.shape[0], xr.shape[0]
+    z = v.reshape(v.shape[:-1] + (p, q))
+    y = jnp.einsum("ba,...bc,cd->...ad", xl, z, xr).reshape(v.shape)
+    inv = jnp.zeros_like(perm).at[perm].set(jnp.arange(perm.shape[0]))
+    return jnp.take(y, inv, axis=-1)

@@ -1,0 +1,209 @@
+"""Layer 2 — the JAX transformer (build-time only).
+
+Mirrors the Rust `quip::model::transformer` op for op (pre-LN GPT, learned
+positions, tanh-GELU, tied head, linear weights stored (out, in)); parity
+is asserted by the cross-layer golden tests. Provides:
+
+  * `forward`        — fp32 forward (training + fp AOT artifact)
+  * `quant_forward`  — quantized forward whose every linear layer calls the
+    Pallas dequant-matmul kernel and applies QuIP's incoherence transform
+    (the serving artifact)
+  * `init_params` / `param_names` — the canonical parameter ordering shared
+    with `aot.py`'s manifest and the Rust runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import quip_matmul
+from .kernels.ref import kron_apply_ref, kron_apply_t_ref
+
+# Mirrors rust ModelConfig::series().
+CONFIGS = {
+    "s0": dict(d_model=64, n_layers=2, n_heads=4, d_ff=256, vocab=256, max_seq=128),
+    "s1": dict(d_model=128, n_layers=4, n_heads=4, d_ff=512, vocab=256, max_seq=128),
+    "s2": dict(d_model=256, n_layers=6, n_heads=8, d_ff=1024, vocab=256, max_seq=128),
+    "s3": dict(d_model=384, n_layers=8, n_heads=8, d_ff=1536, vocab=256, max_seq=128),
+}
+
+LN_EPS = 1e-5
+
+
+def balanced_factor(n: int):
+    """p·q = n with p ≤ q as balanced as possible. Mirrors rust
+    `linalg::orthogonal::balanced_factor`."""
+    best = (1, n)
+    p = int(n ** 0.5) + 1
+    while p >= 1:
+        if n % p == 0:
+            q = n // p
+            lo, hi = (p, q) if p <= q else (q, p)
+            if hi - lo < best[1] - best[0]:
+                best = (lo, hi)
+            if lo * lo <= n:
+                return best
+        p -= 1
+    return best
+
+
+def param_names(cfg):
+    """Canonical parameter ordering (the AOT input order)."""
+    names = ["embed", "pos_embed"]
+    for b in range(cfg["n_layers"]):
+        names += [
+            f"blk{b}.ln1.g", f"blk{b}.ln1.b",
+            f"blk{b}.attn.wq", f"blk{b}.attn.wk", f"blk{b}.attn.wv",
+            f"blk{b}.attn.wo",
+            f"blk{b}.ln2.g", f"blk{b}.ln2.b",
+            f"blk{b}.mlp.w1", f"blk{b}.mlp.b1",
+            f"blk{b}.mlp.w2", f"blk{b}.mlp.b2",
+        ]
+    names += ["lnf.g", "lnf.b"]
+    return names
+
+
+def linear_names(cfg):
+    out = []
+    for b in range(cfg["n_layers"]):
+        out += [f"blk{b}.attn.wq", f"blk{b}.attn.wk", f"blk{b}.attn.wv",
+                f"blk{b}.attn.wo", f"blk{b}.mlp.w1", f"blk{b}.mlp.w2"]
+    return out
+
+
+def param_shape(cfg, name):
+    d, dff, v, ms = cfg["d_model"], cfg["d_ff"], cfg["vocab"], cfg["max_seq"]
+    if name == "embed":
+        return (v, d)
+    if name == "pos_embed":
+        return (ms, d)
+    if name in ("lnf.g", "lnf.b"):
+        return (d,)
+    leaf = name.split(".", 1)[1]  # blk{i}.<leaf>
+    return {
+        "ln1.g": (d,), "ln1.b": (d,), "ln2.g": (d,), "ln2.b": (d,),
+        "attn.wq": (d, d), "attn.wk": (d, d), "attn.wv": (d, d),
+        "attn.wo": (d, d),
+        "mlp.w1": (dff, d), "mlp.b1": (dff,),
+        "mlp.w2": (d, dff), "mlp.b2": (d,),
+    }[leaf]
+
+
+def init_params(cfg, key):
+    params = {}
+    keys = jax.random.split(key, len(param_names(cfg)))
+    resid_scale = 0.02 / np.sqrt(2.0 * cfg["n_layers"])
+    for k, name in zip(keys, param_names(cfg)):
+        shape = param_shape(cfg, name)
+        if name.endswith(".g") or name == "lnf.g":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith((".b", ".b1", ".b2")) or name.endswith("b1") or name.endswith("b2"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            scale = resid_scale if name.endswith(("wo", "w2")) else 0.02
+            params[name] = (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+    return params
+
+
+def layernorm(x, g, b):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + LN_EPS) * g + b
+
+
+def attention(q, k, v, n_heads):
+    """q,k,v: (B, T, D) → causal MHA output (B, T, D)."""
+    b_, t, d = q.shape
+    hd = d // n_heads
+
+    def split(x):
+        return x.reshape(b_, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("bhid,bhjd->bhij", qh, kh) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhij,bhjd->bhid", probs, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b_, t, d)
+
+
+def forward(params, tokens, cfg):
+    """tokens (B, T) int32 → logits (B, T, V)."""
+    b_, t = tokens.shape
+    x = params["embed"][tokens] + params["pos_embed"][:t][None, :, :]
+    for i in range(cfg["n_layers"]):
+        p = lambda s: params[f"blk{i}.{s}"]
+        ln1 = layernorm(x, p("ln1.g"), p("ln1.b"))
+        q = ln1 @ p("attn.wq").T
+        k = ln1 @ p("attn.wk").T
+        v = ln1 @ p("attn.wv").T
+        a = attention(q, k, v, cfg["n_heads"])
+        x = x + a @ p("attn.wo").T
+        ln2 = layernorm(x, p("ln2.g"), p("ln2.b"))
+        h = jax.nn.gelu(ln2 @ p("mlp.w1").T + p("mlp.b1"), approximate=True)
+        x = x + h @ p("mlp.w2").T + p("mlp.b2")
+    x = layernorm(x, params["lnf.g"], params["lnf.b"])
+    return x @ params["embed"].T
+
+
+def loss_fn(params, tokens, cfg):
+    """Mean next-token cross-entropy over (B, T) int32 tokens."""
+    logits = forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------
+# Quantized forward (the serving artifact).
+# ---------------------------------------------------------------------
+
+def qlinear(x, qp, incoherent, bits):
+    """Apply one quantized linear layer to x (..., n) → (..., m).
+
+    qp fields (all jnp arrays, see aot.py's manifest):
+      words/codes, rowscale (m,), rowoff (m,), dinv (n,),
+      [uL, uR, uperm, vL, vR, vperm] when incoherent. `bits` is static.
+    """
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    xf = x.reshape(-1, n)
+    if incoherent:
+        xf = xf * qp["dinv"][None, :]
+        xf = kron_apply_ref(qp["vL"], qp["vR"], qp["vperm"], xf)
+    if "words" in qp:
+        raw = quip_matmul.dequant_matmul_packed(qp["words"], bits, n, xf)
+    else:
+        raw = quip_matmul.dequant_matmul_u8(qp["codes"], xf)
+    xsum = jnp.sum(xf, axis=-1, keepdims=True)
+    y = raw * qp["rowscale"][None, :] + xsum * qp["rowoff"][None, :]
+    if incoherent:
+        y = kron_apply_t_ref(qp["uL"], qp["uR"], qp["uperm"], y)
+    m = y.shape[-1]
+    return y.reshape(lead + (m,))
+
+
+def quant_forward(params, qlayers, tokens, cfg, incoherent, bits):
+    """Forward with every linear layer quantized. `params` holds the
+    non-linear leftovers (embeddings, LNs, biases); `qlayers` maps linear
+    names to qparam dicts. `incoherent`/`bits` are static (baked into the
+    lowered HLO — one artifact per recipe)."""
+    b_, t = tokens.shape
+    x = params["embed"][tokens] + params["pos_embed"][:t][None, :, :]
+    for i in range(cfg["n_layers"]):
+        p = lambda s: params[f"blk{i}.{s}"]
+        ql = lambda s: qlayers[f"blk{i}.{s}"]
+        ln1 = layernorm(x, p("ln1.g"), p("ln1.b"))
+        q = qlinear(ln1, ql("attn.wq"), incoherent, bits)
+        k = qlinear(ln1, ql("attn.wk"), incoherent, bits)
+        v = qlinear(ln1, ql("attn.wv"), incoherent, bits)
+        a = attention(q, k, v, cfg["n_heads"])
+        x = x + qlinear(a, ql("attn.wo"), incoherent, bits)
+        ln2 = layernorm(x, p("ln2.g"), p("ln2.b"))
+        h = jax.nn.gelu(qlinear(ln2, ql("mlp.w1"), incoherent, bits) + p("mlp.b1"),
+                        approximate=True)
+        x = x + qlinear(h, ql("mlp.w2"), incoherent, bits) + p("mlp.b2")
+    x = layernorm(x, params["lnf.g"], params["lnf.b"])
+    return x @ params["embed"].T

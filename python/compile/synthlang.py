@@ -1,0 +1,266 @@
+"""synthlang — the build-time synthetic corpus + zero-shot task generator.
+
+Stands in for the paper's C4/WikiText2/PTB + LAMBADA/ARC-E/PiQA/StoryCloze
+(see DESIGN.md §2). A seeded probabilistic grammar over a 256-token vocab
+with:
+
+  * subject–verb number agreement (gives graded grammaticality for the
+    multiple-choice tasks),
+  * deterministic idiom pairs  a_i -> b_i  (gives exact cloze answers),
+  * three eval splits with different mixture parameters (wiki/ptb/c4
+    analogs: same grammar, different sentence-length/idiom/adjective rates).
+
+Outputs (under artifacts/data/):
+  vocab.json, train.bin, wiki.bin, ptb.bin, c4.bin   (QTOK binary)
+  tasks_lamb.json  (cloze)        tasks_arce.json (4-way choice)
+  tasks_piqa.json  (2-way choice) tasks_sc.json   (2-way idiom choice)
+
+Everything is consumed by the Rust side (`quip::data`); Python never runs
+at request time.
+"""
+
+import argparse
+import json
+import os
+import random
+import struct
+
+PAD, BOS, EOS = 0, 1, 2
+
+N_NOUN = 24          # singular/plural pairs
+N_VERB = 18          # singular/plural pairs
+N_ADJ = 16
+N_ADV = 8
+N_PREP = 6
+N_NAME = 12
+N_IDIOM = 16         # a_i -> b_i pairs
+VOCAB = 256
+
+
+def build_vocab():
+    toks = ["<pad>", "<bos>", "<eos>"]
+    det_sg = ["the", "a"]
+    det_pl = ["these", "some"]
+    toks += det_sg + det_pl
+    noun_sg = [f"noun{i}" for i in range(N_NOUN)]
+    noun_pl = [f"noun{i}s" for i in range(N_NOUN)]
+    verb_sg = [f"verb{i}s" for i in range(N_VERB)]
+    verb_pl = [f"verb{i}" for i in range(N_VERB)]
+    adjs = [f"adj{i}" for i in range(N_ADJ)]
+    advs = [f"adv{i}" for i in range(N_ADV)]
+    preps = [f"prep{i}" for i in range(N_PREP)]
+    names = [f"name{i}" for i in range(N_NAME)]
+    idiom_a = [f"ida{i}" for i in range(N_IDIOM)]
+    idiom_b = [f"idb{i}" for i in range(N_IDIOM)]
+    toks += noun_sg + noun_pl + verb_sg + verb_pl + adjs + advs
+    toks += preps + names + idiom_a + idiom_b + ["."]
+    topics = [f"topic{i}" for i in range(VOCAB - len(toks))]
+    toks += topics
+    assert len(toks) == VOCAB, len(toks)
+    ids = {t: i for i, t in enumerate(toks)}
+
+    def rng_ids(words):
+        return [ids[w] for w in words]
+
+    groups = {
+        "det_sg": rng_ids(det_sg),
+        "det_pl": rng_ids(det_pl),
+        "noun_sg": rng_ids(noun_sg),
+        "noun_pl": rng_ids(noun_pl),
+        "verb_sg": rng_ids(verb_sg),
+        "verb_pl": rng_ids(verb_pl),
+        "adj": rng_ids(adjs),
+        "adv": rng_ids(advs),
+        "prep": rng_ids(preps),
+        "name": rng_ids(names),
+        "idiom_a": rng_ids(idiom_a),
+        "idiom_b": rng_ids(idiom_b),
+        "period": ids["."],
+        "topic": rng_ids(topics),
+    }
+    return toks, groups
+
+
+class Grammar:
+    """Seeded sentence sampler with tunable mixture parameters."""
+
+    def __init__(self, groups, seed, p_adj=0.35, p_obj=0.6, p_pp=0.3,
+                 p_adv=0.25, p_idiom=0.15, topic_lo=0.0, topic_hi=1.0):
+        self.g = groups
+        self.r = random.Random(seed)
+        self.p_adj = p_adj
+        self.p_obj = p_obj
+        self.p_pp = p_pp
+        self.p_adv = p_adv
+        self.p_idiom = p_idiom
+        # Each split draws topics from a sub-range (domain shift analog).
+        t = groups["topic"]
+        lo = int(topic_lo * len(t))
+        hi = max(lo + 4, int(topic_hi * len(t)))
+        self.topics = t[lo:hi]
+
+    def np_(self, plural=None):
+        """Noun phrase; returns (tokens, is_plural)."""
+        r = self.r
+        if plural is None:
+            plural = r.random() < 0.5
+        if r.random() < 0.2:
+            return [r.choice(self.g["name"])], False
+        det = r.choice(self.g["det_pl" if plural else "det_sg"])
+        toks = [det]
+        if r.random() < self.p_adj:
+            toks.append(r.choice(self.g["adj"]))
+        # Noun index correlates with the chosen idiom domain for structure.
+        idx = r.randrange(N_NOUN)
+        toks.append(self.g["noun_pl" if plural else "noun_sg"][idx])
+        return toks, plural
+
+    def sentence(self):
+        r = self.r
+        toks = []
+        subj, plural = self.np_()
+        toks += subj
+        vi = r.randrange(N_VERB)
+        toks.append(self.g["verb_pl" if plural else "verb_sg"][vi])
+        if r.random() < self.p_obj:
+            obj, _ = self.np_()
+            toks += obj
+        if r.random() < self.p_pp:
+            toks.append(r.choice(self.g["prep"]))
+            toks.append(r.choice(self.topics))
+        if r.random() < self.p_adv:
+            toks.append(r.choice(self.g["adv"]))
+        if r.random() < self.p_idiom:
+            i = r.randrange(N_IDIOM)
+            toks.append(self.g["idiom_a"][i])
+            toks.append(self.g["idiom_b"][i])
+        toks.append(self.g["period"])
+        return toks
+
+    def stream(self, n_tokens):
+        out = [BOS]
+        while len(out) < n_tokens:
+            out += self.sentence()
+        return out[:n_tokens]
+
+
+def write_qtok(path, tokens, vocab_size=VOCAB):
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IIIQ", 0x4B4F5451, 1, vocab_size, len(tokens)))
+        f.write(struct.pack(f"<{len(tokens)}H", *tokens))
+
+
+def make_tasks(groups, seed):
+    """Zero-shot task sets from the grammar's deterministic structure."""
+    r = random.Random(seed)
+    gram = Grammar(groups, seed + 1)
+
+    def ctx_prefix():
+        """A couple of sentences of context ending mid-discourse."""
+        toks = [BOS]
+        for _ in range(r.randrange(1, 3)):
+            toks += gram.sentence()
+        return toks
+
+    lamb = []
+    for _ in range(200):
+        i = r.randrange(N_IDIOM)
+        ctx = ctx_prefix()
+        subj, plural = gram.np_()
+        ctx += subj + [gram.g["verb_pl" if plural else "verb_sg"][r.randrange(N_VERB)]]
+        ctx.append(groups["idiom_a"][i])
+        lamb.append({"kind": "cloze", "context": ctx,
+                     "options": [[groups["idiom_b"][i]]], "answer": 0})
+
+    arce = []
+    for _ in range(150):
+        ctx = ctx_prefix()
+        subj, plural = gram.np_(plural=r.random() < 0.5)
+        ctx += subj
+        vi = r.randrange(N_VERB)
+        good = [groups["verb_pl" if plural else "verb_sg"][vi],
+                r.choice(groups["det_pl" if plural else "det_sg"])]
+        bads = []
+        while len(bads) < 3:
+            wrong_v = groups["verb_sg" if plural else "verb_pl"][r.randrange(N_VERB)]
+            bad = [wrong_v, r.choice(groups["prep"])]
+            if bad != good:
+                bads.append(bad)
+        options = bads[:]
+        answer = r.randrange(4)
+        options.insert(answer, good)
+        arce.append({"kind": "choice", "context": ctx,
+                     "options": options, "answer": answer})
+
+    piqa = []
+    for _ in range(150):
+        ctx = ctx_prefix()
+        subj, plural = gram.np_()
+        ctx += subj
+        vi = r.randrange(N_VERB)
+        good = [groups["verb_pl" if plural else "verb_sg"][vi],
+                r.choice(groups["det_pl" if plural else "det_sg"]),
+                groups["noun_pl" if plural else "noun_sg"][r.randrange(N_NOUN)]]
+        # Scrambled (ungrammatical order) continuation.
+        bad = [good[2], good[0], good[1]]
+        options = [good, bad] if r.random() < 0.5 else [bad, good]
+        answer = options.index(good)
+        piqa.append({"kind": "choice", "context": ctx,
+                     "options": options, "answer": answer})
+
+    sc = []
+    for _ in range(150):
+        i = r.randrange(N_IDIOM)
+        j = (i + 1 + r.randrange(N_IDIOM - 1)) % N_IDIOM
+        ctx = ctx_prefix()
+        ctx.append(groups["idiom_a"][i])
+        options = [[groups["idiom_b"][i]], [groups["idiom_b"][j]]]
+        answer = 0
+        if r.random() < 0.5:
+            options.reverse()
+            answer = 1
+        sc.append({"kind": "choice", "context": ctx,
+                   "options": options, "answer": answer})
+
+    return {"lamb": lamb, "arce": arce, "piqa": piqa, "sc": sc}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-tokens", type=int, default=600_000)
+    ap.add_argument("--eval-tokens", type=int, default=40_000)
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args()
+
+    data_dir = os.path.join(args.out, "data")
+    os.makedirs(data_dir, exist_ok=True)
+
+    toks, groups = build_vocab()
+    with open(os.path.join(data_dir, "vocab.json"), "w") as f:
+        json.dump({"tokens": toks}, f)
+
+    # Train mixes the full topic range; eval splits are shifted mixtures.
+    splits = {
+        "train": Grammar(groups, args.seed, topic_lo=0.0, topic_hi=1.0),
+        "wiki": Grammar(groups, args.seed + 1, p_adj=0.45, p_idiom=0.20,
+                        topic_lo=0.0, topic_hi=0.5),
+        "ptb": Grammar(groups, args.seed + 2, p_adj=0.20, p_obj=0.75,
+                       p_idiom=0.10, topic_lo=0.25, topic_hi=0.75),
+        "c4": Grammar(groups, args.seed + 3, p_pp=0.45, p_adv=0.35,
+                      p_idiom=0.15, topic_lo=0.5, topic_hi=1.0),
+    }
+    for name, gram in splits.items():
+        n = args.train_tokens if name == "train" else args.eval_tokens
+        write_qtok(os.path.join(data_dir, f"{name}.bin"), gram.stream(n))
+        print(f"wrote {name}.bin ({n} tokens)")
+
+    tasks = make_tasks(groups, args.seed + 10)
+    for name, instances in tasks.items():
+        with open(os.path.join(data_dir, f"tasks_{name}.json"), "w") as f:
+            json.dump({"name": name, "instances": instances}, f)
+        print(f"wrote tasks_{name}.json ({len(instances)} instances)")
+
+
+if __name__ == "__main__":
+    main()

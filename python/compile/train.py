@@ -1,0 +1,237 @@
+"""Build-time trainer: trains the model series (s0..s3 stand-ins for the
+paper's OPT size series) on the synthlang corpus for a few hundred steps
+each, logs the loss curves, and writes `QCKP` checkpoints the Rust side
+loads. Runs once under `make artifacts`; never at request time.
+
+Adam is implemented inline (no optax in the offline image).
+"""
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+# (name, steps, batch) — steps scale down as models grow to keep
+# `make artifacts` within a CPU-minutes budget; loss curves are logged so
+# EXPERIMENTS.md records exactly what each checkpoint saw.
+SCHEDULE = [
+    ("s0", 500, 24),
+    ("s1", 450, 16),
+    ("s2", 350, 12),
+    ("s3", 220, 8),
+]
+SEQ = 128
+LR = 3e-3
+WARMUP = 40
+
+
+def read_qtok(path):
+    with open(path, "rb") as f:
+        magic, version, vocab, n = struct.unpack("<IIIQ", f.read(20))
+        assert magic == 0x4B4F5451 and version == 1
+        data = np.frombuffer(f.read(n * 2), dtype="<u2").astype(np.int32)
+    return vocab, data
+
+
+def write_ckpt(path, cfg_name, cfg, params):
+    """QCKP: magic, version, config json, n_tensors, tensors (sorted)."""
+    cfg_json = json.dumps({
+        "name": cfg_name, "d_model": cfg["d_model"], "n_layers": cfg["n_layers"],
+        "n_heads": cfg["n_heads"], "d_ff": cfg["d_ff"], "vocab": cfg["vocab"],
+        "max_seq": cfg["max_seq"],
+    }, separators=(",", ":"))
+    out = bytearray()
+    out += struct.pack("<II", 0x504B4351, 1)
+    b = cfg_json.encode()
+    out += struct.pack("<I", len(b)) + b
+    names = sorted(params.keys())
+    out += struct.pack("<I", len(names))
+    for name in names:
+        arr = np.asarray(params[name], dtype=np.float32)
+        nb = name.encode()
+        out += struct.pack("<I", len(nb)) + nb
+        out += struct.pack("<I", arr.ndim)
+        for d in arr.shape:
+            out += struct.pack("<Q", d)
+        out += arr.astype("<f4").tobytes()
+    with open(path, "wb") as f:
+        f.write(bytes(out))
+
+
+def inject_channel_imbalance(params, cfg, sigma=1.2, seed=77):
+    """Function-preserving outlier-channel injection.
+
+    Large trained LLMs exhibit per-channel outliers (the phenomenon
+    SmoothQuant/LLM.int8 document and the *reason* QuIP's incoherence
+    processing exists). Our briefly-trained tiny models keep near-Gaussian
+    — already incoherent — weights, which hides the paper's 2-bit
+    baseline collapse. This transform recreates the structure exactly,
+    without changing the function: for each LayerNorm feeding linear
+    layers, pick c ~ LogNormal(0, σ) per channel and rewrite
+
+        g ← g·c,  b ← b·c,  W ← W·diag(1/c)   for every consumer W
+
+    (wq/wk/wv share ln1's c; w1 uses ln2's). The model computes the same
+    outputs; the *weights* now have the realistic coherent outlier
+    columns. Documented in DESIGN.md §2.
+    """
+    rng = np.random.default_rng(seed)
+    out = dict(params)
+    for b in range(cfg["n_layers"]):
+        for ln, consumers in [("ln1", ["attn.wq", "attn.wk", "attn.wv"]),
+                              ("ln2", ["mlp.w1"])]:
+            c = np.exp(rng.normal(0.0, sigma, size=cfg["d_model"])).astype(np.float32)
+            out[f"blk{b}.{ln}.g"] = np.asarray(out[f"blk{b}.{ln}.g"]) * c
+            out[f"blk{b}.{ln}.b"] = np.asarray(out[f"blk{b}.{ln}.b"]) * c
+            for w in consumers:
+                out[f"blk{b}.{w}"] = np.asarray(out[f"blk{b}.{w}"]) / c[None, :]
+    return out
+
+
+def read_ckpt(path):
+    """Read a QCKP checkpoint back (transform-only mode + tests)."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    off = 0
+    magic, version = struct.unpack_from("<II", raw, off); off += 8
+    assert magic == 0x504B4351 and version == 1
+    (ln,) = struct.unpack_from("<I", raw, off); off += 4
+    cfg = json.loads(raw[off:off + ln].decode()); off += ln
+    (nt,) = struct.unpack_from("<I", raw, off); off += 4
+    params = {}
+    for _ in range(nt):
+        (sl,) = struct.unpack_from("<I", raw, off); off += 4
+        name = raw[off:off + sl].decode(); off += sl
+        (nd,) = struct.unpack_from("<I", raw, off); off += 4
+        dims = struct.unpack_from(f"<{nd}Q", raw, off); off += 8 * nd
+        cnt = int(np.prod(dims)) if nd else 1
+        arr = np.frombuffer(raw, dtype="<f4", count=cnt, offset=off).reshape(dims)
+        off += cnt * 4
+        params[name] = arr.copy()
+    return cfg, params
+
+
+def adam_init(params):
+    z = lambda: jax.tree.map(jnp.zeros_like, params)
+    return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    mhat_scale = 1.0 / (1 - b1 ** tf)
+    vhat_scale = 1.0 / (1 - b2 ** tf)
+    new = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def batches(tokens, batch, seq, rng):
+    max_start = len(tokens) - seq - 1
+    while True:
+        starts = rng.integers(0, max_start, size=batch)
+        yield np.stack([tokens[s:s + seq + 1] for s in starts])
+
+
+def train_one(name, steps, batch, train_toks, val_toks, out_dir):
+    cfg = M.CONFIGS[name]
+    key = jax.random.PRNGKey(hash(name) & 0x7FFFFFFF)
+    params = M.init_params(cfg, key)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, lr):
+        loss, grads = jax.value_and_grad(M.loss_fn)(params, toks, cfg)
+        params, opt = adam_step(params, grads, opt, lr)
+        return params, opt, loss
+
+    @jax.jit
+    def eval_fn(params, toks):
+        return M.loss_fn(params, toks, cfg)
+
+    rng = np.random.default_rng(42)
+    gen = batches(train_toks, batch, SEQ, rng)
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        lr = LR * min(1.0, (step + 1) / WARMUP) * (1.0 - 0.7 * step / steps)
+        toks = jnp.asarray(next(gen))
+        params, opt, loss = step_fn(params, opt, toks, lr)
+        if step % 20 == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(loss)})
+            print(f"[{name}] step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+
+    # Validation loss on held-out windows.
+    vrng = np.random.default_rng(7)
+    vgen = batches(val_toks, 16, SEQ, vrng)
+    vloss = float(np.mean([float(eval_fn(params, jnp.asarray(next(vgen))))
+                           for _ in range(4)]))
+    print(f"[{name}] val loss {vloss:.4f} ppl {np.exp(vloss):.2f}")
+
+    # Outlier-channel injection (function-preserving; see docstring).
+    np_params = inject_channel_imbalance(
+        {k: np.asarray(v) for k, v in params.items()}, cfg)
+    vloss2 = float(eval_fn({k: jnp.asarray(v) for k, v in np_params.items()},
+                           jnp.asarray(next(vgen))))
+    print(f"[{name}] val loss after channel-imbalance injection {vloss2:.4f} "
+          f"(must match ≈{vloss:.4f})")
+    assert abs(vloss2 - vloss) < 0.15, "imbalance injection changed the model!"
+
+    models_dir = os.path.join(out_dir, "models")
+    os.makedirs(models_dir, exist_ok=True)
+    write_ckpt(os.path.join(models_dir, f"{name}.ckpt"), name, cfg, np_params)
+    with open(os.path.join(models_dir, f"{name}_train_log.json"), "w") as f:
+        json.dump({"name": name, "steps": steps, "batch": batch,
+                   "seq": SEQ, "final_val_loss": vloss,
+                   "final_val_ppl": float(np.exp(vloss)), "curve": log}, f,
+                  indent=1)
+    return vloss
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="")   # comma list; default = all
+    ap.add_argument("--steps-scale", type=float, default=1.0)
+    ap.add_argument("--transform-only", action="store_true",
+                    help="re-apply channel-imbalance injection to existing "
+                         "checkpoints without retraining")
+    args = ap.parse_args()
+
+    if args.transform_only:
+        models_dir = os.path.join(args.out, "models")
+        for name, _, _ in SCHEDULE:
+            path = os.path.join(models_dir, f"{name}.ckpt")
+            if not os.path.exists(path):
+                continue
+            cfg_d, params = read_ckpt(path)
+            cfg = M.CONFIGS[cfg_d["name"]]
+            params = inject_channel_imbalance(params, cfg)
+            write_ckpt(path, cfg_d["name"], cfg, params)
+            print(f"transformed {name}.ckpt")
+        return
+
+    _, train_toks = read_qtok(os.path.join(args.out, "data", "train.bin"))
+    _, val_toks = read_qtok(os.path.join(args.out, "data", "wiki.bin"))
+
+    wanted = set(args.models.split(",")) if args.models else None
+    for name, steps, batch in SCHEDULE:
+        if wanted and name not in wanted:
+            continue
+        steps = max(20, int(steps * args.steps_scale))
+        train_one(name, steps, batch, train_toks, val_toks, args.out)
+
+
+if __name__ == "__main__":
+    main()

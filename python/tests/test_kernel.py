@@ -1,0 +1,106 @@
+"""L1 correctness: the Pallas dequant-matmul kernel vs the pure-jnp oracle,
+with hypothesis sweeping shapes/bit-widths, plus kron-transform inverses.
+This is the CORE kernel correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quip_matmul as K
+from compile.kernels import ref as R
+
+
+def random_case(rng, m, n, t, bits):
+    codes = rng.integers(0, 1 << bits, size=(m, n), dtype=np.uint8)
+    x = rng.standard_normal((t, n)).astype(np.float32)
+    return codes, x
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("m,n,t", [(128, 64, 4), (256, 96, 8), (128, 16, 1)])
+def test_packed_kernel_matches_ref(bits, m, n, t):
+    rng = np.random.default_rng(bits * 100 + m)
+    codes, x = random_case(rng, m, n, t, bits)
+    words = R.pack_codes(codes, bits)
+    got = K.dequant_matmul_packed(jnp.asarray(words), bits, n, jnp.asarray(x))
+    want = x @ codes.astype(np.float32).T
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n,t", [(128, 48, 4), (384, 64, 2)])
+def test_u8_kernel_matches_ref(m, n, t):
+    rng = np.random.default_rng(7)
+    codes, x = random_case(rng, m, n, t, 3)
+    got = K.dequant_matmul_u8(jnp.asarray(codes), jnp.asarray(x))
+    want = x @ codes.astype(np.float32).T
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-4)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(1)
+    for bits in (2, 4):
+        codes = rng.integers(0, 1 << bits, size=(8, 50), dtype=np.uint8)
+        words = R.pack_codes(codes, bits)
+        back = np.asarray(R.unpack_codes_ref(jnp.asarray(words), bits, 50))
+        np.testing.assert_array_equal(back, codes.astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4]),
+    mt=st.integers(1, 4),      # m = 128*mt (kernel tile multiple)
+    n=st.integers(1, 96),
+    t=st.integers(1, 8),
+)
+def test_hypothesis_packed_sweep(bits, mt, n, t):
+    m = 128 * mt
+    rng = np.random.default_rng(bits * 1000 + m + n + t)
+    codes, x = random_case(rng, m, n, t, bits)
+    words = R.pack_codes(codes, bits)
+    got = K.dequant_matmul_packed(jnp.asarray(words), bits, n, jnp.asarray(x))
+    want = x @ codes.astype(np.float32).T
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([12, 16, 24, 36, 64]), seed=st.integers(0, 2**31))
+def test_kron_apply_inverse(n, seed):
+    rng = np.random.default_rng(seed)
+    from compile.model import balanced_factor
+    p, q = balanced_factor(n)
+    # random orthogonal factors via QR
+    ql, _ = np.linalg.qr(rng.standard_normal((p, p)))
+    qr_, _ = np.linalg.qr(rng.standard_normal((q, q)))
+    perm = rng.permutation(n).astype(np.int32)
+    v = rng.standard_normal((3, n)).astype(np.float32)
+    y = R.kron_apply_ref(jnp.asarray(ql, jnp.float32), jnp.asarray(qr_, jnp.float32),
+                         jnp.asarray(perm), jnp.asarray(v))
+    back = R.kron_apply_t_ref(jnp.asarray(ql, jnp.float32), jnp.asarray(qr_, jnp.float32),
+                              jnp.asarray(perm), y)
+    np.testing.assert_allclose(np.asarray(back), v, rtol=1e-4, atol=1e-4)
+
+
+def test_kron_apply_matches_dense():
+    rng = np.random.default_rng(3)
+    p, q = 3, 4
+    n = p * q
+    ql, _ = np.linalg.qr(rng.standard_normal((p, p)))
+    qr_, _ = np.linalg.qr(rng.standard_normal((q, q)))
+    perm = rng.permutation(n).astype(np.int32)
+    pmat = np.zeros((n, n), np.float64)
+    for i, pi in enumerate(perm):
+        pmat[i, pi] = 1.0
+    dense = np.kron(ql, qr_) @ pmat
+    v = rng.standard_normal((n,)).astype(np.float32)
+    got = R.kron_apply_ref(jnp.asarray(ql, jnp.float32), jnp.asarray(qr_, jnp.float32),
+                           jnp.asarray(perm), jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(got), dense @ v, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_estimate_reasonable():
+    # 2-bit, m=512, n=512, T=16 at BM=128 must fit comfortably in 16 MiB.
+    b = K.vmem_bytes(512, 512, 16, 2)
+    assert b < 16 * 1024 * 1024
+    assert b > 0

@@ -1,0 +1,101 @@
+"""L2 correctness: JAX model shapes/causality, quantized-forward vs an
+equivalent dense dequantized forward, and loss sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref as R
+
+CFG = dict(d_model=32, n_layers=2, n_heads=4, d_ff=128, vocab=64, max_seq=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_forward_shapes(params):
+    tokens = jnp.array([[1, 2, 3, 4, 5]], jnp.int32)
+    logits = M.forward(params, tokens, CFG)
+    assert logits.shape == (1, 5, 64)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_causality(params):
+    a = jnp.array([[1, 2, 3, 4]], jnp.int32)
+    b = jnp.array([[1, 2, 3, 60]], jnp.int32)
+    la = np.asarray(M.forward(params, a, CFG))
+    lb = np.asarray(M.forward(params, b, CFG))
+    np.testing.assert_allclose(la[0, :3], lb[0, :3], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(la[0, 3], lb[0, 3])
+
+
+def test_loss_decreases_on_tiny_overfit(params):
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, 64, size=(4, 16)), jnp.int32)
+
+    loss0 = M.loss_fn(params, tokens, CFG)
+
+    @jax.jit
+    def step(p):
+        l, g = jax.value_and_grad(M.loss_fn)(p, tokens, CFG)
+        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g), l
+
+    p = params
+    for _ in range(15):
+        p, l = step(p)
+    assert float(l) < float(loss0) * 0.9
+
+
+def _quantize_dense(w, bits, rng):
+    """Trivial per-row min-max quantization (numpy) for parity testing."""
+    lo = w.min(axis=1, keepdims=True)
+    hi = w.max(axis=1, keepdims=True)
+    q = (1 << bits) - 1
+    codes = np.clip(np.round((w - lo) / (hi - lo) * q), 0, q).astype(np.uint8)
+    rowscale = ((hi - lo) / q)[:, 0].astype(np.float32)
+    rowoff = lo[:, 0].astype(np.float32)
+    deq = codes.astype(np.float32) * rowscale[:, None] + rowoff[:, None]
+    return codes, rowscale, rowoff, deq
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_quant_forward_matches_dense_dequant(params, bits):
+    """quant_forward(baseline processing) must equal forward() run on the
+    dequantized weights — the kernel+affine path is exact."""
+    rng = np.random.default_rng(5)
+    qlayers = {}
+    dense_params = dict(params)
+    for name in M.linear_names(CFG):
+        w = np.asarray(params[name])
+        codes, rowscale, rowoff, deq = _quantize_dense(w, bits, rng)
+        words = R.pack_codes(codes, bits)
+        qlayers[name] = {
+            "words": jnp.asarray(words),
+            "rowscale": jnp.asarray(rowscale),
+            "rowoff": jnp.asarray(rowoff),
+        }
+        dense_params[name] = jnp.asarray(deq)
+    tokens = jnp.array([[1, 5, 9, 13, 2]], jnp.int32)
+    got = M.quant_forward(params, qlayers, tokens, CFG, incoherent=False,
+                          bits=bits)
+    want = M.forward(dense_params, tokens, CFG)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_param_names_cover_all_params(params):
+    assert set(M.param_names(CFG)) == set(params.keys())
+    for name in M.param_names(CFG):
+        assert tuple(params[name].shape) == tuple(M.param_shape(CFG, name)), name
+
+
+def test_balanced_factor_matches_rust_cases():
+    assert M.balanced_factor(64) == (8, 8)
+    assert M.balanced_factor(12) == (3, 4)
+    assert M.balanced_factor(7) == (1, 7)
+    assert M.balanced_factor(768) == (24, 32)
+    assert M.balanced_factor(1024) == (32, 32)

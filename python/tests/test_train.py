@@ -1,0 +1,59 @@
+"""Trainer plumbing: QCKP write/read round-trip and the function-preserving
+channel-imbalance injection."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import train as T
+
+CFG = dict(d_model=32, n_layers=2, n_heads=4, d_ff=128, vocab=64, max_seq=32)
+
+
+def test_ckpt_roundtrip(tmp_path):
+    params = {k: np.asarray(v) for k, v in
+              M.init_params(CFG, jax.random.PRNGKey(1)).items()}
+    path = str(tmp_path / "t.ckpt")
+    T.write_ckpt(path, "t", CFG, params)
+    cfg2, back = T.read_ckpt(path)
+    assert cfg2["d_model"] == 32 and cfg2["name"] == "t"
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(back[k], params[k].astype(np.float32))
+
+
+def test_channel_imbalance_preserves_function():
+    params = M.init_params(CFG, jax.random.PRNGKey(2))
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    out = T.inject_channel_imbalance(np_params, CFG, sigma=1.2, seed=3)
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, 64, size=(2, 16)), jnp.int32)
+    a = M.forward(params, tokens, CFG)
+    b = M.forward({k: jnp.asarray(v) for k, v in out.items()}, tokens, CFG)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3)
+
+
+def test_channel_imbalance_creates_outlier_columns():
+    params = {k: np.asarray(v) for k, v in
+              M.init_params(CFG, jax.random.PRNGKey(4)).items()}
+    out = T.inject_channel_imbalance(params, CFG, sigma=1.2, seed=5)
+    w = out["blk0.attn.wq"]
+    col_norms = np.linalg.norm(w, axis=0)
+    spread = col_norms.max() / np.median(col_norms)
+    # LogNormal(0, 1.2) over 32 channels: max/median ≈ e^{2.2σ} ≫ Gaussian's ~1.3
+    assert spread > 3.0, f"column-norm spread only {spread:.1f}"
+    # untouched layers stay untouched
+    np.testing.assert_array_equal(out["blk0.attn.wo"], params["blk0.attn.wo"])
+
+
+def test_adam_reduces_loss():
+    params = M.init_params(CFG, jax.random.PRNGKey(6))
+    opt = T.adam_init(params)
+    tokens = jnp.asarray(
+        np.random.default_rng(1).integers(0, 64, size=(4, 17)), jnp.int32)
+    loss0 = float(M.loss_fn(params, tokens, CFG))
+    for _ in range(20):
+        loss, grads = jax.value_and_grad(M.loss_fn)(params, tokens, CFG)
+        params, opt = T.adam_step(params, grads, opt, 1e-2)
+    assert float(loss) < loss0 * 0.9

@@ -1,0 +1,68 @@
+//! Quantization-time benchmarks: LDLQ vs OPTQ vs greedy per layer size,
+//! and the cost breakdown of incoherence processing (Alg 1/2).
+
+use quip::linalg::Mat;
+use quip::quant::incoherence::{postprocess, preprocess, Processing};
+use quip::quant::{quantize_layer, Method, QuantConfig};
+use quip::util::rng::Rng;
+use quip::util::testkit::random_hessian;
+use quip::util::timer::{bench, report};
+
+fn main() {
+    let mut rng = Rng::new(2);
+    for n in [128usize, 256, 512] {
+        let m = n;
+        let w = Mat::from_fn(m, n, |_, _| rng.uniform(-0.1, 0.1));
+        let h = random_hessian(&mut rng, n, n / 4, 1e-3);
+
+        for (name, method) in [
+            ("ldlq", Method::Ldlq),
+            ("optq", Method::Optq),
+            ("greedy", Method::Greedy),
+            ("near", Method::Nearest),
+        ] {
+            let cfg = QuantConfig {
+                bits: 2,
+                method,
+                processing: Processing::incoherent(),
+                greedy_passes: 5,
+                ..Default::default()
+            };
+            let s = bench(1, 3, || quantize_layer(&w, &h, &cfg, 1));
+            report(&format!("quantize_{name}_{m}x{n}"), &s);
+        }
+
+        // blocked ("lazy batch") LDLQ vs the plain recurrence
+        {
+            let f = quip::linalg::ldl::udu(&h, 1e-12);
+            let u = f.strictly_upper();
+            let pre = preprocess(&w, &h, 2, &Processing::incoherent(), 7);
+            let s_plain = bench(1, 3, || {
+                quip::quant::ldlq::ldlq_with_feedback(
+                    &pre.wg, &u, 2, quip::quant::RoundMode::Nearest, 0,
+                )
+            });
+            report(&format!("ldlq_core_plain_{m}x{n}"), &s_plain);
+            let s_blk = bench(1, 3, || {
+                quip::quant::ldlq::ldlq_with_feedback_blocked(
+                    &pre.wg, &u, 2, quip::quant::RoundMode::Nearest, 0, 64,
+                )
+            });
+            report(&format!("ldlq_core_blocked64_{m}x{n}"), &s_blk);
+        }
+
+        // incoherence processing alone (pre + post)
+        let p = Processing::incoherent();
+        let s_pre = bench(1, 3, || preprocess(&w, &h, 2, &p, 7));
+        report(&format!("incp_preprocess_{m}x{n}"), &s_pre);
+        let pre = preprocess(&w, &h, 2, &p, 7);
+        let codes = quip::quant::ldlq::round_matrix(
+            &pre.wg,
+            2,
+            quip::quant::RoundMode::Nearest,
+            0,
+        );
+        let s_post = bench(1, 5, || postprocess(&codes, &pre.post));
+        report(&format!("incp_postprocess_{m}x{n}"), &s_post);
+    }
+}

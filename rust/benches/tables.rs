@@ -1,0 +1,29 @@
+//! `cargo bench --bench tables` — quick-mode regeneration of the
+//! compute-bound paper tables (the full versions run via `quip table all`).
+//! Keeps every table's code path exercised under the bench harness.
+
+use quip::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(
+        ["--fast".to_string()]
+            .into_iter()
+            .chain(std::env::args().skip(1).filter(|a| a != "--bench")),
+    );
+    // Artifact-independent tables/figures always run:
+    quip::harness::run_table("optq", &Args::parse(["--n".into(), "400".into(), "--m".into(), "256".into()])).unwrap();
+    println!();
+    quip::harness::run_figure("4", &args).unwrap();
+
+    // Artifact-dependent tables run when `make artifacts` has been done.
+    let have_artifacts =
+        quip::runtime::Registry::load(&quip::runtime::registry::default_root()).is_ok();
+    if have_artifacts {
+        for t in ["6", "14", "4"] {
+            println!("\n================ table {t} (fast) ================");
+            quip::harness::run_table(t, &args).unwrap();
+        }
+    } else {
+        println!("\n(make artifacts to enable the model-based tables here)");
+    }
+}

@@ -1,0 +1,174 @@
+//! Dynamic request batcher: requests queue up; a batch is released when
+//! either `max_batch` requests are waiting or the oldest has waited
+//! `max_wait`. Bounded queue provides backpressure (enqueue fails when
+//! full). The serving loop drains batches onto the worker pool.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A queued request (generic payload).
+pub struct Pending<T> {
+    pub id: u64,
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+struct Inner<T> {
+    queue: VecDeque<Pending<T>>,
+    closed: bool,
+}
+
+pub struct Batcher<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub capacity: usize,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration, capacity: usize) -> Batcher<T> {
+        Batcher {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            max_batch: max_batch.max(1),
+            max_wait,
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Enqueue a request; `Err` = queue full (backpressure) or closed.
+    pub fn push(&self, id: u64, payload: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.queue.len() >= self.capacity {
+            return Err(payload);
+        }
+        g.queue.push_back(Pending {
+            id,
+            payload,
+            enqueued: Instant::now(),
+        });
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Block until a batch is ready (≥1 requests, released by size or
+    /// timeout policy). Returns None when closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<Pending<T>>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.queue.len() >= self.max_batch {
+                return Some(drain(&mut g.queue, self.max_batch));
+            }
+            if let Some(front) = g.queue.front() {
+                let waited = front.enqueued.elapsed();
+                if waited >= self.max_wait {
+                    let n = g.queue.len().min(self.max_batch);
+                    return Some(drain(&mut g.queue, n));
+                }
+                let remaining = self.max_wait - waited;
+                let (g2, _timeout) = self.cv.wait_timeout(g, remaining).unwrap();
+                g = g2;
+            } else {
+                if g.closed {
+                    return None;
+                }
+                let (g2, _t) = self
+                    .cv
+                    .wait_timeout(g, Duration::from_millis(50))
+                    .unwrap();
+                g = g2;
+            }
+        }
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+}
+
+fn drain<T>(q: &mut VecDeque<Pending<T>>, n: usize) -> Vec<Pending<T>> {
+    q.drain(..n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn batches_by_size() {
+        let b = Batcher::new(4, Duration::from_secs(10), 100);
+        for i in 0..4 {
+            b.push(i, i).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch.iter().map(|p| p.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn batches_by_timeout() {
+        let b = Batcher::new(100, Duration::from_millis(30), 100);
+        b.push(1, "x").unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let b = Batcher::new(4, Duration::from_secs(1), 2);
+        b.push(1, 1).unwrap();
+        b.push(2, 2).unwrap();
+        assert!(b.push(3, 3).is_err());
+        assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn close_unblocks_consumer() {
+        let b = Arc::new(Batcher::<u32>::new(4, Duration::from_secs(10), 10));
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+        assert!(b.push(1, 1).is_err());
+    }
+
+    #[test]
+    fn no_loss_no_duplication_under_concurrency() {
+        // Property: every pushed id appears in exactly one batch.
+        let b = Arc::new(Batcher::new(8, Duration::from_millis(5), 10_000));
+        let n = 500u64;
+        let producer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    while b.push(i, i).is_err() {
+                        std::thread::yield_now();
+                    }
+                }
+                b.close();
+            })
+        };
+        let mut seen = std::collections::HashSet::new();
+        while let Some(batch) = b.next_batch() {
+            for p in batch {
+                assert!(seen.insert(p.id), "duplicate id {}", p.id);
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(seen.len(), n as usize);
+    }
+}

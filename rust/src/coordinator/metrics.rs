@@ -1,0 +1,131 @@
+//! Serving metrics: counters + streaming latency histogram (log-spaced
+//! buckets), all lock-free on the record path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 40;
+/// Bucket i covers [BASE·GROWTH^i, BASE·GROWTH^{i+1}) seconds.
+const BASE: f64 = 1e-5;
+const GROWTH: f64 = 1.45;
+
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub tokens_out: AtomicU64,
+    latency: [AtomicU64; BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            tokens_out: AtomicU64::new(0),
+            latency: std::array::from_fn(|_| AtomicU64::new(0)),
+            latency_sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_latency(&self, seconds: f64) {
+        let mut idx = 0usize;
+        let mut bound = BASE;
+        while idx < BUCKETS - 1 && seconds >= bound {
+            bound *= GROWTH;
+            idx += 1;
+        }
+        self.latency[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us
+            .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Approximate latency quantile from the histogram.
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self
+            .latency
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        let mut bound = BASE;
+        for &c in counts.iter() {
+            acc += c;
+            if acc >= target {
+                return bound;
+            }
+            bound *= GROWTH;
+        }
+        bound
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+    }
+
+    pub fn summary(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        j.set("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64));
+        j.set("rejected", Json::Num(self.rejected.load(Ordering::Relaxed) as f64));
+        j.set("completed", Json::Num(self.completed.load(Ordering::Relaxed) as f64));
+        j.set("tokens_out", Json::Num(self.tokens_out.load(Ordering::Relaxed) as f64));
+        j.set("mean_latency_s", Json::Num(self.mean_latency()));
+        j.set("p50_s", Json::Num(self.latency_quantile(0.5)));
+        j.set("p95_s", Json::Num(self.latency_quantile(0.95)));
+        j
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_are_ordered() {
+        let m = Metrics::new();
+        for i in 1..=1000 {
+            m.completed.fetch_add(1, Ordering::Relaxed);
+            m.record_latency(i as f64 * 1e-4);
+        }
+        let p50 = m.latency_quantile(0.5);
+        let p95 = m.latency_quantile(0.95);
+        assert!(p50 <= p95);
+        // p50 ≈ 0.05s within a histogram bucket factor
+        assert!((0.02..0.12).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn mean_latency_sane() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.completed.fetch_add(1, Ordering::Relaxed);
+            m.record_latency(0.01);
+        }
+        assert!((m.mean_latency() - 0.01).abs() < 1e-3);
+    }
+
+    #[test]
+    fn summary_is_json() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        let j = m.summary();
+        assert_eq!(j.req_f64("requests").unwrap(), 3.0);
+    }
+}

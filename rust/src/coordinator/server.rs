@@ -1,0 +1,424 @@
+//! Generation server: newline-delimited JSON over TCP.
+//!
+//! Request : {"id": 1, "prompt": [3, 17, 9], "max_tokens": 16,
+//!            "temperature": 0.0}
+//! Response: {"id": 1, "tokens": [...], "latency_ms": 12.3}
+//!   or      {"id": 1, "error": "..."}
+//!
+//! Architecture: an acceptor thread per listener, a shared [`Batcher`]
+//! for admission + dynamic batching (backpressure → {"error":"overloaded"}),
+//! and a drainer that fans batches out to the worker pool, each worker
+//! running the native decode engine against a shared immutable model.
+
+use super::batcher::Batcher;
+use super::generate::{generate, GenParams};
+use super::metrics::Metrics;
+use crate::engine::native::{FpLinears, LinearOps, QuantLinears};
+use crate::model::quantized::QuantizedModel;
+use crate::model::Transformer;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_capacity: usize,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7077".into(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_capacity: 256,
+            workers: crate::util::threadpool::default_threads(),
+        }
+    }
+}
+
+/// The engine the server decodes with.
+pub enum ServeEngine {
+    Fp32,
+    Quant(QuantizedModel),
+}
+
+struct Job {
+    prompt: Vec<u32>,
+    params: GenParams,
+    resp: Mutex<Option<TcpStream>>,
+    received: Instant,
+}
+
+/// A running server (owns its threads; `shutdown` + drop joins them).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    batcher: Arc<Batcher<Job>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving. Binds immediately; returns the handle.
+    pub fn start(
+        model: Arc<Transformer>,
+        engine: ServeEngine,
+        cfg: ServerConfig,
+    ) -> crate::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let batcher = Arc::new(Batcher::<Job>::new(
+            cfg.max_batch,
+            cfg.max_wait,
+            cfg.queue_capacity,
+        ));
+        let qlin: Arc<Option<QuantLinears>> = Arc::new(match engine {
+            ServeEngine::Fp32 => None,
+            ServeEngine::Quant(qm) => Some(QuantLinears::from_model(&qm)?),
+        });
+
+        let mut threads = Vec::new();
+
+        // Acceptor: spawns one (detached) handler thread per connection so
+        // a long-lived connection can never block accept or shutdown.
+        {
+            let stop = Arc::clone(&stop);
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let next_id = Arc::new(AtomicU64::new(1));
+            threads.push(std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let batcher = Arc::clone(&batcher);
+                            let metrics = Arc::clone(&metrics);
+                            let next_id = Arc::clone(&next_id);
+                            let stop = Arc::clone(&stop);
+                            std::thread::spawn(move || {
+                                handle_connection(stream, &batcher, &metrics, &next_id, &stop);
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+
+        // Batch drainer → worker pool.
+        {
+            let stop = Arc::clone(&stop);
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let pool = ThreadPool::new(cfg.workers);
+            threads.push(std::thread::spawn(move || {
+                loop {
+                    let Some(batch) = batcher.next_batch() else {
+                        break;
+                    };
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    for job in batch {
+                        let model = Arc::clone(&model);
+                        let qlin = Arc::clone(&qlin);
+                        let metrics = Arc::clone(&metrics);
+                        pool.execute(move || run_job(job, &model, &qlin, &metrics));
+                    }
+                }
+                pool.wait_idle();
+            }));
+        }
+
+        Ok(Server {
+            addr,
+            metrics,
+            stop,
+            batcher,
+            threads,
+        })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.batcher.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    batcher: &Batcher<Job>,
+    metrics: &Metrics,
+    next_id: &AtomicU64,
+    stop: &AtomicBool,
+) {
+    let _ = stream.set_nonblocking(false);
+    // Idle read timeout so handler threads drain on shutdown even if a
+    // client holds its connection open.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return,
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // keep any partial line accumulated so far
+            }
+            Err(_) => return,
+            Ok(_) => {}
+        }
+        if !line.ends_with('\n') {
+            continue; // partial line (timeout mid-read); keep accumulating
+        }
+        let taken = std::mem::take(&mut line);
+        let line = taken;
+        if line.trim().is_empty() {
+            continue;
+        }
+        metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let parsed = parse_request(&line);
+        let (prompt, params, req_id) = match parsed {
+            Ok(v) => v,
+            Err(e) => {
+                let _ = respond_err(&stream, 0, &e.to_string());
+                continue;
+            }
+        };
+        let out = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        let job = Job {
+            prompt,
+            params,
+            resp: Mutex::new(Some(out)),
+            received: Instant::now(),
+        };
+        let id = next_id.fetch_add(1, Ordering::Relaxed);
+        if let Err(job) = batcher.push(id, job) {
+            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            if let Some(s) = job.resp.lock().unwrap().take() {
+                let _ = respond_err(&s, req_id, "overloaded");
+            }
+        }
+    }
+}
+
+fn parse_request(line: &str) -> crate::Result<(Vec<u32>, GenParams, u64)> {
+    let j = Json::parse(line)?;
+    let prompt: Vec<u32> = j
+        .req("prompt")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("prompt must be an array"))?
+        .iter()
+        .filter_map(|x| x.as_f64().map(|v| v as u32))
+        .collect();
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let params = GenParams {
+        max_tokens: j.get("max_tokens").and_then(|x| x.as_usize()).unwrap_or(16),
+        temperature: j.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0),
+        seed: j.get("seed").and_then(|x| x.as_u64()).unwrap_or(0),
+        stop_token: None,
+    };
+    let id = j.get("id").and_then(|x| x.as_u64()).unwrap_or(0);
+    Ok((prompt, params, id))
+}
+
+fn run_job(
+    job: super::batcher::Pending<Job>,
+    model: &Transformer,
+    qlin: &Option<QuantLinears>,
+    metrics: &Metrics,
+) {
+    let j = job.payload;
+    let fp;
+    let lin: &dyn LinearOps = match qlin {
+        Some(q) => q,
+        None => {
+            fp = FpLinears { model };
+            &fp
+        }
+    };
+    let gen = generate(model, lin, &j.prompt, &j.params);
+    let latency = j.received.elapsed().as_secs_f64();
+    metrics.completed.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .tokens_out
+        .fetch_add(gen.tokens.len() as u64, Ordering::Relaxed);
+    metrics.record_latency(latency);
+    let stream_opt = j.resp.lock().unwrap().take();
+    if let Some(s) = stream_opt {
+        let mut o = Json::obj();
+        o.set("id", Json::Num(job.id as f64));
+        o.set(
+            "tokens",
+            Json::Arr(gen.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        );
+        o.set("latency_ms", Json::Num(latency * 1e3));
+        let _ = writeln_json(&s, &o);
+    }
+}
+
+fn respond_err(stream: &TcpStream, id: u64, msg: &str) -> std::io::Result<()> {
+    let mut o = Json::obj();
+    o.set("id", Json::Num(id as f64));
+    o.set("error", Json::Str(msg.to_string()));
+    writeln_json(stream, &o)
+}
+
+fn writeln_json(mut stream: &TcpStream, j: &Json) -> std::io::Result<()> {
+    let mut line = j.to_string();
+    line.push('\n');
+    stream.write_all(line.as_bytes())
+}
+
+/// Simple blocking client used by examples, benches and tests.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> crate::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    pub fn request(
+        &mut self,
+        prompt: &[u32],
+        max_tokens: usize,
+    ) -> crate::Result<(Vec<u32>, f64)> {
+        let mut o = Json::obj();
+        o.set(
+            "prompt",
+            Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+        );
+        o.set("max_tokens", Json::Num(max_tokens as f64));
+        let mut line = o.to_string();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        let j = Json::parse(&resp)?;
+        if let Some(err) = j.get("error") {
+            anyhow::bail!("server error: {}", err.as_str().unwrap_or("?"));
+        }
+        let tokens: Vec<u32> = j
+            .req("tokens")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|x| x.as_f64().map(|v| v as u32))
+            .collect();
+        let latency = j.req_f64("latency_ms")? / 1e3;
+        Ok((tokens, latency))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::Checkpoint;
+    use crate::model::ModelConfig;
+
+    fn tiny_model() -> Arc<Transformer> {
+        let cfg = ModelConfig::sized("t", 32, 2, 4, 64);
+        Arc::new(Transformer::from_checkpoint(&Checkpoint::random(&cfg, 5)).unwrap())
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let model = tiny_model();
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, ServeEngine::Fp32, cfg).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let (tokens, latency) = client.request(&[1, 2, 3], 5).unwrap();
+        assert_eq!(tokens.len(), 5);
+        assert!(latency >= 0.0);
+        // Pipelined requests on the same connection.
+        let (t2, _) = client.request(&[4, 5], 3).unwrap();
+        assert_eq!(t2.len(), 3);
+        assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let model = tiny_model();
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, ServeEngine::Fp32, cfg).unwrap();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    let (tokens, _) = c.request(&[1, 2, (i % 30) as u32], 4).unwrap();
+                    tokens.len()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 4);
+        }
+        assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 6);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_gets_error() {
+        let model = tiny_model();
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, ServeEngine::Fp32, cfg).unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut s2 = stream.try_clone().unwrap();
+        use std::io::Write as _;
+        s2.write_all(b"{\"nonsense\": true}\n").unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "{line}");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,144 @@
+//! Token streams: the `.bin` corpus format (written by synthlang.py),
+//! sequence chunking for perplexity eval, and calibration sampling
+//! (the paper uses 128 random 2048-token segments; we scale lengths to
+//! the model's context).
+
+use crate::util::rng::Rng;
+
+/// Magic for the token binary format: "QTOK".
+pub const TOK_MAGIC: u32 = 0x4B4F_5451;
+
+/// A flat token stream (one split of the corpus).
+#[derive(Clone, Debug)]
+pub struct TokenStream {
+    pub vocab_size: u32,
+    pub tokens: Vec<u32>,
+}
+
+impl TokenStream {
+    /// Load from the `QTOK` binary: magic u32, version u32, vocab u32,
+    /// count u64, then u16 token ids.
+    pub fn load(path: &std::path::Path) -> crate::Result<TokenStream> {
+        let raw = std::fs::read(path)?;
+        let mut r = crate::util::bytes::Reader::new(&raw);
+        let magic = r.u32()?;
+        anyhow::ensure!(magic == TOK_MAGIC, "bad token file magic {magic:#x}");
+        let version = r.u32()?;
+        anyhow::ensure!(version == 1, "unsupported token file version {version}");
+        let vocab_size = r.u32()?;
+        let n = r.u64()? as usize;
+        let bytes = r.bytes(n * 2)?;
+        let tokens: Vec<u32> = bytes
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes(c.try_into().unwrap()) as u32)
+            .collect();
+        Ok(TokenStream { vocab_size, tokens })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        let mut w = crate::util::bytes::Writer::new();
+        w.u32(TOK_MAGIC);
+        w.u32(1);
+        w.u32(self.vocab_size);
+        w.u64(self.tokens.len() as u64);
+        for &t in &self.tokens {
+            w.bytes(&(t as u16).to_le_bytes());
+        }
+        std::fs::write(path, &w.buf)?;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Non-overlapping sequences of length `seq_len` (for perplexity).
+    /// `limit` caps the number of sequences (0 = all).
+    pub fn sequences(&self, seq_len: usize, limit: usize) -> Vec<&[u32]> {
+        let mut out = Vec::new();
+        let mut pos = 0;
+        while pos + seq_len <= self.tokens.len() {
+            out.push(&self.tokens[pos..pos + seq_len]);
+            pos += seq_len;
+            if limit > 0 && out.len() >= limit {
+                break;
+            }
+        }
+        out
+    }
+
+    /// `count` random windows of length `seq_len` — the calibration set
+    /// (paper §6: "128 random 2048 token segments").
+    pub fn calibration(&self, seq_len: usize, count: usize, seed: u64) -> Vec<Vec<u32>> {
+        let mut rng = Rng::new(seed);
+        let max_start = self.tokens.len().saturating_sub(seq_len);
+        assert!(max_start > 0, "stream shorter than seq_len");
+        (0..count)
+            .map(|_| {
+                let s = rng.below(max_start + 1);
+                self.tokens[s..s + seq_len].to_vec()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(n: usize) -> TokenStream {
+        TokenStream {
+            vocab_size: 64,
+            tokens: (0..n as u32).map(|i| i % 64).collect(),
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("quip_tok_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let s = stream(1000);
+        s.save(&path).unwrap();
+        let s2 = TokenStream::load(&path).unwrap();
+        assert_eq!(s2.vocab_size, 64);
+        assert_eq!(s2.tokens, s.tokens);
+    }
+
+    #[test]
+    fn sequences_are_disjoint_and_sized() {
+        let s = stream(1000);
+        let seqs = s.sequences(128, 0);
+        assert_eq!(seqs.len(), 7); // floor(1000/128)
+        for w in &seqs {
+            assert_eq!(w.len(), 128);
+        }
+        assert_eq!(s.sequences(128, 3).len(), 3);
+    }
+
+    #[test]
+    fn calibration_is_seeded_and_in_bounds() {
+        let s = stream(500);
+        let a = s.calibration(64, 10, 7);
+        let b = s.calibration(64, 10, 7);
+        assert_eq!(a, b);
+        let c = s.calibration(64, 10, 8);
+        assert_ne!(a, c);
+        for w in &a {
+            assert_eq!(w.len(), 64);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("quip_tok_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"not a token file").unwrap();
+        assert!(TokenStream::load(&path).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Data substrate: the synthetic-language ("synthlang") corpus readers,
+//! tokenizer vocabulary, dataset splits, calibration sampling, and the
+//! zero-shot task sets.
+//!
+//! The corpus itself is *generated at build time* by
+//! `python/compile/synthlang.py` (single source of truth, consumed here);
+//! `gen` provides an independent in-Rust generator so unit tests do not
+//! depend on artifacts.
+
+pub mod tokenizer;
+pub mod dataset;
+pub mod tasks;
+pub mod gen;
+
+pub use dataset::TokenStream;
+pub use tasks::{TaskInstance, TaskKind, TaskSet};
+pub use tokenizer::Vocab;

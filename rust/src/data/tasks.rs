@@ -1,0 +1,136 @@
+//! Zero-shot task sets — the LAMBADA / ARC-Easy / PiQA / StoryCloze
+//! analogs built from synthlang (see DESIGN.md §2 substitutions):
+//!
+//! * `Cloze`  — predict the deterministic final token of a context
+//!   (LAMBADA-analog; scored by argmax accuracy).
+//! * `Choice` — pick the most probable continuation among k options
+//!   (2-way ≈ PiQA/StoryCloze, 4-way ≈ ARC-Easy; scored by summed
+//!   log-probability).
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Cloze,
+    Choice,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskInstance {
+    pub kind: TaskKind,
+    /// Context token ids (starts with BOS).
+    pub context: Vec<u32>,
+    /// Cloze: single-element options = [answer token]. Choice: each option
+    /// is a candidate continuation (token ids).
+    pub options: Vec<Vec<u32>>,
+    /// Index of the correct option (cloze: always 0).
+    pub answer: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskSet {
+    pub name: String,
+    pub instances: Vec<TaskInstance>,
+}
+
+impl TaskSet {
+    /// Load from the build-time `tasks.json`:
+    /// `{"name": ..., "instances": [{"kind": "cloze"|"choice",
+    ///   "context": [...], "options": [[...]], "answer": 0}, ...]}`
+    pub fn load(path: &std::path::Path) -> crate::Result<TaskSet> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> crate::Result<TaskSet> {
+        let j = Json::parse(text)?;
+        let name = j.req_str("name")?.to_string();
+        let mut instances = Vec::new();
+        for inst in j
+            .get("instances")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("tasks.json missing 'instances'"))?
+        {
+            let kind = match inst.req_str("kind")? {
+                "cloze" => TaskKind::Cloze,
+                "choice" => TaskKind::Choice,
+                other => anyhow::bail!("unknown task kind '{other}'"),
+            };
+            let context: Vec<u32> = inst
+                .req("context")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_f64().map(|v| v as u32))
+                .collect();
+            let options: Vec<Vec<u32>> = inst
+                .req("options")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|o| {
+                    o.as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|x| x.as_f64().map(|v| v as u32))
+                        .collect()
+                })
+                .collect();
+            let answer = inst.req_usize("answer")?;
+            anyhow::ensure!(!options.is_empty() && answer < options.len());
+            anyhow::ensure!(!context.is_empty());
+            instances.push(TaskInstance {
+                kind,
+                context,
+                options,
+                answer,
+            });
+        }
+        Ok(TaskSet { name, instances })
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "cloze-analog",
+      "instances": [
+        {"kind": "cloze", "context": [1, 5, 9], "options": [[12]], "answer": 0},
+        {"kind": "choice", "context": [1, 4], "options": [[7, 8], [9, 2]], "answer": 1}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let t = TaskSet::parse(SAMPLE).unwrap();
+        assert_eq!(t.name, "cloze-analog");
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.instances[0].kind, TaskKind::Cloze);
+        assert_eq!(t.instances[1].options.len(), 2);
+        assert_eq!(t.instances[1].answer, 1);
+    }
+
+    #[test]
+    fn rejects_bad_answer_index() {
+        let bad = r#"{"name": "x", "instances": [
+            {"kind": "cloze", "context": [1], "options": [[2]], "answer": 3}]}"#;
+        assert!(TaskSet::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let bad = r#"{"name": "x", "instances": [
+            {"kind": "essay", "context": [1], "options": [[2]], "answer": 0}]}"#;
+        assert!(TaskSet::parse(bad).is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Vocabulary: token-id ↔ string mapping, loaded from the build-time
+//! `artifacts/data/vocab.json`.
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub tokens: Vec<String>,
+    map: HashMap<String, u32>,
+}
+
+impl Vocab {
+    pub fn new(tokens: Vec<String>) -> Vocab {
+        let map = tokens
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as u32))
+            .collect();
+        Vocab { tokens, map }
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Vocab> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        let arr = j
+            .get("tokens")
+            .and_then(|t| t.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("vocab.json missing 'tokens'"))?;
+        let tokens: Vec<String> = arr
+            .iter()
+            .map(|t| t.as_str().unwrap_or("<bad>").to_string())
+            .collect();
+        anyhow::ensure!(tokens.len() >= 3, "vocab too small");
+        Ok(Vocab::new(tokens))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn id(&self, tok: &str) -> Option<u32> {
+        self.map.get(tok).copied()
+    }
+
+    pub fn token(&self, id: u32) -> &str {
+        self.tokens
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    /// Whitespace-split encode (synthlang tokens are whole words).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace()
+            .filter_map(|w| self.id(w))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.token(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Vocab {
+        Vocab::new(
+            ["<pad>", "<bos>", "<eos>", "the", "cat", "sits"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = tiny();
+        let ids = v.encode("the cat sits");
+        assert_eq!(ids, vec![3, 4, 5]);
+        assert_eq!(v.decode(&ids), "the cat sits");
+    }
+
+    #[test]
+    fn unknown_words_dropped() {
+        let v = tiny();
+        assert_eq!(v.encode("the dog sits"), vec![3, 5]);
+    }
+
+    #[test]
+    fn load_from_json() {
+        let dir = std::env::temp_dir().join("quip_vocab_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("vocab.json");
+        std::fs::write(
+            &path,
+            r#"{"tokens": ["<pad>", "<bos>", "<eos>", "a", "b"]}"#,
+        )
+        .unwrap();
+        let v = Vocab::load(&path).unwrap();
+        assert_eq!(v.len(), 5);
+        assert_eq!(v.id("b"), Some(4));
+    }
+}

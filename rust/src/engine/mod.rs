@@ -1,0 +1,14 @@
+//! Inference engines.
+//!
+//! * [`native`] — the pure-Rust hot path: fused unpack-dequant matvec with
+//!   QuIP's fast Kronecker incoherence transform, pluggable into a generic
+//!   decode step (this is what Table 4's throughput comparison measures).
+//! * [`pjrt_engine`] — executes the AOT JAX/Pallas artifacts through the
+//!   PJRT runtime for batched prefill/scoring; proves the three layers
+//!   compose (Python authored the graph once; Rust runs it).
+
+pub mod native;
+pub mod pjrt_engine;
+
+pub use native::{decode_step_with, FpLinears, LinearOps, QuantLinears};
+pub use pjrt_engine::PjrtLm;

@@ -1,0 +1,590 @@
+//! Native decode engine: a generic single-token decode step whose six
+//! per-block linears are pluggable, with an fp32 implementation and a
+//! quantized implementation that reads packed codes directly
+//! (unpack-dequant fused into the matvec) and applies the incoherence
+//! transform as two fast Kronecker multiplies — the Rust twin of the
+//! Pallas kernel path.
+
+use crate::linalg::gemm::sdot;
+use crate::linalg::KronOrtho;
+use crate::model::quantized::QuantizedModel;
+use crate::model::transformer::{gelu, layernorm_rows, KvCache, Transformer};
+use crate::quant::grid::GridMap;
+use crate::quant::packed::QuantizedLayer;
+
+/// Linear-layer slots within a block, forward order.
+pub const SLOTS: [&str; 6] = ["attn.wq", "attn.wk", "attn.wv", "attn.wo", "mlp.w1", "mlp.w2"];
+
+/// Pluggable linear application: y = W x for block `blk`, slot `slot`.
+pub trait LinearOps {
+    fn apply(&self, blk: usize, slot: usize, x: &[f32], y: &mut [f32]);
+    fn name(&self) -> &'static str;
+}
+
+/// fp32 linears straight from the model weights.
+pub struct FpLinears<'a> {
+    pub model: &'a Transformer,
+}
+
+impl<'a> LinearOps for FpLinears<'a> {
+    fn apply(&self, blk: usize, slot: usize, x: &[f32], y: &mut [f32]) {
+        let b = &self.model.blocks[blk];
+        let w: &[f32] = match slot {
+            0 => &b.wq,
+            1 => &b.wk,
+            2 => &b.wv,
+            3 => &b.wo,
+            4 => &b.w1,
+            _ => &b.w2,
+        };
+        let n = x.len();
+        for (o, yo) in y.iter_mut().enumerate() {
+            *yo = sdot(x, &w[o * n..(o + 1) * n]);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fp32"
+    }
+}
+
+/// f32 Kronecker operator regenerated from a seed (KronOrtho → f32).
+pub struct KronF32 {
+    p: usize,
+    q: usize,
+    left: Vec<f32>,
+    right: Vec<f32>,
+    perm: Vec<usize>,
+}
+
+impl KronF32 {
+    pub fn from_seed(seed: u64, n: usize, permute: bool) -> KronF32 {
+        let k = KronOrtho::from_seed_with(seed, n, permute);
+        KronF32 {
+            p: k.p,
+            q: k.q,
+            left: k.left.data.iter().map(|&x| x as f32).collect(),
+            right: k.right.data.iter().map(|&x| x as f32).collect(),
+            perm: k.perm,
+        }
+    }
+
+    /// y = V x (see `KronOrtho::apply_vec`).
+    pub fn apply(&self, x: &[f32], y: &mut [f32], scratch: &mut [f32]) {
+        let (p, q) = (self.p, self.q);
+        let n = p * q;
+        debug_assert_eq!(x.len(), n);
+        // z = P x (into y as temp)
+        for i in 0..n {
+            y[i] = x[self.perm[i]];
+        }
+        // scratch = L Z
+        scratch[..n].fill(0.0);
+        for a in 0..p {
+            let lrow = &self.left[a * p..(a + 1) * p];
+            let srow = &mut scratch[a * q..(a + 1) * q];
+            for (aa, &lv) in lrow.iter().enumerate() {
+                if lv == 0.0 {
+                    continue;
+                }
+                let zrow = &y[aa * q..(aa + 1) * q];
+                for b in 0..q {
+                    srow[b] += lv * zrow[b];
+                }
+            }
+        }
+        // y = (L Z) Rᵀ
+        for a in 0..p {
+            let srow = &scratch[a * q..(a + 1) * q];
+            let yrow = &mut y[a * q..(a + 1) * q];
+            for b in 0..q {
+                yrow[b] = sdot(srow, &self.right[b * q..(b + 1) * q]);
+            }
+        }
+    }
+
+    /// y = Vᵀ x.
+    pub fn apply_t(&self, x: &[f32], y: &mut [f32], scratch: &mut [f32]) {
+        let (p, q) = (self.p, self.q);
+        let n = p * q;
+        // scratch = Lᵀ X
+        scratch[..n].fill(0.0);
+        for a in 0..p {
+            let srow_range = a * q..(a + 1) * q;
+            for aa in 0..p {
+                let lv = self.left[aa * p + a];
+                if lv == 0.0 {
+                    continue;
+                }
+                let xrow = &x[aa * q..(aa + 1) * q];
+                let srow = &mut scratch[srow_range.clone()];
+                for b in 0..q {
+                    srow[b] += lv * xrow[b];
+                }
+            }
+        }
+        // z = (Lᵀ X) R → then un-permute into y
+        let mut zrow = vec![0.0f32; q];
+        for a in 0..p {
+            zrow.fill(0.0);
+            let srow = &scratch[a * q..(a + 1) * q];
+            for (bb, &sv) in srow.iter().enumerate() {
+                if sv == 0.0 {
+                    continue;
+                }
+                let rrow = &self.right[bb * q..(bb + 1) * q];
+                for b in 0..q {
+                    zrow[b] += sv * rrow[b];
+                }
+            }
+            for b in 0..q {
+                y[self.perm[a * q + b]] = zrow[b];
+            }
+        }
+    }
+}
+
+/// One quantized linear layer prepared for the native hot path.
+pub struct QuantLinear {
+    pub layer: QuantizedLayer,
+    rowscale: Vec<f32>,
+    rowoff: Vec<f32>,
+    dinv: Option<Vec<f32>>,
+    vkron: Option<KronF32>,
+    ukron: Option<KronF32>,
+}
+
+impl QuantLinear {
+    pub fn new(layer: QuantizedLayer) -> QuantLinear {
+        let (m, _n) = (layer.m, layer.n);
+        let q = crate::quant::grid::levels(layer.bits) as f32;
+        let (rowscale, rowoff) = match &layer.post.grid {
+            GridMap::PerRow { lo, hi, .. } => (
+                lo.iter()
+                    .zip(hi)
+                    .map(|(l, h)| ((h - l) as f32) / q)
+                    .collect(),
+                lo.iter().map(|&l| l as f32).collect(),
+            ),
+            GridMap::Global { s, .. } => (
+                vec![2.0 * (*s as f32) / q; m],
+                vec![-(*s as f32); m],
+            ),
+        };
+        let dinv = layer
+            .post
+            .d_tilde
+            .as_ref()
+            .map(|d| d.iter().map(|&x| (1.0 / x) as f32).collect());
+        let (vkron, ukron) = if layer.post.incoherent {
+            (
+                Some(KronF32::from_seed(layer.post.v_seed, layer.n, layer.post.permute)),
+                Some(KronF32::from_seed(layer.post.u_seed, layer.m, layer.post.permute)),
+            )
+        } else {
+            (None, None)
+        };
+        QuantLinear {
+            layer,
+            rowscale,
+            rowoff,
+            dinv,
+            vkron,
+            ukron,
+        }
+    }
+
+    /// y = Ŵ x without materializing Ŵ: optional diag + Kronecker on the
+    /// input, fused unpack-dequant matvec over packed codes, optional
+    /// Kronecker on the output.
+    pub fn apply(&self, x: &[f32], y: &mut [f32], scratch: &mut Scratch) {
+        let (m, n) = (self.layer.m, self.layer.n);
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(y.len(), m);
+        scratch.ensure(n.max(m));
+        let xbuf = &mut scratch.a[..n];
+        xbuf.copy_from_slice(x);
+        if let Some(d) = &self.dinv {
+            for (xi, di) in xbuf.iter_mut().zip(d) {
+                *xi *= di;
+            }
+        }
+        if let Some(v) = &self.vkron {
+            let (tmp, rest) = scratch.b.split_at_mut(n);
+            v.apply(&scratch.a[..n], tmp, &mut rest[..n]);
+            scratch.a[..n].copy_from_slice(tmp);
+        }
+        let xbuf = &scratch.a[..n];
+        let xsum: f32 = xbuf.iter().sum();
+        // Fused unpack + matvec over the packed bitstream.
+        let target: &mut [f32] = if self.ukron.is_some() {
+            &mut scratch.b[..m]
+        } else {
+            y
+        };
+        self.matvec_codes(xbuf, target);
+        for i in 0..m {
+            target[i] = self.rowscale[i] * target[i] + self.rowoff[i] * xsum;
+        }
+        if let Some(u) = &self.ukron {
+            let (bbuf, rest) = scratch.b.split_at_mut(m);
+            u.apply_t(bbuf, y, &mut rest[..m]);
+        }
+    }
+
+    /// raw_i = Σ_j codes[i,j]·x[j], reading codes straight from the packed
+    /// bitstream.
+    fn matvec_codes(&self, x: &[f32], out: &mut [f32]) {
+        let (m, n) = (self.layer.m, self.layer.n);
+        let bits = self.layer.bits as usize;
+        let packed = &self.layer.packed;
+        match bits {
+            2 => {
+                // 4 codes per byte; row starts are byte-aligned iff n % 4 == 0.
+                if n % 4 == 0 {
+                    let bpr = n / 4;
+                    for i in 0..m {
+                        let row = &packed[i * bpr..(i + 1) * bpr];
+                        let mut acc = 0.0f32;
+                        let mut j = 0;
+                        for &b in row {
+                            acc += (b & 3) as f32 * x[j]
+                                + ((b >> 2) & 3) as f32 * x[j + 1]
+                                + ((b >> 4) & 3) as f32 * x[j + 2]
+                                + ((b >> 6) & 3) as f32 * x[j + 3];
+                            j += 4;
+                        }
+                        out[i] = acc;
+                    }
+                } else {
+                    self.matvec_generic(x, out);
+                }
+            }
+            4 => {
+                if n % 2 == 0 {
+                    let bpr = n / 2;
+                    for i in 0..m {
+                        let row = &packed[i * bpr..(i + 1) * bpr];
+                        let mut acc = 0.0f32;
+                        let mut j = 0;
+                        for &b in row {
+                            acc += (b & 15) as f32 * x[j] + ((b >> 4) & 15) as f32 * x[j + 1];
+                            j += 2;
+                        }
+                        out[i] = acc;
+                    }
+                } else {
+                    self.matvec_generic(x, out);
+                }
+            }
+            _ => self.matvec_generic(x, out),
+        }
+    }
+
+    fn matvec_generic(&self, x: &[f32], out: &mut [f32]) {
+        let (m, n) = (self.layer.m, self.layer.n);
+        let mut row = vec![0u8; n];
+        for i in 0..m {
+            self.layer.codes_row(i, &mut row);
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += row[j] as f32 * x[j];
+            }
+            out[i] = acc;
+        }
+    }
+}
+
+/// Reusable scratch buffers (decode loop is allocation-free after warmup).
+pub struct Scratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch {
+            a: Vec::new(),
+            b: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.a.len() < n {
+            self.a.resize(n, 0.0);
+        }
+        if self.b.len() < 2 * n {
+            self.b.resize(2 * n, 0.0);
+        }
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Quantized linears for a whole model, indexed blk*6 + slot.
+pub struct QuantLinears {
+    pub linears: Vec<QuantLinear>,
+    scratch: std::sync::Mutex<Scratch>,
+}
+
+impl QuantLinears {
+    pub fn from_model(qm: &QuantizedModel) -> crate::Result<QuantLinears> {
+        let cfg = &qm.config;
+        let mut linears = Vec::new();
+        for b in 0..cfg.n_layers {
+            for slot in SLOTS {
+                let name = format!("blk{b}.{slot}");
+                linears.push(QuantLinear::new(qm.layer(&name)?.clone()));
+            }
+        }
+        Ok(QuantLinears {
+            linears,
+            scratch: std::sync::Mutex::new(Scratch::new()),
+        })
+    }
+}
+
+impl LinearOps for QuantLinears {
+    fn apply(&self, blk: usize, slot: usize, x: &[f32], y: &mut [f32]) {
+        let lin = &self.linears[blk * 6 + slot];
+        lin.apply(x, y, &mut self.scratch.lock().unwrap());
+    }
+
+    fn name(&self) -> &'static str {
+        "native-quant"
+    }
+}
+
+/// Generic single-token decode step: uses `model` for embeddings / LNs /
+/// biases / attention and `lin` for the six linears per block. Mirrors
+/// `Transformer::decode_step` (tested for equality with FpLinears).
+pub fn decode_step_with(
+    model: &Transformer,
+    lin: &dyn LinearOps,
+    cache: &mut KvCache,
+    token: u32,
+) -> Vec<f32> {
+    let d = model.cfg.d_model;
+    let nh = model.cfg.n_heads;
+    let hd = model.cfg.head_dim();
+    let pos = cache.len;
+    assert!(pos < model.cfg.max_seq, "context overflow");
+
+    let mut x = vec![0.0f32; d];
+    {
+        let e = &model.embed[(token as usize) * d..(token as usize + 1) * d];
+        let p = &model.pos[pos * d..(pos + 1) * d];
+        for j in 0..d {
+            x[j] = e[j] + p[j];
+        }
+    }
+    let mut ln = vec![0.0f32; d];
+    let mut q = vec![0.0f32; d];
+    for (bi, blk) in model.blocks.iter().enumerate() {
+        layernorm_rows(&x, 1, d, &blk.ln1_g, &blk.ln1_b, &mut ln);
+        lin.apply(bi, 0, &ln, &mut q);
+        let bc = &mut cache.blocks[bi];
+        let koff = pos * d;
+        {
+            let (krow, vrow) = (
+                &mut bc.k[koff..koff + d],
+                &mut bc.v[koff..koff + d],
+            );
+            lin.apply(bi, 1, &ln, krow);
+            lin.apply(bi, 2, &ln, vrow);
+        }
+        let kcache = &bc.k;
+        let vcache = &bc.v;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut attn = vec![0.0f32; d];
+        let mut scores = vec![0.0f32; pos + 1];
+        for h in 0..nh {
+            let off = h * hd;
+            let qh = &q[off..off + hd];
+            let mut maxs = f32::NEG_INFINITY;
+            for j in 0..=pos {
+                let s = sdot(qh, &kcache[j * d + off..j * d + off + hd]) * scale;
+                scores[j] = s;
+                maxs = maxs.max(s);
+            }
+            let mut denom = 0.0f32;
+            for s in scores[..=pos].iter_mut() {
+                *s = (*s - maxs).exp();
+                denom += *s;
+            }
+            let inv = 1.0 / denom;
+            let out = &mut attn[off..off + hd];
+            for j in 0..=pos {
+                let w = scores[j] * inv;
+                let vj = &vcache[j * d + off..j * d + off + hd];
+                for l in 0..hd {
+                    out[l] += w * vj[l];
+                }
+            }
+        }
+        let mut proj = vec![0.0f32; d];
+        lin.apply(bi, 3, &attn, &mut proj);
+        for (xi, pi) in x.iter_mut().zip(&proj) {
+            *xi += pi;
+        }
+        let dff = model.cfg.d_ff;
+        layernorm_rows(&x.clone(), 1, d, &blk.ln2_g, &blk.ln2_b, &mut ln);
+        let mut hmid = vec![0.0f32; dff];
+        lin.apply(bi, 4, &ln, &mut hmid);
+        for (xj, bj) in hmid.iter_mut().zip(&blk.b1) {
+            *xj = gelu(*xj + bj);
+        }
+        let mut out = vec![0.0f32; d];
+        lin.apply(bi, 5, &hmid, &mut out);
+        for ((xi, oi), bi2) in x.iter_mut().zip(&out).zip(&blk.b2) {
+            *xi += oi + bi2;
+        }
+    }
+    cache.len += 1;
+    let mut h = vec![0.0f32; d];
+    layernorm_rows(&x, 1, d, &model.lnf_g, &model.lnf_b, &mut h);
+    let v = model.cfg.vocab;
+    let mut logits = vec![0.0f32; v];
+    for o in 0..v {
+        logits[o] = sdot(&h, &model.embed[o * d..(o + 1) * d]);
+    }
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::Checkpoint;
+    use crate::quant::{quantize_layer, Method, Processing, QuantConfig};
+    use crate::util::testkit::random_hessian;
+
+    fn tiny() -> Transformer {
+        let cfg = ModelConfig::sized("t", 32, 2, 4, 64);
+        Transformer::from_checkpoint(&Checkpoint::random(&cfg, 7)).unwrap()
+    }
+
+    #[test]
+    fn fp_linears_match_builtin_decode() {
+        let m = tiny();
+        let lin = FpLinears { model: &m };
+        let tokens = [1u32, 9, 33, 7];
+        let mut c1 = m.new_cache();
+        let mut c2 = m.new_cache();
+        for &t in &tokens {
+            let a = m.decode_step(&mut c1, t);
+            let b = decode_step_with(&m, &lin, &mut c2, t);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    fn quantize_model(m: &Transformer, bits: u32, processing: Processing) -> QuantizedModel {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut layers = Vec::new();
+        for spec in m.cfg.linear_specs() {
+            let wdata = m.get_weight(&spec.name).unwrap();
+            let w = Mat {
+                rows: spec.out_dim,
+                cols: spec.in_dim,
+                data: wdata.iter().map(|&x| x as f64).collect(),
+            };
+            let h = random_hessian(&mut rng, spec.in_dim, spec.in_dim / 3, 1e-2);
+            let out = quantize_layer(
+                &w,
+                &h,
+                &QuantConfig {
+                    bits,
+                    method: Method::Ldlq,
+                    processing: processing.clone(),
+                    ..Default::default()
+                },
+                11,
+            );
+            layers.push(QuantizedLayer::from_codes(&spec.name, &out.codes, bits, out.post));
+        }
+        QuantizedModel {
+            config: m.cfg.clone(),
+            bits,
+            recipe: "test".into(),
+            layers,
+        }
+    }
+
+    #[test]
+    fn quant_linears_match_dequantized_weights() {
+        // The fused on-the-fly path must equal dequantize-then-f32-matvec.
+        for processing in [Processing::baseline(), Processing::incoherent()] {
+            let m = tiny();
+            let qm = quantize_model(&m, 4, processing);
+            let qlin = QuantLinears::from_model(&qm).unwrap();
+            // Dequantized comparison model
+            let mut md = tiny();
+            qm.apply_to(&mut md).unwrap();
+            let fp = FpLinears { model: &md };
+            let d = m.cfg.d_model;
+            let x: Vec<f32> = (0..d).map(|i| ((i as f32) * 0.37).sin()).collect();
+            for blk in 0..m.cfg.n_layers {
+                for slot in 0..4 {
+                    let mut ya = vec![0.0f32; d];
+                    let mut yb = vec![0.0f32; d];
+                    qlin.apply(blk, slot, &x, &mut ya);
+                    fp.apply(blk, slot, &x, &mut yb);
+                    for (a, b) in ya.iter().zip(&yb) {
+                        assert!(
+                            (a - b).abs() < 1e-3 * b.abs().max(1.0),
+                            "blk{blk} slot{slot}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_decode_runs_and_is_close_to_dequantized() {
+        let m = tiny();
+        let qm = quantize_model(&m, 4, Processing::incoherent());
+        let qlin = QuantLinears::from_model(&qm).unwrap();
+        let mut md = tiny();
+        qm.apply_to(&mut md).unwrap();
+        let fp = FpLinears { model: &md };
+        let mut c1 = m.new_cache();
+        let mut c2 = m.new_cache();
+        for &t in &[1u32, 20, 33] {
+            let a = decode_step_with(&m, &qlin, &mut c1, t);
+            let b = decode_step_with(&md, &fp, &mut c2, t);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 5e-2, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn kron_f32_matches_f64() {
+        let n = 24;
+        let k64 = KronOrtho::from_seed(9, n);
+        let k32 = KronF32::from_seed(9, n, true);
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).cos()).collect();
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let want = k64.apply_vec(&x64);
+        let mut got = vec![0.0f32; n];
+        let mut scratch = vec![0.0f32; n];
+        k32.apply(&x, &mut got, &mut scratch);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((*a as f64 - b).abs() < 1e-5);
+        }
+        // apply_t inverts
+        let mut back = vec![0.0f32; n];
+        k32.apply_t(&got.clone(), &mut back, &mut scratch);
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

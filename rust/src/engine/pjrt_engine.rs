@@ -1,0 +1,174 @@
+//! PJRT-backed LM engine: executes the AOT-lowered JAX/Pallas forward
+//! (fp32 or quantized) from Rust. Static operands (weights / packed codes
+//! / Kronecker factors) are marshalled to XLA literals once at load; each
+//! call only builds the token literal.
+
+use crate::linalg::KronOrtho;
+use crate::model::quantized::QuantizedModel;
+use crate::model::weights::Checkpoint;
+use crate::model::ModelConfig;
+use crate::quant::grid::GridMap;
+use crate::runtime::{ArtifactSpec, Executable, Input, PjrtRuntime};
+
+/// A compiled LM forward with cached static operands.
+pub struct PjrtLm {
+    exe: Executable,
+    pub spec: ArtifactSpec,
+    pub cfg: ModelConfig,
+    /// Literals for inputs[1..] (everything but tokens).
+    static_lits: Vec<xla::Literal>,
+}
+
+impl PjrtLm {
+    /// fp32 forward from a checkpoint.
+    pub fn fp32(
+        rt: &PjrtRuntime,
+        spec: &ArtifactSpec,
+        ck: &Checkpoint,
+    ) -> crate::Result<PjrtLm> {
+        anyhow::ensure!(spec.kind == "fp32");
+        let exe = rt.load(&spec.file)?;
+        let mut inputs = Vec::new();
+        for ispec in &spec.inputs[1..] {
+            let t = ck.tensor(&ispec.name)?;
+            anyhow::ensure!(
+                t.dims == ispec.shape,
+                "shape mismatch for '{}': ckpt {:?} vs hlo {:?}",
+                ispec.name,
+                t.dims,
+                ispec.shape
+            );
+            inputs.push(Input::F32(t.data.clone(), t.dims.clone()));
+        }
+        let static_lits = Executable::marshal(&inputs)?;
+        Ok(PjrtLm {
+            exe,
+            spec: spec.clone(),
+            cfg: ck.config.clone(),
+            static_lits,
+        })
+    }
+
+    /// Quantized forward: non-linear params from the checkpoint, qparams
+    /// from the quantized model (codes re-packed into int32 words; the
+    /// Kronecker factors regenerated from the stored seeds).
+    pub fn quant(
+        rt: &PjrtRuntime,
+        spec: &ArtifactSpec,
+        ck: &Checkpoint,
+        qm: &QuantizedModel,
+    ) -> crate::Result<PjrtLm> {
+        anyhow::ensure!(spec.kind == "quant");
+        anyhow::ensure!(spec.bits == qm.bits, "bits mismatch");
+        let exe = rt.load(&spec.file)?;
+        let mut inputs = Vec::new();
+        for ispec in &spec.inputs[1..] {
+            if ispec.field.is_empty() {
+                let t = ck.tensor(&ispec.name)?;
+                inputs.push(Input::F32(t.data.clone(), t.dims.clone()));
+            } else {
+                inputs.push(qparam_input(qm, ispec)?);
+            }
+        }
+        let static_lits = Executable::marshal(&inputs)?;
+        Ok(PjrtLm {
+            exe,
+            spec: spec.clone(),
+            cfg: ck.config.clone(),
+            static_lits,
+        })
+    }
+
+    /// Run the forward on (batch × seq) tokens (padded with 0 / truncated).
+    /// Returns logits row-major (batch, seq, vocab).
+    pub fn logits(&self, batch_tokens: &[Vec<u32>]) -> crate::Result<Vec<f32>> {
+        let (b, t) = (self.spec.batch, self.spec.seq);
+        anyhow::ensure!(batch_tokens.len() <= b, "batch too large");
+        let mut toks = vec![0i32; b * t];
+        for (i, seq) in batch_tokens.iter().enumerate() {
+            for (j, &tok) in seq.iter().take(t).enumerate() {
+                toks[i * t + j] = tok as i32;
+            }
+        }
+        let tok_lit = Executable::marshal(&[Input::I32(toks, vec![b, t])])?;
+        let mut lits: Vec<&xla::Literal> = Vec::with_capacity(1 + self.static_lits.len());
+        lits.push(&tok_lit[0]);
+        lits.extend(self.static_lits.iter());
+        self.exe.execute_borrowed(&lits)
+    }
+}
+
+/// Build one qparam input (matching aot.py's `qparam_fields` order and
+/// semantics) from a quantized layer.
+fn qparam_input(qm: &QuantizedModel, ispec: &crate::runtime::InputSpec) -> crate::Result<Input> {
+    let layer = qm.layer(&ispec.name)?;
+    let (m, n) = (layer.m, layer.n);
+    let bits = layer.bits;
+    let qmax = crate::quant::grid::levels(bits) as f64;
+    Ok(match ispec.field.as_str() {
+        "words" => {
+            anyhow::ensure!(bits == 2 || bits == 4);
+            let per = (32 / bits) as usize;
+            let nw = n.div_ceil(per);
+            let codes = layer.codes();
+            let mut words = vec![0i32; m * nw];
+            for i in 0..m {
+                for j in 0..n {
+                    let w = j / per;
+                    let k = j % per;
+                    words[i * nw + w] |=
+                        (codes[(i, j)] as i32) << (k * bits as usize);
+                }
+            }
+            Input::I32(words, vec![m, nw])
+        }
+        "codes" => {
+            let codes = layer.codes();
+            let raw: Vec<u8> = codes.data.iter().map(|&c| c as u8).collect();
+            Input::U8(raw, vec![m, n])
+        }
+        "rowscale" => {
+            let v: Vec<f32> = match &layer.post.grid {
+                GridMap::PerRow { lo, hi, .. } => lo
+                    .iter()
+                    .zip(hi)
+                    .map(|(l, h)| ((h - l) / qmax) as f32)
+                    .collect(),
+                GridMap::Global { s, .. } => vec![(2.0 * s / qmax) as f32; m],
+            };
+            Input::F32(v, vec![m])
+        }
+        "rowoff" => {
+            let v: Vec<f32> = match &layer.post.grid {
+                GridMap::PerRow { lo, .. } => lo.iter().map(|&l| l as f32).collect(),
+                GridMap::Global { s, .. } => vec![-(*s as f32); m],
+            };
+            Input::F32(v, vec![m])
+        }
+        "dinv" => {
+            let v: Vec<f32> = match &layer.post.d_tilde {
+                Some(d) => d.iter().map(|&x| (1.0 / x) as f32).collect(),
+                None => vec![1.0; n],
+            };
+            Input::F32(v, vec![n])
+        }
+        "vL" | "vR" | "vperm" => kron_input(layer.post.v_seed, n, layer.post.permute, &ispec.field),
+        "uL" | "uR" | "uperm" => kron_input(layer.post.u_seed, m, layer.post.permute, &ispec.field),
+        other => anyhow::bail!("unknown qparam field '{other}'"),
+    })
+}
+
+fn kron_input(seed: u64, dim: usize, permute: bool, field: &str) -> Input {
+    let k = KronOrtho::from_seed_with(seed, dim, permute);
+    match field.chars().last().unwrap() {
+        'L' => Input::F32(
+            k.left.data.iter().map(|&x| x as f32).collect(),
+            vec![k.p, k.p],
+        ),
+        'R' => Input::F32(
+            k.right.data.iter().map(|&x| x as f32).collect(),
+            vec![k.q, k.q],
+        ),
+        _ => Input::I32(k.perm.iter().map(|&p| p as i32).collect(), vec![dim]),
+    }
+}

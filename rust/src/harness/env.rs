@@ -1,0 +1,274 @@
+//! Shared experiment environment: artifacts, checkpoints, eval splits,
+//! task sets, recipe runners and result output.
+
+use crate::coordinator::pipeline::{quantize_model, PipelineConfig};
+use crate::data::{TaskSet, TokenStream};
+use crate::model::lm;
+use crate::model::quantized::QuantizedModel;
+use crate::model::weights::Checkpoint;
+use crate::model::Transformer;
+use crate::quant::{Method, Processing, QuantConfig};
+use crate::runtime::registry::{default_root, Registry};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Evaluation splits (wiki/ptb/c4 analogs) and task sets (lamb/arce/piqa/sc).
+pub const SPLITS: [&str; 3] = ["wiki", "ptb", "c4"];
+pub const TASKS: [&str; 4] = ["lamb", "arce", "piqa", "sc"];
+
+pub struct Env {
+    pub registry: Registry,
+    pub splits: HashMap<String, TokenStream>,
+    pub tasks: HashMap<String, TaskSet>,
+    /// Eval budget: sequences per split (–fast lowers it).
+    pub eval_seqs: usize,
+    pub task_limit: usize,
+    pub calib_seqs: usize,
+    checkpoints: std::cell::RefCell<HashMap<String, std::rc::Rc<Checkpoint>>>,
+}
+
+impl Env {
+    /// Load the experiment environment; requires `make artifacts`.
+    pub fn load(args: &crate::util::cli::Args) -> crate::Result<Env> {
+        let root = args
+            .opt("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(default_root);
+        let registry = Registry::load(&root)?;
+        let mut splits = HashMap::new();
+        for s in SPLITS {
+            splits.insert(s.to_string(), TokenStream::load(&registry.split(s))?);
+        }
+        let mut tasks = HashMap::new();
+        for t in TASKS {
+            tasks.insert(t.to_string(), TaskSet::load(&registry.tasks(t))?);
+        }
+        let fast = args.flag("fast");
+        Ok(Env {
+            registry,
+            splits,
+            tasks,
+            eval_seqs: if fast { 6 } else { args.opt_usize("eval-seqs", 16) },
+            task_limit: if fast { 40 } else { args.opt_usize("task-limit", 120) },
+            calib_seqs: if fast { 8 } else { args.opt_usize("calib", 24) },
+            checkpoints: Default::default(),
+        })
+    }
+
+    pub fn checkpoint(&self, model: &str) -> crate::Result<std::rc::Rc<Checkpoint>> {
+        if let Some(ck) = self.checkpoints.borrow().get(model) {
+            return Ok(std::rc::Rc::clone(ck));
+        }
+        let ck = std::rc::Rc::new(Checkpoint::load(&self.registry.checkpoint(model))?);
+        self.checkpoints
+            .borrow_mut()
+            .insert(model.to_string(), std::rc::Rc::clone(&ck));
+        Ok(ck)
+    }
+
+    /// Calibration windows from the *train* distribution (the paper: no
+    /// task data seen at quantization time). Uses the wiki split's sibling
+    /// train.bin.
+    pub fn calibration(&self, seq_len: usize) -> crate::Result<Vec<Vec<u32>>> {
+        let train = TokenStream::load(&self.registry.split("train"))?;
+        Ok(train.calibration(seq_len, self.calib_seqs, 0xCA11B))
+    }
+
+    /// Quantize `model` with the given recipe and return the artifact.
+    pub fn quantize(
+        &self,
+        model: &str,
+        quant: QuantConfig,
+    ) -> crate::Result<(QuantizedModel, f64)> {
+        let ck = self.checkpoint(model)?;
+        let calib = self.calibration(ck.config.max_seq.min(128))?;
+        let pcfg = PipelineConfig {
+            quant,
+            calib_seqs: self.calib_seqs,
+            calib_seq_len: 128,
+            seed: 0x5155_4950,
+        };
+        let (qm, report) = quantize_model(&ck, &calib, &pcfg)?;
+        Ok((qm, report.total_proxy()))
+    }
+
+    /// Full evaluation of an fp32 model: per-split perplexity + task acc.
+    pub fn evaluate(&self, model: &Transformer) -> EvalResult {
+        let mut ppl = HashMap::new();
+        for s in SPLITS {
+            let stream = &self.splits[s];
+            ppl.insert(
+                s.to_string(),
+                lm::perplexity(model, stream, model.cfg.max_seq.min(128), self.eval_seqs),
+            );
+        }
+        let mut acc = HashMap::new();
+        for t in TASKS {
+            let full = &self.tasks[t];
+            let limited = TaskSet {
+                name: full.name.clone(),
+                instances: full
+                    .instances
+                    .iter()
+                    .take(self.task_limit)
+                    .cloned()
+                    .collect(),
+            };
+            acc.insert(t.to_string(), lm::score_tasks(model, &limited).accuracy);
+        }
+        EvalResult { ppl, acc }
+    }
+
+    /// Quantize + evaluate one recipe. `bits == 16` means "no
+    /// quantization" (the fp baseline row).
+    pub fn run_recipe(
+        &self,
+        model: &str,
+        bits: u32,
+        method: Method,
+        processing: Processing,
+    ) -> crate::Result<EvalResult> {
+        let ck = self.checkpoint(model)?;
+        let mut m = Transformer::from_checkpoint(&ck)?;
+        if bits < 16 {
+            let (qm, _) = self.quantize(
+                model,
+                QuantConfig {
+                    bits,
+                    method,
+                    processing,
+                    greedy_passes: 5,
+                    ..Default::default()
+                },
+            )?;
+            qm.apply_to(&mut m)?;
+        }
+        Ok(self.evaluate(&m))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub ppl: HashMap<String, f64>,
+    pub acc: HashMap<String, f64>,
+}
+
+impl EvalResult {
+    pub fn mean_ppl(&self) -> f64 {
+        self.ppl.values().sum::<f64>() / self.ppl.len().max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let mut p = Json::obj();
+        for (k, v) in &self.ppl {
+            p.set(k, Json::Num(*v));
+        }
+        let mut a = Json::obj();
+        for (k, v) in &self.acc {
+            a.set(k, Json::Num(*v));
+        }
+        j.set("ppl", p);
+        j.set("acc", a);
+        j
+    }
+}
+
+/// Write a result JSON under results/.
+pub fn write_result(name: &str, j: &Json) -> crate::Result<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, j.pretty())?;
+    println!("→ results/{name}.json");
+    Ok(path)
+}
+
+/// Aligned table printer.
+pub struct TablePrinter {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str]) -> TablePrinter {
+        TablePrinter {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format helpers for table cells.
+pub fn f2(x: f64) -> String {
+    if x >= 10_000.0 {
+        format!("{:.3e}", x)
+    } else {
+        format!("{:.2}", x)
+    }
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_printer_aligns_and_prints() {
+        let mut tp = TablePrinter::new(&["name", "value"]);
+        tp.row(vec!["a".into(), "1.00".into()]);
+        tp.row(vec!["long-name".into(), "2".into()]);
+        tp.print(); // visual; must not panic on ragged widths
+        assert_eq!(tp.rows.len(), 2);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(1.234), "1.23");
+        assert!(f2(123456.0).contains('e'));
+        assert_eq!(pct(0.515), "51.5");
+    }
+
+    #[test]
+    fn eval_result_mean_and_json() {
+        let mut ppl = std::collections::HashMap::new();
+        ppl.insert("wiki".to_string(), 10.0);
+        ppl.insert("ptb".to_string(), 20.0);
+        let r = EvalResult {
+            ppl,
+            acc: std::collections::HashMap::new(),
+        };
+        assert_eq!(r.mean_ppl(), 15.0);
+        assert!(r.to_json().get("ppl").is_some());
+    }
+}

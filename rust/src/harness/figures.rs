@@ -1,0 +1,278 @@
+//! Figure regenerators: numeric series printed as ASCII + written to
+//! results/*.json (plots are data series; no plotting deps offline).
+
+use super::env::{f2, pct, write_result, Env, TablePrinter};
+use super::tables::collect_hessians;
+use crate::linalg::Mat;
+use crate::quant::incoherence::{preprocess, Processing};
+use crate::quant::{Method, QuantConfig};
+use crate::util::cli::Args;
+use crate::util::json::{arr_f64, Json};
+
+/// Figure 1 — eig(H) spectra decay rapidly (approximately low-rank H).
+pub fn figure1(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s1");
+    let ck = env.checkpoint(&model)?;
+    let (hessians, _) = collect_hessians(&env, &ck)?;
+    println!("Figure 1 analog — {model}: normalized eig(H) spectra (3 random layers)\n");
+    let mut out = Json::obj();
+    let picks = [0usize, hessians.len() / 2, hessians.len() - 1];
+    for (pi, &li) in picks.iter().enumerate() {
+        let h = &hessians[li];
+        let e = crate::linalg::eigen::eigen_sym(h, 1e-11, 40);
+        let lmax = e.values.last().copied().unwrap_or(1.0).max(1e-30);
+        let spectrum: Vec<f64> = e
+            .values
+            .iter()
+            .rev()
+            .map(|&l| l.max(0.0) / lmax)
+            .collect();
+        // ASCII decay sketch: eigenvalue index where λ/λmax crosses thresholds.
+        print!("layer {li:2}  ");
+        for &thr in &[0.5, 0.1, 0.01, 0.001] {
+            let k = spectrum.iter().take_while(|&&x| x > thr).count();
+            print!("λ/λmax>{thr:<5} for {k:4}/{} | ", spectrum.len());
+        }
+        println!();
+        out.set(&format!("layer{pi}"), arr_f64(&spectrum));
+    }
+    println!("\npaper shape: most mass in the first few % of eigenvalues.");
+    write_result("figure1", &out)?;
+    Ok(())
+}
+
+/// Figures 2 & 3 — max |W_ij| (weights) or max |Q_ij| (H eigenvectors)
+/// before vs after incoherence processing, per layer.
+pub fn figure2_3(args: &Args, eigvecs: bool) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s1");
+    let ck = env.checkpoint(&model)?;
+    let (hessians, weights) = collect_hessians(&env, &ck)?;
+    let what = if eigvecs { "max|Q_ij| (H eigvecs)" } else { "max|W_ij|" };
+    println!(
+        "Figure {} analog — {model}: {what} before vs after incoherence\n",
+        if eigvecs { 3 } else { 2 }
+    );
+    let mut tp = TablePrinter::new(&["layer", "before", "after", "after/before"]);
+    let mut before_v = Vec::new();
+    let mut after_v = Vec::new();
+    let mut p = Processing::incoherent();
+    p.rescale = false;
+    p.frob_range = false;
+    for (li, (h, w)) in hessians.iter().zip(&weights).enumerate() {
+        let pre = preprocess(w, h, 8, &p, 1234 + li as u64);
+        let (before, after) = if eigvecs {
+            let eb = crate::linalg::eigen::eigen_sym(h, 1e-10, 30);
+            let ea = crate::linalg::eigen::eigen_sym(&pre.h, 1e-10, 30);
+            (eb.vectors.max_abs(), ea.vectors.max_abs())
+        } else {
+            // processed W recovered from its grid coords
+            let wp = pre.post.grid.from_grid(&pre.wg);
+            // normalize by ‖W‖_F/√(mn) so the comparison is the paper's
+            // incoherence parameter μ
+            let norm = |m_: &Mat| m_.frob_norm() / ((m_.rows * m_.cols) as f64).sqrt();
+            (w.max_abs() / norm(w), wp.max_abs() / norm(&wp))
+        };
+        before_v.push(before);
+        after_v.push(after);
+        if li % 3 == 0 {
+            tp.row(vec![
+                li.to_string(),
+                format!("{before:.3}"),
+                format!("{after:.3}"),
+                format!("{:.3}", after / before),
+            ]);
+        }
+    }
+    tp.print();
+    let frac_reduced = before_v
+        .iter()
+        .zip(&after_v)
+        .filter(|(b, a)| a < b)
+        .count() as f64
+        / before_v.len() as f64;
+    println!(
+        "\nlayers with reduced max-entry: {:.0}% (paper: nearly all below the slope-1 line)",
+        100.0 * frac_reduced
+    );
+    let mut out = Json::obj();
+    out.set("before", arr_f64(&before_v));
+    out.set("after", arr_f64(&after_v));
+    write_result(if eigvecs { "figure3" } else { "figure2" }, &out)?;
+    Ok(())
+}
+
+/// Figure 4 — the finite-grid counterexample: clamped LDLQ (nearest) is
+/// asymptotically worse than plain nearest on the adversarial (W, H).
+pub fn figure4(args: &Args) -> crate::Result<()> {
+    let d = args.opt_usize("d", 16);
+    println!("Figure 4 analog — finite-grid counterexample, 4-bit grid [0,15], m={d}\n");
+    let mut tp = TablePrinter::new(&["n", "ldlq(clamped)", "near", "ldlq/near"]);
+    let mut ns = Vec::new();
+    let mut ratio = Vec::new();
+    for n in [16usize, 32, 64, 128, 256] {
+        let (w, h) = make_counterexample(n, d, 0.01);
+        // W ≈ 0.5 quantized directly on the integer grid [0,15] (as in the
+        // paper's snippet): the clamp at 0 binds for LDLQ's feedback.
+        let wg = w;
+        let ldlq = crate::quant::ldlq::ldlq(&wg, &h, 4, crate::quant::RoundMode::Nearest, 0);
+        let near = crate::quant::ldlq::round_matrix(&wg, 4, crate::quant::RoundMode::Nearest, 0);
+        let l_ldlq = crate::quant::proxy_loss(&ldlq, &wg, &h);
+        let l_near = crate::quant::proxy_loss(&near, &wg, &h);
+        tp.row(vec![
+            n.to_string(),
+            f2(l_ldlq),
+            f2(l_near),
+            f2(l_ldlq / l_near),
+        ]);
+        ns.push(n as f64);
+        ratio.push(l_ldlq / l_near);
+    }
+    tp.print();
+    println!("\npaper shape: the ratio grows with n (clamped LDLQ asymptotically worse).");
+    anyhow::ensure!(
+        ratio.last().unwrap() > ratio.first().unwrap(),
+        "counterexample did not reproduce"
+    );
+    let mut out = Json::obj();
+    out.set("n", arr_f64(&ns));
+    out.set("ldlq_over_near", arr_f64(&ratio));
+    write_result("figure4", &out)?;
+    Ok(())
+}
+
+/// The paper's Supplement C.3 construction (verbatim port of the PyTorch
+/// snippet): H = ones + I with tweaks, W ≈ 1/2 · 1_{m×n} + alternating
+/// 0.002 perturbation — here scaled into 4-bit grid units.
+pub fn make_counterexample(n: usize, d: usize, c: f64) -> (Mat, Mat) {
+    let mut h = Mat::from_fn(n, n, |i, j| 1.0 + if i == j { 1.0 } else { 0.0 });
+    h[(n - 1, n - 1)] = 1.0;
+    for j in 1..(n - 1) {
+        h[(0, j)] += 2.0 * c;
+        h[(j, 0)] += 2.0 * c;
+    }
+    h[(0, n - 1)] += c;
+    h[(n - 1, 0)] += c;
+    h[(0, 0)] += 4.0 * c + n as f64 * c * c;
+    // W = 0.499/0.501 alternating — quantized *directly* against the
+    // integer grid [0, 15], exactly as the paper's snippet does. The values
+    // sit at the grid's bottom edge, so LDLQ's accumulated error
+    // corrections hit the clamp at 0 (that asymmetry is the whole
+    // counterexample; re-scaling W to mid-grid destroys it).
+    let w = Mat::from_fn(d, n, |_, j| 0.499 + 0.002 * ((j % 2) as f64));
+    (w, h)
+}
+
+/// Figure 5/6 — perplexity and zero-shot accuracy vs model size, QuIP vs
+/// OPTQ at 2/3 bits (+ fp16 reference).
+pub fn figure5(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let models: Vec<String> = args
+        .opt_or("models", "s0,s1,s2")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    println!("Figure 5/6 analog — ppl + task acc vs model size, QuIP vs OPTQ\n");
+    let mut tp = TablePrinter::new(&[
+        "model", "params", "wbits", "method", "wiki↓", "c4↓", "arce↑", "lamb↑",
+    ]);
+    let mut out = Json::obj();
+    for model in &models {
+        let ck = env.checkpoint(model)?;
+        let params = ck.config.param_count();
+        let fp = env.run_recipe(model, 16, Method::Ldlq, Processing::baseline())?;
+        tp.row(vec![
+            model.clone(),
+            format!("{:.1}M", params as f64 / 1e6),
+            "16".into(),
+            "fp".into(),
+            f2(fp.ppl["wiki"]),
+            f2(fp.ppl["c4"]),
+            pct(fp.acc["arce"]),
+            pct(fp.acc["lamb"]),
+        ]);
+        out.set(&format!("{model}_fp"), fp.to_json());
+        for bits in [3u32, 2] {
+            for (label, processing) in [
+                ("optq", Processing::baseline()),
+                ("quip", Processing::incoherent()),
+            ] {
+                let r = env.run_recipe(model, bits, Method::Ldlq, processing)?;
+                tp.row(vec![
+                    model.clone(),
+                    format!("{:.1}M", params as f64 / 1e6),
+                    bits.to_string(),
+                    label.into(),
+                    f2(r.ppl["wiki"]),
+                    f2(r.ppl["c4"]),
+                    pct(r.acc["arce"]),
+                    pct(r.acc["lamb"]),
+                ]);
+                out.set(&format!("{model}_{label}_w{bits}"), r.to_json());
+            }
+        }
+    }
+    tp.print();
+    println!("\npaper shape: QuIP ≈ fp at 3 bits; at 2 bits QuIP viable while OPTQ collapses,\nwith the gap shrinking as model size grows.");
+    write_result("figure5", &out)?;
+    Ok(())
+}
+
+/// `quantize_layer` is re-exported for the examples; keep a direct alias
+/// used by figure drivers that need a single-layer run.
+#[allow(unused)]
+fn quant_cfg(bits: u32, method: Method, processing: Processing) -> QuantConfig {
+    QuantConfig {
+        bits,
+        method,
+        processing,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counterexample_matches_paper_construction() {
+        let (w, h) = make_counterexample(8, 4, 0.01);
+        assert_eq!((w.rows, w.cols), (4, 8));
+        assert_eq!(h.rows, 8);
+        // H is symmetric and positive definite (Cholesky succeeds).
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((h[(i, j)] - h[(j, i)]).abs() < 1e-12);
+            }
+        }
+        assert!(crate::linalg::chol::cholesky(&h).is_ok());
+        // W sits at the paper's 0.499/0.501 values.
+        for &x in &w.data {
+            assert!((x - 0.5).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn counterexample_ldlq_underperforms_nearest() {
+        // The §5.2 phenomenon itself, as a regression test.
+        let (w, h) = make_counterexample(64, 8, 0.01);
+        let l = crate::quant::ldlq::ldlq(&w, &h, 4, crate::quant::RoundMode::Nearest, 0);
+        let n = crate::quant::ldlq::round_matrix(&w, 4, crate::quant::RoundMode::Nearest, 0);
+        let pl = crate::quant::proxy_loss(&l, &w, &h);
+        let pn = crate::quant::proxy_loss(&n, &w, &h);
+        assert!(pl > 2.0 * pn, "clamped LDLQ {pl} vs nearest {pn}");
+    }
+
+    #[test]
+    fn alg5_fixes_the_counterexample() {
+        let (w, h) = make_counterexample(64, 8, 0.01);
+        let plan = crate::quant::alg5::solve(&h, 0.1, 200, 1e-9);
+        let a5 = crate::quant::ldlq::ldlq_with_feedback(
+            &w, &plan.u_dot, 4, crate::quant::RoundMode::Stochastic, 1);
+        let l = crate::quant::ldlq::ldlq(&w, &h, 4, crate::quant::RoundMode::Nearest, 0);
+        let pa = crate::quant::proxy_loss(&a5, &w, &h);
+        let pl = crate::quant::proxy_loss(&l, &w, &h);
+        assert!(pa < pl, "alg5 {pa} should beat clamped ldlq {pl}");
+    }
+}

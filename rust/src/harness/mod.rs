@@ -1,0 +1,53 @@
+//! Experiment harness — regenerates every table and figure of the paper's
+//! evaluation on this repo's substrate (see DESIGN.md §5 for the mapping).
+//! Results print as aligned tables and land in `results/*.json`.
+
+pub mod env;
+pub mod tables;
+pub mod figures;
+pub mod sweeps;
+
+pub use env::Env;
+
+/// Dispatch `quip table <id>`.
+pub fn run_table(id: &str, args: &crate::util::cli::Args) -> crate::Result<()> {
+    match id {
+        "1" => tables::table1(args),
+        "2" => tables::table2(args),
+        "3" => tables::table3(args),
+        "4" => tables::table4(args),
+        "5" => tables::table5(args),
+        "6" => tables::table6(args),
+        "14" => tables::table14(args),
+        "15" => tables::table15(args),
+        "16" => tables::table16(args),
+        "optq" => tables::table_optq(args),
+        "all" => {
+            for t in ["optq", "6", "14", "3", "5", "15", "16", "4", "2", "1"] {
+                println!("\n================ table {t} ================");
+                run_table(t, args)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown table '{other}' (1,2,3,4,5,6,14,15,16,optq,all)"),
+    }
+}
+
+/// Dispatch `quip figure <id>`.
+pub fn run_figure(id: &str, args: &crate::util::cli::Args) -> crate::Result<()> {
+    match id {
+        "1" => figures::figure1(args),
+        "2" => figures::figure2_3(args, false),
+        "3" => figures::figure2_3(args, true),
+        "4" => figures::figure4(args),
+        "5" | "6" => figures::figure5(args),
+        "all" => {
+            for f in ["1", "2", "3", "4", "5"] {
+                println!("\n================ figure {f} ================");
+                run_figure(f, args)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown figure '{other}' (1,2,3,4,5,all)"),
+    }
+}

@@ -1,0 +1,163 @@
+//! Hyperparameter sweeps — the knobs the paper tunes but does not table:
+//!
+//! * `rho`    — the quantization-range multiplier (Supplement B.1: "we
+//!   tune it and find that a value of 2.4 works well across all our
+//!   experiments")
+//! * `calib`  — calibration-set size (paper fixes 128 segments)
+//! * `greedy` — greedy polish passes (paper: 10, or 5 on the largest)
+//!
+//! `quip sweep <rho|calib|greedy> [--model s0] [--bits 2]`.
+
+use super::env::{f2, write_result, Env, TablePrinter};
+use crate::coordinator::pipeline::{quantize_model, PipelineConfig};
+use crate::model::Transformer;
+use crate::quant::{Method, Processing, QuantConfig};
+use crate::util::cli::Args;
+use crate::util::json::{arr_f64, Json};
+
+pub fn run_sweep(which: &str, args: &Args) -> crate::Result<()> {
+    match which {
+        "rho" => sweep_rho(args),
+        "calib" => sweep_calib(args),
+        "greedy" => sweep_greedy(args),
+        other => anyhow::bail!("unknown sweep '{other}' (rho, calib, greedy)"),
+    }
+}
+
+/// ρ sweep: too small clips the distribution tails hard, too large wastes
+/// grid levels; the paper lands on 2.4.
+fn sweep_rho(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s0");
+    let bits = args.opt_usize("bits", 2) as u32;
+    println!("ρ sweep — {model} @ {bits} bits (paper tunes ρ = 2.4)\n");
+    let mut tp = TablePrinter::new(&["rho", "mean ppl↓", "proxy loss↓"]);
+    let mut rhos = Vec::new();
+    let mut ppls = Vec::new();
+    for rho in [1.2, 1.8, 2.4, 3.2, 4.5] {
+        let mut processing = Processing::incoherent();
+        processing.rho = rho;
+        let ck = env.checkpoint(&model)?;
+        let (qm, proxy) = env.quantize(
+            &model,
+            QuantConfig {
+                bits,
+                method: Method::Ldlq,
+                processing,
+                ..Default::default()
+            },
+        )?;
+        let mut m = Transformer::from_checkpoint(&ck)?;
+        qm.apply_to(&mut m)?;
+        let r = env.evaluate(&m);
+        tp.row(vec![format!("{rho:.1}"), f2(r.mean_ppl()), format!("{proxy:.3}")]);
+        rhos.push(rho);
+        ppls.push(r.mean_ppl());
+    }
+    tp.print();
+    let best = rhos[argmin(&ppls)];
+    println!("\nbest ρ here: {best:.1} (paper: 2.4 across all their experiments)");
+    let mut out = Json::obj();
+    out.set("rho", arr_f64(&rhos));
+    out.set("mean_ppl", arr_f64(&ppls));
+    write_result("sweep_rho", &out)?;
+    Ok(())
+}
+
+/// Calibration-size sweep: H quality vs cost.
+fn sweep_calib(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s0");
+    let bits = args.opt_usize("bits", 2) as u32;
+    println!("calibration-size sweep — {model} @ {bits} bits (paper: 128 segments)\n");
+    let ck = env.checkpoint(&model)?;
+    let train = crate::data::TokenStream::load(&env.registry.split("train"))?;
+    let mut tp = TablePrinter::new(&["segments", "mean ppl↓"]);
+    let mut sizes = Vec::new();
+    let mut ppls = Vec::new();
+    for segs in [2usize, 8, 24, 64] {
+        let calib = train.calibration(128, segs, 0xCA11B);
+        let pcfg = PipelineConfig {
+            quant: QuantConfig {
+                bits,
+                method: Method::Ldlq,
+                processing: Processing::incoherent(),
+                ..Default::default()
+            },
+            calib_seqs: segs,
+            calib_seq_len: 128,
+            seed: 0x5155_4950,
+        };
+        let (qm, _) = quantize_model(&ck, &calib, &pcfg)?;
+        let mut m = Transformer::from_checkpoint(&ck)?;
+        qm.apply_to(&mut m)?;
+        let r = env.evaluate(&m);
+        tp.row(vec![segs.to_string(), f2(r.mean_ppl())]);
+        sizes.push(segs as f64);
+        ppls.push(r.mean_ppl());
+    }
+    tp.print();
+    println!("\nexpected shape: diminishing returns once H is well estimated.");
+    let mut out = Json::obj();
+    out.set("segments", arr_f64(&sizes));
+    out.set("mean_ppl", arr_f64(&ppls));
+    write_result("sweep_calib", &out)?;
+    Ok(())
+}
+
+/// Greedy polish passes (used by LDLQ-RG / QuIP-RG).
+fn sweep_greedy(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s0");
+    let bits = args.opt_usize("bits", 2) as u32;
+    println!("greedy-passes sweep — {model} @ {bits} bits (paper: 10 passes, 5 on 30b/66b)\n");
+    let mut tp = TablePrinter::new(&["passes", "proxy loss↓", "mean ppl↓"]);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for passes in [0usize, 1, 3, 10] {
+        let ck = env.checkpoint(&model)?;
+        let (qm, proxy) = env.quantize(
+            &model,
+            QuantConfig {
+                bits,
+                method: Method::LdlqRg,
+                processing: Processing::incoherent(),
+                greedy_passes: passes,
+                ..Default::default()
+            },
+        )?;
+        let mut m = Transformer::from_checkpoint(&ck)?;
+        qm.apply_to(&mut m)?;
+        let r = env.evaluate(&m);
+        tp.row(vec![passes.to_string(), format!("{proxy:.4}"), f2(r.mean_ppl())]);
+        xs.push(passes as f64);
+        ys.push(proxy);
+    }
+    tp.print();
+    // Greedy is a descent method on the proxy: more passes never hurt it.
+    for w in ys.windows(2) {
+        anyhow::ensure!(w[1] <= w[0] * 1.001, "greedy passes increased proxy");
+    }
+    let mut out = Json::obj();
+    out.set("passes", arr_f64(&xs));
+    out.set("proxy", arr_f64(&ys));
+    write_result("sweep_greedy", &out)?;
+    Ok(())
+}
+
+fn argmin(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn argmin_works() {
+        assert_eq!(super::argmin(&[3.0, 1.0, 2.0]), 1);
+        assert_eq!(super::argmin(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,485 @@
+//! Table regenerators. Each prints the paper-shaped rows and writes
+//! results/tableN.json. Paper → substrate mapping in DESIGN.md §5.
+
+use super::env::{f2, pct, write_result, Env, TablePrinter};
+use crate::engine::native::{decode_step_with, FpLinears, QuantLinears};
+use crate::linalg::ldl::udu;
+use crate::linalg::Mat;
+use crate::model::Transformer;
+use crate::quant::{Method, Processing, QuantConfig};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Paper Table 1 — largest model, QuIP vs OPTQ at 16/4/3/2 bits.
+pub fn table1(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s2");
+    println!("Table 1 analog — {model}: QuIP (LDLQ+IncP) vs OPTQ (LDLQ+baseline)\n");
+    let mut tp = TablePrinter::new(&[
+        "wbits", "method", "wiki↓", "ptb↓", "c4↓", "arce↑", "piqa↑", "sc↑",
+    ]);
+    let mut out = Json::obj();
+    for bits in [16u32, 4, 3, 2] {
+        for (label, method, processing) in [
+            ("optq", Method::Ldlq, Processing::baseline()),
+            ("quip", Method::Ldlq, Processing::incoherent()),
+        ] {
+            let r = env.run_recipe(&model, bits, method, processing)?;
+            tp.row(vec![
+                bits.to_string(),
+                label.into(),
+                f2(r.ppl["wiki"]),
+                f2(r.ppl["ptb"]),
+                f2(r.ppl["c4"]),
+                pct(r.acc["arce"]),
+                pct(r.acc["piqa"]),
+                pct(r.acc["sc"]),
+            ]);
+            out.set(&format!("{label}_w{bits}"), r.to_json());
+            if bits == 16 {
+                break; // fp row identical for both methods
+            }
+        }
+    }
+    tp.print();
+    write_result("table1", &out)?;
+    Ok(())
+}
+
+/// Paper Table 2 (and 7–13) — all rounding methods × processing.
+pub fn table2(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let models: Vec<String> = if args.flag("all-sizes") {
+        vec!["s0".into(), "s1".into(), "s2".into()]
+    } else {
+        vec![args.opt_or("model", "s1")]
+    };
+    let methods = [
+        ("ldlq", Method::Ldlq),
+        ("ldlq-rg", Method::LdlqRg),
+        ("greedy", Method::Greedy),
+        ("near", Method::Nearest),
+    ];
+    let mut out = Json::obj();
+    for model in &models {
+        println!("\nTable 2 analog — {model}: methods × processing\n");
+        let mut tp = TablePrinter::new(&[
+            "processing", "method", "wbits", "wiki↓", "ptb↓", "c4↓", "arce↑", "lamb↑",
+        ]);
+        let fp = env.run_recipe(model, 16, Method::Ldlq, Processing::baseline())?;
+        tp.row(vec![
+            "-".into(),
+            "fp32".into(),
+            "16".into(),
+            f2(fp.ppl["wiki"]),
+            f2(fp.ppl["ptb"]),
+            f2(fp.ppl["c4"]),
+            pct(fp.acc["arce"]),
+            pct(fp.acc["lamb"]),
+        ]);
+        out.set(&format!("{model}_fp"), fp.to_json());
+        for (pname, processing) in [
+            ("baseline", Processing::baseline()),
+            ("incp", Processing::incoherent()),
+        ] {
+            for (mname, method) in methods {
+                for bits in [4u32, 3, 2] {
+                    let r = env.run_recipe(model, bits, method, processing.clone())?;
+                    tp.row(vec![
+                        pname.into(),
+                        mname.into(),
+                        bits.to_string(),
+                        f2(r.ppl["wiki"]),
+                        f2(r.ppl["ptb"]),
+                        f2(r.ppl["c4"]),
+                        pct(r.acc["arce"]),
+                        pct(r.acc["lamb"]),
+                    ]);
+                    out.set(&format!("{model}_{pname}_{mname}_w{bits}"), r.to_json());
+                }
+            }
+        }
+        tp.print();
+    }
+    write_result("table2", &out)?;
+    Ok(())
+}
+
+/// Paper Table 3 — ablating the incoherence-processing sub-steps.
+pub fn table3(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s0");
+    println!("Table 3 analog — {model}: IncP sub-step ablation (mean ppl over splits)\n");
+    let variants: Vec<(&str, Processing)> = vec![
+        ("rescale", {
+            let mut p = Processing::baseline();
+            p.rescale = true;
+            p
+        }),
+        ("incoherence", {
+            let mut p = Processing::baseline();
+            p.incoherent = true;
+            p.permute = true;
+            p
+        }),
+        ("rescale+incoherence", {
+            let mut p = Processing::incoherent();
+            p.frob_range = false;
+            p
+        }),
+        ("rescale+incoherence+quantrange", Processing::incoherent()),
+    ];
+    let mut tp = TablePrinter::new(&["wbits", "rescale", "incoh", "resc+incoh", "resc+incoh+range"]);
+    let mut out = Json::obj();
+    for bits in [4u32, 3, 2] {
+        let mut cells = vec![bits.to_string()];
+        for (name, p) in &variants {
+            let r = env.run_recipe(&model, bits, Method::Ldlq, p.clone())?;
+            cells.push(f2(r.mean_ppl()));
+            out.set(&format!("{name}_w{bits}"), Json::Num(r.mean_ppl()));
+        }
+        tp.row(cells);
+    }
+    tp.print();
+    write_result("table3", &out)?;
+    Ok(())
+}
+
+/// Paper Table 4 — per-token generation throughput: QuIP's incoherence
+/// overhead vs the OPTQ-style kernel (plus the fp32 reference and the
+/// PJRT kernel artifact when present).
+pub fn table4(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s1");
+    let ck = env.checkpoint(&model)?;
+    let m = Transformer::from_checkpoint(&ck)?;
+    let bits = args.opt_usize("bits", 2) as u32;
+
+    let (q_base, _) = env.quantize(
+        &model,
+        QuantConfig {
+            bits,
+            method: Method::Ldlq,
+            processing: Processing::baseline(),
+            ..Default::default()
+        },
+    )?;
+    let (q_incp, _) = env.quantize(
+        &model,
+        QuantConfig {
+            bits,
+            method: Method::Ldlq,
+            processing: Processing::incoherent(),
+            ..Default::default()
+        },
+    )?;
+    let lin_base = QuantLinears::from_model(&q_base)?;
+    let lin_incp = QuantLinears::from_model(&q_incp)?;
+    let fp = FpLinears { model: &m };
+
+    let tokens = args.opt_usize("tokens", 128);
+    let bench = |lin: &dyn crate::engine::native::LinearOps| {
+        let mut cache = m.new_cache();
+        // warmup a few tokens
+        for t in 0..4u32 {
+            decode_step_with(&m, lin, &mut cache, t + 1);
+        }
+        let t0 = std::time::Instant::now();
+        let mut tok = 1u32;
+        let mut n = 0usize;
+        while n < tokens {
+            if cache.len >= m.cfg.max_seq {
+                cache.reset();
+            }
+            let logits = decode_step_with(&m, lin, &mut cache, tok);
+            tok = (logits[0].abs() as u32 % 250) + 1;
+            n += 1;
+        }
+        t0.elapsed().as_secs_f64() / tokens as f64
+    };
+
+    let t_fp = bench(&fp);
+    let t_base = bench(&lin_base);
+    let t_incp = bench(&lin_incp);
+
+    println!(
+        "Table 4 analog — {model}, {bits}-bit, {tokens} tokens, seq {}\n",
+        m.cfg.max_seq
+    );
+    let mut tp = TablePrinter::new(&["engine", "ms/token", "vs optq"]);
+    tp.row(vec!["fp32 (reference)".into(), f2(t_fp * 1e3), f2(t_fp / t_base)]);
+    tp.row(vec!["optq-style (no IncP)".into(), f2(t_base * 1e3), "1.00".into()]);
+    tp.row(vec!["quip (IncP)".into(), f2(t_incp * 1e3), f2(t_incp / t_base)]);
+    tp.print();
+    println!(
+        "\npaper: QuIP 81ms vs OPTQ 53ms (1.53×) on OPT-66B/A6000 — the\n\
+         reproduction target is the *ratio*, here {:.2}×",
+        t_incp / t_base
+    );
+
+    let mut out = Json::obj();
+    out.set("fp32_ms", Json::Num(t_fp * 1e3));
+    out.set("optq_ms", Json::Num(t_base * 1e3));
+    out.set("quip_ms", Json::Num(t_incp * 1e3));
+    out.set("ratio", Json::Num(t_incp / t_base));
+    write_result("table4", &out)?;
+    Ok(())
+}
+
+/// Paper Table 5 — random-permutation ablation inside the fast orthogonal
+/// multiply: Δ mean perplexity (with − without permutation).
+pub fn table5(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s0");
+    println!("Table 5 analog — {model}: Δppl from random permutation (negative = helps)\n");
+    let mut tp = TablePrinter::new(&["wbits", "with perm", "without perm", "Δ(with-without)"]);
+    let mut out = Json::obj();
+    for bits in [4u32, 3, 2] {
+        let with = env.run_recipe(&model, bits, Method::Ldlq, Processing::incoherent())?;
+        let mut p = Processing::incoherent();
+        p.permute = false;
+        let without = env.run_recipe(&model, bits, Method::Ldlq, p)?;
+        let d = with.mean_ppl() - without.mean_ppl();
+        tp.row(vec![
+            bits.to_string(),
+            f2(with.mean_ppl()),
+            f2(without.mean_ppl()),
+            format!("{d:+.2}"),
+        ]);
+        out.set(&format!("w{bits}"), Json::Num(d));
+    }
+    tp.print();
+    write_result("table5", &out)?;
+    Ok(())
+}
+
+/// Paper Table 6 — Hessian rank statistics + tr(D)/tr(H) across layers,
+/// baseline vs incoherent processing.
+pub fn table6(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let models: Vec<&str> = vec!["s0", "s1"];
+    println!("Table 6 analog — H stats across layers (mean ± std)\n");
+    let mut tp = TablePrinter::new(&[
+        "model", "processing", "abs-frac-rank", "approx-frac-rank", "tr(D)/tr(H)",
+    ]);
+    let mut out = Json::obj();
+    for model in models {
+        let ck = env.checkpoint(model)?;
+        let (hessians, weights) = collect_hessians(&env, &ck)?;
+        for incoherent in [false, true] {
+            let mut ranks_abs = Vec::new();
+            let mut ranks_apx = Vec::new();
+            let mut ratios = Vec::new();
+            for (h, w) in hessians.iter().zip(&weights) {
+                let (h_used, _w_used) = if incoherent {
+                    let p = Processing::incoherent();
+                    let pre = crate::quant::incoherence::preprocess(w, h, 8, &p, 33);
+                    (pre.h, ())
+                } else {
+                    (h.clone(), ())
+                };
+                let e = crate::linalg::eigen::eigen_sym(&h_used, 1e-11, 40);
+                ranks_abs.push(e.abs_frac_rank());
+                ranks_apx.push(e.approx_frac_rank(0.01));
+                let f = udu(&h_used, 1e-12);
+                ratios.push(f.trace_d() / h_used.trace().max(1e-30));
+            }
+            let stats = |v: &[f64]| {
+                let m = v.iter().sum::<f64>() / v.len() as f64;
+                let s = (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt();
+                format!("{m:.3} (±{s:.3})")
+            };
+            tp.row(vec![
+                model.into(),
+                if incoherent { "incoherent" } else { "baseline" }.into(),
+                stats(&ranks_abs),
+                stats(&ranks_apx),
+                stats(&ratios),
+            ]);
+            let mut o = Json::obj();
+            o.set("trd_trh", crate::util::json::arr_f64(&ratios));
+            o.set("approx_rank", crate::util::json::arr_f64(&ranks_apx));
+            out.set(&format!("{model}_{incoherent}"), o);
+        }
+    }
+    tp.print();
+    println!("\npaper: tr(D)/tr(H) ≤ 0.65 across OPT models, falling with size.");
+    write_result("table6", &out)?;
+    Ok(())
+}
+
+/// Collect per-hkey Hessians (and the matching weights) of a model from
+/// calibration data — shared by tables 6/14/15 and figures 1–3.
+pub fn collect_hessians(
+    env: &Env,
+    ck: &crate::model::weights::Checkpoint,
+) -> crate::Result<(Vec<Mat>, Vec<Mat>)> {
+    let model = Transformer::from_checkpoint(ck)?;
+    let calib = env.calibration(ck.config.max_seq.min(128))?;
+    let mut hset = crate::hessian::HessianSet::for_model(&ck.config);
+    {
+        let mut sink = hset.sink();
+        for seq in &calib {
+            model.forward(seq, Some(&mut sink));
+        }
+    }
+    let mut hs = Vec::new();
+    let mut ws = Vec::new();
+    for spec in ck.config.linear_specs() {
+        // One H per layer; qkv share, but the paper reports per-layer.
+        if !spec.name.ends_with("wq") && spec.hkey.ends_with("attn.in") {
+            continue; // skip duplicated qkv Hessians (keep wq's)
+        }
+        hs.push(hset.finish(&spec.hkey)?);
+        let wdata = model.get_weight(&spec.name)?;
+        ws.push(Mat {
+            rows: spec.out_dim,
+            cols: spec.in_dim,
+            data: wdata.iter().map(|&x| x as f64).collect(),
+        });
+    }
+    Ok((hs, ws))
+}
+
+/// Paper Table 14 — proxy loss by rounding method (no processing).
+pub fn table14(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s0");
+    let ck = env.checkpoint(&model)?;
+    let (hessians, weights) = collect_hessians(&env, &ck)?;
+    println!("Table 14 analog — {model}: proxy loss by method (normalized by d_model)\n");
+    let methods = [
+        ("ldlq/optq", Method::Ldlq),
+        ("ldlq-rg", Method::LdlqRg),
+        ("greedy", Method::Greedy),
+        ("near", Method::Nearest),
+    ];
+    let mut tp = TablePrinter::new(&["wbits", "ldlq/optq", "ldlq-rg", "greedy", "near"]);
+    let mut out = Json::obj();
+    for bits in [4u32, 3, 2] {
+        let mut cells = vec![bits.to_string()];
+        for (name, method) in methods {
+            let mut total = 0.0;
+            for (h, w) in hessians.iter().zip(&weights) {
+                let cfg = QuantConfig {
+                    bits,
+                    method,
+                    // Proxy evaluation is about the *rounding* methods:
+                    // per-row grid, no incoherence (paper: "We do not
+                    // conduct any processing in the proxy evaluation").
+                    processing: Processing::baseline(),
+                    greedy_passes: 3,
+                    ..Default::default()
+                };
+                let r = crate::quant::quantize_layer(w, h, &cfg, 5);
+                total += r.proxy_loss;
+            }
+            let norm = total / ck.config.d_model as f64;
+            cells.push(format!("{norm:.4}"));
+            out.set(&format!("{name}_w{bits}"), Json::Num(norm));
+        }
+        tp.row(cells);
+    }
+    tp.print();
+    println!("\npaper shape: LDLQ ≈ LDLQ-RG ≈ Greedy ≪ Near at 2 bits.");
+    write_result("table14", &out)?;
+    Ok(())
+}
+
+/// Paper Table 15 — unbiased (stochastic) vs biased (nearest) LDLQ.
+pub fn table15(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s0");
+    println!("Table 15 analog — {model}: mean ppl(unbiased) − ppl(biased), LDLQ\n");
+    let mut tp = TablePrinter::new(&["wbits", "incp Δ", "baseline Δ"]);
+    let mut out = Json::obj();
+    for bits in [4u32, 3, 2] {
+        let mut cells = vec![bits.to_string()];
+        for processing in [Processing::incoherent(), Processing::baseline()] {
+            let pname = if processing.incoherent { "incp" } else { "base" };
+            let biased = env.run_recipe(&model, bits, Method::Ldlq, processing.clone())?;
+            // Unbiased: force the stochastic Q subroutine inside LDLQ.
+            let ck = env.checkpoint(&model)?;
+            let mut m = Transformer::from_checkpoint(&ck)?;
+            let (qm, _) = {
+                let cfg = QuantConfig {
+                    bits,
+                    method: Method::Ldlq,
+                    processing: processing.clone(),
+                    force_stochastic: true,
+                    ..Default::default()
+                };
+                env.quantize(&model, cfg)?
+            };
+            qm.apply_to(&mut m)?;
+            let unbiased = env.evaluate(&m);
+            let d = unbiased.mean_ppl() - biased.mean_ppl();
+            cells.push(format!("{d:+.2}"));
+            out.set(&format!("{pname}_w{bits}"), Json::Num(d));
+        }
+        tp.row(cells);
+    }
+    tp.print();
+    println!("\npaper: differences are positive (unbiased worse), growing at low bits.");
+    write_result("table15", &out)?;
+    Ok(())
+}
+
+/// Paper Table 16 — Algorithm 5 (clamp-aware convex program) vs QuIP.
+pub fn table16(args: &Args) -> crate::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s0");
+    println!("Table 16 analog — {model}: Algorithm 5 vs QuIP (LDLQ)\n");
+    let mut tp = TablePrinter::new(&["wbits", "processing", "alg5 wiki↓", "quip wiki↓"]);
+    let mut out = Json::obj();
+    for bits in [4u32, 3, 2] {
+        for processing in [Processing::incoherent(), Processing::baseline()] {
+            let pname = if processing.incoherent { "incp" } else { "base" };
+            let alg5 = env.run_recipe(&model, bits, Method::Alg5, processing.clone())?;
+            let quip = env.run_recipe(&model, bits, Method::Ldlq, processing.clone())?;
+            tp.row(vec![
+                bits.to_string(),
+                pname.into(),
+                f2(alg5.ppl["wiki"]),
+                f2(quip.ppl["wiki"]),
+            ]);
+            out.set(&format!("alg5_{pname}_w{bits}"), Json::Num(alg5.ppl["wiki"]));
+            out.set(&format!("quip_{pname}_w{bits}"), Json::Num(quip.ppl["wiki"]));
+        }
+    }
+    tp.print();
+    write_result("table16", &out)?;
+    Ok(())
+}
+
+/// Supplement C.2 — the OPTQ ≡ LDLQ empirical verification at the paper's
+/// scale (W ~ Unif[0,1]^{1000×1000}).
+pub fn table_optq(args: &Args) -> crate::Result<()> {
+    let n = args.opt_usize("n", 1000);
+    let m = args.opt_usize("m", 1000);
+    println!("OPTQ ≡ LDLQ equivalence check (W ~ Unif[0,1]^{{{m}×{n}}})\n");
+    let mut rng = Rng::new(2023);
+    let h = crate::util::testkit::random_spd(&mut rng, n, 1e-2);
+    let wg = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 15.0));
+    let t0 = std::time::Instant::now();
+    let a = crate::quant::optq::optq(&wg, &h, 4)?;
+    let t_optq = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let b = crate::quant::ldlq::ldlq(&wg, &h, 4, crate::quant::RoundMode::Nearest, 0);
+    let t_ldlq = t1.elapsed().as_secs_f64();
+    let mismatches = a.data.iter().zip(&b.data).filter(|(x, y)| x != y).count();
+    println!("identical outputs: {}", mismatches == 0);
+    println!("mismatched codes : {mismatches}/{}", a.data.len());
+    println!("OPTQ time        : {t_optq:.2}s (matrix inversion + 2 Cholesky-ish)");
+    println!("LDLQ time        : {t_ldlq:.2}s (1 LDL, no inversion)");
+    anyhow::ensure!(mismatches == 0, "Theorem 6 violated!");
+    let mut out = Json::obj();
+    out.set("m", Json::Num(m as f64));
+    out.set("n", Json::Num(n as f64));
+    out.set("mismatches", Json::Num(mismatches as f64));
+    out.set("optq_seconds", Json::Num(t_optq));
+    out.set("ldlq_seconds", Json::Num(t_ldlq));
+    write_result("table_optq", &out)?;
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! Proxy-Hessian collection: H = (2/N) Σ x xᵀ over calibration
+//! activations, accumulated in f64, with the paper's damping
+//! H ← H + α·mean(diag H)·I applied downstream (quant::incoherence).
+
+use crate::linalg::Mat;
+use std::collections::HashMap;
+
+/// Streaming accumulator for one layer's proxy Hessian.
+pub struct HessianAccum {
+    pub n: usize,
+    /// Σ x xᵀ (upper triangle maintained, mirrored on finish).
+    sum: Mat,
+    pub count: usize,
+}
+
+impl HessianAccum {
+    pub fn new(n: usize) -> HessianAccum {
+        HessianAccum {
+            n,
+            sum: Mat::zeros(n, n),
+            count: 0,
+        }
+    }
+
+    /// Add a batch of activation rows (row-major `rows × n`, f32 as
+    /// produced by the model forward).
+    pub fn add_rows(&mut self, rows: &[f32], n: usize) {
+        assert_eq!(n, self.n, "activation dim mismatch");
+        assert_eq!(rows.len() % n, 0);
+        let r = rows.len() / n;
+        for t in 0..r {
+            let x = &rows[t * n..(t + 1) * n];
+            for i in 0..n {
+                let xi = x[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                let srow = &mut self.sum.data[i * n..(i + 1) * n];
+                for j in i..n {
+                    srow[j] += xi * x[j] as f64;
+                }
+            }
+        }
+        self.count += r;
+    }
+
+    /// Finalize: H = (2/N) Σ x xᵀ, symmetric.
+    pub fn finish(&self) -> Mat {
+        let mut h = self.sum.clone();
+        // Mirror the upper triangle.
+        for i in 0..self.n {
+            for j in 0..i {
+                h[(i, j)] = h[(j, i)];
+            }
+        }
+        let scale = if self.count > 0 {
+            2.0 / self.count as f64
+        } else {
+            1.0
+        };
+        h.scale(scale)
+    }
+}
+
+/// A set of accumulators keyed by the model's Hessian-sharing keys.
+pub struct HessianSet {
+    pub accums: HashMap<String, HessianAccum>,
+}
+
+impl HessianSet {
+    /// One accumulator per distinct hkey of the model's linear specs.
+    pub fn for_model(cfg: &crate::model::ModelConfig) -> HessianSet {
+        let mut accums = HashMap::new();
+        for spec in cfg.linear_specs() {
+            accums
+                .entry(spec.hkey.clone())
+                .or_insert_with(|| HessianAccum::new(spec.in_dim));
+        }
+        HessianSet { accums }
+    }
+
+    /// The sink closure to pass to `Transformer::forward`.
+    pub fn sink(&mut self) -> impl FnMut(&str, &[f32], usize) + '_ {
+        move |hkey: &str, rows: &[f32], n: usize| {
+            if let Some(acc) = self.accums.get_mut(hkey) {
+                acc.add_rows(rows, n);
+            }
+        }
+    }
+
+    pub fn finish(&self, hkey: &str) -> crate::Result<Mat> {
+        Ok(self
+            .accums
+            .get(hkey)
+            .ok_or_else(|| anyhow::anyhow!("no Hessian accumulator for '{hkey}'"))?
+            .finish())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_direct_computation() {
+        let mut rng = Rng::new(1);
+        let n = 8;
+        let rows = 40;
+        let x: Vec<f32> = (0..rows * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut acc = HessianAccum::new(n);
+        // Feed in two chunks to exercise streaming.
+        acc.add_rows(&x[..15 * n], n);
+        acc.add_rows(&x[15 * n..], n);
+        let h = acc.finish();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for t in 0..rows {
+                    s += x[t * n + i] as f64 * x[t * n + j] as f64;
+                }
+                let expect = 2.0 * s / rows as f64;
+                assert!((h[(i, j)] - expect).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn hessian_is_psd() {
+        let mut rng = Rng::new(2);
+        let n = 12;
+        let mut acc = HessianAccum::new(n);
+        let x: Vec<f32> = (0..30 * n).map(|_| rng.normal() as f32).collect();
+        acc.add_rows(&x, n);
+        let h = acc.finish();
+        let e = crate::linalg::eigen::eigen_sym(&h, 1e-12, 50);
+        assert!(e.values[0] > -1e-8, "min eig {}", e.values[0]);
+    }
+
+    #[test]
+    fn rank_bounded_by_sample_count() {
+        // With fewer samples than dims, H is exactly low-rank — the regime
+        // Figure 1 observes.
+        let mut rng = Rng::new(3);
+        let n = 16;
+        let mut acc = HessianAccum::new(n);
+        let x: Vec<f32> = (0..4 * n).map(|_| rng.normal() as f32).collect();
+        acc.add_rows(&x, n);
+        let h = acc.finish();
+        let e = crate::linalg::eigen::eigen_sym(&h, 1e-12, 60);
+        let nonzero = e.values.iter().filter(|&&l| l > 1e-8).count();
+        assert!(nonzero <= 4);
+    }
+
+    #[test]
+    fn set_routes_by_hkey() {
+        let cfg = crate::model::ModelConfig::sized("t", 16, 2, 4, 32);
+        let mut set = HessianSet::for_model(&cfg);
+        {
+            let mut sink = set.sink();
+            sink("blk0.attn.in", &vec![1.0f32; 16 * 3], 16);
+            sink("nonexistent", &vec![1.0f32; 16], 16); // silently ignored
+        }
+        assert_eq!(set.accums["blk0.attn.in"].count, 3);
+        assert_eq!(set.accums["blk1.mlp.w2.in"].count, 0);
+        assert!(set.finish("blk0.attn.in").is_ok());
+        assert!(set.finish("bogus").is_err());
+    }
+}

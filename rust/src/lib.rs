@@ -1,0 +1,48 @@
+//! # QuIP — Quantization with Incoherence Processing
+//!
+//! A production-shaped reproduction of *QuIP: 2-Bit Quantization of Large
+//! Language Models With Guarantees* (Chee, Cai, Kuleshov, De Sa — NeurIPS
+//! 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the run-time system: the complete QuIP
+//!   quantization algorithm suite ([`quant`]), the Hessian-collection
+//!   pipeline and serving coordinator ([`coordinator`]), a pure-Rust
+//!   transformer inference engine and a PJRT engine executing AOT-compiled
+//!   JAX/Pallas artifacts ([`engine`], [`runtime`]).
+//! * **Layer 2 (python/compile/model.py)** — the JAX model forward lowered
+//!   once, at build time, to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — the Pallas dequant-matmul
+//!   kernel called by the JAX model.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! checkpoints + HLO text once, and the `quip` binary is self-contained
+//! afterwards.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use quip::quant::{QuantConfig, Method, Processing, quantize_layer};
+//! use quip::linalg::Mat;
+//! use quip::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(0);
+//! let w = Mat::from_fn(16, 64, |_, _| rng.uniform(-1.0, 1.0));
+//! let h = quip::util::testkit::random_spd(&mut rng, 64, 1e-2);
+//! let cfg = QuantConfig { bits: 2, method: Method::Ldlq, processing: Processing::incoherent(), ..Default::default() };
+//! let out = quantize_layer(&w, &h, &cfg, 0xC0FFEE);
+//! println!("proxy loss = {}", out.proxy_loss);
+//! ```
+
+pub mod util;
+pub mod linalg;
+pub mod quant;
+pub mod hessian;
+pub mod data;
+pub mod model;
+pub mod engine;
+pub mod runtime;
+pub mod coordinator;
+pub mod harness;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

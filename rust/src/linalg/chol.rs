@@ -1,0 +1,97 @@
+//! Cholesky decomposition (H = L Lᵀ) and SPD solves. Used by the OPTQ
+//! reference implementation (which Cholesky-decomposes H⁻¹) and by tests.
+
+use super::matrix::Mat;
+
+/// Cholesky H = L Lᵀ, L lower triangular. Errors on non-PD input.
+pub fn cholesky(h: &Mat) -> crate::Result<Mat> {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = h[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    anyhow::bail!("matrix not positive definite at pivot {i} (s={s})");
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve H x = b for SPD H via Cholesky.
+pub fn spd_solve(h: &Mat, b: &[f64]) -> crate::Result<Vec<f64>> {
+    let l = cholesky(h)?;
+    let y = super::solve::forward_sub(&l, b, false);
+    Ok(super::solve::backward_sub_t(&l, &y, false))
+}
+
+/// Inverse of an SPD matrix via Cholesky (solves against each basis vector).
+pub fn spd_inverse(h: &Mat) -> crate::Result<Mat> {
+    let n = h.rows;
+    let l = cholesky(h)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let y = super::solve::forward_sub(&l, &e, false);
+        let x = super::solve::backward_sub_t(&l, &y, false);
+        inv.set_col(j, &x);
+        e[j] = 0.0;
+    }
+    Ok(inv.symmetrize())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::max_abs_diff;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::random_spd;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(20);
+        for n in [1, 4, 17] {
+            let h = random_spd(&mut rng, n, 1e-2);
+            let l = cholesky(&h).unwrap();
+            let back = l.matmul_naive(&l.transpose());
+            assert!(max_abs_diff(&back, &h) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let h = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eig = 3, -1
+        assert!(cholesky(&h).is_err());
+    }
+
+    #[test]
+    fn spd_solve_matches() {
+        let mut rng = Rng::new(21);
+        let h = random_spd(&mut rng, 12, 1e-2);
+        let x_true: Vec<f64> = (0..12).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let b = h.matvec(&x_true);
+        let x = spd_solve(&h, &b).unwrap();
+        for (a, b) in x.iter().zip(&x_true) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Rng::new(22);
+        let h = random_spd(&mut rng, 9, 1e-2);
+        let inv = spd_inverse(&h).unwrap();
+        let prod = h.matmul_naive(&inv);
+        assert!(max_abs_diff(&prod, &Mat::eye(9)) < 1e-7);
+    }
+}

@@ -1,0 +1,180 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations.
+//!
+//! Used for Fig 1 / Fig 3 / Table 6 (spectra and eigenvector incoherence of
+//! collected Hessians) and for tr(H^{1/2}) in the Lemma-2 bound checks.
+//! O(n³) per sweep; converges in ~log(n) sweeps for our sizes (n ≤ ~1k).
+
+use super::matrix::Mat;
+
+/// Eigendecomposition H = Q Λ Qᵀ of a symmetric matrix.
+pub struct Eigen {
+    /// Eigenvalues in ascending order.
+    pub values: Vec<f64>,
+    /// Columns are the corresponding eigenvectors.
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi. `tol` is relative to the Frobenius norm; 1e-12 is a good
+/// default.
+pub fn eigen_sym(h: &Mat, tol: f64, max_sweeps: usize) -> Eigen {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    let mut a = h.symmetrize();
+    let mut q = Mat::eye(n);
+    let fnorm = a.frob_norm().max(1e-300);
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() <= tol * fnorm {
+            break;
+        }
+        for p in 0..n {
+            for qq in (p + 1)..n {
+                let apq = a[(p, qq)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(qq, qq)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // A ← Jᵀ A J on rows/cols p, q.
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, qq)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, qq)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(qq, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(qq, k)] = s * apk + c * aqk;
+                }
+                // Accumulate Q ← Q J.
+                for k in 0..n {
+                    let qkp = q[(k, p)];
+                    let qkq = q[(k, qq)];
+                    q[(k, p)] = c * qkp - s * qkq;
+                    q[(k, qq)] = s * qkp + c * qkq;
+                }
+            }
+        }
+    }
+
+    // Sort ascending by eigenvalue, permuting eigenvector columns.
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    idx.sort_by(|&x, &y| diag[x].partial_cmp(&diag[y]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+    let vectors = {
+        let mut v = Mat::zeros(n, n);
+        for (newj, &oldj) in idx.iter().enumerate() {
+            for i in 0..n {
+                v[(i, newj)] = q[(i, oldj)];
+            }
+        }
+        v
+    };
+    Eigen { values, vectors }
+}
+
+impl Eigen {
+    /// tr(H^{1/2}) = Σ √max(λᵢ, 0) — appears in Lemma 2 / Theorem 7 bounds.
+    pub fn trace_sqrt(&self) -> f64 {
+        self.values.iter().map(|&l| l.max(0.0).sqrt()).sum()
+    }
+
+    /// μ such that max |Q_ij| = μ/√n — the paper's Hessian incoherence
+    /// parameter (Definition 1).
+    pub fn incoherence_mu(&self) -> f64 {
+        let n = self.vectors.rows as f64;
+        self.vectors.max_abs() * n.sqrt()
+    }
+
+    /// Fraction of eigenvalues > `frac` · λ_max ("approximate fractional
+    /// rank", Table 6).
+    pub fn approx_frac_rank(&self, frac: f64) -> f64 {
+        let lmax = self.values.last().copied().unwrap_or(0.0).max(0.0);
+        if lmax == 0.0 {
+            return 0.0;
+        }
+        let k = self.values.iter().filter(|&&l| l > frac * lmax).count();
+        k as f64 / self.values.len() as f64
+    }
+
+    /// Fraction of numerically nonzero eigenvalues ("absolute fractional
+    /// rank", Table 6).
+    pub fn abs_frac_rank(&self) -> f64 {
+        let lmax = self.values.last().copied().unwrap_or(0.0).max(1e-300);
+        let k = self
+            .values
+            .iter()
+            .filter(|&&l| l > 1e-10 * lmax)
+            .count();
+        k as f64 / self.values.len() as f64
+    }
+
+    pub fn reconstruct(&self) -> Mat {
+        let qs = self.vectors.scale_cols(&self.values);
+        qs.matmul_naive(&self.vectors.transpose())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::max_abs_diff;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{random_spd, random_low_rank_psd};
+
+    #[test]
+    fn eigen_reconstructs() {
+        let mut rng = Rng::new(40);
+        for n in [2, 5, 20] {
+            let h = random_spd(&mut rng, n, 1e-3);
+            let e = eigen_sym(&h, 1e-13, 50);
+            assert!(max_abs_diff(&e.reconstruct(), &h) < 1e-7, "n={n}");
+        }
+    }
+
+    #[test]
+    fn eigen_vectors_orthonormal() {
+        let mut rng = Rng::new(41);
+        let h = random_spd(&mut rng, 15, 1e-3);
+        let e = eigen_sym(&h, 1e-13, 50);
+        let qtq = e.vectors.transpose().matmul_naive(&e.vectors);
+        assert!(max_abs_diff(&qtq, &Mat::eye(15)) < 1e-8);
+    }
+
+    #[test]
+    fn eigen_of_diagonal() {
+        let h = Mat::diag(&[3.0, 1.0, 2.0]);
+        let e = eigen_sym(&h, 1e-14, 50);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn low_rank_detected() {
+        let mut rng = Rng::new(42);
+        let h = random_low_rank_psd(&mut rng, 24, 4);
+        let e = eigen_sym(&h, 1e-13, 60);
+        assert!(e.approx_frac_rank(0.01) <= 5.0 / 24.0 + 1e-12);
+    }
+
+    #[test]
+    fn trace_sqrt_matches_eigs() {
+        let h = Mat::diag(&[4.0, 9.0, 16.0]);
+        let e = eigen_sym(&h, 1e-14, 50);
+        assert!((e.trace_sqrt() - 9.0).abs() < 1e-9);
+    }
+}

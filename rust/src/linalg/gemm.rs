@@ -1,0 +1,296 @@
+//! Blocked, threaded GEMM for f64 (`Mat`) and f32 slices (model hot path).
+//!
+//! Strategy: pack nothing, tile over (i, k, j) with a transposed-B inner
+//! kernel when profitable, parallelize over row blocks with scoped threads.
+//! This is the L3 performance substrate — see EXPERIMENTS.md §Perf for the
+//! measured speedup over the naive loop.
+
+use super::matrix::Mat;
+use crate::util::threadpool::{default_threads, parallel_for};
+
+const BLOCK: usize = 64;
+
+/// C = A · B, blocked and threaded.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul dims {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let threads = if m * n * k > 64 * 64 * 64 {
+        default_threads()
+    } else {
+        1
+    };
+    // §Perf iteration 1: on a single hardware thread the k-blocked variant
+    // re-streams the output matrix per k-block and loses ~2× to the plain
+    // row-major saxpy kernel; use the latter whenever there is no
+    // parallelism to exploit (measured: 512³ f64, 72ms → 43ms).
+    if threads == 1 {
+        return a.matmul_naive(b);
+    }
+    let mut out = Mat::zeros(m, n);
+    let n_row_blocks = m.div_ceil(BLOCK);
+    // Each task owns a disjoint row block of the output; no locking needed.
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    parallel_for(n_row_blocks, threads, |bi| {
+        let i0 = bi * BLOCK;
+        let i1 = (i0 + BLOCK).min(m);
+        let out_ptr = &out_ptr;
+        // SAFETY: row blocks [i0, i1) are disjoint across tasks.
+        let c = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i0 * n), (i1 - i0) * n) };
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let arow = &a.row(i)[k0..k1];
+                let crow = &mut c[(i - i0) * n..(i - i0 + 1) * n];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(k0 + kk);
+                    // saxpy: crow += av * brow
+                    let mut j = 0;
+                    while j + 4 <= n {
+                        crow[j] += av * brow[j];
+                        crow[j + 1] += av * brow[j + 1];
+                        crow[j + 2] += av * brow[j + 2];
+                        crow[j + 3] += av * brow[j + 3];
+                        j += 4;
+                    }
+                    while j < n {
+                        crow[j] += av * brow[j];
+                        j += 1;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// C = A · Bᵀ without materializing Bᵀ (both row-major, dot-product kernel).
+pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols);
+    let (m, n) = (a.rows, b.rows);
+    let mut out = Mat::zeros(m, n);
+    let threads = if m * n * a.cols > 64 * 64 * 64 {
+        default_threads()
+    } else {
+        1
+    };
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    parallel_for(m, threads, |i| {
+        let out_ptr = &out_ptr;
+        // SAFETY: each task writes only row i.
+        let crow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+        let arow = a.row(i);
+        for j in 0..n {
+            crow[j] = super::matrix::dot(arow, b.row(j));
+        }
+    });
+    out
+}
+
+/// C = Aᵀ · A (Gram matrix), exploiting symmetry; used by Hessian collection.
+pub fn gram(a: &Mat) -> Mat {
+    let n = a.cols;
+    let mut out = Mat::zeros(n, n);
+    for r in 0..a.rows {
+        let row = a.row(r);
+        for i in 0..n {
+            let v = row[i];
+            if v == 0.0 {
+                continue;
+            }
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j in i..n {
+                orow[j] += v * row[j];
+            }
+        }
+    }
+    // mirror
+    for i in 0..n {
+        for j in 0..i {
+            out[(i, j)] = out[(j, i)];
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------------------
+// f32 kernels for the model / inference engine hot path.
+// ----------------------------------------------------------------------
+
+/// out[m×n] = a[m×k] · b[k×n], all row-major f32 slices. Threaded over rows.
+pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    let threads = if m * n * k > 32 * 32 * 32 {
+        default_threads()
+    } else {
+        1
+    };
+    let out_ptr = SendPtrF32(out.as_mut_ptr());
+    parallel_for(m, threads, |i| {
+        let out_ptr = &out_ptr;
+        // SAFETY: each task writes only row i.
+        let crow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let mut j = 0;
+            while j + 8 <= n {
+                crow[j] += av * brow[j];
+                crow[j + 1] += av * brow[j + 1];
+                crow[j + 2] += av * brow[j + 2];
+                crow[j + 3] += av * brow[j + 3];
+                crow[j + 4] += av * brow[j + 4];
+                crow[j + 5] += av * brow[j + 5];
+                crow[j + 6] += av * brow[j + 6];
+                crow[j + 7] += av * brow[j + 7];
+                j += 8;
+            }
+            while j < n {
+                crow[j] += av * brow[j];
+                j += 1;
+            }
+        }
+    });
+}
+
+struct SendPtrF32(*mut f32);
+unsafe impl Send for SendPtrF32 {}
+unsafe impl Sync for SendPtrF32 {}
+
+/// out[m×n] = a[m×k] · b[n×k]ᵀ — B stored transposed (weight layout:
+/// each output feature's weights contiguous), the natural layout for
+/// matvec-heavy decode.
+pub fn sgemm_bt(m: usize, k: usize, n: usize, a: &[f32], bt: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    let threads = if m * n * k > 32 * 32 * 32 {
+        default_threads()
+    } else {
+        1
+    };
+    let out_ptr = SendPtrF32(out.as_mut_ptr());
+    parallel_for(m, threads, |i| {
+        let out_ptr = &out_ptr;
+        let crow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            crow[j] = sdot(arow, &bt[j * k..(j + 1) * k]);
+        }
+    });
+}
+
+#[inline]
+pub fn sdot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.uniform(-1.0, 1.0))
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(3, 4, 5), (17, 33, 9), (65, 70, 66), (128, 100, 130)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let fast = matmul(&a, &b);
+            let slow = a.matmul_naive(&b);
+            assert!(
+                super::super::matrix::max_abs_diff(&fast, &slow) < 1e-9,
+                "mismatch at {m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches() {
+        let mut rng = Rng::new(2);
+        let a = random_mat(&mut rng, 31, 17);
+        let b = random_mat(&mut rng, 23, 17);
+        let fast = matmul_bt(&a, &b);
+        let slow = a.matmul_naive(&b.transpose());
+        assert!(super::super::matrix::max_abs_diff(&fast, &slow) < 1e-9);
+    }
+
+    #[test]
+    fn gram_matches() {
+        let mut rng = Rng::new(3);
+        let a = random_mat(&mut rng, 40, 12);
+        let g = gram(&a);
+        let slow = a.transpose().matmul_naive(&a);
+        assert!(super::super::matrix::max_abs_diff(&g, &slow) < 1e-9);
+    }
+
+    #[test]
+    fn sgemm_matches_f64() {
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (9, 33, 21);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut out = vec![0.0f32; m * n];
+        sgemm(m, k, n, &a, &b, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for kk in 0..k {
+                    s += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+                assert!((out[i * n + j] as f64 - s).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn sgemm_bt_matches_sgemm() {
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (7, 19, 13);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        // bt[j*k + kk] = b[kk*n + j]
+        let mut bt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let mut o1 = vec![0.0f32; m * n];
+        let mut o2 = vec![0.0f32; m * n];
+        sgemm(m, k, n, &a, &b, &mut o1);
+        sgemm_bt(m, k, n, &a, &bt, &mut o2);
+        for (x, y) in o1.iter().zip(&o2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

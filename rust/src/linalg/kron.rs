@@ -1,0 +1,343 @@
+//! Fast structured orthogonal operators: V = (L ⊗ R) · P with L, R small
+//! Haar-orthogonal factors and P a random permutation (QuIP §4.1–4.2).
+//!
+//! Multiplying x ∈ ℝⁿ by V costs O(n(p+q)) = o(n²): permute, reshape to
+//! p×q, left/right small matmuls, reshape back. The permutation is the
+//! paper's "randomly permute entries at the fast matrix multiplication
+//! step" heuristic (Table 5 ablates it).
+
+use super::matrix::Mat;
+use super::orthogonal::{balanced_factor, haar_orthogonal};
+use crate::util::rng::Rng;
+
+/// A seeded fast orthogonal operator on ℝⁿ.
+#[derive(Clone, Debug)]
+pub struct KronOrtho {
+    pub n: usize,
+    pub p: usize,
+    pub q: usize,
+    /// p×p Haar-orthogonal left factor.
+    pub left: Mat,
+    /// q×q Haar-orthogonal right factor.
+    pub right: Mat,
+    /// Permutation applied before the Kronecker multiply:
+    /// (P x)_i = x[perm[i]].
+    pub perm: Vec<usize>,
+    /// Inverse permutation (cached).
+    inv_perm: Vec<usize>,
+}
+
+impl KronOrtho {
+    /// Deterministically construct from a seed. The same seed always
+    /// regenerates the same operator — this is what makes storing only the
+    /// seed in quantized artifacts possible.
+    pub fn from_seed(seed: u64, n: usize) -> KronOrtho {
+        Self::from_seed_with(seed, n, true)
+    }
+
+    /// As `from_seed`, with the random permutation optionally disabled
+    /// (identity) — used by the Table 5 ablation.
+    pub fn from_seed_with(seed: u64, n: usize, permute: bool) -> KronOrtho {
+        let (p, q) = balanced_factor(n);
+        let root = Rng::new(seed);
+        let left = haar_orthogonal(&mut root.fork(1), p);
+        let right = haar_orthogonal(&mut root.fork(2), q);
+        let perm = if permute {
+            root.fork(3).permutation(n)
+        } else {
+            (0..n).collect()
+        };
+        let mut inv_perm = vec![0usize; n];
+        for (i, &pi) in perm.iter().enumerate() {
+            inv_perm[pi] = i;
+        }
+        KronOrtho {
+            n,
+            p,
+            q,
+            left,
+            right,
+            perm,
+            inv_perm,
+        }
+    }
+
+    /// y = V x.
+    pub fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let (p, q) = (self.p, self.q);
+        // z = P x
+        let mut z = vec![0.0; self.n];
+        for i in 0..self.n {
+            z[i] = x[self.perm[i]];
+        }
+        // Z: p×q row-major; Y = L Z Rᵀ
+        let mut tmp = vec![0.0; self.n]; // L Z : p×q
+        for a in 0..p {
+            let lrow = self.left.row(a);
+            let trow = &mut tmp[a * q..(a + 1) * q];
+            for (aa, &lv) in lrow.iter().enumerate() {
+                if lv == 0.0 {
+                    continue;
+                }
+                let zrow = &z[aa * q..(aa + 1) * q];
+                for b in 0..q {
+                    trow[b] += lv * zrow[b];
+                }
+            }
+        }
+        let mut y = vec![0.0; self.n]; // (L Z) Rᵀ : p×q
+        for a in 0..p {
+            let trow = &tmp[a * q..(a + 1) * q];
+            let yrow = &mut y[a * q..(a + 1) * q];
+            for b in 0..q {
+                yrow[b] = super::matrix::dot(trow, self.right.row(b));
+            }
+        }
+        y
+    }
+
+    /// x = Vᵀ y.
+    pub fn apply_t_vec(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.n);
+        let (p, q) = (self.p, self.q);
+        // Z = Lᵀ Y R  (Y p×q row-major)
+        let mut tmp = vec![0.0; self.n]; // Lᵀ Y : p×q
+        for a in 0..p {
+            // row a of Lᵀ is column a of L
+            let trow = &mut tmp[a * q..(a + 1) * q];
+            for aa in 0..p {
+                let lv = self.left[(aa, a)];
+                if lv == 0.0 {
+                    continue;
+                }
+                let yrow = &y[aa * q..(aa + 1) * q];
+                for b in 0..q {
+                    trow[b] += lv * yrow[b];
+                }
+            }
+        }
+        let mut z = vec![0.0; self.n]; // (Lᵀ Y) R : p×q
+        for a in 0..p {
+            let trow = &tmp[a * q..(a + 1) * q];
+            let zrow = &mut z[a * q..(a + 1) * q];
+            for (bb, &tv) in trow.iter().enumerate() {
+                if tv == 0.0 {
+                    continue;
+                }
+                let rrow = self.right.row(bb);
+                for b in 0..q {
+                    zrow[b] += tv * rrow[b];
+                }
+            }
+        }
+        // x = Pᵀ z : x[perm[i]] = z[i]
+        let mut x = vec![0.0; self.n];
+        for i in 0..self.n {
+            x[self.perm[i]] = z[i];
+        }
+        x
+    }
+
+    /// V M (M is n×c; applies V to every column).
+    pub fn apply_mat_left(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows, self.n);
+        let c = m.cols;
+        // Permute rows, then batched Kronecker apply via two matmul passes.
+        let pm = m.permute_rows(&self.perm);
+        let (p, q) = (self.p, self.q);
+        // View pm as (p, q*c)? No: row-major (n×c) = (p·q)×c; axis-0 apply:
+        // tmp[(a', b), :] = Σ_a L[a',a] pm[(a,b), :]
+        let mut tmp = Mat::zeros(self.n, c);
+        for ap in 0..p {
+            for a in 0..p {
+                let lv = self.left[(ap, a)];
+                if lv == 0.0 {
+                    continue;
+                }
+                for b in 0..q {
+                    let src = pm.row(a * q + b).to_vec();
+                    let dst = tmp.row_mut(ap * q + b);
+                    for (d, s) in dst.iter_mut().zip(&src) {
+                        *d += lv * s;
+                    }
+                }
+            }
+        }
+        // axis-1 apply: out[(a, b'), :] = Σ_b R[b',b] tmp[(a,b), :]
+        let mut out = Mat::zeros(self.n, c);
+        for a in 0..p {
+            for bp in 0..q {
+                for b in 0..q {
+                    let rv = self.right[(bp, b)];
+                    if rv == 0.0 {
+                        continue;
+                    }
+                    let src = tmp.row(a * q + b).to_vec();
+                    let dst = out.row_mut(a * q + bp);
+                    for (d, s) in dst.iter_mut().zip(&src) {
+                        *d += rv * s;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Vᵀ M.
+    pub fn apply_t_mat_left(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows, self.n);
+        let c = m.cols;
+        let (p, q) = (self.p, self.q);
+        let mut tmp = Mat::zeros(self.n, c);
+        for ap in 0..p {
+            for a in 0..p {
+                let lv = self.left[(a, ap)]; // Lᵀ
+                if lv == 0.0 {
+                    continue;
+                }
+                for b in 0..q {
+                    let src = m.row(a * q + b).to_vec();
+                    let dst = tmp.row_mut(ap * q + b);
+                    for (d, s) in dst.iter_mut().zip(&src) {
+                        *d += lv * s;
+                    }
+                }
+            }
+        }
+        let mut z = Mat::zeros(self.n, c);
+        for a in 0..p {
+            for bp in 0..q {
+                for b in 0..q {
+                    let rv = self.right[(b, bp)]; // Rᵀ
+                    if rv == 0.0 {
+                        continue;
+                    }
+                    let src = tmp.row(a * q + b).to_vec();
+                    let dst = z.row_mut(a * q + bp);
+                    for (d, s) in dst.iter_mut().zip(&src) {
+                        *d += rv * s;
+                    }
+                }
+            }
+        }
+        z.permute_rows(&self.inv_perm)
+    }
+
+    /// M Vᵀ (M is c×n).
+    pub fn apply_mat_right_t(&self, m: &Mat) -> Mat {
+        self.apply_mat_left(&m.transpose()).transpose()
+    }
+
+    /// M V (M is c×n).
+    pub fn apply_mat_right(&self, m: &Mat) -> Mat {
+        self.apply_t_mat_left(&m.transpose()).transpose()
+    }
+
+    /// V H Vᵀ (conjugation; H n×n).
+    pub fn conj_sym(&self, h: &Mat) -> Mat {
+        let vh = self.apply_mat_left(h);
+        self.apply_mat_left(&vh.transpose()).transpose()
+    }
+
+    /// Vᵀ H V.
+    pub fn conj_sym_t(&self, h: &Mat) -> Mat {
+        let vth = self.apply_t_mat_left(h);
+        self.apply_t_mat_left(&vth.transpose()).transpose()
+    }
+
+    /// Materialize V as a dense n×n matrix (tests / diagnostics only).
+    pub fn dense(&self) -> Mat {
+        let mut v = Mat::zeros(self.n, self.n);
+        let mut e = vec![0.0; self.n];
+        for j in 0..self.n {
+            e[j] = 1.0;
+            let col = self.apply_vec(&e);
+            v.set_col(j, &col);
+            e[j] = 0.0;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::max_abs_diff;
+    use crate::util::testkit::random_spd;
+
+    #[test]
+    fn dense_is_orthogonal() {
+        for n in [6, 12, 16, 7] {
+            let v = KronOrtho::from_seed(123, n).dense();
+            let vtv = v.transpose().matmul_naive(&v);
+            assert!(max_abs_diff(&vtv, &Mat::eye(n)) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn apply_t_inverts_apply() {
+        let k = KronOrtho::from_seed(7, 20);
+        let x: Vec<f64> = (0..20).map(|i| (i as f64).sin()).collect();
+        let y = k.apply_vec(&x);
+        let back = k.apply_t_vec(&y);
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn mat_left_matches_dense() {
+        let k = KronOrtho::from_seed(9, 12);
+        let m = Mat::from_fn(12, 5, |i, j| (i * 5 + j) as f64 * 0.1);
+        let fast = k.apply_mat_left(&m);
+        let dense = k.dense().matmul_naive(&m);
+        assert!(max_abs_diff(&fast, &dense) < 1e-9);
+        let fast_t = k.apply_t_mat_left(&m);
+        let dense_t = k.dense().transpose().matmul_naive(&m);
+        assert!(max_abs_diff(&fast_t, &dense_t) < 1e-9);
+    }
+
+    #[test]
+    fn mat_right_matches_dense() {
+        let k = KronOrtho::from_seed(10, 12);
+        let m = Mat::from_fn(4, 12, |i, j| ((i + j) as f64).cos());
+        let fast = k.apply_mat_right_t(&m);
+        let dense = m.matmul_naive(&k.dense().transpose());
+        assert!(max_abs_diff(&fast, &dense) < 1e-9);
+        let fast2 = k.apply_mat_right(&m);
+        let dense2 = m.matmul_naive(&k.dense());
+        assert!(max_abs_diff(&fast2, &dense2) < 1e-9);
+    }
+
+    #[test]
+    fn conj_preserves_trace_and_spectrum_shape() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let h = random_spd(&mut rng, 16, 1e-3);
+        let k = KronOrtho::from_seed(3, 16);
+        let hc = k.conj_sym(&h);
+        assert!((hc.trace() - h.trace()).abs() < 1e-8);
+        // conj then conj_t returns the original
+        let back = k.conj_sym_t(&hc);
+        assert!(max_abs_diff(&back, &h) < 1e-8);
+    }
+
+    #[test]
+    fn seeded_reproducible_and_permutation_toggles() {
+        let a = KronOrtho::from_seed(42, 24);
+        let b = KronOrtho::from_seed(42, 24);
+        assert_eq!(a.perm, b.perm);
+        assert_eq!(a.left.data, b.left.data);
+        let c = KronOrtho::from_seed_with(42, 24, false);
+        assert_eq!(c.perm, (0..24).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prime_n_degenerates_gracefully() {
+        let k = KronOrtho::from_seed(5, 13);
+        assert_eq!(k.p * k.q, 13);
+        let v = k.dense();
+        let vtv = v.transpose().matmul_naive(&v);
+        assert!(max_abs_diff(&vtv, &Mat::eye(13)) < 1e-9);
+    }
+}

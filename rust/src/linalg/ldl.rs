@@ -1,0 +1,189 @@
+//! LDL factorizations.
+//!
+//! QuIP's Eq. (4) uses the *upper* unit-triangular form
+//! `H = (U̇ + I) D (U̇ + I)ᵀ` with `U̇` strictly upper triangular — the
+//! reversed-order variant of the textbook lower LDLᵀ. We provide both:
+//! `ldl_lower` (H = L D Lᵀ) and `udu` via the reversal-permutation trick
+//! (see DESIGN.md §4).
+
+use super::matrix::Mat;
+
+/// Lower LDLᵀ: H = L D Lᵀ with L unit lower triangular, D diagonal (≥ 0
+/// for PSD inputs; tiny negative pivots from numerical PSD are clamped).
+pub struct Ldl {
+    pub l: Mat,
+    pub d: Vec<f64>,
+}
+
+/// Upper "UDUᵀ": H = (U + I') … returned as `u` *unit* upper triangular
+/// (diagonal = 1; the paper's U̇ is `u - I`) with diagonal `d`.
+pub struct Udu {
+    /// Unit upper triangular factor (U̇ + I in the paper's notation).
+    pub u: Mat,
+    pub d: Vec<f64>,
+}
+
+/// Compute the lower LDLᵀ of a symmetric PSD matrix. Pivots below
+/// `tol · max_diag` are treated as zero (their L column below the diagonal
+/// is zeroed) — the PSD completion standard trick.
+pub fn ldl_lower(h: &Mat, tol: f64) -> Ldl {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    let mut l = Mat::eye(n);
+    let mut d = vec![0.0; n];
+    // Working copy of the lower triangle, column by column (right-looking).
+    let mut a = h.clone();
+    let max_diag = (0..n).fold(0.0f64, |m, i| m.max(h[(i, i)].abs())).max(1e-300);
+    for k in 0..n {
+        let dk = a[(k, k)];
+        if dk <= tol * max_diag {
+            d[k] = dk.max(0.0);
+            // Semi-definite pivot: column of L stays e_k.
+            continue;
+        }
+        d[k] = dk;
+        for i in (k + 1)..n {
+            l[(i, k)] = a[(i, k)] / dk;
+        }
+        // Rank-1 downdate of the trailing submatrix.
+        for i in (k + 1)..n {
+            let lik = l[(i, k)];
+            if lik == 0.0 {
+                continue;
+            }
+            for j in (k + 1)..=i {
+                let v = lik * l[(j, k)] * dk;
+                a[(i, j)] -= v;
+                if i != j {
+                    a[(j, i)] -= v;
+                }
+            }
+        }
+    }
+    Ldl { l, d }
+}
+
+/// The paper's factorization: H = U D Uᵀ with U *unit upper* triangular.
+///
+/// Implementation: with P the index-reversal permutation, `P H P = L D' Lᵀ`
+/// (lower LDL); then `U = P L P` is unit upper and `D = P D' P`.
+pub fn udu(h: &Mat, tol: f64) -> Udu {
+    let n = h.rows;
+    let rev: Vec<usize> = (0..n).rev().collect();
+    let hp = h.permute_sym(&rev);
+    let Ldl { l, d } = ldl_lower(&hp, tol);
+    let u = l.permute_sym(&rev);
+    let mut dd = vec![0.0; n];
+    for i in 0..n {
+        dd[i] = d[n - 1 - i];
+    }
+    Udu { u, d: dd }
+}
+
+impl Udu {
+    /// Reconstruct H = U D Uᵀ (for testing / diagnostics).
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.u.rows;
+        let ud = self.u.scale_cols(&self.d);
+        let mut out = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in i.max(j)..n {
+                    s += ud[(i, k)] * self.u[(j, k)];
+                }
+                out[(i, j)] = s;
+            }
+        }
+        out
+    }
+
+    /// The strictly-upper feedback matrix U̇ = U − I used by LDLQ.
+    pub fn strictly_upper(&self) -> Mat {
+        let mut m = self.u.clone();
+        for i in 0..m.rows {
+            m[(i, i)] = 0.0;
+        }
+        m
+    }
+
+    /// tr(D) — the quantity Theorem 1 bounds the proxy loss with.
+    pub fn trace_d(&self) -> f64 {
+        self.d.iter().sum()
+    }
+}
+
+impl Ldl {
+    pub fn reconstruct(&self) -> Mat {
+        let ld = self.l.scale_cols(&self.d);
+        ld.matmul_naive(&self.l.transpose())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::max_abs_diff;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::random_spd;
+
+    #[test]
+    fn ldl_reconstructs_spd() {
+        let mut rng = Rng::new(10);
+        for n in [1, 2, 5, 16, 40] {
+            let h = random_spd(&mut rng, n, 1e-3);
+            let f = ldl_lower(&h, 1e-12);
+            assert!(
+                max_abs_diff(&f.reconstruct(), &h) < 1e-8,
+                "n={n}"
+            );
+            assert!(f.d.iter().all(|&d| d >= 0.0));
+        }
+    }
+
+    #[test]
+    fn udu_reconstructs_spd() {
+        let mut rng = Rng::new(11);
+        for n in [1, 3, 8, 33] {
+            let h = random_spd(&mut rng, n, 1e-3);
+            let f = udu(&h, 1e-12);
+            assert!(max_abs_diff(&f.reconstruct(), &h) < 1e-8, "n={n}");
+            // u is unit upper triangular
+            for i in 0..n {
+                assert!((f.u[(i, i)] - 1.0).abs() < 1e-12);
+                for j in 0..i {
+                    assert_eq!(f.u[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn udu_handles_low_rank() {
+        // H = v vᵀ is rank 1 PSD.
+        let v = [1.0, -2.0, 0.5, 3.0];
+        let h = Mat::from_fn(4, 4, |i, j| v[i] * v[j]);
+        let f = udu(&h, 1e-12);
+        assert!(max_abs_diff(&f.reconstruct(), &h) < 1e-8);
+        assert!(f.d.iter().all(|&d| d >= 0.0));
+    }
+
+    #[test]
+    fn trace_d_leq_trace_h() {
+        // tr(D) ≤ tr(H) for any PSD H (§3.2): the ratio drives LDLQ's gain.
+        let mut rng = Rng::new(12);
+        for _ in 0..10 {
+            let h = random_spd(&mut rng, 24, 1e-3);
+            let f = udu(&h, 1e-12);
+            assert!(f.trace_d() <= h.trace() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn diagonal_h_gives_d_equal_diag() {
+        let h = Mat::diag(&[3.0, 1.0, 4.0, 1.5]);
+        let f = udu(&h, 1e-12);
+        assert_eq!(f.d, vec![3.0, 1.0, 4.0, 1.5]);
+        assert!(max_abs_diff(&f.u, &Mat::eye(4)) < 1e-12);
+    }
+}

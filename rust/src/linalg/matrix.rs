@@ -1,0 +1,401 @@
+//! Row-major dense `f64` matrix.
+
+use std::fmt;
+
+/// Dense row-major matrix of f64 (quantization math runs in f64 for the
+/// same reason the reference implementation runs layer math in fp64:
+/// LDL feedback amplifies rounding error over n columns).
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize) -> f64>(rows: usize, cols: usize, mut f: F) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.row_mut(i).copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn diag(d: &[f64]) -> Mat {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &x) in d.iter().enumerate() {
+            m[(i, i)] = x;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn diagonal(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+
+    pub fn trace(&self) -> f64 {
+        self.diagonal().iter().sum()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let mut out = self.clone();
+        for a in out.data.iter_mut() {
+            *a *= s;
+        }
+        out
+    }
+
+    /// Scale column j by s[j] (right-multiplication by diag(s)).
+    pub fn scale_cols(&self, s: &[f64]) -> Mat {
+        assert_eq!(s.len(), self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let row = out.row_mut(i);
+            for (x, &f) in row.iter_mut().zip(s) {
+                *x *= f;
+            }
+        }
+        out
+    }
+
+    /// Scale row i by s[i] (left-multiplication by diag(s)).
+    pub fn scale_rows(&self, s: &[f64]) -> Mat {
+        assert_eq!(s.len(), self.rows);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let f = s[i];
+            for x in out.row_mut(i) {
+                *x *= f;
+            }
+        }
+        out
+    }
+
+    /// Permute columns: out[:, j] = self[:, perm[j]].
+    pub fn permute_cols(&self, perm: &[usize]) -> Mat {
+        assert_eq!(perm.len(), self.cols);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (j, &p) in perm.iter().enumerate() {
+                dst[j] = src[p];
+            }
+        }
+        out
+    }
+
+    /// Permute rows: out[i, :] = self[perm[i], :].
+    pub fn permute_rows(&self, perm: &[usize]) -> Mat {
+        assert_eq!(perm.len(), self.rows);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for (i, &p) in perm.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(p));
+        }
+        out
+    }
+
+    /// Symmetric permutation: out = P self Pᵀ with out[i,j] = self[perm[i], perm[j]].
+    pub fn permute_sym(&self, perm: &[usize]) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(i, j)] = self[(perm[i], perm[j])];
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+
+    /// Force exact symmetry: (A + Aᵀ)/2.
+    pub fn symmetrize(&self) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                out[(i, j)] = v;
+                out[(j, i)] = v;
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| dot(self.row(i), x))
+            .collect()
+    }
+
+    /// Naive matmul — reference implementation; use `gemm::matmul` on hot
+    /// paths.
+    pub fn matmul_naive(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let row = out.row_mut(i);
+                for j in 0..other.cols {
+                    row[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Blocked threaded matmul (delegates to `gemm`).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        super::gemm::matmul(self, other)
+    }
+
+    /// Extract a contiguous sub-matrix (row0..row1, col0..col1).
+    pub fn slice(&self, row0: usize, row1: usize, col0: usize, col1: usize) -> Mat {
+        assert!(row1 <= self.rows && col1 <= self.cols && row0 <= row1 && col0 <= col1);
+        let mut out = Mat::zeros(row1 - row0, col1 - col0);
+        for i in row0..row1 {
+            out.row_mut(i - row0)
+                .copy_from_slice(&self.row(i)[col0..col1]);
+        }
+        out
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane unrolled; autovectorizes well.
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Max elementwise |a-b|.
+pub fn max_abs_diff(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    a.data
+        .iter()
+        .zip(&b.data)
+        .fold(0.0, |m, (x, y)| m.max((x - y).abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_transpose() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m[(1, 2)], 12.0);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t[(2, 1)], 12.0);
+    }
+
+    #[test]
+    fn matmul_naive_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul_naive(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn eye_is_identity_under_matmul() {
+        let m = Mat::from_fn(4, 4, |i, j| (i + 2 * j) as f64);
+        let e = Mat::eye(4);
+        assert_eq!(m.matmul_naive(&e).data, m.data);
+        assert_eq!(e.matmul_naive(&m).data, m.data);
+    }
+
+    #[test]
+    fn permute_sym_matches_manual() {
+        let m = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        let perm = vec![2, 0, 1];
+        let p = m.permute_sym(&perm);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(p[(i, j)], m[(perm[i], perm[j])]);
+            }
+        }
+    }
+
+    #[test]
+    fn permute_cols_then_inverse_is_identity() {
+        let m = Mat::from_fn(2, 5, |i, j| (i * 5 + j) as f64);
+        let perm = vec![3, 0, 4, 1, 2];
+        let mut inv = vec![0usize; 5];
+        for (j, &p) in perm.iter().enumerate() {
+            inv[p] = j;
+        }
+        let back = m.permute_cols(&perm).permute_cols(&inv);
+        assert_eq!(back.data, m.data);
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let m = Mat::from_fn(2, 2, |_, _| 1.0);
+        let r = m.scale_rows(&[2.0, 3.0]);
+        assert_eq!(r.data, vec![2.0, 2.0, 3.0, 3.0]);
+        let c = m.scale_cols(&[2.0, 3.0]);
+        assert_eq!(c.data, vec![2.0, 3.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn dot_matches_reference() {
+        let a: Vec<f64> = (0..131).map(|i| i as f64 * 0.25).collect();
+        let b: Vec<f64> = (0..131).map(|i| (i as f64).sin()).collect();
+        let reference: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - reference).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slice_extracts_block() {
+        let m = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let s = m.slice(1, 3, 2, 4);
+        assert_eq!(s.data, vec![6.0, 7.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Dense linear-algebra substrate (no BLAS/LAPACK available offline).
+//!
+//! Everything QuIP's math needs: a row-major `f64` matrix, blocked and
+//! threaded GEMM, the UDUᵀ ("reverse LDL") factorization the paper's
+//! Eq. (4) uses, Cholesky, a cyclic-Jacobi symmetric eigensolver,
+//! Householder QR, Haar-random orthogonal sampling, Kronecker-structured
+//! fast orthogonal multiplication, and triangular solves.
+
+pub mod matrix;
+pub mod gemm;
+pub mod ldl;
+pub mod chol;
+pub mod eigen;
+pub mod orthogonal;
+pub mod kron;
+pub mod solve;
+
+pub use matrix::Mat;
+pub use kron::KronOrtho;

@@ -1,0 +1,171 @@
+//! Haar-random orthogonal matrices via Householder QR of a Gaussian matrix
+//! (with the R-diagonal sign correction that makes the distribution exactly
+//! Haar). These are the Kronecker factors of QuIP's incoherence processing.
+
+use super::matrix::Mat;
+use crate::util::rng::Rng;
+
+/// QR via Householder reflections. Returns (Q, R) with Q orthogonal
+/// (m×m) and R upper triangular (m×n), A = Q R.
+pub fn qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    let mut r = a.clone();
+    let mut q = Mat::eye(m);
+    let mut v = vec![0.0; m];
+    for k in 0..n.min(m.saturating_sub(1)) {
+        // Householder vector for column k below the diagonal.
+        let mut normx = 0.0;
+        for i in k..m {
+            normx += r[(i, k)] * r[(i, k)];
+        }
+        let normx = normx.sqrt();
+        if normx < 1e-300 {
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -normx } else { normx };
+        let mut vnorm2 = 0.0;
+        for i in k..m {
+            v[i] = r[(i, k)];
+            if i == k {
+                v[i] -= alpha;
+            }
+            vnorm2 += v[i] * v[i];
+        }
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        let beta = 2.0 / vnorm2;
+        // R ← (I − β v vᵀ) R
+        for j in k..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i] * r[(i, j)];
+            }
+            let s = beta * s;
+            for i in k..m {
+                r[(i, j)] -= s * v[i];
+            }
+        }
+        // Q ← Q (I − β v vᵀ)
+        for i in 0..m {
+            let mut s = 0.0;
+            for j in k..m {
+                s += q[(i, j)] * v[j];
+            }
+            let s = beta * s;
+            for j in k..m {
+                q[(i, j)] -= s * v[j];
+            }
+        }
+    }
+    // Zero numerical noise below the diagonal of R.
+    for i in 0..m {
+        for j in 0..n.min(i) {
+            r[(i, j)] = 0.0;
+        }
+    }
+    (q, r)
+}
+
+/// Sample an n×n orthogonal matrix from the Haar measure:
+/// QR of a standard Gaussian matrix, then Q · sign(diag(R)).
+pub fn haar_orthogonal(rng: &mut Rng, n: usize) -> Mat {
+    let g = Mat::from_fn(n, n, |_, _| rng.normal());
+    let (mut q, r) = qr(&g);
+    for j in 0..n {
+        if r[(j, j)] < 0.0 {
+            for i in 0..n {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    q
+}
+
+/// Factor n ≈ p·q with p, q as close to √n as possible (the paper's
+/// two-factor Kronecker split). Returns (p, q) with p ≤ q, p·q = n.
+pub fn balanced_factor(n: usize) -> (usize, usize) {
+    assert!(n > 0);
+    let mut best = (1, n);
+    let mut p = (n as f64).sqrt() as usize + 1;
+    while p >= 1 {
+        if n % p == 0 {
+            let q = n / p;
+            let (lo, hi) = if p <= q { (p, q) } else { (q, p) };
+            if hi - lo < best.1 - best.0 {
+                best = (lo, hi);
+            }
+            if lo * lo <= n {
+                // first hit below sqrt is the most balanced
+                return best;
+            }
+        }
+        p -= 1;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(50);
+        for &(m, n) in &[(4, 4), (6, 3), (9, 9)] {
+            let a = Mat::from_fn(m, n, |_, _| rng.normal());
+            let (q, r) = qr(&a);
+            assert!(max_abs_diff(&q.matmul_naive(&r), &a) < 1e-9);
+            let qtq = q.transpose().matmul_naive(&q);
+            assert!(max_abs_diff(&qtq, &Mat::eye(m)) < 1e-9);
+            // R upper triangular
+            for i in 0..m {
+                for j in 0..n.min(i) {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn haar_is_orthogonal() {
+        let mut rng = Rng::new(51);
+        for n in [1, 2, 8, 16] {
+            let q = haar_orthogonal(&mut rng, n);
+            let qtq = q.transpose().matmul_naive(&q);
+            assert!(max_abs_diff(&qtq, &Mat::eye(n)) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn haar_entries_concentrate() {
+        // Entries of a Haar orthogonal have E[q_ij²] = 1/n; max entry of a
+        // 64×64 sample should be far below 1 (incoherence in action).
+        let mut rng = Rng::new(52);
+        let n = 64;
+        let q = haar_orthogonal(&mut rng, n);
+        let mean_sq: f64 = q.data.iter().map(|x| x * x).sum::<f64>() / (n * n) as f64;
+        assert!((mean_sq - 1.0 / n as f64).abs() < 1e-3);
+        assert!(q.max_abs() < 0.7);
+    }
+
+    #[test]
+    fn haar_seeded_reproducible() {
+        let a = haar_orthogonal(&mut Rng::new(99), 8);
+        let b = haar_orthogonal(&mut Rng::new(99), 8);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn balanced_factor_cases() {
+        assert_eq!(balanced_factor(64), (8, 8));
+        assert_eq!(balanced_factor(12), (3, 4));
+        assert_eq!(balanced_factor(7), (1, 7)); // prime: degenerate split
+        assert_eq!(balanced_factor(768), (24, 32));
+        let (p, q) = balanced_factor(1024);
+        assert_eq!(p * q, 1024);
+        assert_eq!((p, q), (32, 32));
+    }
+}

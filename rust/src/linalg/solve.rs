@@ -1,0 +1,134 @@
+//! Triangular solves and triangular inverses.
+
+use super::matrix::Mat;
+
+/// Solve L y = b with L lower triangular. `unit` treats diag as 1.
+pub fn forward_sub(l: &Mat, b: &[f64], unit: bool) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        let row = l.row(i);
+        for j in 0..i {
+            s -= row[j] * y[j];
+        }
+        y[i] = if unit { s } else { s / row[i] };
+    }
+    y
+}
+
+/// Solve Lᵀ x = y with L lower triangular (so Lᵀ is upper). `unit` as above.
+pub fn backward_sub_t(l: &Mat, y: &[f64], unit: bool) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for j in (i + 1)..n {
+            s -= l[(j, i)] * x[j];
+        }
+        x[i] = if unit { s } else { s / l[(i, i)] };
+    }
+    x
+}
+
+/// Solve U x = b with U upper triangular. `unit` treats diag as 1.
+pub fn backward_sub(u: &Mat, b: &[f64], unit: bool) -> Vec<f64> {
+    let n = u.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        let row = u.row(i);
+        for j in (i + 1)..n {
+            s -= row[j] * x[j];
+        }
+        x[i] = if unit { s } else { s / row[i] };
+    }
+    x
+}
+
+/// Inverse of a *unit upper* triangular matrix (exact back-substitution;
+/// the inverse is again unit upper triangular). Needed by Alg 5's
+/// `U̇ = R⁻¹ − I`.
+pub fn unit_upper_inverse(u: &Mat) -> Mat {
+    let n = u.rows;
+    let mut inv = Mat::eye(n);
+    // Solve U · X = I column by column.
+    for c in 0..n {
+        for i in (0..=c).rev() {
+            let mut s = if i == c { 1.0 } else { 0.0 };
+            for j in (i + 1)..=c {
+                s -= u[(i, j)] * inv[(j, c)];
+            }
+            inv[(i, c)] = s;
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    fn random_unit_upper(rng: &mut Rng, n: usize) -> Mat {
+        let mut u = Mat::eye(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                u[(i, j)] = rng.uniform(-0.5, 0.5);
+            }
+        }
+        u
+    }
+
+    #[test]
+    fn forward_backward_roundtrip() {
+        let mut rng = Rng::new(30);
+        let n = 10;
+        let mut l = Mat::eye(n);
+        for i in 0..n {
+            for j in 0..i {
+                l[(i, j)] = rng.uniform(-1.0, 1.0);
+            }
+            l[(i, i)] = rng.uniform(0.5, 2.0);
+        }
+        let x: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b = l.matvec(&x);
+        let y = forward_sub(&l, &b, false);
+        for (a, b) in y.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn backward_sub_solves_upper() {
+        let mut rng = Rng::new(31);
+        let u = random_unit_upper(&mut rng, 12);
+        let x: Vec<f64> = (0..12).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b = u.matvec(&x);
+        let got = backward_sub(&u, &b, true);
+        for (a, b) in got.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn unit_upper_inverse_is_inverse() {
+        let mut rng = Rng::new(32);
+        for n in [1, 2, 7, 20] {
+            let u = random_unit_upper(&mut rng, n);
+            let inv = unit_upper_inverse(&u);
+            assert!(max_abs_diff(&u.matmul_naive(&inv), &Mat::eye(n)) < 1e-9);
+            // inverse is unit upper triangular
+            for i in 0..n {
+                assert!((inv[(i, i)] - 1.0).abs() < 1e-12);
+                for j in 0..i {
+                    assert_eq!(inv[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! `quip` — the command-line entry point.
+//!
+//! ```text
+//! quip quantize --model s1 --bits 2 [--method ldlq] [--baseline] [--out path.qz]
+//! quip eval     --model s1 [--qz path.qz]
+//! quip gen      --model s1 [--qz path.qz] --prompt "3,17,9" --max-tokens 32
+//! quip serve    --model s1 [--qz path.qz] [--addr 127.0.0.1:7077]
+//! quip pjrt     --model s0 [--bits 2]          # AOT artifact smoke-run
+//! quip table    <1|2|3|4|5|6|14|15|16|optq|all> [--fast]
+//! quip figure   <1|2|3|4|5|all> [--fast]
+//! quip info
+//! ```
+
+use quip::coordinator::server::{ServeEngine, Server, ServerConfig};
+use quip::engine::native::{FpLinears, QuantLinears};
+use quip::harness::{env::Env, run_figure, run_table};
+use quip::model::quantized::QuantizedModel;
+use quip::model::Transformer;
+use quip::quant::{Method, Processing, QuantConfig};
+use quip::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.pos(0) {
+        Some("quantize") => cmd_quantize(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("pjrt") => cmd_pjrt(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("table") => run_table(args.pos(1).unwrap_or("all"), &args),
+        Some("sweep") => {
+            quip::harness::sweeps::run_sweep(args.pos(1).unwrap_or("rho"), &args)
+        }
+        Some("figure") => run_figure(args.pos(1).unwrap_or("all"), &args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("usage: quip <quantize|eval|gen|serve|pjrt|table|figure|info> [options]");
+            eprintln!("see `quip info` and README.md");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn quant_config(args: &Args) -> quip::Result<QuantConfig> {
+    let method = Method::parse(&args.opt_or("method", "ldlq"))?;
+    let processing = if args.flag("baseline") {
+        Processing::baseline()
+    } else {
+        Processing::incoherent()
+    };
+    Ok(QuantConfig {
+        bits: args.opt_usize("bits", 2) as u32,
+        method,
+        processing,
+        greedy_passes: args.opt_usize("greedy-passes", 5),
+        force_stochastic: args.flag("stochastic"),
+        alg5_c: args.opt_f64("alg5-c", 0.3),
+    })
+}
+
+fn cmd_quantize(args: &Args) -> quip::Result<()> {
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s1");
+    let cfg = quant_config(args)?;
+    let bits = cfg.bits;
+    println!(
+        "quantizing {model} to {bits} bits with {} + {}",
+        cfg.method.name(),
+        if cfg.processing.incoherent { "IncP" } else { "baseline" }
+    );
+    let t0 = std::time::Instant::now();
+    let (qm, proxy) = env.quantize(&model, cfg)?;
+    let out = args.opt_or(
+        "out",
+        &format!("results/{model}_q{bits}_{}.qz", qm.recipe),
+    );
+    let path = std::path::PathBuf::from(&out);
+    qm.save(&path)?;
+    println!(
+        "done in {:.1}s — total proxy loss {proxy:.4}, {:.2} bits/weight → {out}",
+        t0.elapsed().as_secs_f64(),
+        qm.bits_per_weight()
+    );
+    Ok(())
+}
+
+fn load_model_pair(
+    args: &Args,
+    env: &Env,
+) -> quip::Result<(Transformer, Option<QuantizedModel>)> {
+    let model = args.opt_or("model", "s1");
+    let ck = env.checkpoint(&model)?;
+    let mut m = Transformer::from_checkpoint(&ck)?;
+    let qm = if let Some(path) = args.opt("qz") {
+        let qm = QuantizedModel::load(std::path::Path::new(path))?;
+        qm.apply_to(&mut m)?;
+        Some(qm)
+    } else {
+        None
+    };
+    Ok((m, qm))
+}
+
+fn cmd_eval(args: &Args) -> quip::Result<()> {
+    let env = Env::load(args)?;
+    let (m, qm) = load_model_pair(args, &env)?;
+    println!(
+        "evaluating {} ({})",
+        m.cfg.name,
+        qm.as_ref().map(|q| q.recipe.as_str()).unwrap_or("fp32")
+    );
+    let r = env.evaluate(&m);
+    for s in quip::harness::env::SPLITS {
+        println!("  ppl[{s}] = {:.3}", r.ppl[s]);
+    }
+    for t in quip::harness::env::TASKS {
+        println!("  acc[{t}] = {:.1}%", 100.0 * r.acc[t]);
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> quip::Result<()> {
+    let env = Env::load(args)?;
+    let (m, qm) = load_model_pair(args, &env)?;
+    let vocab = quip::data::Vocab::load(&env.registry.vocab())?;
+    let prompt: Vec<u32> = args
+        .opt_or("prompt", "1")
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect();
+    let params = quip::coordinator::generate::GenParams {
+        max_tokens: args.opt_usize("max-tokens", 32),
+        temperature: args.opt_f64("temperature", 0.0),
+        seed: args.opt_u64("seed", 0),
+        stop_token: None,
+    };
+    let gen = match &qm {
+        Some(q) => {
+            let lin = QuantLinears::from_model(q)?;
+            quip::coordinator::generate::generate(&m, &lin, &prompt, &params)
+        }
+        None => {
+            let lin = FpLinears { model: &m };
+            quip::coordinator::generate::generate(&m, &lin, &prompt, &params)
+        }
+    };
+    println!("prompt : {}", vocab.decode(&prompt));
+    println!("output : {}", vocab.decode(&gen.tokens));
+    println!(
+        "prefill {:.1}ms, decode {:.2}ms/token",
+        gen.prefill_seconds * 1e3,
+        gen.decode_seconds * 1e3 / gen.tokens.len().max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> quip::Result<()> {
+    let env = Env::load(args)?;
+    let (m, qm) = load_model_pair(args, &env)?;
+    let engine = match qm {
+        Some(q) => ServeEngine::Quant(q),
+        None => ServeEngine::Fp32,
+    };
+    let cfg = ServerConfig {
+        addr: args.opt_or("addr", "127.0.0.1:7077"),
+        max_batch: args.opt_usize("max-batch", 8),
+        ..Default::default()
+    };
+    let server = Server::start(Arc::new(m), engine, cfg)?;
+    println!("serving on {} — newline-JSON protocol; Ctrl-C to stop", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        println!("metrics: {}", server.metrics.summary());
+    }
+}
+
+fn cmd_pjrt(args: &Args) -> quip::Result<()> {
+    use quip::engine::PjrtLm;
+    use quip::runtime::PjrtRuntime;
+    let env = Env::load(args)?;
+    let model = args.opt_or("model", "s0");
+    let ck = env.checkpoint(&model)?;
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // fp32 artifact
+    let spec = env
+        .registry
+        .find_fp32(&model, 1)
+        .ok_or_else(|| anyhow::anyhow!("no fp32 artifact for {model} (run make artifacts)"))?;
+    let lm = PjrtLm::fp32(&rt, spec, &ck)?;
+    let stream = &env.splits["wiki"];
+    let seq = stream.tokens[..spec.seq].to_vec();
+    let t0 = std::time::Instant::now();
+    let logits = lm.logits(&[seq.clone()])?;
+    println!(
+        "fp32 forward ok: {} logits in {:.1}ms",
+        logits.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // quantized artifact
+    let bits = args.opt_usize("bits", 2) as u32;
+    if let Some(qspec) = env.registry.find_quant(&model, bits) {
+        let (qm, _) = env.quantize(
+            &model,
+            QuantConfig {
+                bits,
+                method: Method::Ldlq,
+                processing: Processing::incoherent(),
+                ..Default::default()
+            },
+        )?;
+        let qlm = PjrtLm::quant(&rt, qspec, &ck, &qm)?;
+        let t1 = std::time::Instant::now();
+        let qlogits = qlm.logits(&[seq])?;
+        println!(
+            "quant-{bits} forward ok: {} logits in {:.1}ms (Pallas kernel inside)",
+            qlogits.len(),
+            t1.elapsed().as_secs_f64() * 1e3
+        );
+        // Cross-check against the native dequantized model.
+        let mut m = Transformer::from_checkpoint(&ck)?;
+        qm.apply_to(&mut m)?;
+        let native = m.forward(&stream.tokens[..spec.seq.min(m.cfg.max_seq)], None);
+        let v = m.cfg.vocab;
+        let mut max_rel: f64 = 0.0;
+        for i in 0..native.len().min(qlogits.len()) {
+            let d = (native[i] as f64 - qlogits[i] as f64).abs();
+            max_rel = max_rel.max(d);
+        }
+        println!("native vs PJRT max |Δlogit| = {max_rel:.4} over {}x{v}", spec.seq);
+    } else {
+        println!("no quant artifact for {model} @ {bits} bits");
+    }
+    Ok(())
+}
+
+/// `quip inspect <file.qz>` — artifact introspection.
+fn cmd_inspect(args: &Args) -> quip::Result<()> {
+    let path = args
+        .pos(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: quip inspect <file.qz>"))?;
+    let qm = QuantizedModel::load(std::path::Path::new(path))?;
+    println!("quantized model: {} ({})", qm.config.name, qm.recipe);
+    println!(
+        "  d={} layers={} heads={} dff={} vocab={}",
+        qm.config.d_model, qm.config.n_layers, qm.config.n_heads, qm.config.d_ff, qm.config.vocab
+    );
+    println!(
+        "  bits={}  layers={}  {:.3} bits/weight (incl. metadata)",
+        qm.bits,
+        qm.layers.len(),
+        qm.bits_per_weight()
+    );
+    let total: usize = qm.layers.iter().map(|l| l.m * l.n).sum();
+    println!("  quantized params: {total}");
+    for l in qm.layers.iter().take(8) {
+        println!(
+            "  {:<16} {:>4}x{:<4}  packed {:>7}B  incoherent={} rescale={} grid={}",
+            l.name,
+            l.m,
+            l.n,
+            l.packed.len(),
+            l.post.incoherent,
+            l.post.d_tilde.is_some(),
+            match &l.post.grid {
+                quip::quant::GridMap::PerRow { .. } => "per-row",
+                quip::quant::GridMap::Global { .. } => "frobenius",
+            }
+        );
+    }
+    if qm.layers.len() > 8 {
+        println!("  … {} more layers", qm.layers.len() - 8);
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> quip::Result<()> {
+    println!("QuIP reproduction — three-layer Rust + JAX + Pallas stack");
+    println!("models:");
+    for cfg in quip::model::ModelConfig::series() {
+        println!(
+            "  {}  d={} L={} heads={} dff={}  ~{:.1}M params",
+            cfg.name,
+            cfg.d_model,
+            cfg.n_layers,
+            cfg.n_heads,
+            cfg.d_ff,
+            cfg.param_count() as f64 / 1e6
+        );
+    }
+    match Env::load(args) {
+        Ok(env) => {
+            println!("artifacts: {} HLO artifacts", env.registry.artifacts.len());
+            for a in &env.registry.artifacts {
+                println!(
+                    "  {} {} bits={} batch={}",
+                    a.kind,
+                    a.file.file_name().unwrap_or_default().to_string_lossy(),
+                    a.bits,
+                    a.batch
+                );
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Model configuration and the inventory of quantizable linear layers.
+
+use crate::util::json::Json;
+
+/// GPT-style decoder-only transformer configuration. Matches
+/// `python/compile/model.py` field for field.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (embeddings + blocks + final LN; LM head is
+    /// tied to the embedding).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_block = 4 * d * d       // wq wk wv wo
+            + 2 * d * self.d_ff         // w1 w2
+            + 4 * d                     // ln1/ln2 gain+bias
+            + self.d_ff + d;            // b1 + b2 (mlp biases)
+        self.vocab * d + self.max_seq * d + self.n_layers * per_block + 2 * d
+    }
+
+    /// The model-size series used across the experiments (stand-ins for
+    /// the paper's OPT 125m…30b series; see DESIGN.md §2).
+    pub fn series() -> Vec<ModelConfig> {
+        vec![
+            Self::sized("s0", 64, 2, 4, 256),
+            Self::sized("s1", 128, 4, 4, 512),
+            Self::sized("s2", 256, 6, 8, 1024),
+            Self::sized("s3", 384, 8, 8, 1536),
+        ]
+    }
+
+    pub fn sized(name: &str, d: usize, layers: usize, heads: usize, dff: usize) -> ModelConfig {
+        ModelConfig {
+            name: name.to_string(),
+            d_model: d,
+            n_layers: layers,
+            n_heads: heads,
+            d_ff: dff,
+            vocab: 256,
+            max_seq: 128,
+        }
+    }
+
+    pub fn by_name(name: &str) -> crate::Result<ModelConfig> {
+        Self::series()
+            .into_iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (have s0..s3)"))
+    }
+
+    /// All quantizable linear layers, in forward order. `hkey` identifies
+    /// the shared Hessian (q/k/v read the same activations).
+    pub fn linear_specs(&self) -> Vec<LinearSpec> {
+        let d = self.d_model;
+        let mut out = Vec::new();
+        for b in 0..self.n_layers {
+            for w in ["wq", "wk", "wv"] {
+                out.push(LinearSpec {
+                    name: format!("blk{b}.attn.{w}"),
+                    out_dim: d,
+                    in_dim: d,
+                    hkey: format!("blk{b}.attn.in"),
+                });
+            }
+            out.push(LinearSpec {
+                name: format!("blk{b}.attn.wo"),
+                out_dim: d,
+                in_dim: d,
+                hkey: format!("blk{b}.attn.wo.in"),
+            });
+            out.push(LinearSpec {
+                name: format!("blk{b}.mlp.w1"),
+                out_dim: self.d_ff,
+                in_dim: d,
+                hkey: format!("blk{b}.mlp.w1.in"),
+            });
+            out.push(LinearSpec {
+                name: format!("blk{b}.mlp.w2"),
+                out_dim: d,
+                in_dim: self.d_ff,
+                hkey: format!("blk{b}.mlp.w2.in"),
+            });
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+        j.set("d_model", Json::Num(self.d_model as f64));
+        j.set("n_layers", Json::Num(self.n_layers as f64));
+        j.set("n_heads", Json::Num(self.n_heads as f64));
+        j.set("d_ff", Json::Num(self.d_ff as f64));
+        j.set("vocab", Json::Num(self.vocab as f64));
+        j.set("max_seq", Json::Num(self.max_seq as f64));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.req_str("name")?.to_string(),
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            d_ff: j.req_usize("d_ff")?,
+            vocab: j.req_usize("vocab")?,
+            max_seq: j.req_usize("max_seq")?,
+        })
+    }
+}
+
+/// One quantizable linear layer: y = W x, W of shape (out_dim, in_dim).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinearSpec {
+    pub name: String,
+    pub out_dim: usize,
+    pub in_dim: usize,
+    /// Hessian sharing key: layers with equal `hkey` see identical inputs.
+    pub hkey: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_is_increasing_in_params() {
+        let s = ModelConfig::series();
+        for w in s.windows(2) {
+            assert!(w[1].param_count() > w[0].param_count());
+        }
+        // ballpark sanity for the largest: ~10-20M params
+        let p = s.last().unwrap().param_count();
+        assert!((8_000_000..25_000_000).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn linear_specs_count_and_sharing() {
+        let cfg = ModelConfig::sized("t", 64, 3, 4, 256);
+        let specs = cfg.linear_specs();
+        assert_eq!(specs.len(), 3 * 6);
+        // q/k/v share an hkey per block, others do not.
+        let q = specs.iter().find(|s| s.name == "blk1.attn.wq").unwrap();
+        let k = specs.iter().find(|s| s.name == "blk1.attn.wk").unwrap();
+        let o = specs.iter().find(|s| s.name == "blk1.attn.wo").unwrap();
+        assert_eq!(q.hkey, k.hkey);
+        assert_ne!(q.hkey, o.hkey);
+        // mlp dims
+        let w1 = specs.iter().find(|s| s.name == "blk0.mlp.w1").unwrap();
+        assert_eq!((w1.out_dim, w1.in_dim), (256, 64));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ModelConfig::by_name("s1").unwrap();
+        let j = cfg.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        assert!(ModelConfig::by_name("s9").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Transformer LM substrate: configuration, the checkpoint format shared
+//! with the build-time JAX trainer, a pure-Rust fp32 forward pass (with
+//! per-linear-layer activation capture for Hessian collection and a KV
+//! cache for generation), quantized-weight application, and LM evaluation
+//! (perplexity + zero-shot tasks).
+
+pub mod config;
+pub mod weights;
+pub mod transformer;
+pub mod quantized;
+pub mod lm;
+
+pub use config::{LinearSpec, ModelConfig};
+pub use transformer::{KvCache, Transformer};
+pub use weights::Checkpoint;

@@ -1,0 +1,191 @@
+//! Quantized model artifacts: the `.qz` container (config + per-layer
+//! packed codes) and application of dequantized weights onto a
+//! [`Transformer`] for evaluation.
+
+use super::config::ModelConfig;
+use super::transformer::Transformer;
+use crate::quant::packed::QuantizedLayer;
+use crate::util::bytes::{Reader, Writer};
+use crate::util::json::Json;
+
+pub const QZ_MAGIC: u32 = 0x5A51_5051; // "QPQZ" LE-ish
+
+/// A fully quantized model: every linear layer's packed codes + metadata.
+pub struct QuantizedModel {
+    pub config: ModelConfig,
+    pub bits: u32,
+    /// Method/processing description (informational, goes in reports).
+    pub recipe: String,
+    pub layers: Vec<QuantizedLayer>,
+}
+
+impl QuantizedModel {
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        let mut w = Writer::new();
+        w.u32(QZ_MAGIC);
+        w.u32(1);
+        w.string(&self.config.to_json().to_string());
+        w.u32(self.bits);
+        w.string(&self.recipe);
+        w.u32(self.layers.len() as u32);
+        for l in &self.layers {
+            l.serialize(&mut w);
+        }
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, &w.buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<QuantizedModel> {
+        let raw = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading quantized model {path:?}: {e}"))?;
+        let mut r = Reader::new(&raw);
+        anyhow::ensure!(r.u32()? == QZ_MAGIC, "bad .qz magic");
+        anyhow::ensure!(r.u32()? == 1, "unsupported .qz version");
+        let config = ModelConfig::from_json(&Json::parse(&r.string()?)?)?;
+        let bits = r.u32()?;
+        let recipe = r.string()?;
+        let n = r.u32()? as usize;
+        let mut layers = Vec::with_capacity(n);
+        for _ in 0..n {
+            layers.push(QuantizedLayer::deserialize(&mut r)?);
+        }
+        Ok(QuantizedModel {
+            config,
+            bits,
+            recipe,
+            layers,
+        })
+    }
+
+    pub fn layer(&self, name: &str) -> crate::Result<&QuantizedLayer> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| anyhow::anyhow!("quantized model missing layer '{name}'"))
+    }
+
+    /// Dequantize every layer into an existing fp32 model (whose
+    /// non-linear weights — embeddings, LNs, biases — stay fp16/fp32, as
+    /// in the paper's setup).
+    pub fn apply_to(&self, model: &mut Transformer) -> crate::Result<()> {
+        anyhow::ensure!(
+            model.cfg == self.config,
+            "model/quantized config mismatch ({} vs {})",
+            model.cfg.name,
+            self.config.name
+        );
+        for l in &self.layers {
+            let wd = l.dequantize();
+            let data: Vec<f32> = wd.data.iter().map(|&x| x as f32).collect();
+            model.set_weight(&l.name, data)?;
+        }
+        Ok(())
+    }
+
+    /// Average storage bits per quantized weight (incl. metadata).
+    pub fn bits_per_weight(&self) -> f64 {
+        let total_params: usize = self.layers.iter().map(|l| l.m * l.n).sum();
+        let mut w = Writer::new();
+        for l in &self.layers {
+            l.serialize(&mut w);
+        }
+        (w.buf.len() as f64 * 8.0) / total_params.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::model::weights::Checkpoint;
+    use crate::quant::{quantize_layer, Method, Processing, QuantConfig};
+    use crate::util::testkit::random_hessian;
+
+    fn quantize_tiny(bits: u32) -> (QuantizedModel, Transformer) {
+        let cfg = ModelConfig::sized("t", 32, 2, 4, 64);
+        let ck = Checkpoint::random(&cfg, 11);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut layers = Vec::new();
+        for spec in cfg.linear_specs() {
+            let wdata = model.get_weight(&spec.name).unwrap();
+            let w = Mat {
+                rows: spec.out_dim,
+                cols: spec.in_dim,
+                data: wdata.iter().map(|&x| x as f64).collect(),
+            };
+            let h = random_hessian(&mut rng, spec.in_dim, spec.in_dim / 4, 1e-3);
+            let qcfg = QuantConfig {
+                bits,
+                method: Method::Ldlq,
+                processing: Processing::incoherent(),
+                ..Default::default()
+            };
+            let out = quantize_layer(&w, &h, &qcfg, 99);
+            layers.push(crate::quant::packed::QuantizedLayer::from_codes(
+                &spec.name, &out.codes, bits, out.post,
+            ));
+        }
+        (
+            QuantizedModel {
+                config: cfg,
+                bits,
+                recipe: "ldlq+incp".into(),
+                layers,
+            },
+            model,
+        )
+    }
+
+    #[test]
+    fn save_load_apply_roundtrip() {
+        let (qm, mut model) = quantize_tiny(4);
+        let dir = std::env::temp_dir().join("quip_qz_test");
+        let path = dir.join("t.qz");
+        qm.save(&path).unwrap();
+        let loaded = QuantizedModel::load(&path).unwrap();
+        assert_eq!(loaded.layers.len(), qm.layers.len());
+        let before = model.forward(&[1, 2, 3], None);
+        loaded.apply_to(&mut model).unwrap();
+        let after = model.forward(&[1, 2, 3], None);
+        assert_ne!(before, after);
+        assert!(after.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn four_bit_quantization_preserves_function_roughly() {
+        // 4-bit + IncP should keep outputs close to fp on a random model.
+        let (qm, mut model) = quantize_tiny(4);
+        let before = model.forward(&[5, 6, 7, 8], None);
+        qm.apply_to(&mut model).unwrap();
+        let after = model.forward(&[5, 6, 7, 8], None);
+        let num: f64 = before
+            .iter()
+            .zip(&after)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        let den: f64 = before.iter().map(|a| (*a as f64).powi(2)).sum();
+        let rel = (num / den.max(1e-12)).sqrt();
+        assert!(rel < 0.5, "relative logit error {rel}");
+    }
+
+    #[test]
+    fn bits_per_weight_tracks_bits() {
+        let (q2, _) = quantize_tiny(2);
+        let (q4, _) = quantize_tiny(4);
+        assert!(q2.bits_per_weight() < q4.bits_per_weight());
+        assert!(q2.bits_per_weight() < 4.5, "bpw2={}", q2.bits_per_weight());
+    }
+
+    #[test]
+    fn config_mismatch_rejected() {
+        let (qm, _) = quantize_tiny(2);
+        let other = ModelConfig::sized("other", 64, 2, 4, 128);
+        let mut m2 =
+            Transformer::from_checkpoint(&Checkpoint::random(&other, 1)).unwrap();
+        assert!(qm.apply_to(&mut m2).is_err());
+    }
+}

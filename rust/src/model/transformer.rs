@@ -1,0 +1,507 @@
+//! Pure-Rust fp32 transformer forward pass.
+//!
+//! Pre-LN GPT architecture: learned positional embeddings, multi-head
+//! causal self-attention, GELU (tanh approximation — matching
+//! `jax.nn.gelu`'s default) MLP with biases, tied LM head. Mirrors
+//! `python/compile/model.py` exactly; parity is tested through the AOT
+//! HLO artifacts (runtime::tests) and golden vectors.
+//!
+//! Two entry points:
+//! * [`Transformer::forward`] — full-sequence logits, with optional
+//!   activation capture (feeds Hessian collection);
+//! * [`Transformer::decode_step`] — single-token step against a
+//!   [`KvCache`] (the serving hot path of the native engine).
+
+use super::config::ModelConfig;
+use super::weights::Checkpoint;
+use crate::linalg::gemm::{sgemm_bt, sdot};
+
+/// Weights of one transformer block, linear weights stored (out, in).
+pub struct Block {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+/// A materialized fp32 transformer.
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub embed: Vec<f32>,
+    pub pos: Vec<f32>,
+    pub blocks: Vec<Block>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+}
+
+/// Captured per-linear-layer inputs from one forward pass: (hkey, rows of
+/// the input activation matrix, in_dim). Multiple layers sharing an hkey
+/// are captured once.
+pub type ActSink<'a> = &'a mut dyn FnMut(&str, &[f32], usize);
+
+impl Transformer {
+    pub fn from_checkpoint(ck: &Checkpoint) -> crate::Result<Transformer> {
+        let cfg = ck.config.clone();
+        let get = |name: &str| -> crate::Result<Vec<f32>> { Ok(ck.tensor(name)?.data.clone()) };
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for b in 0..cfg.n_layers {
+            blocks.push(Block {
+                ln1_g: get(&format!("blk{b}.ln1.g"))?,
+                ln1_b: get(&format!("blk{b}.ln1.b"))?,
+                wq: get(&format!("blk{b}.attn.wq"))?,
+                wk: get(&format!("blk{b}.attn.wk"))?,
+                wv: get(&format!("blk{b}.attn.wv"))?,
+                wo: get(&format!("blk{b}.attn.wo"))?,
+                ln2_g: get(&format!("blk{b}.ln2.g"))?,
+                ln2_b: get(&format!("blk{b}.ln2.b"))?,
+                w1: get(&format!("blk{b}.mlp.w1"))?,
+                b1: get(&format!("blk{b}.mlp.b1"))?,
+                w2: get(&format!("blk{b}.mlp.w2"))?,
+                b2: get(&format!("blk{b}.mlp.b2"))?,
+            });
+        }
+        Ok(Transformer {
+            embed: get("embed")?,
+            pos: get("pos_embed")?,
+            lnf_g: get("lnf.g")?,
+            lnf_b: get("lnf.b")?,
+            cfg,
+            blocks,
+        })
+    }
+
+    /// Replace a named linear weight (quantized-weight application).
+    pub fn set_weight(&mut self, name: &str, data: Vec<f32>) -> crate::Result<()> {
+        let parts: Vec<&str> = name.split('.').collect();
+        anyhow::ensure!(parts.len() == 3, "bad layer name '{name}'");
+        let b: usize = parts[0]
+            .strip_prefix("blk")
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad block in '{name}'"))?;
+        anyhow::ensure!(b < self.blocks.len(), "block {b} out of range");
+        let blk = &mut self.blocks[b];
+        let slot = match (parts[1], parts[2]) {
+            ("attn", "wq") => &mut blk.wq,
+            ("attn", "wk") => &mut blk.wk,
+            ("attn", "wv") => &mut blk.wv,
+            ("attn", "wo") => &mut blk.wo,
+            ("mlp", "w1") => &mut blk.w1,
+            ("mlp", "w2") => &mut blk.w2,
+            _ => anyhow::bail!("unknown linear layer '{name}'"),
+        };
+        anyhow::ensure!(slot.len() == data.len(), "shape mismatch for '{name}'");
+        *slot = data;
+        Ok(())
+    }
+
+    pub fn get_weight(&self, name: &str) -> crate::Result<&[f32]> {
+        let parts: Vec<&str> = name.split('.').collect();
+        anyhow::ensure!(parts.len() == 3, "bad layer name '{name}'");
+        let b: usize = parts[0]
+            .strip_prefix("blk")
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad block in '{name}'"))?;
+        let blk = &self.blocks[b];
+        Ok(match (parts[1], parts[2]) {
+            ("attn", "wq") => &blk.wq,
+            ("attn", "wk") => &blk.wk,
+            ("attn", "wv") => &blk.wv,
+            ("attn", "wo") => &blk.wo,
+            ("mlp", "w1") => &blk.w1,
+            ("mlp", "w2") => &blk.w2,
+            _ => anyhow::bail!("unknown linear layer '{name}'"),
+        })
+    }
+
+    /// Full-sequence forward: logits (T×vocab). `sink` (if set) receives
+    /// the inputs of every distinct hkey (Hessian collection);
+    /// `upto_block` (if set) stops after that many blocks and returns the
+    /// hidden states instead of logits (block-by-block pipeline).
+    pub fn forward(&self, tokens: &[u32], mut sink: Option<ActSink>) -> Vec<f32> {
+        let t = tokens.len();
+        let d = self.cfg.d_model;
+        assert!(t <= self.cfg.max_seq, "sequence too long");
+        // Embedding + positions.
+        let mut x = vec![0.0f32; t * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let e = &self.embed[(tok as usize) * d..(tok as usize + 1) * d];
+            let p = &self.pos[i * d..(i + 1) * d];
+            let row = &mut x[i * d..(i + 1) * d];
+            for j in 0..d {
+                row[j] = e[j] + p[j];
+            }
+        }
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            self.block_forward(bi, blk, &mut x, t, &mut sink);
+        }
+        // Final LN + tied head.
+        let mut h = vec![0.0f32; t * d];
+        layernorm_rows(&x, t, d, &self.lnf_g, &self.lnf_b, &mut h);
+        let v = self.cfg.vocab;
+        let mut logits = vec![0.0f32; t * v];
+        sgemm_bt(t, d, v, &h, &self.embed, &mut logits);
+        logits
+    }
+
+    fn block_forward(
+        &self,
+        _bi: usize,
+        blk: &Block,
+        x: &mut [f32],
+        t: usize,
+        sink: &mut Option<ActSink>,
+    ) {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let bi = _bi;
+
+        // ---- attention ----
+        let mut ln = vec![0.0f32; t * d];
+        layernorm_rows(x, t, d, &blk.ln1_g, &blk.ln1_b, &mut ln);
+        if let Some(s) = sink.as_mut() {
+            s(&format!("blk{bi}.attn.in"), &ln, d);
+        }
+        let mut q = vec![0.0f32; t * d];
+        let mut k = vec![0.0f32; t * d];
+        let mut v = vec![0.0f32; t * d];
+        sgemm_bt(t, d, d, &ln, &blk.wq, &mut q);
+        sgemm_bt(t, d, d, &ln, &blk.wk, &mut k);
+        sgemm_bt(t, d, d, &ln, &blk.wv, &mut v);
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut attn_out = vec![0.0f32; t * d];
+        let mut scores = vec![0.0f32; t];
+        for h in 0..nh {
+            let off = h * hd;
+            for i in 0..t {
+                let qi = &q[i * d + off..i * d + off + hd];
+                // causal scores over j ≤ i
+                let mut maxs = f32::NEG_INFINITY;
+                for j in 0..=i {
+                    let kj = &k[j * d + off..j * d + off + hd];
+                    let s = sdot(qi, kj) * scale;
+                    scores[j] = s;
+                    maxs = maxs.max(s);
+                }
+                let mut denom = 0.0f32;
+                for j in 0..=i {
+                    scores[j] = (scores[j] - maxs).exp();
+                    denom += scores[j];
+                }
+                let inv = 1.0 / denom;
+                let out = &mut attn_out[i * d + off..i * d + off + hd];
+                for j in 0..=i {
+                    let w = scores[j] * inv;
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let vj = &v[j * d + off..j * d + off + hd];
+                    for l in 0..hd {
+                        out[l] += w * vj[l];
+                    }
+                }
+            }
+        }
+        if let Some(s) = sink.as_mut() {
+            s(&format!("blk{bi}.attn.wo.in"), &attn_out, d);
+        }
+        let mut proj = vec![0.0f32; t * d];
+        sgemm_bt(t, d, d, &attn_out, &blk.wo, &mut proj);
+        for (xi, pi) in x.iter_mut().zip(&proj) {
+            *xi += pi;
+        }
+
+        // ---- MLP ----
+        let dff = self.cfg.d_ff;
+        let mut ln2 = vec![0.0f32; t * d];
+        layernorm_rows(x, t, d, &blk.ln2_g, &blk.ln2_b, &mut ln2);
+        if let Some(s) = sink.as_mut() {
+            s(&format!("blk{bi}.mlp.w1.in"), &ln2, d);
+        }
+        let mut hmid = vec![0.0f32; t * dff];
+        sgemm_bt(t, d, dff, &ln2, &blk.w1, &mut hmid);
+        for i in 0..t {
+            let row = &mut hmid[i * dff..(i + 1) * dff];
+            for (xj, bj) in row.iter_mut().zip(&blk.b1) {
+                *xj = gelu(*xj + bj);
+            }
+        }
+        if let Some(s) = sink.as_mut() {
+            s(&format!("blk{bi}.mlp.w2.in"), &hmid, dff);
+        }
+        let mut out = vec![0.0f32; t * d];
+        sgemm_bt(t, dff, d, &hmid, &blk.w2, &mut out);
+        for i in 0..t {
+            let row = &mut out[i * d..(i + 1) * d];
+            for (xj, bj) in row.iter_mut().zip(&blk.b2) {
+                *xj += bj;
+            }
+        }
+        for (xi, oi) in x.iter_mut().zip(&out) {
+            *xi += oi;
+        }
+    }
+
+    /// Next-token logits for a single appended token, using cached K/V.
+    pub fn decode_step(&self, cache: &mut KvCache, token: u32) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let pos = cache.len;
+        assert!(pos < self.cfg.max_seq, "context overflow");
+
+        let mut x = vec![0.0f32; d];
+        {
+            let e = &self.embed[(token as usize) * d..(token as usize + 1) * d];
+            let p = &self.pos[pos * d..(pos + 1) * d];
+            for j in 0..d {
+                x[j] = e[j] + p[j];
+            }
+        }
+        let mut ln = vec![0.0f32; d];
+        let mut q = vec![0.0f32; d];
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            layernorm_rows(&x, 1, d, &blk.ln1_g, &blk.ln1_b, &mut ln);
+            // q/k/v for this position
+            matvec_bt(&blk.wq, &ln, &mut q, d, d);
+            let blk_cache = &mut cache.blocks[bi];
+            let kcache = &mut blk_cache.k;
+            let vcache = &mut blk_cache.v;
+            let koff = pos * d;
+            {
+                let krow = &mut kcache[koff..koff + d];
+                matvec_bt_into(&blk.wk, &ln, krow, d, d);
+            }
+            {
+                let vrow = &mut vcache[koff..koff + d];
+                matvec_bt_into(&blk.wv, &ln, vrow, d, d);
+            }
+            // attention against cache
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut attn = vec![0.0f32; d];
+            let mut scores = vec![0.0f32; pos + 1];
+            for h in 0..nh {
+                let off = h * hd;
+                let qh = &q[off..off + hd];
+                let mut maxs = f32::NEG_INFINITY;
+                for j in 0..=pos {
+                    let kj = &kcache[j * d + off..j * d + off + hd];
+                    let s = sdot(qh, kj) * scale;
+                    scores[j] = s;
+                    maxs = maxs.max(s);
+                }
+                let mut denom = 0.0f32;
+                for s in scores[..=pos].iter_mut() {
+                    *s = (*s - maxs).exp();
+                    denom += *s;
+                }
+                let inv = 1.0 / denom;
+                let out = &mut attn[off..off + hd];
+                for j in 0..=pos {
+                    let w = scores[j] * inv;
+                    let vj = &vcache[j * d + off..j * d + off + hd];
+                    for l in 0..hd {
+                        out[l] += w * vj[l];
+                    }
+                }
+            }
+            let mut proj = vec![0.0f32; d];
+            matvec_bt(&blk.wo, &attn, &mut proj, d, d);
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+            // MLP
+            let dff = self.cfg.d_ff;
+            layernorm_rows(&x.clone(), 1, d, &blk.ln2_g, &blk.ln2_b, &mut ln);
+            let mut hmid = vec![0.0f32; dff];
+            matvec_bt(&blk.w1, &ln, &mut hmid, dff, d);
+            for (xj, bj) in hmid.iter_mut().zip(&blk.b1) {
+                *xj = gelu(*xj + bj);
+            }
+            let mut out = vec![0.0f32; d];
+            matvec_bt(&blk.w2, &hmid, &mut out, d, dff);
+            for ((xi, oi), bi2) in x.iter_mut().zip(&out).zip(&blk.b2) {
+                *xi += oi + bi2;
+            }
+        }
+        cache.len += 1;
+        let mut h = vec![0.0f32; d];
+        layernorm_rows(&x, 1, d, &self.lnf_g, &self.lnf_b, &mut h);
+        let v = self.cfg.vocab;
+        let mut logits = vec![0.0f32; v];
+        for o in 0..v {
+            logits[o] = sdot(&h, &self.embed[o * d..(o + 1) * d]);
+        }
+        logits
+    }
+
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(&self.cfg)
+    }
+}
+
+/// Per-block K/V cache for incremental decoding.
+pub struct KvCache {
+    pub len: usize,
+    pub blocks: Vec<KvBlock>,
+}
+
+pub struct KvBlock {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache {
+            len: 0,
+            blocks: (0..cfg.n_layers)
+                .map(|_| KvBlock {
+                    k: vec![0.0; cfg.max_seq * cfg.d_model],
+                    v: vec![0.0; cfg.max_seq * cfg.d_model],
+                })
+                .collect(),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}
+
+/// y = W x for W stored (out, in) row-major.
+fn matvec_bt(w: &[f32], x: &[f32], y: &mut [f32], out_dim: usize, in_dim: usize) {
+    debug_assert_eq!(w.len(), out_dim * in_dim);
+    for o in 0..out_dim {
+        y[o] = sdot(x, &w[o * in_dim..(o + 1) * in_dim]);
+    }
+}
+
+fn matvec_bt_into(w: &[f32], x: &[f32], y: &mut [f32], out_dim: usize, in_dim: usize) {
+    matvec_bt(w, x, y, out_dim, in_dim)
+}
+
+/// LayerNorm over the last dim of a (rows × d) buffer.
+pub fn layernorm_rows(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
+    const EPS: f32 = 1e-5;
+    for i in 0..rows {
+        let row = &x[i * d..(i + 1) * d];
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        let orow = &mut out[i * d..(i + 1) * d];
+        for j in 0..d {
+            orow[j] = (row[j] - mean) * inv * g[j] + b[j];
+        }
+    }
+}
+
+/// GELU, tanh approximation (jax.nn.gelu default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::Checkpoint;
+
+    fn tiny() -> Transformer {
+        let cfg = ModelConfig::sized("t", 32, 2, 4, 64);
+        Transformer::from_checkpoint(&Checkpoint::random(&cfg, 7)).unwrap()
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny();
+        let logits = m.forward(&[1, 5, 9, 2], None);
+        assert_eq!(logits.len(), 4 * m.cfg.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        // Changing a later token must not change earlier logits.
+        let m = tiny();
+        let a = m.forward(&[1, 5, 9, 2], None);
+        let b = m.forward(&[1, 5, 9, 200], None);
+        let v = m.cfg.vocab;
+        for p in 0..3 {
+            for j in 0..v {
+                assert_eq!(a[p * v + j], b[p * v + j], "pos {p} leaked");
+            }
+        }
+        assert_ne!(a[3 * v..4 * v], b[3 * v..4 * v]);
+    }
+
+    #[test]
+    fn decode_matches_forward() {
+        let m = tiny();
+        let tokens = [1u32, 17, 42, 3, 99];
+        let full = m.forward(&tokens, None);
+        let v = m.cfg.vocab;
+        let mut cache = m.new_cache();
+        for (i, &tok) in tokens.iter().enumerate() {
+            let step = m.decode_step(&mut cache, tok);
+            let frow = &full[i * v..(i + 1) * v];
+            for j in 0..v {
+                assert!(
+                    (step[j] - frow[j]).abs() < 2e-3,
+                    "pos {i} logit {j}: {} vs {}",
+                    step[j],
+                    frow[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn activation_capture_covers_all_hkeys() {
+        let m = tiny();
+        let mut seen = std::collections::HashSet::new();
+        let mut sink = |name: &str, rows: &[f32], in_dim: usize| {
+            assert_eq!(rows.len() % in_dim, 0);
+            seen.insert(name.to_string());
+        };
+        m.forward(&[1, 2, 3], Some(&mut sink));
+        let expected: std::collections::HashSet<String> = m
+            .cfg
+            .linear_specs()
+            .into_iter()
+            .map(|s| s.hkey)
+            .collect();
+        assert_eq!(seen, expected);
+    }
+
+    #[test]
+    fn set_weight_changes_output() {
+        let mut m = tiny();
+        let before = m.forward(&[1, 2, 3], None);
+        let d = m.cfg.d_model;
+        m.set_weight("blk0.attn.wq", vec![0.0; d * d]).unwrap();
+        let after = m.forward(&[1, 2, 3], None);
+        assert_ne!(before, after);
+        assert!(m.set_weight("blk0.attn.bogus", vec![]).is_err());
+        assert!(m.set_weight("blk9.attn.wq", vec![0.0; d * d]).is_err());
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        // Reference values from jax.nn.gelu (tanh approximation).
+        assert!((gelu(0.0) - 0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-5);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-5);
+        assert!((gelu(3.0) - 2.9963627).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,172 @@
+//! The `QCKP` checkpoint format shared with `python/compile/train.py`:
+//!
+//!   magic "QCKP" (u32 LE) | version u32 | config-json string |
+//!   n_tensors u32 | { name string | ndim u32 | dims u64× | f32 data }×
+//!
+//! Tensors are row-major f32. Linear weights are stored (out_dim, in_dim).
+
+use super::config::ModelConfig;
+use crate::util::bytes::{Reader, Writer};
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+pub const CKPT_MAGIC: u32 = 0x504B_4351; // "QCKP" LE
+
+/// A loaded checkpoint: config + named tensors.
+pub struct Checkpoint {
+    pub config: ModelConfig,
+    pub tensors: HashMap<String, Tensor>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data }
+    }
+}
+
+impl Checkpoint {
+    pub fn load(path: &std::path::Path) -> crate::Result<Checkpoint> {
+        let raw = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {path:?}: {e}"))?;
+        let mut r = Reader::new(&raw);
+        let magic = r.u32()?;
+        anyhow::ensure!(magic == CKPT_MAGIC, "bad checkpoint magic {magic:#x}");
+        let version = r.u32()?;
+        anyhow::ensure!(version == 1, "unsupported checkpoint version {version}");
+        let cfg_text = r.string()?;
+        let config = ModelConfig::from_json(&Json::parse(&cfg_text)?)?;
+        let n = r.u32()? as usize;
+        let mut tensors = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let name = r.string()?;
+            let ndim = r.u32()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u64()? as usize);
+            }
+            let count: usize = dims.iter().product();
+            let raw = r.bytes(count * 4)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.insert(name, Tensor { dims, data });
+        }
+        Ok(Checkpoint { config, tensors })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        let mut w = Writer::new();
+        w.u32(CKPT_MAGIC);
+        w.u32(1);
+        w.string(&self.config.to_json().to_string());
+        w.u32(self.tensors.len() as u32);
+        // Sort names for a deterministic byte stream.
+        let mut names: Vec<&String> = self.tensors.keys().collect();
+        names.sort();
+        for name in names {
+            let t = &self.tensors[name];
+            w.string(name);
+            w.u32(t.dims.len() as u32);
+            for &d in &t.dims {
+                w.u64(d as u64);
+            }
+            for &x in &t.data {
+                w.f32(x);
+            }
+        }
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, &w.buf)?;
+        Ok(())
+    }
+
+    pub fn tensor(&self, name: &str) -> crate::Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor '{name}'"))
+    }
+
+    /// A randomly-initialized checkpoint (tests and the quickstart use
+    /// this when trained artifacts are absent).
+    pub fn random(config: &ModelConfig, seed: u64) -> Checkpoint {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let d = config.d_model;
+        let mut tensors = HashMap::new();
+        let mut normal = |dims: Vec<usize>, scale: f64| {
+            let n: usize = dims.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| (rng.normal() * scale) as f32).collect();
+            Tensor { dims, data }
+        };
+        tensors.insert("embed".into(), normal(vec![config.vocab, d], 0.02));
+        tensors.insert("pos_embed".into(), normal(vec![config.max_seq, d], 0.02));
+        for b in 0..config.n_layers {
+            let s = 0.02 / (2.0 * config.n_layers as f64).sqrt();
+            tensors.insert(format!("blk{b}.attn.wq"), normal(vec![d, d], 0.02));
+            tensors.insert(format!("blk{b}.attn.wk"), normal(vec![d, d], 0.02));
+            tensors.insert(format!("blk{b}.attn.wv"), normal(vec![d, d], 0.02));
+            tensors.insert(format!("blk{b}.attn.wo"), normal(vec![d, d], s));
+            tensors.insert(format!("blk{b}.mlp.w1"), normal(vec![config.d_ff, d], 0.02));
+            tensors.insert(format!("blk{b}.mlp.w2"), normal(vec![d, config.d_ff], s));
+            tensors.insert(format!("blk{b}.mlp.b1"), Tensor::new(vec![config.d_ff], vec![0.0; config.d_ff]));
+            tensors.insert(format!("blk{b}.mlp.b2"), Tensor::new(vec![d], vec![0.0; d]));
+            for ln in ["ln1", "ln2"] {
+                tensors.insert(format!("blk{b}.{ln}.g"), Tensor::new(vec![d], vec![1.0; d]));
+                tensors.insert(format!("blk{b}.{ln}.b"), Tensor::new(vec![d], vec![0.0; d]));
+            }
+        }
+        tensors.insert("lnf.g".into(), Tensor::new(vec![d], vec![1.0; d]));
+        tensors.insert("lnf.b".into(), Tensor::new(vec![d], vec![0.0; d]));
+        Checkpoint {
+            config: config.clone(),
+            tensors,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::sized("t", 32, 2, 4, 64);
+        let ck = Checkpoint::random(&cfg, 1);
+        let dir = std::env::temp_dir().join("quip_ckpt_test");
+        let path = dir.join("t.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.config, cfg);
+        assert_eq!(back.tensors.len(), ck.tensors.len());
+        let a = ck.tensor("blk0.attn.wq").unwrap();
+        let b = back.tensor("blk0.attn.wq").unwrap();
+        assert_eq!(a.dims, b.dims);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn random_has_all_linear_layers() {
+        let cfg = ModelConfig::sized("t", 32, 3, 4, 64);
+        let ck = Checkpoint::random(&cfg, 2);
+        for spec in cfg.linear_specs() {
+            let t = ck.tensor(&spec.name).unwrap();
+            assert_eq!(t.dims, vec![spec.out_dim, spec.in_dim], "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let cfg = ModelConfig::sized("t", 32, 1, 4, 64);
+        let ck = Checkpoint::random(&cfg, 3);
+        assert!(ck.tensor("nope").is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Algorithm 5 — "fixed" rounding via a convex program (paper §5.2).
+//!
+//! Solves
+//!     minimize   tr(H RᵀR)
+//!     over       R unit upper triangular
+//!     subject to eᵢᵀRᵀR eᵢ ≤ 1 + c   ∀i
+//! then rounds with *stochastic* Q and feedback U̇ = R⁻¹ − I. For large c
+//! the solution is the LDL factor and this reduces to base QuIP
+//! (Theorem 7 gives the finite-grid guarantee).
+//!
+//! Solver: projected gradient descent. The feasible set factorizes per
+//! column — {R_kk = 1, strictly-lower = 0, ‖R_{1:k−1,k}‖² ≤ c} — so the
+//! Euclidean projection is exact (shrink each column's strict-upper part);
+//! that makes PGD simpler than the ADMM the paper suggests while reaching
+//! the same optimum of this convex problem (documented in DESIGN.md §4).
+
+use crate::linalg::ldl::udu;
+use crate::linalg::solve::unit_upper_inverse;
+use crate::linalg::Mat;
+
+/// Result of solving problem (7).
+pub struct Alg5Plan {
+    /// The optimizer R (unit upper triangular).
+    pub r: Mat,
+    /// Feedback U̇ = R⁻¹ − I fed to the rounding core.
+    pub u_dot: Mat,
+    /// Final objective tr(H RᵀR).
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+/// tr(H RᵀR).
+pub fn objective(h: &Mat, r: &Mat) -> f64 {
+    // tr(H RᵀR) = Σ_ij (R H)_ij R_ij? No: tr(H RᵀR) = tr(R H Rᵀ) = Σ_i (R H Rᵀ)_ii.
+    let rh = r.matmul(h);
+    let mut tr = 0.0;
+    for i in 0..r.rows {
+        tr += crate::linalg::matrix::dot(rh.row(i), r.row(i));
+    }
+    tr
+}
+
+/// Project onto {unit upper triangular, per-column strict-upper norm² ≤ c}.
+fn project(r: &mut Mat, c: f64) {
+    let n = r.rows;
+    for i in 0..n {
+        r[(i, i)] = 1.0;
+        for j in 0..i {
+            r[(i, j)] = 0.0;
+        }
+    }
+    let bound = c.sqrt();
+    for k in 0..n {
+        let mut norm2 = 0.0;
+        for i in 0..k {
+            norm2 += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm2.sqrt();
+        if norm > bound && norm > 0.0 {
+            let scale = bound / norm;
+            for i in 0..k {
+                r[(i, k)] *= scale;
+            }
+        }
+    }
+}
+
+/// Solve problem (7) with projected gradient descent.
+///
+/// * `c` — the per-column slack (paper's hyperparameter; Lemma 13 suggests
+///   c = 2/log(4mn/δ)).
+/// * Initialized at the projected LDL solution (the c = ∞ optimum).
+pub fn solve(h: &Mat, c: f64, max_iters: usize, tol: f64) -> Alg5Plan {
+    let n = h.rows;
+    // Init: R = (U̇+I)⁻¹ from the LDL factorization — optimal when the
+    // constraint is inactive.
+    let f = udu(h, 1e-12);
+    let mut r = unit_upper_inverse(&f.u);
+    project(&mut r, c);
+
+    // Step size from a Gershgorin bound on λmax(H) (Lipschitz const = 2λmax).
+    let mut lmax: f64 = 0.0;
+    for i in 0..n {
+        let mut s = 0.0;
+        for j in 0..n {
+            s += h[(i, j)].abs();
+        }
+        lmax = lmax.max(s);
+    }
+    let step = 1.0 / (2.0 * lmax.max(1e-12));
+
+    let mut prev = objective(h, &r);
+    let mut iters = 0;
+    for it in 0..max_iters {
+        iters = it + 1;
+        // ∇_R tr(H RᵀR) = 2 R H.
+        let grad = r.matmul(h);
+        for (x, g) in r.data.iter_mut().zip(&grad.data) {
+            *x -= 2.0 * step * g;
+        }
+        project(&mut r, c);
+        let cur = objective(h, &r);
+        if (prev - cur).abs() <= tol * prev.abs().max(1e-12) {
+            prev = cur;
+            break;
+        }
+        prev = cur;
+    }
+
+    let rinv = unit_upper_inverse(&r);
+    let mut u_dot = rinv;
+    for i in 0..n {
+        u_dot[(i, i)] = 0.0;
+    }
+    Alg5Plan {
+        u_dot,
+        objective: prev,
+        iterations: iters,
+        r,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::max_abs_diff;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{propcheck, random_spd};
+
+    #[test]
+    fn large_c_recovers_ldl_solution() {
+        let mut rng = Rng::new(1);
+        let h = random_spd(&mut rng, 10, 1e-2);
+        let f = udu(&h, 1e-12);
+        let plan = solve(&h, 1e9, 500, 1e-12);
+        // Objective equals tr(D) (the unconstrained optimum, Lemma 8).
+        let trd = f.trace_d();
+        assert!(
+            (plan.objective - trd).abs() < 1e-6 * trd,
+            "objective {} vs tr(D) {}",
+            plan.objective,
+            trd
+        );
+        // And U̇ matches the LDL feedback.
+        assert!(max_abs_diff(&plan.u_dot, &f.strictly_upper()) < 1e-4);
+    }
+
+    #[test]
+    fn solution_is_feasible() {
+        propcheck("alg5-feasible", 8, |rng| {
+            let n = 6 + rng.below(10);
+            let c = 0.1 + rng.next_f64();
+            let h = random_spd(rng, n, 1e-2);
+            let plan = solve(&h, c, 300, 1e-10);
+            for k in 0..n {
+                let mut norm2 = 1.0; // the unit diagonal
+                for i in 0..k {
+                    norm2 += plan.r[(i, k)] * plan.r[(i, k)];
+                }
+                assert!(norm2 <= 1.0 + c + 1e-8, "col {k}: {norm2} > 1+{c}");
+            }
+        });
+    }
+
+    #[test]
+    fn objective_decreases_with_larger_c() {
+        // Relaxing the constraint can only improve the optimum.
+        let mut rng = Rng::new(3);
+        let h = random_spd(&mut rng, 12, 1e-2);
+        let tight = solve(&h, 0.05, 500, 1e-12).objective;
+        let loose = solve(&h, 10.0, 500, 1e-12).objective;
+        assert!(loose <= tight + 1e-9);
+    }
+
+    #[test]
+    fn objective_bounded_by_tr_h_and_tr_d() {
+        // R = I is feasible with objective tr(H); optimum ≤ tr(H).
+        // tr(D) lower-bounds any feasible objective (global min).
+        let mut rng = Rng::new(4);
+        let h = random_spd(&mut rng, 10, 1e-2);
+        let trd = udu(&h, 1e-12).trace_d();
+        let plan = solve(&h, 0.5, 500, 1e-12);
+        assert!(plan.objective <= h.trace() + 1e-9);
+        assert!(plan.objective >= trd - 1e-9);
+    }
+}

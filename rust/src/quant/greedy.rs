@@ -1,0 +1,157 @@
+//! Greedy local search (paper §4.2 + Supplement B, Algorithm 4):
+//! coordinate descent on the proxy loss restricted to the quantization
+//! grid, visiting coordinates in the same order as LDLQ.
+//!
+//! Per coordinate (row i, column j), the unconstrained minimizer is
+//!   z* = w_j − [(ŵ − w) H e_j − (ŵ_j − w_j) H_jj] / H_jj
+//! which is then nearest-rounded and clamped. Used standalone ("Greedy")
+//! or as a polish after LDLQ ("LDLQ-RG", "QuIP-RG").
+
+use crate::linalg::Mat;
+use crate::util::threadpool::{default_threads, parallel_map};
+
+/// One or more greedy passes over grid-space weights.
+///
+/// * `wg` — target weights in grid coordinates.
+/// * `init` — starting point (`wg` itself for the standalone method; the
+///   LDLQ output when polishing). Must already be on-grid for polish mode.
+/// * Returns integer codes.
+pub fn greedy(wg: &Mat, init: &Mat, h: &Mat, bits: u32, passes: usize) -> Mat {
+    let (m, n) = (wg.rows, wg.cols);
+    assert_eq!(h.rows, n);
+    let diag: Vec<f64> = h.diagonal();
+    let qmax = super::grid::levels(bits) as f64;
+    let rows = parallel_map(m, default_threads(), |i| {
+        let w = wg.row(i);
+        let mut what: Vec<f64> = init.row(i).to_vec();
+        // r = ŵ − w (kept incrementally up to date).
+        let mut r: Vec<f64> = what.iter().zip(w).map(|(a, b)| a - b).collect();
+        // rh = r · H (incrementally updated: changing r[j] by δ adds δ·H[j,:]).
+        let mut rh: Vec<f64> = h.transpose().matvec(&r); // H symmetric: rH = Hr
+        for _pass in 0..passes {
+            let mut changed = false;
+            for j in 0..n {
+                let hjj = diag[j];
+                if hjj <= 1e-30 {
+                    continue;
+                }
+                // Unconstrained coordinate minimizer.
+                let z = w[j] - (rh[j] - r[j] * hjj) / hjj;
+                let q = z.round().clamp(0.0, qmax);
+                if q != what[j] {
+                    let delta = q - what[j];
+                    what[j] = q;
+                    r[j] += delta;
+                    // rh update: r changed in coordinate j.
+                    let hrow = h.row(j);
+                    for (t, &hv) in rh.iter_mut().zip(hrow) {
+                        *t += delta * hv;
+                    }
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        what
+    });
+    Mat::from_rows(&rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ldlq::{ldlq, round_matrix};
+    use crate::quant::proxy::proxy_loss;
+    use crate::quant::rounding::RoundMode;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{propcheck, random_spd};
+
+    fn grid_weights(rng: &mut Rng, m: usize, n: usize, bits: u32) -> Mat {
+        let q = super::super::grid::levels(bits) as f64;
+        Mat::from_fn(m, n, |_, _| rng.uniform(0.0, q))
+    }
+
+    #[test]
+    fn polish_never_increases_proxy() {
+        // Greedy after LDLQ is a descent method (Supplement B).
+        propcheck("greedy-descent", 10, |rng| {
+            let bits = 2;
+            let wg = grid_weights(rng, 6, 16, bits);
+            let h = random_spd(rng, 16, 1e-2);
+            let base = ldlq(&wg, &h, bits, RoundMode::Nearest, 0);
+            let before = proxy_loss(&base, &wg, &h);
+            let polished = greedy(&wg, &base, &h, bits, 10);
+            let after = proxy_loss(&polished, &wg, &h);
+            assert!(
+                after <= before + 1e-9,
+                "greedy increased proxy: {before} -> {after}"
+            );
+        });
+    }
+
+    #[test]
+    fn standalone_greedy_beats_nearest_usually() {
+        let mut wins = 0;
+        let trials = 15;
+        for t in 0..trials {
+            let mut rng = Rng::new(200 + t);
+            let wg = grid_weights(&mut rng, 8, 20, 2);
+            let h = crate::util::testkit::random_hessian(&mut rng, 20, 5, 1e-3);
+            let g = greedy(&wg, &wg.clone(), &h, 2, 10);
+            let n = round_matrix(&wg, 2, RoundMode::Nearest, 0);
+            if proxy_loss(&g, &wg, &h) <= proxy_loss(&n, &wg, &h) + 1e-12 {
+                wins += 1;
+            }
+        }
+        assert!(wins >= trials - 2, "greedy won only {wins}/{trials}");
+    }
+
+    #[test]
+    fn output_on_grid() {
+        let mut rng = Rng::new(9);
+        let wg = grid_weights(&mut rng, 4, 10, 3);
+        let h = random_spd(&mut rng, 10, 1e-2);
+        let g = greedy(&wg, &wg.clone(), &h, 3, 5);
+        for &c in &g.data {
+            assert!(c >= 0.0 && c <= 7.0 && c == c.round());
+        }
+    }
+
+    #[test]
+    fn fixed_point_is_stable() {
+        // Re-running greedy on its own output changes nothing.
+        let mut rng = Rng::new(10);
+        let wg = grid_weights(&mut rng, 3, 12, 2);
+        let h = random_spd(&mut rng, 12, 1e-2);
+        let once = greedy(&wg, &wg.clone(), &h, 2, 20);
+        let twice = greedy(&wg, &once, &h, 2, 20);
+        assert_eq!(once.data, twice.data);
+    }
+
+    #[test]
+    fn coordinate_update_is_locally_optimal() {
+        // After convergence, perturbing any single coordinate by ±1 (within
+        // the grid) cannot lower the proxy loss.
+        let mut rng = Rng::new(11);
+        let wg = grid_weights(&mut rng, 1, 8, 2);
+        let h = random_spd(&mut rng, 8, 1e-2);
+        let sol = greedy(&wg, &wg.clone(), &h, 2, 50);
+        let base = proxy_loss(&sol, &wg, &h);
+        for j in 0..8 {
+            for delta in [-1.0, 1.0] {
+                let nv = sol[(0, j)] + delta;
+                if !(0.0..=3.0).contains(&nv) {
+                    continue;
+                }
+                let mut alt = sol.clone();
+                alt[(0, j)] = nv;
+                assert!(
+                    proxy_loss(&alt, &wg, &h) >= base - 1e-9,
+                    "coordinate {j} not locally optimal"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! b-bit quantization grids and the affine maps into/out of grid
+//! coordinates. LDLQ and friends always round to the integer grid
+//! {0, …, 2^b − 1}; processing decides how real weights map onto it.
+
+use crate::linalg::Mat;
+
+/// Number of grid levels for b bits.
+pub fn levels(bits: u32) -> u32 {
+    assert!((1..=8).contains(&bits), "bits must be in 1..=8");
+    (1u32 << bits) - 1
+}
+
+/// Clamp a grid-space value into [0, 2^b − 1].
+#[inline]
+pub fn clamp_grid(x: f64, bits: u32) -> f64 {
+    x.clamp(0.0, levels(bits) as f64)
+}
+
+/// How real-valued weights map to grid coordinates.
+#[derive(Clone, Debug)]
+pub enum GridMap {
+    /// Per-row asymmetric min-max (the OPTQ-style baseline):
+    /// g = (w − lo_i)/(hi_i − lo_i) · (2^b − 1).
+    PerRow { lo: Vec<f64>, hi: Vec<f64>, bits: u32 },
+    /// QuIP's incoherence-based symmetric global range (Alg 1 line 6):
+    /// g = ((w/s) + 1)/2 · (2^b − 1) with s = ρ‖W‖_F/√(mn).
+    Global { s: f64, bits: u32 },
+}
+
+impl GridMap {
+    /// Fit a per-row min-max map to W.
+    pub fn fit_per_row(w: &Mat, bits: u32) -> GridMap {
+        let mut lo = Vec::with_capacity(w.rows);
+        let mut hi = Vec::with_capacity(w.rows);
+        for i in 0..w.rows {
+            let row = w.row(i);
+            let mut l = f64::INFINITY;
+            let mut h = f64::NEG_INFINITY;
+            for &x in row {
+                l = l.min(x);
+                h = h.max(x);
+            }
+            if !l.is_finite() || !h.is_finite() || h - l < 1e-30 {
+                // Degenerate row (constant): pick any non-empty range.
+                l = l.min(0.0) - 0.5;
+                h = h.max(0.0) + 0.5;
+            }
+            lo.push(l);
+            hi.push(h);
+        }
+        GridMap::PerRow { lo, hi, bits }
+    }
+
+    /// Fit QuIP's global Frobenius-based map: s = ρ‖W‖_F/√(mn).
+    pub fn fit_global(w: &Mat, bits: u32, rho: f64) -> GridMap {
+        let s = rho * w.frob_norm() / ((w.rows * w.cols) as f64).sqrt();
+        let s = if s > 1e-30 { s } else { 1.0 };
+        GridMap::Global { s, bits }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match self {
+            GridMap::PerRow { bits, .. } | GridMap::Global { bits, .. } => *bits,
+        }
+    }
+
+    /// Map weights to (continuous) grid coordinates. No clamping — the
+    /// rounding step clamps (the clamp is exactly the finite-grid issue
+    /// §5.2 studies).
+    pub fn to_grid(&self, w: &Mat) -> Mat {
+        let q = levels(self.bits()) as f64;
+        match self {
+            GridMap::PerRow { lo, hi, .. } => {
+                let mut g = w.clone();
+                for i in 0..w.rows {
+                    let (l, h) = (lo[i], hi[i]);
+                    let inv = q / (h - l);
+                    for x in g.row_mut(i) {
+                        *x = (*x - l) * inv;
+                    }
+                }
+                g
+            }
+            GridMap::Global { s, .. } => {
+                let mut g = w.clone();
+                for x in g.data.iter_mut() {
+                    *x = ((*x / s) + 1.0) * 0.5 * q;
+                }
+                g
+            }
+        }
+    }
+
+    /// Map (integer) grid codes back to real weights (Alg 2 line 2).
+    pub fn from_grid(&self, g: &Mat) -> Mat {
+        let q = levels(self.bits()) as f64;
+        match self {
+            GridMap::PerRow { lo, hi, .. } => {
+                let mut w = g.clone();
+                for i in 0..w.rows {
+                    let (l, h) = (lo[i], hi[i]);
+                    let scale = (h - l) / q;
+                    for x in w.row_mut(i) {
+                        *x = *x * scale + l;
+                    }
+                }
+                w
+            }
+            GridMap::Global { s, .. } => {
+                let mut w = g.clone();
+                for x in w.data.iter_mut() {
+                    *x = s * ((*x / q) * 2.0 - 1.0);
+                }
+                w
+            }
+        }
+    }
+
+    /// Per-row scale factor grid→real (the Jacobian of `from_grid`); used
+    /// to map grid-space proxy losses back to weight space.
+    pub fn row_scale(&self, i: usize) -> f64 {
+        let q = levels(self.bits()) as f64;
+        match self {
+            GridMap::PerRow { lo, hi, .. } => (hi[i] - lo[i]) / q,
+            GridMap::Global { s, .. } => 2.0 * s / q,
+        }
+    }
+
+    pub fn serialize(&self, w: &mut crate::util::bytes::Writer) {
+        match self {
+            GridMap::PerRow { lo, hi, bits } => {
+                w.u8(0);
+                w.u32(*bits);
+                w.f64s(lo);
+                w.f64s(hi);
+            }
+            GridMap::Global { s, bits } => {
+                w.u8(1);
+                w.u32(*bits);
+                w.f64(*s);
+            }
+        }
+    }
+
+    pub fn deserialize(r: &mut crate::util::bytes::Reader) -> crate::Result<GridMap> {
+        match r.u8()? {
+            0 => {
+                let bits = r.u32()?;
+                let lo = r.f64s()?;
+                let hi = r.f64s()?;
+                Ok(GridMap::PerRow { lo, hi, bits })
+            }
+            1 => {
+                let bits = r.u32()?;
+                let s = r.f64()?;
+                Ok(GridMap::Global { s, bits })
+            }
+            t => anyhow::bail!("unknown GridMap tag {t}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{propcheck, random_mat};
+
+    #[test]
+    fn levels_values() {
+        assert_eq!(levels(2), 3);
+        assert_eq!(levels(3), 7);
+        assert_eq!(levels(4), 15);
+    }
+
+    #[test]
+    fn per_row_to_from_inverse_on_grid_points() {
+        propcheck("grid-perrow-inv", 20, |rng| {
+            let w = random_mat(rng, 4, 9);
+            for bits in [2u32, 3, 4] {
+                let g = GridMap::fit_per_row(&w, bits);
+                let wg = g.to_grid(&w);
+                let back = g.from_grid(&wg);
+                for (a, b) in back.data.iter().zip(&w.data) {
+                    assert!((a - b).abs() < 1e-10);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn global_map_round_trip() {
+        propcheck("grid-global-inv", 20, |rng| {
+            let w = random_mat(rng, 5, 8);
+            let g = GridMap::fit_global(&w, 4, 2.4);
+            let back = g.from_grid(&g.to_grid(&w));
+            for (a, b) in back.data.iter().zip(&w.data) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        });
+    }
+
+    #[test]
+    fn per_row_stays_in_range_after_round() {
+        let mut rng = Rng::new(3);
+        let w = random_mat(&mut rng, 6, 12);
+        let g = GridMap::fit_per_row(&w, 2);
+        let wg = g.to_grid(&w);
+        for &x in &wg.data {
+            assert!(x >= -1e-9 && x <= 3.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn constant_row_does_not_blow_up() {
+        let w = Mat::from_fn(2, 4, |i, _| i as f64); // row 0 all zeros
+        let g = GridMap::fit_per_row(&w, 4);
+        let wg = g.to_grid(&w);
+        assert!(wg.data.iter().all(|x| x.is_finite()));
+        let back = g.from_grid(&wg);
+        for (a, b) in back.data.iter().zip(&w.data) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let mut rng = Rng::new(4);
+        let w = random_mat(&mut rng, 3, 5);
+        for g in [GridMap::fit_per_row(&w, 3), GridMap::fit_global(&w, 2, 2.4)] {
+            let mut buf = crate::util::bytes::Writer::new();
+            g.serialize(&mut buf);
+            let mut r = crate::util::bytes::Reader::new(&buf.buf);
+            let g2 = GridMap::deserialize(&mut r).unwrap();
+            let wg1 = g.to_grid(&w);
+            let wg2 = g2.to_grid(&w);
+            assert_eq!(wg1.data, wg2.data);
+        }
+    }
+}

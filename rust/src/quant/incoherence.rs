@@ -1,0 +1,376 @@
+//! Incoherence processing — QuIP Algorithms 1 (pre) and 2 (post).
+//!
+//! Pre-processing, in order (each step toggleable; Table 3 ablates them):
+//!   1. H ← H + α·mean(diag H)·I                (baseline damping, OPTQ's)
+//!   2. diagonal rescale: W ← W·D̃, H ← D̃⁻¹HD̃⁻¹ with
+//!      D̃ᵢ = Hᵢᵢ^{1/4}/‖W_{:,i}‖^{1/2} — the minimizer of
+//!      (Σᵢ Hᵢᵢ/dᵢ)(Σⱼ ‖W_{:,j}‖²dⱼ) over dᵢ = D̃ᵢ² (Supplement B.1)
+//!   3. incoherence: W ← U W Vᵀ, H ← V H Vᵀ with U, V seeded two-factor
+//!      Kronecker orthogonal operators (with random permutation, §4.2)
+//!   4. quantization range: s = ρ‖W‖_F/√(mn) (Alg 1 line 6) and map to the
+//!      grid; baseline uses per-row min-max instead.
+//!
+//! Post-processing inverts in reverse order. Only *seeds* are stored for
+//! the orthogonal factors — they regenerate exactly (see `util::rng`).
+
+use super::grid::GridMap;
+use crate::linalg::{KronOrtho, Mat};
+
+/// Which processing steps to apply around the rounding core.
+#[derive(Clone, Debug)]
+pub struct Processing {
+    /// Conjugate by random Kronecker orthogonal matrices (step 3).
+    pub incoherent: bool,
+    /// Diagonal rescale (step 2).
+    pub rescale: bool,
+    /// ‖W‖_F-based symmetric global quantization range (step 4); when
+    /// false, per-row min-max (the OPTQ baseline).
+    pub frob_range: bool,
+    /// Random permutation inside the fast orthogonal multiply (Table 5).
+    pub permute: bool,
+    /// Hessian damping fraction α (both processings use it; paper's
+    /// baseline default 0.01).
+    pub alpha: f64,
+    /// Quantization-range multiplier ρ (paper tunes ρ = 2.4).
+    pub rho: f64,
+}
+
+impl Processing {
+    /// OPTQ-style baseline: damping only, per-row min-max grid.
+    pub fn baseline() -> Processing {
+        Processing {
+            incoherent: false,
+            rescale: false,
+            frob_range: false,
+            permute: false,
+            alpha: 0.01,
+            rho: 2.4,
+        }
+    }
+
+    /// Full QuIP incoherence processing ("IncP").
+    pub fn incoherent() -> Processing {
+        Processing {
+            incoherent: true,
+            rescale: true,
+            frob_range: true,
+            permute: true,
+            alpha: 0.01,
+            rho: 2.4,
+        }
+    }
+}
+
+impl Default for Processing {
+    fn default() -> Self {
+        Processing::incoherent()
+    }
+}
+
+/// Everything needed to undo pre-processing on quantized codes. Stored in
+/// artifacts (seeds + small vectors only — the orthogonal matrices are
+/// regenerated).
+#[derive(Clone, Debug)]
+pub struct PostState {
+    pub m: usize,
+    pub n: usize,
+    pub incoherent: bool,
+    pub permute: bool,
+    pub u_seed: u64,
+    pub v_seed: u64,
+    /// D̃ of step 2 (None when rescale disabled).
+    pub d_tilde: Option<Vec<f64>>,
+    pub grid: GridMap,
+}
+
+/// Output of Algorithm 1.
+pub struct Preprocessed {
+    /// Grid-space weights ready for the rounding core.
+    pub wg: Mat,
+    /// Hessian in the processed basis (feeds the LDL factorization).
+    pub h: Mat,
+    /// Damped Hessian in the *original* basis (for proxy-loss reporting).
+    pub h_damped: Mat,
+    pub post: PostState,
+}
+
+/// Algorithm 1: incoherence pre-processing.
+pub fn preprocess(w: &Mat, h: &Mat, bits: u32, p: &Processing, seed: u64) -> Preprocessed {
+    let (m, n) = (w.rows, w.cols);
+    assert_eq!(h.rows, n, "H must be n×n for W m×n");
+
+    // Step 1 — damping (also: any exactly-dead input dimension gets a
+    // nonzero diagonal so LDL pivots exist).
+    let mean_diag = h.trace() / n as f64;
+    let mut hd = h.symmetrize();
+    let bump = (p.alpha * mean_diag).max(1e-12);
+    for i in 0..n {
+        hd[(i, i)] += bump;
+    }
+    let h_damped = hd.clone();
+
+    // Step 2 — diagonal rescale.
+    let mut wp = w.clone();
+    let mut hp = hd;
+    let d_tilde = if p.rescale {
+        let mut d = vec![1.0f64; n];
+        for j in 0..n {
+            let hjj = hp[(j, j)];
+            let cn = {
+                let mut s = 0.0;
+                for i in 0..m {
+                    s += wp[(i, j)] * wp[(i, j)];
+                }
+                s.sqrt()
+            };
+            if hjj > 1e-30 && cn > 1e-30 {
+                d[j] = hjj.powf(0.25) / cn.sqrt();
+            }
+        }
+        // Normalize so the geometric mean of D̃ is 1 (pure conditioning;
+        // keeps weight magnitudes in a stable range).
+        let log_mean: f64 = d.iter().map(|x| x.ln()).sum::<f64>() / n as f64;
+        let norm = (-log_mean).exp();
+        for x in d.iter_mut() {
+            *x *= norm;
+        }
+        wp = wp.scale_cols(&d);
+        let inv: Vec<f64> = d.iter().map(|x| 1.0 / x).collect();
+        hp = hp.scale_rows(&inv).scale_cols(&inv);
+        Some(d)
+    } else {
+        None
+    };
+
+    // Step 3 — incoherence via seeded Kronecker orthogonal conjugation.
+    let u_seed = seed ^ 0x5157_4950_5F55_5F31; // "QuIP_U_1"
+    let v_seed = seed ^ 0x5157_4950_5F56_5F32; // "QuIP_V_2"
+    if p.incoherent {
+        let u = KronOrtho::from_seed_with(u_seed, m, p.permute);
+        let v = KronOrtho::from_seed_with(v_seed, n, p.permute);
+        // W ← U W Vᵀ
+        wp = v.apply_mat_right_t(&u.apply_mat_left(&wp));
+        // H ← V H Vᵀ
+        hp = v.conj_sym(&hp).symmetrize();
+    }
+
+    // Step 4 — quantization range / grid map.
+    let grid = if p.frob_range {
+        GridMap::fit_global(&wp, bits, p.rho)
+    } else {
+        GridMap::fit_per_row(&wp, bits)
+    };
+    let wg = grid.to_grid(&wp);
+
+    Preprocessed {
+        wg,
+        h: hp,
+        h_damped,
+        post: PostState {
+            m,
+            n,
+            incoherent: p.incoherent,
+            permute: p.permute,
+            u_seed,
+            v_seed,
+            d_tilde,
+            grid,
+        },
+    }
+}
+
+/// Algorithm 2: incoherence post-processing. Takes integer grid codes and
+/// returns dequantized weights in the original coordinate system.
+pub fn postprocess(codes: &Mat, post: &PostState) -> Mat {
+    let mut w = post.grid.from_grid(codes);
+    if post.incoherent {
+        let u = KronOrtho::from_seed_with(post.u_seed, post.m, post.permute);
+        let v = KronOrtho::from_seed_with(post.v_seed, post.n, post.permute);
+        // W ← Uᵀ W V
+        w = v.apply_mat_right(&u.apply_t_mat_left(&w));
+    }
+    if let Some(d) = &post.d_tilde {
+        let inv: Vec<f64> = d.iter().map(|x| 1.0 / x).collect();
+        w = w.scale_cols(&inv);
+    }
+    w
+}
+
+impl PostState {
+    pub fn serialize(&self, w: &mut crate::util::bytes::Writer) {
+        w.u64(self.m as u64);
+        w.u64(self.n as u64);
+        w.u8(self.incoherent as u8);
+        w.u8(self.permute as u8);
+        w.u64(self.u_seed);
+        w.u64(self.v_seed);
+        match &self.d_tilde {
+            Some(d) => {
+                w.u8(1);
+                w.f64s(d);
+            }
+            None => w.u8(0),
+        }
+        self.grid.serialize(w);
+    }
+
+    pub fn deserialize(r: &mut crate::util::bytes::Reader) -> crate::Result<PostState> {
+        let m = r.u64()? as usize;
+        let n = r.u64()? as usize;
+        let incoherent = r.u8()? != 0;
+        let permute = r.u8()? != 0;
+        let u_seed = r.u64()?;
+        let v_seed = r.u64()?;
+        let d_tilde = if r.u8()? != 0 { Some(r.f64s()?) } else { None };
+        let grid = GridMap::deserialize(r)?;
+        Ok(PostState {
+            m,
+            n,
+            incoherent,
+            permute,
+            u_seed,
+            v_seed,
+            d_tilde,
+            grid,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::proxy::proxy_loss;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{propcheck, random_hessian, random_mat};
+
+    #[test]
+    fn identity_processing_roundtrips_weights() {
+        // With everything off and 8 bits, post(pre(W)) ≈ W up to grid
+        // resolution when codes = exact grid values.
+        let mut rng = Rng::new(1);
+        let w = random_mat(&mut rng, 6, 12);
+        let h = random_hessian(&mut rng, 12, 4, 1e-3);
+        let mut p = Processing::baseline();
+        p.alpha = 0.0;
+        let pre = preprocess(&w, &h, 8, &p, 0);
+        let back = postprocess(&pre.wg, &pre.post);
+        for (a, b) in back.data.iter().zip(&w.data) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn full_incp_roundtrips_weights_without_rounding() {
+        propcheck("incp-roundtrip", 8, |rng| {
+            let m = 4 + rng.below(8);
+            let n = 6 + rng.below(10);
+            let w = random_mat(rng, m, n);
+            let h = random_hessian(rng, n, 3, 1e-3);
+            let p = Processing::incoherent();
+            let pre = preprocess(&w, &h, 8, &p, 0xBEEF);
+            // Feed the *continuous* grid values through post — must invert
+            // pre exactly (orthogonal + diagonal + affine are all inverted).
+            let back = postprocess(&pre.wg, &pre.post);
+            for (a, b) in back.data.iter().zip(&w.data) {
+                assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn conjugation_preserves_proxy_loss() {
+        // tr(ΔHΔᵀ) invariance (§4 "this transformation preserves the proxy
+        // quadratic form"), checked end to end through pre/post.
+        propcheck("incp-proxy-invariant", 6, |rng| {
+            let (m, n) = (6, 12);
+            let w = random_mat(rng, m, n);
+            let h = random_hessian(rng, n, 4, 1e-2);
+            let mut p = Processing::incoherent();
+            p.rescale = false; // isolate the orthogonal step
+            p.frob_range = true;
+            let pre = preprocess(&w, &h, 4, &p, 7);
+            // Perturb grid weights, map back, compare proxy in both bases.
+            let mut codes = pre.wg.clone();
+            for x in codes.data.iter_mut() {
+                *x = (*x + rng.uniform(-0.5, 0.5)).clamp(0.0, 15.0);
+            }
+            let loss_grid = proxy_loss(&codes, &pre.wg, &pre.h);
+            // Map grid-space loss to weight-space: multiply by row_scale².
+            let scale = pre.post.grid.row_scale(0);
+            let loss_grid_ws = loss_grid * scale * scale;
+            let w_hat = postprocess(&codes, &pre.post);
+            let loss_orig = proxy_loss(&w_hat, &w, &pre.h_damped);
+            assert!(
+                (loss_grid_ws - loss_orig).abs() <= 1e-6 * loss_orig.max(1e-12),
+                "grid {loss_grid_ws} vs orig {loss_orig}"
+            );
+        });
+    }
+
+    #[test]
+    fn incoherence_reduces_max_entries() {
+        // Fig 2's phenomenon: after processing, max|W_ij| shrinks toward
+        // μ‖W‖_F/√(mn). Use a spiky W (outliers) to see the effect clearly.
+        let mut rng = Rng::new(5);
+        let (m, n) = (16, 24);
+        let mut w = random_mat(&mut rng, m, n).scale(0.05);
+        w[(3, 7)] = 4.0; // outlier
+        w[(11, 2)] = -5.0;
+        let h = random_hessian(&mut rng, n, 6, 1e-3);
+        let mut p = Processing::incoherent();
+        p.rescale = false;
+        let pre = preprocess(&w, &h, 8, &p, 3);
+        // Recover processed-space W from continuous grid coords.
+        let w_proc = pre.post.grid.from_grid(&pre.wg);
+        assert!(
+            w_proc.max_abs() < w.max_abs() * 0.5,
+            "processed max {} vs original {}",
+            w_proc.max_abs(),
+            w.max_abs()
+        );
+    }
+
+    #[test]
+    fn rescale_minimizes_product_objective() {
+        // D̃ should (approximately) minimize tr(H')·‖W'‖_F² among diagonal
+        // rescalings; check stationarity vs random perturbations.
+        let mut rng = Rng::new(6);
+        let (m, n) = (8, 10);
+        let w = random_mat(&mut rng, m, n);
+        let h = random_hessian(&mut rng, n, 4, 1e-2);
+        let mut p = Processing::baseline();
+        p.rescale = true;
+        let pre = preprocess(&w, &h, 8, &p, 0);
+        let d = pre.post.d_tilde.clone().unwrap();
+        let objective = |dv: &[f64]| {
+            let wp = w.scale_cols(dv);
+            let inv: Vec<f64> = dv.iter().map(|x| 1.0 / x).collect();
+            let hp = pre.h_damped.scale_rows(&inv).scale_cols(&inv);
+            hp.trace() * wp.frob_norm().powi(2)
+        };
+        let base = objective(&d);
+        for _ in 0..20 {
+            let mut d2 = d.clone();
+            for x in d2.iter_mut() {
+                *x *= 1.0 + rng.uniform(-0.2, 0.2);
+            }
+            assert!(objective(&d2) >= base * (1.0 - 1e-9), "perturbation improved objective");
+        }
+    }
+
+    #[test]
+    fn poststate_serialization_roundtrip() {
+        let mut rng = Rng::new(7);
+        let w = random_mat(&mut rng, 6, 9);
+        let h = random_hessian(&mut rng, 9, 3, 1e-2);
+        let pre = preprocess(&w, &h, 2, &Processing::incoherent(), 42);
+        let mut buf = crate::util::bytes::Writer::new();
+        pre.post.serialize(&mut buf);
+        let mut r = crate::util::bytes::Reader::new(&buf.buf);
+        let post2 = PostState::deserialize(&mut r).unwrap();
+        let codes = Mat::from_fn(6, 9, |i, j| (((i + j) % 4) as f64).min(3.0));
+        let a = postprocess(&codes, &pre.post);
+        let b = postprocess(&codes, &post2);
+        assert_eq!(a.data, b.data);
+    }
+}

@@ -1,0 +1,22 @@
+//! The paper's contribution: adaptive rounding with linear feedback (LDLQ,
+//! §3), incoherence processing (§4), the greedy polish (Alg 4), the literal
+//! OPTQ algorithm (§5.1, for the Theorem-6 equivalence check), and the
+//! finite-grid "fixed" procedure (Alg 5, §5.2).
+
+pub mod grid;
+pub mod rounding;
+pub mod ldlq;
+pub mod optq;
+pub mod greedy;
+pub mod reorder;
+pub mod incoherence;
+pub mod alg5;
+pub mod proxy;
+pub mod method;
+pub mod packed;
+
+pub use grid::GridMap;
+pub use incoherence::{PostState, Processing};
+pub use method::{quantize_layer, LayerQuantOutput, Method, QuantConfig};
+pub use proxy::proxy_loss;
+pub use rounding::RoundMode;

@@ -1,0 +1,90 @@
+//! A literal transcription of OPTQ (Frantar et al., 2023) — kept separate
+//! from `ldlq` so Theorem 6 ("OPTQ is a special case of LDLQ") can be
+//! verified *empirically* against an independent implementation, exactly
+//! as the paper does in Supplement C.2.
+//!
+//! OPTQ: invert H, Cholesky-decompose the inverse (upper form), then for
+//! each column k: nearest-round, scale the error by 1/Uinv_kk, and subtract
+//! the scaled error times Uinv_{k,k+1:} from the remaining columns.
+
+use crate::linalg::chol::{cholesky, spd_inverse};
+use crate::linalg::Mat;
+use crate::quant::rounding::{round_clamp, RoundMode};
+use crate::util::rng::Rng;
+
+/// OPTQ on grid-space weights `wg` with Hessian `h`. Returns integer codes.
+/// `h` must be positive definite (add damping first, as OPTQ does).
+pub fn optq(wg: &Mat, h: &Mat, bits: u32) -> crate::Result<Mat> {
+    let (m, n) = (wg.rows, wg.cols);
+    // Hinv = H⁻¹; Hinv = Uᵀ U with U upper triangular (torch's
+    // cholesky(..., upper=True) convention used by the reference repo).
+    let hinv = spd_inverse(h)?;
+    let l = cholesky(&hinv)?;
+    let u = l.transpose();
+
+    let mut rng = Rng::new(0); // unused for nearest rounding
+    let mut w = wg.clone();
+    let mut codes = Mat::zeros(m, n);
+    for k in 0..n {
+        let d = u[(k, k)];
+        for i in 0..m {
+            let wik = w[(i, k)];
+            let q = round_clamp(RoundMode::Nearest, wik, bits, &mut rng);
+            codes[(i, k)] = q;
+            let err = (wik - q) / d;
+            // Update remaining columns of row i.
+            let urow = u.row(k);
+            let wrow = w.row_mut(i);
+            for j in (k + 1)..n {
+                wrow[j] -= err * urow[j];
+            }
+        }
+    }
+    Ok(codes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ldlq::ldlq;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{propcheck, random_spd};
+
+    /// Theorem 6 (empirical form): OPTQ and LDLQ produce *identical*
+    /// quantized outputs. The paper checks W ~ Unif[0,1]^{1000×1000}; we
+    /// check many smaller random instances plus one large one.
+    #[test]
+    fn optq_equiv_ldlq_small() {
+        propcheck("optq-equiv", 15, |rng| {
+            let n = 8 + rng.below(12);
+            let m = 4 + rng.below(8);
+            let bits = 2 + rng.below(3) as u32;
+            let h = random_spd(rng, n, 1e-2);
+            let q = super::super::grid::levels(bits) as f64;
+            let wg = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, q));
+            let a = optq(&wg, &h, bits).unwrap();
+            let b = ldlq(&wg, &h, bits, RoundMode::Nearest, 0);
+            assert_eq!(a.data, b.data, "OPTQ != LDLQ (m={m}, n={n}, b={bits})");
+        });
+    }
+
+    #[test]
+    fn optq_equiv_ldlq_large() {
+        // Scaled-down version of the paper's 1000×1000 check (C.2);
+        // `quip table optq` runs the full size.
+        let mut rng = Rng::new(1000);
+        let n = 200;
+        let m = 64;
+        let h = random_spd(&mut rng, n, 1e-2);
+        let wg = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 15.0));
+        let a = optq(&wg, &h, 4).unwrap();
+        let b = ldlq(&wg, &h, 4, RoundMode::Nearest, 0);
+        let mismatches = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .filter(|(x, y)| x != y)
+            .count();
+        assert_eq!(mismatches, 0, "{mismatches}/{} codes differ", a.data.len());
+    }
+}

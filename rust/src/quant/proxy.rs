@@ -1,0 +1,85 @@
+//! The adaptive-rounding proxy objective (Eq. 1):
+//! ℓ(Ŵ) = tr((Ŵ − W) H (Ŵ − W)ᵀ).
+
+use crate::linalg::Mat;
+
+/// tr((Ŵ − W) H (Ŵ − W)ᵀ) — both matrices in the *same* coordinate
+/// system (grid or weight space; the caller is responsible for matching H).
+pub fn proxy_loss(w_hat: &Mat, w: &Mat, h: &Mat) -> f64 {
+    assert_eq!((w_hat.rows, w_hat.cols), (w.rows, w.cols));
+    assert_eq!(h.rows, w.cols);
+    let delta = w_hat.sub(w);
+    // Σ_rows δ H δᵀ, computed as row·(H·rowᵀ) without forming ΔHΔᵀ.
+    let dh = crate::linalg::gemm::matmul_bt(&delta, &h.transpose()); // Δ·H
+    let mut total = 0.0;
+    for i in 0..delta.rows {
+        total += crate::linalg::matrix::dot(dh.row(i), delta.row(i));
+    }
+    total
+}
+
+/// Proxy loss for a single row delta (used by greedy updates' tests).
+pub fn proxy_loss_row(delta: &[f64], h: &Mat) -> f64 {
+    let hd = h.matvec(delta);
+    crate::linalg::matrix::dot(delta, &hd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{assert_close, random_mat, random_spd};
+
+    #[test]
+    fn zero_delta_zero_loss() {
+        let mut rng = Rng::new(1);
+        let w = random_mat(&mut rng, 4, 6);
+        let h = random_spd(&mut rng, 6, 1e-2);
+        assert_eq!(proxy_loss(&w, &w, &h), 0.0);
+    }
+
+    #[test]
+    fn matches_naive_trace() {
+        let mut rng = Rng::new(2);
+        let w = random_mat(&mut rng, 5, 7);
+        let what = random_mat(&mut rng, 5, 7);
+        let h = random_spd(&mut rng, 7, 1e-2);
+        let delta = what.sub(&w);
+        let naive = delta
+            .matmul_naive(&h)
+            .matmul_naive(&delta.transpose())
+            .trace();
+        assert_close(proxy_loss(&what, &w, &h), naive, 1e-9);
+    }
+
+    #[test]
+    fn nonnegative_for_psd_h() {
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let w = random_mat(&mut rng, 3, 9);
+            let what = random_mat(&mut rng, 3, 9);
+            let h = crate::util::testkit::random_low_rank_psd(&mut rng, 9, 2);
+            assert!(proxy_loss(&what, &w, &h) >= -1e-10);
+        }
+    }
+
+    #[test]
+    fn row_version_sums_to_total() {
+        let mut rng = Rng::new(4);
+        let w = random_mat(&mut rng, 4, 5);
+        let what = random_mat(&mut rng, 4, 5);
+        let h = random_spd(&mut rng, 5, 1e-2);
+        let total = proxy_loss(&what, &w, &h);
+        let mut sum = 0.0;
+        for i in 0..4 {
+            let delta: Vec<f64> = what
+                .row(i)
+                .iter()
+                .zip(w.row(i))
+                .map(|(a, b)| a - b)
+                .collect();
+            sum += proxy_loss_row(&delta, &h);
+        }
+        assert_close(total, sum, 1e-9);
+    }
+}

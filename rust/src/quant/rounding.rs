@@ -1,0 +1,79 @@
+//! The Q subroutine of Eq. (2): nearest or unbiased stochastic rounding to
+//! the integer grid, with the finite-grid clamp of Alg 3 line 3.
+
+use crate::util::rng::Rng;
+
+/// Which rounding subroutine Q to use inside an adaptive rounder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Biased nearest rounding (the practical default; Table 15 shows it
+    /// beats unbiased in perplexity).
+    Nearest,
+    /// Unbiased stochastic rounding: rounds z up with probability frac(z),
+    /// so E[Q(z)] = z.
+    Stochastic,
+}
+
+/// Round a scalar with the chosen mode (no clamp).
+#[inline]
+pub fn round(mode: RoundMode, z: f64, rng: &mut Rng) -> f64 {
+    match mode {
+        RoundMode::Nearest => z.round(),
+        RoundMode::Stochastic => {
+            let f = z.floor();
+            let frac = z - f;
+            if rng.next_f64() < frac {
+                f + 1.0
+            } else {
+                f
+            }
+        }
+    }
+}
+
+/// Round and clamp into [0, 2^b − 1].
+#[inline]
+pub fn round_clamp(mode: RoundMode, z: f64, bits: u32, rng: &mut Rng) -> f64 {
+    super::grid::clamp_grid(round(mode, z, rng), bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rounds_half_away_from_even_ties() {
+        let mut rng = Rng::new(0);
+        assert_eq!(round(RoundMode::Nearest, 1.4, &mut rng), 1.0);
+        assert_eq!(round(RoundMode::Nearest, 1.6, &mut rng), 2.0);
+        assert_eq!(round(RoundMode::Nearest, -0.4, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn stochastic_is_unbiased() {
+        let mut rng = Rng::new(1);
+        let z = 2.3;
+        let n = 200_000;
+        let mean: f64 = (0..n)
+            .map(|_| round(RoundMode::Stochastic, z, &mut rng))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - z).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn stochastic_on_integer_is_exact() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            assert_eq!(round(RoundMode::Stochastic, 3.0, &mut rng), 3.0);
+        }
+    }
+
+    #[test]
+    fn clamp_respects_grid() {
+        let mut rng = Rng::new(3);
+        assert_eq!(round_clamp(RoundMode::Nearest, 9.7, 2, &mut rng), 3.0);
+        assert_eq!(round_clamp(RoundMode::Nearest, -4.2, 2, &mut rng), 0.0);
+        assert_eq!(round_clamp(RoundMode::Nearest, 2.2, 2, &mut rng), 2.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the HLO-text artifacts `python/compile/aot.py`
+//! produced and executes them on the CPU PJRT client via the `xla` crate.
+//! This is the only place the process touches XLA; everything upstream of
+//! `make artifacts` is build-time Python, everything downstream is Rust.
+
+pub mod pjrt;
+pub mod registry;
+
+pub use pjrt::{Executable, Input, PjrtRuntime};
+pub use registry::{ArtifactSpec, InputSpec, Registry};

@@ -1,0 +1,190 @@
+//! Thin wrapper over the `xla` crate: PJRT CPU client, HLO-text loading
+//! (`HloModuleProto::from_text_file` — the interchange that survives
+//! xla_extension 0.5.1's 32-bit-id limit), compilation, and execution
+//! with typed input marshalling.
+
+use std::path::Path;
+
+/// Typed host-side input buffers (marshalled to XLA literals).
+pub enum Input {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U8(Vec<u8>, Vec<usize>),
+}
+
+impl Input {
+    fn to_literal(&self) -> crate::Result<xla::Literal> {
+        let lit = match self {
+            Input::F32(data, dims) => {
+                let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    dims,
+                    &bytes,
+                )?
+            }
+            Input::I32(data, dims) => {
+                let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    dims,
+                    &bytes,
+                )?
+            }
+            Input::U8(data, dims) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U8,
+                dims,
+                data,
+            )?,
+        };
+        Ok(lit)
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Input::F32(d, _) => d.len(),
+            Input::I32(d, _) => d.len(),
+            Input::U8(d, _) => d.len(),
+        }
+    }
+}
+
+/// The PJRT CPU client (one per process; compile executables through it).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> crate::Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, path: &Path) -> crate::Result<Executable> {
+        anyhow::ensure!(path.exists(), "HLO artifact not found: {path:?}");
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().unwrap()).map_err(anyhow_xla)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(anyhow_xla)?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled XLA executable. The lowered functions all return a 1-tuple
+/// (aot.py lowers with return_tuple=True), unwrapped here.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with pre-marshalled literals (hot path: callers cache
+    /// literals for static inputs like weights).
+    pub fn execute_literals(&self, literals: &[xla::Literal]) -> crate::Result<Vec<f32>> {
+        let result = self.exe.execute::<xla::Literal>(literals).map_err(anyhow_xla)?;
+        let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        let out = lit.to_tuple1().map_err(anyhow_xla)?;
+        out.to_vec::<f32>().map_err(anyhow_xla)
+    }
+
+    /// Execute over borrowed literals (hot path — avoids cloning cached
+    /// weight literals).
+    pub fn execute_borrowed(&self, lits: &[&xla::Literal]) -> crate::Result<Vec<f32>> {
+        let result = self.exe.execute::<&xla::Literal>(lits).map_err(anyhow_xla)?;
+        let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        let out = lit.to_tuple1().map_err(anyhow_xla)?;
+        out.to_vec::<f32>().map_err(anyhow_xla)
+    }
+
+    /// Execute with typed host inputs.
+    pub fn execute(&self, inputs: &[Input]) -> crate::Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<crate::Result<_>>()?;
+        self.execute_literals(&literals)
+    }
+
+    /// Marshal inputs once (for caching static operands).
+    pub fn marshal(inputs: &[Input]) -> crate::Result<Vec<xla::Literal>> {
+        inputs.iter().map(|i| i.to_literal()).collect()
+    }
+}
+
+fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have produced HLO files; they
+    /// self-skip otherwise so plain `cargo test` stays hermetic.
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn kernel_artifact_matches_rust_unpack() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let rt = PjrtRuntime::cpu().unwrap();
+        let path = dir.join("hlo/kernel_q2_m512_n512_t16.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: kernel artifact missing");
+            return;
+        }
+        let exe = rt.load(&path).unwrap();
+        // Random 2-bit codes, packed LSB-first like python's pack_codes.
+        let mut rng = crate::util::rng::Rng::new(5);
+        let (m, n, t, bits) = (512usize, 512usize, 16usize, 2u32);
+        let codes: Vec<u8> = (0..m * n).map(|_| rng.below(4) as u8).collect();
+        let per = 32 / bits as usize;
+        let nw = n.div_ceil(per);
+        let mut words = vec![0i32; m * nw];
+        for i in 0..m {
+            for j in 0..n {
+                let w = j / per;
+                let k = j % per;
+                words[i * nw + w] |= (codes[i * n + j] as i32) << (k * bits as usize);
+            }
+        }
+        let x: Vec<f32> = (0..t * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let out = exe
+            .execute(&[
+                Input::I32(words, vec![m, nw]),
+                Input::F32(x.clone(), vec![t, n]),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), t * m);
+        // Compare against rust-side reference.
+        for tt in 0..t {
+            for i in (0..m).step_by(97) {
+                let mut s = 0.0f64;
+                for j in 0..n {
+                    s += codes[i * n + j] as f64 * x[tt * n + j] as f64;
+                }
+                let got = out[tt * m + i] as f64;
+                assert!(
+                    (got - s).abs() < 1e-2 * s.abs().max(1.0),
+                    "mismatch at ({tt},{i}): {got} vs {s}"
+                );
+            }
+        }
+    }
+}

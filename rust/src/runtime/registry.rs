@@ -1,0 +1,172 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! aot.py) into typed specs the engines use to marshal inputs in the
+//! exact order the lowered HLO expects.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    /// Parameter (or "tokens") name.
+    pub name: String,
+    /// Qparam field ("words", "rowscale", …) or empty for plain params.
+    pub field: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: PathBuf,
+    pub kind: String,
+    pub model: String,
+    pub bits: u32,
+    pub incoherent: bool,
+    pub batch: usize,
+    pub seq: usize,
+    pub inputs: Vec<InputSpec>,
+}
+
+#[derive(Debug)]
+pub struct Registry {
+    pub root: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Registry {
+    pub fn load(root: &Path) -> crate::Result<Registry> {
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("no manifest at {root:?}: {e} (run `make artifacts`)"))?;
+        let j = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?
+        {
+            let inputs = a
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(|i| {
+                    Ok(InputSpec {
+                        name: i.req_str("name")?.to_string(),
+                        field: i.get("field").and_then(|f| f.as_str()).unwrap_or("").to_string(),
+                        shape: i
+                            .req("shape")?
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|x| x.as_usize())
+                            .collect(),
+                        dtype: i.req_str("dtype")?.to_string(),
+                    })
+                })
+                .collect::<crate::Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                file: root.join(a.req_str("file")?),
+                kind: a.req_str("kind")?.to_string(),
+                model: a
+                    .get("model")
+                    .and_then(|m| m.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                bits: a.get("bits").and_then(|b| b.as_f64()).unwrap_or(0.0) as u32,
+                incoherent: a
+                    .get("incoherent")
+                    .and_then(|b| b.as_bool())
+                    .unwrap_or(false),
+                batch: a.get("batch").and_then(|b| b.as_usize()).unwrap_or(1),
+                seq: a.get("seq").and_then(|b| b.as_usize()).unwrap_or(0),
+                inputs,
+            });
+        }
+        Ok(Registry {
+            root: root.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn find_fp32(&self, model: &str, batch: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "fp32" && a.model == model && a.batch == batch)
+    }
+
+    pub fn find_quant(&self, model: &str, bits: u32) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "quant" && a.model == model && a.bits == bits)
+    }
+
+    pub fn find_kernel(&self, bits: u32) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "kernel" && a.bits == bits)
+    }
+
+    /// Checkpoint path for a model name.
+    pub fn checkpoint(&self, model: &str) -> PathBuf {
+        self.root.join("models").join(format!("{model}.ckpt"))
+    }
+
+    /// Data split path.
+    pub fn split(&self, name: &str) -> PathBuf {
+        self.root.join("data").join(format!("{name}.bin"))
+    }
+
+    pub fn tasks(&self, name: &str) -> PathBuf {
+        self.root.join("data").join(format!("tasks_{name}.json"))
+    }
+
+    pub fn vocab(&self) -> PathBuf {
+        self.root.join("data").join("vocab.json")
+    }
+}
+
+/// The default artifacts directory (repo-root/artifacts), overridable via
+/// QUIP_ARTIFACTS.
+pub fn default_root() -> PathBuf {
+    std::env::var("QUIP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let dir = std::env::temp_dir().join("quip_reg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [
+              {"kind": "fp32", "model": "s0", "batch": 1, "seq": 128,
+               "inputs": [{"name": "tokens", "field": "", "shape": [1, 128], "dtype": "i32"}],
+               "file": "hlo/x.hlo.txt"},
+              {"kind": "quant", "model": "s0", "bits": 2, "incoherent": true,
+               "batch": 1, "seq": 128, "inputs": [], "file": "hlo/q.hlo.txt"}
+            ]}"#,
+        )
+        .unwrap();
+        let r = Registry::load(&dir).unwrap();
+        assert_eq!(r.artifacts.len(), 2);
+        assert!(r.find_fp32("s0", 1).is_some());
+        assert!(r.find_fp32("s0", 9).is_none());
+        let q = r.find_quant("s0", 2).unwrap();
+        assert!(q.incoherent);
+        assert_eq!(r.checkpoint("s0").file_name().unwrap(), "s0.ckpt");
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let dir = std::env::temp_dir().join("quip_reg_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        let err = Registry::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Little-endian binary reader/writer for artifact formats (checkpoints,
+//! packed quantized layers). No `serde` offline; formats are versioned by
+//! magic+u32 headers at the call sites.
+
+/// Append-only little-endian writer.
+#[derive(Default)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn string(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+
+    pub fn f64s(&mut self, xs: &[f64]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.f64(x);
+        }
+    }
+}
+
+/// Cursor-based little-endian reader.
+pub struct Reader<'a> {
+    pub buf: &'a [u8],
+    pub pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        let end = self.pos + n;
+        if end > self.buf.len() {
+            anyhow::bail!("truncated input: need {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> crate::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn string(&mut self) -> crate::Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    pub fn f32s(&mut self) -> crate::Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn f64s(&mut self) -> crate::Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEADBEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(1.5);
+        w.f64(-2.25);
+        w.string("héllo");
+        w.f32s(&[1.0, 2.0]);
+        w.f64s(&[3.0]);
+        let mut r = Reader::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert_eq!(r.string().unwrap(), "héllo");
+        assert_eq!(r.f32s().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(r.f64s().unwrap(), vec![3.0]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_errors() {
+        let w = {
+            let mut w = Writer::new();
+            w.u32(5);
+            w
+        };
+        let mut r = Reader::new(&w.buf);
+        assert!(r.u64().is_err());
+    }
+}

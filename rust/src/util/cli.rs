@@ -1,0 +1,125 @@
+//! Tiny CLI argument parser (`clap` is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [positional...] [--key value] [--flag]`.
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: Vec<(String, String)>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.push((k.to_string(), v.to_string()));
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.push((name.to_string(), v));
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// A boolean `--flag` (also accepts `--key true/false`).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self
+                .opt(name)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    pub fn pos(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse("quantize model.bin --bits 2 --method ldlq --verbose --out=q.qz");
+        assert_eq!(a.pos(0), Some("quantize"));
+        assert_eq!(a.pos(1), Some("model.bin"));
+        assert_eq!(a.opt_usize("bits", 4), 2);
+        assert_eq!(a.opt("method"), Some("ldlq"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("out"), Some("q.qz"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn last_option_wins() {
+        let a = parse("x --bits 2 --bits 3");
+        assert_eq!(a.opt_usize("bits", 0), 3);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --dry-run");
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("x --alpha -0.5");
+        // "-0.5" does not start with --, so it binds as the value.
+        assert_eq!(a.opt_f64("alpha", 0.0), -0.5);
+    }
+}

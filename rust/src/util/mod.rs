@@ -1,0 +1,12 @@
+//! General-purpose substrates built in-repo (the offline environment ships
+//! no `rand`, `serde`, `clap`, `rayon` or `criterion`; these modules replace
+//! exactly the slices of those crates the system needs).
+
+pub mod bytes;
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod threadpool;
+pub mod timer;
+pub mod logging;
+pub mod testkit;

@@ -1,0 +1,119 @@
+//! Mini property-testing harness (no `proptest` offline) plus shared
+//! random-structure generators used across the test suite.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Run `body` for `cases` seeded cases. On panic the failing case index and
+/// seed are reported so the case can be replayed deterministically.
+pub fn propcheck<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: usize, body: F) {
+    for case in 0..cases {
+        let seed = 0x9E37_79B9u64
+            .wrapping_mul(case as u64 + 1)
+            .wrapping_add(name.len() as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            body(&mut rng);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("propcheck '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random dense matrix with entries Unif[-1, 1).
+pub fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.uniform(-1.0, 1.0))
+}
+
+/// Random symmetric positive definite matrix: AᵀA/n + ridge·I.
+pub fn random_spd(rng: &mut Rng, n: usize, ridge: f64) -> Mat {
+    let a = random_mat(rng, n + 4, n);
+    let mut h = crate::linalg::gemm::gram(&a).scale(1.0 / (n + 4) as f64);
+    for i in 0..n {
+        h[(i, i)] += ridge;
+    }
+    h
+}
+
+/// Random PSD matrix of rank ≤ k (models the paper's low-rank Hessians).
+pub fn random_low_rank_psd(rng: &mut Rng, n: usize, k: usize) -> Mat {
+    let a = random_mat(rng, k, n);
+    crate::linalg::gemm::gram(&a).scale(1.0 / k as f64)
+}
+
+/// Random calibration-style Hessian: low-rank + small ridge, like observed
+/// LLM proxy Hessians (Fig 1 / Table 6).
+pub fn random_hessian(rng: &mut Rng, n: usize, k: usize, ridge: f64) -> Mat {
+    let mut h = random_low_rank_psd(rng, n, k);
+    for i in 0..n {
+        h[(i, i)] += ridge;
+    }
+    h
+}
+
+/// Assert scalar closeness with a readable message.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    assert!(
+        (a - b).abs() <= tol,
+        "expected {a} ≈ {b} (tol {tol}, diff {})",
+        (a - b).abs()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn propcheck_runs_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        propcheck("count", 17, |_rng| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "propcheck 'boom' failed")]
+    fn propcheck_reports_failure() {
+        propcheck("boom", 5, |rng| {
+            let x = rng.next_f64();
+            assert!(x < 2.0); // always true
+            if x >= 0.0 {
+                panic!("intentional");
+            }
+        });
+    }
+
+    #[test]
+    fn random_spd_is_spd() {
+        propcheck("spd", 5, |rng| {
+            let h = random_spd(rng, 10, 1e-3);
+            // symmetric
+            for i in 0..10 {
+                for j in 0..10 {
+                    assert!((h[(i, j)] - h[(j, i)]).abs() < 1e-12);
+                }
+            }
+            // positive definite: Cholesky succeeds
+            assert!(crate::linalg::chol::cholesky(&h).is_ok());
+        });
+    }
+
+    #[test]
+    fn low_rank_has_low_rank() {
+        let mut rng = Rng::new(5);
+        let h = random_low_rank_psd(&mut rng, 16, 3);
+        let e = crate::linalg::eigen::eigen_sym(&h, 1e-13, 60);
+        let nonzero = e.values.iter().filter(|&&l| l > 1e-9).count();
+        assert!(nonzero <= 3);
+    }
+}

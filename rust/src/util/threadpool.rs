@@ -1,0 +1,208 @@
+//! Threading substrates: a data-parallel `parallel_for` built on scoped
+//! threads (replacing `rayon`), and a persistent `ThreadPool` used by the
+//! serving coordinator.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default (bounded: quantization jobs
+/// are memory-bandwidth heavy, more threads than cores only adds noise).
+pub fn default_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(i)` for every `i in 0..n`, work-stealing over `threads` scoped
+/// workers via an atomic cursor. `f` must be `Sync` (called concurrently).
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Like `parallel_for` but chunked: `f(lo, hi)` over disjoint ranges.
+/// Lower dispatch overhead when per-item work is tiny.
+pub fn parallel_chunks<F>(n: usize, threads: usize, chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let n_chunks = n.div_ceil(chunk);
+    parallel_for(n_chunks, threads, |c| {
+        let lo = c * chunk;
+        let hi = (lo + chunk).min(n);
+        f(lo, hi);
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+        parallel_for(n, threads, |i| {
+            let v = f(i);
+            **slots[i].lock().unwrap() = Some(v);
+        });
+    }
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// A persistent worker pool with a shared job queue. Used by the serving
+/// coordinator for per-connection handlers and background jobs.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Message>,
+    workers: Vec<thread::JoinHandle<()>>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let inflight = Arc::clone(&inflight);
+                thread::spawn(move || loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Message::Run(job)) => {
+                            job();
+                            inflight.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        Ok(Message::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool {
+            tx,
+            workers,
+            inflight,
+        }
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(Message::Run(Box::new(f)))
+            .expect("thread pool has shut down");
+    }
+
+    /// Number of queued-or-running jobs.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Busy-wait (with yielding) until all submitted jobs finished.
+    pub fn wait_idle(&self) {
+        while self.inflight() > 0 {
+            thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(1000, 8, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_chunks_partitions() {
+        let sum = AtomicU64::new(0);
+        parallel_chunks(1003, 4, 17, |lo, hi| {
+            let s: u64 = (lo as u64..hi as u64).sum();
+            sum.fetch_add(s, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), (0..1003u64).sum::<u64>());
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..64 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        parallel_for(0, 4, |_| panic!("should not run"));
+    }
+}

@@ -1,0 +1,144 @@
+//! Benchmark timing substrate (replacing `criterion` offline): warmup +
+//! repeated measurement with robust summary statistics.
+
+use std::time::Instant;
+
+/// Summary statistics over a set of per-iteration timings (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| xs[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            max: xs[n - 1],
+        }
+    }
+
+    /// Human-readable one-liner, scaled to ns/µs/ms/s.
+    pub fn human(&self) -> String {
+        format!(
+            "mean {} ± {}  (p50 {}, p95 {}, min {}, n={})",
+            fmt_time(self.mean),
+            fmt_time(self.std),
+            fmt_time(self.p50),
+            fmt_time(self.p95),
+            fmt_time(self.min),
+            self.n
+        )
+    }
+}
+
+/// Format seconds with an appropriate SI unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.3}s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}µs", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Time one invocation of `f`, returning (seconds, result).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+/// Benchmark `f`: `warmup` unmeasured runs, then `iters` measured runs.
+/// A `std::hint::black_box` on the result prevents dead-code elimination.
+pub fn bench<T, F: FnMut() -> T>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Benchmark with a time budget: run until `budget_secs` elapsed (at least
+/// 3 iterations), after `warmup` runs. Used by `cargo bench` targets.
+pub fn bench_budget<T, F: FnMut() -> T>(warmup: usize, budget_secs: f64, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < 3 || start.elapsed().as_secs_f64() < budget_secs {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// Print a bench line in a stable, grep-friendly format.
+pub fn report(name: &str, stats: &Stats) {
+    println!("bench  {:<44} {}", name, stats.human());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant() {
+        let s = Stats::from_samples(vec![2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn bench_returns_requested_iters() {
+        let s = bench(1, 5, || 1 + 1);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.5).ends_with('s'));
+        assert!(fmt_time(2.5e-3).ends_with("ms"));
+        assert!(fmt_time(2.5e-6).ends_with("µs"));
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+    }
+}

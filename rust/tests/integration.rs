@@ -1,0 +1,169 @@
+//! Cross-module integration tests (artifact-free: everything synthetic).
+
+use quip::coordinator::pipeline::{quantize_model, PipelineConfig};
+use quip::data::gen::markov_stream;
+use quip::engine::native::{decode_step_with, FpLinears, QuantLinears};
+use quip::model::lm;
+use quip::model::quantized::QuantizedModel;
+use quip::model::weights::Checkpoint;
+use quip::model::{ModelConfig, Transformer};
+use quip::quant::{Method, Processing, QuantConfig};
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig::sized("it", 32, 2, 4, 64)
+}
+
+fn pipeline(bits: u32, method: Method, processing: Processing) -> (Checkpoint, QuantizedModel) {
+    let cfg = tiny_cfg();
+    let ck = Checkpoint::random(&cfg, 42);
+    let stream = markov_stream(cfg.vocab as u32, 6_000, 7);
+    let calib = stream.calibration(32, 6, 1);
+    let pcfg = PipelineConfig {
+        quant: QuantConfig {
+            bits,
+            method,
+            processing,
+            greedy_passes: 2,
+            ..Default::default()
+        },
+        calib_seqs: 6,
+        calib_seq_len: 32,
+        seed: 5,
+    };
+    let (qm, _) = quantize_model(&ck, &calib, &pcfg).unwrap();
+    (ck, qm)
+}
+
+#[test]
+fn full_pipeline_then_eval_preserves_function_at_4_bits() {
+    let (ck, qm) = pipeline(4, Method::Ldlq, Processing::incoherent());
+    let stream = markov_stream(ck.config.vocab as u32, 6_000, 9);
+    let fp = Transformer::from_checkpoint(&ck).unwrap();
+    let mut q = Transformer::from_checkpoint(&ck).unwrap();
+    qm.apply_to(&mut q).unwrap();
+    let p_fp = lm::perplexity(&fp, &stream, 32, 8);
+    let p_q = lm::perplexity(&q, &stream, 32, 8);
+    // 4-bit QuIP on a random model: perplexity within ~20% of fp.
+    assert!(
+        (p_q - p_fp).abs() / p_fp < 0.2,
+        "fp {p_fp:.2} vs 4-bit {p_q:.2}"
+    );
+}
+
+#[test]
+fn qz_roundtrip_through_disk_and_native_engine() {
+    let (ck, qm) = pipeline(2, Method::Ldlq, Processing::incoherent());
+    let dir = std::env::temp_dir().join("quip_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.qz");
+    qm.save(&path).unwrap();
+    let loaded = QuantizedModel::load(&path).unwrap();
+
+    // Native on-the-fly engine from the loaded artifact ≈ dequantized fwd.
+    let model = Transformer::from_checkpoint(&ck).unwrap();
+    let qlin = QuantLinears::from_model(&loaded).unwrap();
+    let mut deq = Transformer::from_checkpoint(&ck).unwrap();
+    loaded.apply_to(&mut deq).unwrap();
+    let fp = FpLinears { model: &deq };
+    let mut c1 = model.new_cache();
+    let mut c2 = deq.new_cache();
+    for &t in &[1u32, 30, 12, 55] {
+        let a = decode_step_with(&model, &qlin, &mut c1, t);
+        let b = decode_step_with(&deq, &fp, &mut c2, t);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 2e-2, "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn storage_is_actually_two_bit() {
+    // On this deliberately tiny model (32×32 layers) the per-layer
+    // metadata (grid + D̃ vector) is a visible constant; it amortizes to
+    // ≈bits at real layer sizes (see quant::packed tests at 64×64 and the
+    // quantize_llm example at s1+). Assert the code payload is exactly
+    // 2-bit and total stays bounded.
+    let (_, qm) = pipeline(2, Method::Nearest, Processing::incoherent());
+    for l in &qm.layers {
+        assert_eq!(l.packed.len(), (l.m * l.n * 2).div_ceil(8));
+    }
+    let bpw = qm.bits_per_weight();
+    assert!(bpw < 4.8, "bits/weight {bpw} too high for 2-bit artifact");
+}
+
+#[test]
+fn incp_beats_baseline_on_trained_like_weights_at_2_bits() {
+    // The headline comparison through the *whole pipeline* (not just one
+    // layer): proxy sums.
+    let cfg = tiny_cfg();
+    let mut ck = Checkpoint::random(&cfg, 11);
+    // Random Gaussian weights are already incoherent; trained LLM weights
+    // have per-channel outliers (the paper's Fig 2; also what
+    // train.py's channel-imbalance injection recreates). Scale weight
+    // columns lognormally, compensating in the feeding LayerNorm gain so
+    // the function is preserved — same transform as the build pipeline.
+    {
+        let mut rng = quip::util::rng::Rng::new(99);
+        let d = cfg.d_model;
+        for b in 0..cfg.n_layers {
+            for (ln, consumers) in [
+                ("ln1", vec!["attn.wq", "attn.wk", "attn.wv"]),
+                ("ln2", vec!["mlp.w1"]),
+            ] {
+                let c: Vec<f32> = (0..d).map(|_| (rng.normal() * 1.2).exp() as f32).collect();
+                for suffix in ["g", "b"] {
+                    let t = ck.tensors.get_mut(&format!("blk{b}.{ln}.{suffix}")).unwrap();
+                    for (x, ci) in t.data.iter_mut().zip(&c) {
+                        *x *= ci;
+                    }
+                }
+                for w in consumers {
+                    let t = ck.tensors.get_mut(&format!("blk{b}.{w}")).unwrap();
+                    let cols = d;
+                    for r in 0..t.dims[0] {
+                        for (j, ci) in c.iter().enumerate() {
+                            t.data[r * cols + j] /= ci;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let stream = markov_stream(cfg.vocab as u32, 6_000, 13);
+    let calib = stream.calibration(24, 4, 2);
+    let run = |processing: Processing, method: Method| {
+        let pcfg = PipelineConfig {
+            quant: QuantConfig {
+                bits: 2,
+                method,
+                processing,
+                greedy_passes: 2,
+                ..Default::default()
+            },
+            calib_seqs: 4,
+            calib_seq_len: 24,
+            seed: 5,
+        };
+        let (_, report) = quantize_model(&ck, &calib, &pcfg).unwrap();
+        report.total_proxy()
+    };
+    let quip = run(Processing::incoherent(), Method::Ldlq);
+    let base_near = run(Processing::baseline(), Method::Nearest);
+    assert!(quip < base_near, "quip {quip} vs baseline-near {base_near}");
+}
+
+#[test]
+fn generation_with_quantized_engine_is_deterministic_and_bounded() {
+    let (ck, qm) = pipeline(3, Method::Ldlq, Processing::incoherent());
+    let model = Transformer::from_checkpoint(&ck).unwrap();
+    let qlin = QuantLinears::from_model(&qm).unwrap();
+    let params = quip::coordinator::generate::GenParams {
+        max_tokens: 10,
+        ..Default::default()
+    };
+    let a = quip::coordinator::generate::generate(&model, &qlin, &[1, 2, 3], &params);
+    let b = quip::coordinator::generate::generate(&model, &qlin, &[1, 2, 3], &params);
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.tokens.len(), 10);
+    assert!(a.tokens.iter().all(|&t| (t as usize) < ck.config.vocab));
+}
