@@ -13,11 +13,11 @@
 //!
 //! The run is recorded in EXPERIMENTS.md.
 
-use quip::coordinator::server::{Client, ServeEngine, Server, ServerConfig};
+use quip::coordinator::server::{Client, EngineKind, Server, ServerConfig};
 use quip::engine::PjrtLm;
 use quip::harness::env::{Env, SPLITS};
 use quip::model::Transformer;
-use quip::quant::{Method, Processing, QuantConfig};
+use quip::quant::{Processing, QuantConfig};
 use quip::runtime::PjrtRuntime;
 use quip::util::cli::Args;
 use quip::util::json::Json;
@@ -65,12 +65,11 @@ fn main() -> quip::Result<()> {
         let t0 = std::time::Instant::now();
         let (qm, proxy) = env.quantize(
             &model,
-            QuantConfig {
-                bits,
-                method: Method::Ldlq,
-                processing,
-                ..Default::default()
-            },
+            QuantConfig::builder()
+                .bits(bits)
+                .rounder("ldlq")
+                .processing(processing)
+                .build()?,
         )?;
         let mut m = Transformer::from_checkpoint(&ck)?;
         qm.apply_to(&mut m)?;
@@ -136,7 +135,7 @@ fn main() -> quip::Result<()> {
     let m = Arc::new(Transformer::from_checkpoint(&ck)?);
     let mut server = Server::start(
         m,
-        ServeEngine::Quant(qm),
+        EngineKind::auto(Some(qm)),
         ServerConfig {
             addr: "127.0.0.1:0".into(),
             ..Default::default()

@@ -6,7 +6,7 @@
 
 use quip::harness::env::{Env, SPLITS, TASKS};
 use quip::model::Transformer;
-use quip::quant::{Method, Processing, QuantConfig};
+use quip::quant::{Processing, QuantConfig};
 use quip::util::cli::Args;
 
 fn main() -> quip::Result<()> {
@@ -32,12 +32,11 @@ fn main() -> quip::Result<()> {
         let t0 = std::time::Instant::now();
         let (qm, proxy) = env.quantize(
             &model,
-            QuantConfig {
-                bits,
-                method: Method::Ldlq,
-                processing,
-                ..Default::default()
-            },
+            QuantConfig::builder()
+                .bits(bits)
+                .rounder("ldlq")
+                .processing(processing)
+                .build()?,
         )?;
         println!(
             "{label}: quantized in {:.1}s, proxy {proxy:.4}, {:.2} bits/weight",

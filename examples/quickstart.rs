@@ -1,12 +1,15 @@
-//! Quickstart: quantize one linear layer with every method × processing
-//! combination and watch incoherence processing rescue 2-bit rounding.
+//! Quickstart: quantize one linear layer with every registered rounder ×
+//! processing combination and watch incoherence processing rescue 2-bit
+//! rounding.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! No artifacts needed — weights and Hessian are synthetic.
+//! No artifacts needed — weights and Hessian are synthetic. Rounders are
+//! resolved by name through the `RounderRegistry`; add your own rounder
+//! to a registry and this driver picks it up unchanged.
 
 use quip::linalg::Mat;
-use quip::quant::{quantize_layer, Method, Processing, QuantConfig};
+use quip::quant::{quantize_layer_with, Processing, QuantConfig, RounderRegistry};
 use quip::util::rng::Rng;
 use quip::util::testkit::random_hessian;
 
@@ -28,28 +31,25 @@ fn main() {
         "{:<10} {:>6} {:>16} {:>16} {:>8}",
         "method", "bits", "baseline", "incoherence", "gain"
     );
-    for method in [Method::Nearest, Method::Ldlq, Method::LdlqRg, Method::Greedy] {
+    let registry = RounderRegistry::global();
+    for name in ["near", "ldlq", "ldlq-rg", "greedy"] {
+        let rounder = registry.resolve(name).expect("builtin rounder");
         for bits in [2u32, 3, 4] {
             let run = |processing: Processing| {
-                quantize_layer(
-                    &w,
-                    &h,
-                    &QuantConfig {
-                        bits,
-                        method,
-                        processing,
-                        greedy_passes: 5,
-                        ..Default::default()
-                    },
-                    42,
-                )
-                .proxy_loss
+                let cfg = QuantConfig::builder()
+                    .bits(bits)
+                    .rounder(name)
+                    .processing(processing)
+                    .greedy_passes(5)
+                    .build()
+                    .expect("builtin rounder name");
+                quantize_layer_with(rounder.as_ref(), &w, &h, &cfg, 42).proxy_loss
             };
             let base = run(Processing::baseline());
             let incp = run(Processing::incoherent());
             println!(
                 "{:<10} {:>6} {:>16.5} {:>16.5} {:>7.1}x",
-                method.name(),
+                rounder.name(),
                 bits,
                 base,
                 incp,

@@ -3,10 +3,10 @@
 //!
 //!     cargo run --release --example serve -- [--model s0] [--bits 2] [--clients 8]
 
-use quip::coordinator::server::{Client, ServeEngine, Server, ServerConfig};
+use quip::coordinator::server::{Client, EngineKind, Server, ServerConfig};
 use quip::harness::env::Env;
 use quip::model::Transformer;
-use quip::quant::{Method, Processing, QuantConfig};
+use quip::quant::{Processing, QuantConfig};
 use quip::util::cli::Args;
 use std::sync::Arc;
 
@@ -23,17 +23,16 @@ fn main() -> quip::Result<()> {
     println!("quantizing {model} to {bits} bits (QuIP)…");
     let (qm, _) = env.quantize(
         &model,
-        QuantConfig {
-            bits,
-            method: Method::Ldlq,
-            processing: Processing::incoherent(),
-            ..Default::default()
-        },
+        QuantConfig::builder()
+            .bits(bits)
+            .rounder("quip")
+            .processing(Processing::incoherent())
+            .build()?,
     )?;
     let m = Arc::new(Transformer::from_checkpoint(&ck)?);
     let mut server = Server::start(
         m,
-        ServeEngine::Quant(qm),
+        EngineKind::auto(Some(qm)),
         ServerConfig {
             addr: "127.0.0.1:0".into(),
             ..Default::default()

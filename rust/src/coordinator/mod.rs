@@ -1,7 +1,9 @@
-//! Layer-3 coordination: the quantization pipeline (block-by-block Hessian
-//! collection through the already-quantized prefix, per-layer jobs on the
-//! thread pool — the paper's §6 setup), and the serving side (TCP server,
-//! request router, dynamic batcher, generation loop, metrics).
+//! Layer-3 coordination: the quantization pipeline (a staged
+//! [`QuantSession`] — block-by-block Hessian collection through the
+//! already-quantized prefix, per-layer jobs on the thread pool, typed
+//! [`PipelineEvent`] progress — the paper's §6 setup), and the serving
+//! side (TCP server, request router, dynamic batcher, generation loop,
+//! metrics).
 
 pub mod pipeline;
 pub mod generate;
@@ -9,4 +11,6 @@ pub mod batcher;
 pub mod metrics;
 pub mod server;
 
-pub use pipeline::{quantize_model, PipelineConfig, PipelineReport};
+pub use pipeline::{
+    quantize_model, PipelineConfig, PipelineControl, PipelineEvent, PipelineReport, QuantSession,
+};

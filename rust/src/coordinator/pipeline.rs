@@ -5,21 +5,26 @@
 //!  The current block's inputs are then passed through the quantized
 //!  block to produce inputs for the following block."
 //!
-//! Concretely: for block b, the calibration set is run through the model
-//! whose blocks < b are already quantized; the captured activations feed
-//! per-hkey Hessian accumulators; the block's six layers are quantized in
-//! parallel on the thread pool; their dequantized weights replace the
-//! block's weights; repeat.
+//! The pipeline is a [`QuantSession`] with three explicit stages per
+//! block — [`collect_hessians`](QuantSession::collect_hessians) →
+//! [`quantize_block`](QuantSession::quantize_block) →
+//! [`swap_weights`](QuantSession::swap_weights) — emitting typed
+//! [`PipelineEvent`]s through an observer callback. That gives callers
+//! progress streaming, per-block cancellation (return
+//! [`PipelineControl::Stop`] from the observer) and a seam for future
+//! resumability/sharding. [`quantize_model`] is the one-shot wrapper.
 
 use crate::hessian::HessianSet;
 use crate::linalg::Mat;
 use crate::model::quantized::QuantizedModel;
 use crate::model::weights::Checkpoint;
-use crate::model::Transformer;
+use crate::model::{LinearSpec, Transformer};
 use crate::quant::packed::QuantizedLayer;
-use crate::quant::{quantize_layer, QuantConfig};
+use crate::quant::{quantize_layer_with, QuantConfig, Rounder};
 use crate::util::json::Json;
 use crate::util::threadpool::{default_threads, parallel_map};
+use std::sync::Arc;
+use std::time::Instant;
 
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -39,6 +44,37 @@ impl Default for PipelineConfig {
             seed: 0x5155_4950,
         }
     }
+}
+
+/// Typed progress events, emitted in stream order: for each block b,
+/// `BlockStarted(b)`, then one `LayerDone` per linear spec of b, then
+/// `BlockDone(b)`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PipelineEvent {
+    BlockStarted {
+        block: usize,
+        /// Linear layers this block will quantize.
+        layers: usize,
+    },
+    LayerDone {
+        block: usize,
+        name: String,
+        proxy_loss: f64,
+        seconds: f64,
+    },
+    BlockDone {
+        block: usize,
+        seconds: f64,
+    },
+}
+
+/// Observer verdict: keep going, or cancel after the current stage. A
+/// cancelled session still yields a consistent partial artifact through
+/// [`QuantSession::finish`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineControl {
+    Continue,
+    Stop,
 }
 
 /// Per-layer record in the pipeline report.
@@ -81,46 +117,159 @@ impl PipelineReport {
     }
 }
 
-/// Quantize a whole model from its checkpoint with the given calibration
-/// sequences. Returns the quantized artifact + report.
-pub fn quantize_model(
-    ck: &Checkpoint,
-    calib: &[Vec<u32>],
-    cfg: &PipelineConfig,
-) -> crate::Result<(QuantizedModel, PipelineReport)> {
-    let t0 = std::time::Instant::now();
-    let mut model = Transformer::from_checkpoint(ck)?;
-    let specs = ck.config.linear_specs();
-    let mut layers: Vec<QuantizedLayer> = Vec::with_capacity(specs.len());
-    let mut reports = Vec::new();
+/// The quantized output of one block, produced by
+/// [`QuantSession::quantize_block`] and consumed by
+/// [`QuantSession::swap_weights`].
+pub struct BlockOutput {
+    pub block: usize,
+    specs: Vec<LinearSpec>,
+    results: Vec<(crate::quant::LayerQuantOutput, f64)>,
+}
 
-    for b in 0..ck.config.n_layers {
-        // 1. Hessians for this block from the quantized-prefix model.
-        let block_prefix = format!("blk{b}.");
-        let mut hset = HessianSet::for_model(&ck.config);
+/// A block-by-block quantization session over one checkpoint.
+///
+/// The session owns a running copy of the model; after block b is
+/// swapped, blocks > b see calibration activations produced by the
+/// already-quantized prefix (the paper's §6 scheme). Drive it with
+/// [`run`](QuantSession::run), or stage-by-stage:
+///
+/// ```no_run
+/// # fn main() -> quip::Result<()> {
+/// use quip::coordinator::pipeline::{PipelineConfig, PipelineControl, QuantSession};
+/// # let ck = quip::model::Checkpoint::random(&quip::model::ModelConfig::sized("t", 32, 2, 4, 64), 0);
+/// # let calib: Vec<Vec<u32>> = vec![vec![1, 2, 3]];
+/// let mut session = QuantSession::new(&ck, PipelineConfig::default())?
+///     .on_event(|ev| {
+///         println!("{ev:?}");
+///         PipelineControl::Continue
+///     });
+/// for block in 0..session.n_blocks() {
+///     let hset = session.collect_hessians(block, &calib)?;
+///     let out = session.quantize_block(block, &hset)?;
+///     session.swap_weights(out)?;
+/// }
+/// let (qm, report) = session.finish();
+/// # let _ = (qm, report);
+/// # Ok(())
+/// # }
+/// ```
+pub struct QuantSession<'a> {
+    ck: &'a Checkpoint,
+    cfg: PipelineConfig,
+    rounder: Arc<dyn Rounder>,
+    model: Transformer,
+    specs: Vec<LinearSpec>,
+    layers: Vec<QuantizedLayer>,
+    reports: Vec<LayerReport>,
+    next_block: usize,
+    cancelled: bool,
+    t0: Instant,
+    observer: Option<Box<dyn FnMut(&PipelineEvent) -> PipelineControl + 'a>>,
+}
+
+impl<'a> QuantSession<'a> {
+    pub fn new(ck: &'a Checkpoint, cfg: PipelineConfig) -> crate::Result<QuantSession<'a>> {
+        Ok(QuantSession {
+            rounder: cfg.quant.method.rounder(),
+            model: Transformer::from_checkpoint(ck)?,
+            specs: ck.config.linear_specs(),
+            layers: Vec::new(),
+            reports: Vec::new(),
+            next_block: 0,
+            cancelled: false,
+            t0: Instant::now(),
+            observer: None,
+            ck,
+            cfg,
+        })
+    }
+
+    /// Install the event observer. Called synchronously on the driving
+    /// thread for every [`PipelineEvent`]; return
+    /// [`PipelineControl::Stop`] to cancel after the current stage.
+    pub fn on_event<F>(mut self, observer: F) -> Self
+    where
+        F: FnMut(&PipelineEvent) -> PipelineControl + 'a,
+    {
+        self.observer = Some(Box::new(observer));
+        self
+    }
+
+    /// Override the rounding algorithm (e.g. a custom [`Rounder`] not in
+    /// the registry). Defaults to `cfg.quant.method`'s rounder.
+    pub fn with_rounder(mut self, rounder: Arc<dyn Rounder>) -> Self {
+        self.rounder = rounder;
+        self
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.ck.config.n_layers
+    }
+
+    /// All blocks processed, or the observer cancelled.
+    pub fn is_done(&self) -> bool {
+        self.cancelled || self.next_block >= self.n_blocks()
+    }
+
+    fn emit(&mut self, ev: PipelineEvent) -> PipelineControl {
+        let control = match &mut self.observer {
+            Some(f) => f(&ev),
+            None => PipelineControl::Continue,
+        };
+        if control == PipelineControl::Stop {
+            self.cancelled = true;
+        }
+        control
+    }
+
+    fn block_prefix(block: usize) -> String {
+        format!("blk{block}.")
+    }
+
+    /// Stage 1: run the calibration set through the model (whose blocks
+    /// < `block` are already quantized) and accumulate this block's
+    /// proxy Hessians.
+    pub fn collect_hessians(
+        &mut self,
+        block: usize,
+        calib: &[Vec<u32>],
+    ) -> crate::Result<HessianSet> {
+        let prefix = Self::block_prefix(block);
+        let mut hset = HessianSet::for_model(&self.ck.config);
         {
             let mut sink = |hkey: &str, rows: &[f32], n: usize| {
-                if hkey.starts_with(&block_prefix) {
+                if hkey.starts_with(&prefix) {
                     if let Some(acc) = hset.accums.get_mut(hkey) {
                         acc.add_rows(rows, n);
                     }
                 }
             };
             for seq in calib {
-                model.forward(seq, Some(&mut sink));
+                self.model.forward(seq, Some(&mut sink));
             }
         }
+        Ok(hset)
+    }
 
-        // 2. Quantize the block's layers in parallel.
-        let block_specs: Vec<_> = specs
+    /// Stage 2: quantize the block's linear layers in parallel on the
+    /// thread pool. Pure compute — the running model is untouched until
+    /// [`swap_weights`](Self::swap_weights).
+    pub fn quantize_block(
+        &mut self,
+        block: usize,
+        hset: &HessianSet,
+    ) -> crate::Result<BlockOutput> {
+        let prefix = Self::block_prefix(block);
+        let block_specs: Vec<LinearSpec> = self
+            .specs
             .iter()
-            .filter(|s| s.name.starts_with(&block_prefix))
+            .filter(|s| s.name.starts_with(&prefix))
             .cloned()
             .collect();
         let weights: Vec<Mat> = block_specs
             .iter()
             .map(|s| {
-                let wdata = model.get_weight(&s.name).unwrap();
+                let wdata = self.model.get_weight(&s.name).unwrap();
                 Mat {
                     rows: s.out_dim,
                     cols: s.in_dim,
@@ -133,61 +282,155 @@ pub fn quantize_model(
             .map(|s| hset.finish(&s.hkey))
             .collect::<crate::Result<_>>()?;
 
-        let qcfg = cfg.quant.clone();
-        let seed = cfg.seed;
+        let qcfg = self.cfg.quant.clone();
+        let seed = self.cfg.seed;
+        let rounder = Arc::clone(&self.rounder);
         let results = parallel_map(block_specs.len(), default_threads(), |i| {
-            let t = std::time::Instant::now();
+            let t = Instant::now();
             let layer_seed = seed
                 .wrapping_mul(0x100000001B3)
-                .wrapping_add((b * 16 + i) as u64);
-            let out = quantize_layer(&weights[i], &hessians[i], &qcfg, layer_seed);
+                .wrapping_add((block * 16 + i) as u64);
+            let out =
+                quantize_layer_with(rounder.as_ref(), &weights[i], &hessians[i], &qcfg, layer_seed);
             (out, t.elapsed().as_secs_f64())
         });
-
-        // 3. Swap quantized weights into the running model.
-        for (spec, (out, secs)) in block_specs.iter().zip(results) {
-            let data: Vec<f32> = out.w_hat.data.iter().map(|&x| x as f32).collect();
-            model.set_weight(&spec.name, data)?;
-            reports.push(LayerReport {
-                name: spec.name.clone(),
-                proxy_loss: out.proxy_loss,
-                seconds: secs,
-            });
-            layers.push(QuantizedLayer::from_codes(
-                &spec.name,
-                &out.codes,
-                cfg.quant.bits,
-                out.post,
-            ));
-        }
-        crate::log_info!(
-            "block {b}: quantized {} layers ({:.1}s elapsed)",
-            block_specs.len(),
-            t0.elapsed().as_secs_f64()
-        );
+        Ok(BlockOutput {
+            block,
+            specs: block_specs,
+            results,
+        })
     }
 
-    let recipe = format!(
-        "{}+{}",
-        cfg.quant.method.name(),
-        if cfg.quant.processing.incoherent {
-            "incp"
-        } else {
-            "baseline"
+    /// Stage 3: swap the block's dequantized weights into the running
+    /// model, record reports/artifact layers, emit one
+    /// [`PipelineEvent::LayerDone`] per layer, and advance the block
+    /// cursor. Blocks must be swapped strictly in order (the §6
+    /// quantized-prefix invariant) — swapping any other block is an
+    /// error, so the staged API composes safely with
+    /// [`step`](Self::step)/[`run`](Self::run).
+    pub fn swap_weights(&mut self, out: BlockOutput) -> crate::Result<PipelineControl> {
+        anyhow::ensure!(
+            out.block == self.next_block,
+            "swap_weights out of order: got block {}, expected {}",
+            out.block,
+            self.next_block
+        );
+        let BlockOutput {
+            block,
+            specs,
+            results,
+        } = out;
+        let bits = self.cfg.quant.bits;
+        let mut control = PipelineControl::Continue;
+        for (spec, (lq, secs)) in specs.iter().zip(results) {
+            let data: Vec<f32> = lq.w_hat.data.iter().map(|&x| x as f32).collect();
+            self.model.set_weight(&spec.name, data)?;
+            self.reports.push(LayerReport {
+                name: spec.name.clone(),
+                proxy_loss: lq.proxy_loss,
+                seconds: secs,
+            });
+            self.layers
+                .push(QuantizedLayer::from_codes(&spec.name, &lq.codes, bits, lq.post));
+            let c = self.emit(PipelineEvent::LayerDone {
+                block,
+                name: spec.name.clone(),
+                proxy_loss: lq.proxy_loss,
+                seconds: secs,
+            });
+            if c == PipelineControl::Stop {
+                control = PipelineControl::Stop;
+            }
         }
-    );
-    Ok((
-        QuantizedModel {
-            config: ck.config.clone(),
-            bits: cfg.quant.bits,
-            recipe,
-            layers,
-        },
-        PipelineReport {
-            layers: reports,
-            total_seconds: t0.elapsed().as_secs_f64(),
-        },
-    ))
+        self.next_block += 1;
+        Ok(control)
+    }
+
+    /// Run all three stages for the next unprocessed block, emitting
+    /// `BlockStarted`/`LayerDone`*/`BlockDone`. Returns the resulting
+    /// control decision ([`PipelineControl::Stop`] once done/cancelled).
+    pub fn step(&mut self, calib: &[Vec<u32>]) -> crate::Result<PipelineControl> {
+        if self.is_done() {
+            return Ok(PipelineControl::Stop);
+        }
+        let block = self.next_block;
+        let prefix = Self::block_prefix(block);
+        let n_layers = self
+            .specs
+            .iter()
+            .filter(|s| s.name.starts_with(&prefix))
+            .count();
+        if self.emit(PipelineEvent::BlockStarted {
+            block,
+            layers: n_layers,
+        }) == PipelineControl::Stop
+        {
+            return Ok(PipelineControl::Stop);
+        }
+        let t_block = Instant::now();
+        let hset = self.collect_hessians(block, calib)?;
+        let out = self.quantize_block(block, &hset)?;
+        let mut control = self.swap_weights(out)?;
+        crate::log_info!(
+            "block {block}: quantized {n_layers} layers ({:.1}s elapsed)",
+            self.t0.elapsed().as_secs_f64()
+        );
+        let c = self.emit(PipelineEvent::BlockDone {
+            block,
+            seconds: t_block.elapsed().as_secs_f64(),
+        });
+        if c == PipelineControl::Stop {
+            control = PipelineControl::Stop;
+        }
+        Ok(control)
+    }
+
+    /// Drive every remaining block, then finish. Stops early (without
+    /// error) if the observer cancels; the returned artifact then covers
+    /// the completed blocks only.
+    pub fn run(mut self, calib: &[Vec<u32>]) -> crate::Result<(QuantizedModel, PipelineReport)> {
+        while !self.is_done() {
+            self.step(calib)?;
+        }
+        Ok(self.finish())
+    }
+
+    /// Package whatever has been quantized so far into the artifact +
+    /// report. Total on a completed run; partial after cancellation.
+    pub fn finish(self) -> (QuantizedModel, PipelineReport) {
+        let recipe = format!(
+            "{}+{}",
+            self.rounder.name(),
+            if self.cfg.quant.processing.incoherent {
+                "incp"
+            } else {
+                "baseline"
+            }
+        );
+        (
+            QuantizedModel {
+                config: self.ck.config.clone(),
+                bits: self.cfg.quant.bits,
+                recipe,
+                layers: self.layers,
+            },
+            PipelineReport {
+                layers: self.reports,
+                total_seconds: self.t0.elapsed().as_secs_f64(),
+            },
+        )
+    }
+}
+
+/// Quantize a whole model from its checkpoint with the given calibration
+/// sequences. One-shot wrapper over [`QuantSession`]; returns the
+/// quantized artifact + report.
+pub fn quantize_model(
+    ck: &Checkpoint,
+    calib: &[Vec<u32>],
+    cfg: &PipelineConfig,
+) -> crate::Result<(QuantizedModel, PipelineReport)> {
+    QuantSession::new(ck, cfg.clone())?.run(calib)
 }
 
 #[cfg(test)]
@@ -197,7 +440,11 @@ mod tests {
     use crate::model::ModelConfig;
     use crate::quant::{Method, Processing};
 
-    fn run_pipeline(bits: u32, method: Method, processing: Processing) -> (QuantizedModel, PipelineReport, Checkpoint) {
+    fn run_pipeline(
+        bits: u32,
+        method: Method,
+        processing: Processing,
+    ) -> (QuantizedModel, PipelineReport, Checkpoint) {
         let cfg = ModelConfig::sized("t", 32, 2, 4, 64);
         let ck = Checkpoint::random(&cfg, 1);
         let stream = markov_stream(cfg.vocab as u32, 4_000, 2);
@@ -216,6 +463,24 @@ mod tests {
         };
         let (qm, report) = quantize_model(&ck, &calib, &pcfg).unwrap();
         (qm, report, ck)
+    }
+
+    fn tiny_setup() -> (Checkpoint, Vec<Vec<u32>>, PipelineConfig) {
+        let cfg = ModelConfig::sized("t", 32, 2, 4, 64);
+        let ck = Checkpoint::random(&cfg, 1);
+        let stream = markov_stream(cfg.vocab as u32, 4_000, 2);
+        let calib = stream.calibration(24, 4, 3);
+        let pcfg = PipelineConfig {
+            quant: QuantConfig {
+                bits: 2,
+                greedy_passes: 2,
+                ..Default::default()
+            },
+            calib_seqs: 4,
+            calib_seq_len: 24,
+            seed: 7,
+        };
+        (ck, calib, pcfg)
     }
 
     #[test]
@@ -249,5 +514,137 @@ mod tests {
         let j = report.to_json();
         assert!(j.get("layers").is_some());
         assert!(Json::parse(&j.pretty()).is_ok());
+    }
+
+    #[test]
+    fn event_stream_is_ordered_and_complete() {
+        let (ck, calib, pcfg) = tiny_setup();
+        let mut events: Vec<PipelineEvent> = Vec::new();
+        let (qm, report) = QuantSession::new(&ck, pcfg.clone())
+            .unwrap()
+            .on_event(|ev| {
+                events.push(ev.clone());
+                PipelineControl::Continue
+            })
+            .run(&calib)
+            .unwrap();
+
+        // Events arrive in block order: Started, LayerDone*, Done per block.
+        let n_blocks = ck.config.n_layers;
+        let specs = ck.config.linear_specs();
+        let mut idx = 0usize;
+        for b in 0..n_blocks {
+            let block_layers: Vec<&LinearSpec> = specs
+                .iter()
+                .filter(|s| s.name.starts_with(&format!("blk{b}.")))
+                .collect();
+            match &events[idx] {
+                PipelineEvent::BlockStarted { block, layers } => {
+                    assert_eq!(*block, b);
+                    assert_eq!(*layers, block_layers.len());
+                }
+                other => panic!("expected BlockStarted({b}), got {other:?}"),
+            }
+            idx += 1;
+            for spec in &block_layers {
+                match &events[idx] {
+                    PipelineEvent::LayerDone {
+                        block,
+                        name,
+                        proxy_loss,
+                        seconds,
+                    } => {
+                        assert_eq!(*block, b);
+                        assert_eq!(name, &spec.name, "one LayerDone per spec, in order");
+                        assert!(proxy_loss.is_finite());
+                        assert!(*seconds >= 0.0);
+                    }
+                    other => panic!("expected LayerDone({}), got {other:?}", spec.name),
+                }
+                idx += 1;
+            }
+            match &events[idx] {
+                PipelineEvent::BlockDone { block, .. } => assert_eq!(*block, b),
+                other => panic!("expected BlockDone({b}), got {other:?}"),
+            }
+            idx += 1;
+        }
+        assert_eq!(idx, events.len(), "no extra events");
+
+        // The observed run matches the one-shot wrapper bit for bit.
+        let (qm2, report2) = quantize_model(&ck, &calib, &pcfg).unwrap();
+        assert_eq!(qm.layers.len(), qm2.layers.len());
+        for (a, b) in qm.layers.iter().zip(&qm2.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.packed, b.packed);
+        }
+        assert_eq!(report.total_proxy(), report2.total_proxy());
+    }
+
+    #[test]
+    fn cancellation_after_first_block_yields_partial_report() {
+        let (ck, calib, pcfg) = tiny_setup();
+        let (qm, report) = QuantSession::new(&ck, pcfg)
+            .unwrap()
+            .on_event(|ev| match ev {
+                PipelineEvent::BlockDone { .. } => PipelineControl::Stop,
+                _ => PipelineControl::Continue,
+            })
+            .run(&calib)
+            .unwrap();
+        let blk0: Vec<LinearSpec> = ck
+            .config
+            .linear_specs()
+            .into_iter()
+            .filter(|s| s.name.starts_with("blk0."))
+            .collect();
+        assert!(ck.config.n_layers > 1, "test needs ≥2 blocks");
+        assert_eq!(report.layers.len(), blk0.len(), "only block 0 quantized");
+        assert_eq!(qm.layers.len(), blk0.len());
+        assert!(report.layers.iter().all(|l| l.proxy_loss.is_finite()));
+    }
+
+    #[test]
+    fn out_of_order_swap_rejected_and_staged_composes_with_run() {
+        let (ck, calib, pcfg) = tiny_setup();
+        let mut session = QuantSession::new(&ck, pcfg).unwrap();
+        // Computing a later block's stages out of order is allowed (pure
+        // compute), but swapping it must fail: it would break the §6
+        // quantized-prefix invariant.
+        let hset = session.collect_hessians(1, &calib).unwrap();
+        let out = session.quantize_block(1, &hset).unwrap();
+        assert!(session.swap_weights(out).is_err());
+        // Drive block 0 manually, then let run() pick up the remainder —
+        // block 0 must not be quantized twice.
+        let hset = session.collect_hessians(0, &calib).unwrap();
+        let out = session.quantize_block(0, &hset).unwrap();
+        session.swap_weights(out).unwrap();
+        let (qm, report) = session.run(&calib).unwrap();
+        assert_eq!(qm.layers.len(), ck.config.linear_specs().len());
+        assert_eq!(report.layers.len(), qm.layers.len());
+        let mut names: Vec<&str> = qm.layers.iter().map(|l| l.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), qm.layers.len(), "no duplicate layers");
+    }
+
+    #[test]
+    fn staged_api_matches_one_shot_wrapper() {
+        let (ck, calib, pcfg) = tiny_setup();
+        let mut session = QuantSession::new(&ck, pcfg.clone()).unwrap();
+        for block in 0..session.n_blocks() {
+            let hset = session.collect_hessians(block, &calib).unwrap();
+            let out = session.quantize_block(block, &hset).unwrap();
+            session.swap_weights(out).unwrap();
+        }
+        let (qm_staged, report_staged) = session.finish();
+        let (qm, report) = quantize_model(&ck, &calib, &pcfg).unwrap();
+        assert_eq!(qm_staged.recipe, qm.recipe);
+        assert_eq!(qm_staged.layers.len(), qm.layers.len());
+        for (a, b) in qm_staged.layers.iter().zip(&qm.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.packed, b.packed, "codes differ for {}", a.name);
+        }
+        assert_eq!(report_staged.total_proxy(), report.total_proxy());
     }
 }

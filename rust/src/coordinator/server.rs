@@ -45,10 +45,25 @@ impl Default for ServerConfig {
 }
 
 /// The engine the server decodes with.
-pub enum ServeEngine {
+pub enum EngineKind {
     Fp32,
     Quant(QuantizedModel),
 }
+
+impl EngineKind {
+    /// Fold the "serve quantized iff an artifact is present" choice into
+    /// one constructor — callers pass whatever `Option<QuantizedModel>`
+    /// they loaded.
+    pub fn auto(qm: Option<QuantizedModel>) -> EngineKind {
+        match qm {
+            Some(q) => EngineKind::Quant(q),
+            None => EngineKind::Fp32,
+        }
+    }
+}
+
+/// Legacy name for [`EngineKind`], kept for transition-era call sites.
+pub type ServeEngine = EngineKind;
 
 struct Job {
     prompt: Vec<u32>,
@@ -70,7 +85,7 @@ impl Server {
     /// Start serving. Binds immediately; returns the handle.
     pub fn start(
         model: Arc<Transformer>,
-        engine: ServeEngine,
+        engine: EngineKind,
         cfg: ServerConfig,
     ) -> crate::Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)?;
@@ -84,8 +99,8 @@ impl Server {
             cfg.queue_capacity,
         ));
         let qlin: Arc<Option<QuantLinears>> = Arc::new(match engine {
-            ServeEngine::Fp32 => None,
-            ServeEngine::Quant(qm) => Some(QuantLinears::from_model(&qm)?),
+            EngineKind::Fp32 => None,
+            EngineKind::Quant(qm) => Some(QuantLinears::from_model(&qm)?),
         });
 
         let mut threads = Vec::new();
@@ -366,7 +381,7 @@ mod tests {
             addr: "127.0.0.1:0".into(),
             ..Default::default()
         };
-        let mut server = Server::start(model, ServeEngine::Fp32, cfg).unwrap();
+        let mut server = Server::start(model, EngineKind::auto(None), cfg).unwrap();
         let mut client = Client::connect(&server.addr).unwrap();
         let (tokens, latency) = client.request(&[1, 2, 3], 5).unwrap();
         assert_eq!(tokens.len(), 5);
@@ -385,7 +400,7 @@ mod tests {
             addr: "127.0.0.1:0".into(),
             ..Default::default()
         };
-        let mut server = Server::start(model, ServeEngine::Fp32, cfg).unwrap();
+        let mut server = Server::start(model, EngineKind::auto(None), cfg).unwrap();
         let addr = server.addr;
         let handles: Vec<_> = (0..6)
             .map(|i| {
@@ -410,6 +425,8 @@ mod tests {
             addr: "127.0.0.1:0".into(),
             ..Default::default()
         };
+        // Uses the legacy `ServeEngine` alias on purpose — it must keep
+        // compiling until downstream callers finish migrating.
         let mut server = Server::start(model, ServeEngine::Fp32, cfg).unwrap();
         let stream = TcpStream::connect(server.addr).unwrap();
         let mut s2 = stream.try_clone().unwrap();

@@ -7,7 +7,7 @@ use crate::model::lm;
 use crate::model::quantized::QuantizedModel;
 use crate::model::weights::Checkpoint;
 use crate::model::Transformer;
-use crate::quant::{Method, Processing, QuantConfig};
+use crate::quant::{Processing, QuantConfig};
 use crate::runtime::registry::{default_root, Registry};
 use crate::util::json::Json;
 use std::collections::HashMap;
@@ -120,28 +120,27 @@ impl Env {
         EvalResult { ppl, acc }
     }
 
-    /// Quantize + evaluate one recipe. `bits == 16` means "no
+    /// Quantize + evaluate one recipe. The rounding algorithm is named
+    /// (any [`crate::quant::RounderRegistry`] alias, e.g. `"ldlq"`,
+    /// `"quip"`, `"gptq"`, `"allbal"`). `bits == 16` means "no
     /// quantization" (the fp baseline row).
     pub fn run_recipe(
         &self,
         model: &str,
         bits: u32,
-        method: Method,
+        rounder: &str,
         processing: Processing,
     ) -> crate::Result<EvalResult> {
         let ck = self.checkpoint(model)?;
         let mut m = Transformer::from_checkpoint(&ck)?;
         if bits < 16 {
-            let (qm, _) = self.quantize(
-                model,
-                QuantConfig {
-                    bits,
-                    method,
-                    processing,
-                    greedy_passes: 5,
-                    ..Default::default()
-                },
-            )?;
+            let cfg = QuantConfig::builder()
+                .bits(bits)
+                .rounder(rounder)
+                .processing(processing)
+                .greedy_passes(5)
+                .build()?;
+            let (qm, _) = self.quantize(model, cfg)?;
             qm.apply_to(&mut m)?;
         }
         Ok(self.evaluate(&m))

@@ -5,7 +5,6 @@ use super::env::{f2, pct, write_result, Env, TablePrinter};
 use super::tables::collect_hessians;
 use crate::linalg::Mat;
 use crate::quant::incoherence::{preprocess, Processing};
-use crate::quant::{Method, QuantConfig};
 use crate::util::cli::Args;
 use crate::util::json::{arr_f64, Json};
 
@@ -181,7 +180,7 @@ pub fn figure5(args: &Args) -> crate::Result<()> {
     for model in &models {
         let ck = env.checkpoint(model)?;
         let params = ck.config.param_count();
-        let fp = env.run_recipe(model, 16, Method::Ldlq, Processing::baseline())?;
+        let fp = env.run_recipe(model, 16, "ldlq", Processing::baseline())?;
         tp.row(vec![
             model.clone(),
             format!("{:.1}M", params as f64 / 1e6),
@@ -198,7 +197,7 @@ pub fn figure5(args: &Args) -> crate::Result<()> {
                 ("optq", Processing::baseline()),
                 ("quip", Processing::incoherent()),
             ] {
-                let r = env.run_recipe(model, bits, Method::Ldlq, processing)?;
+                let r = env.run_recipe(model, bits, "ldlq", processing)?;
                 tp.row(vec![
                     model.clone(),
                     format!("{:.1}M", params as f64 / 1e6),
@@ -217,18 +216,6 @@ pub fn figure5(args: &Args) -> crate::Result<()> {
     println!("\npaper shape: QuIP ≈ fp at 3 bits; at 2 bits QuIP viable while OPTQ collapses,\nwith the gap shrinking as model size grows.");
     write_result("figure5", &out)?;
     Ok(())
-}
-
-/// `quantize_layer` is re-exported for the examples; keep a direct alias
-/// used by figure drivers that need a single-layer run.
-#[allow(unused)]
-fn quant_cfg(bits: u32, method: Method, processing: Processing) -> QuantConfig {
-    QuantConfig {
-        bits,
-        method,
-        processing,
-        ..Default::default()
-    }
 }
 
 #[cfg(test)]

@@ -11,7 +11,7 @@
 use super::env::{f2, write_result, Env, TablePrinter};
 use crate::coordinator::pipeline::{quantize_model, PipelineConfig};
 use crate::model::Transformer;
-use crate::quant::{Method, Processing, QuantConfig};
+use crate::quant::{Processing, QuantConfig};
 use crate::util::cli::Args;
 use crate::util::json::{arr_f64, Json};
 
@@ -40,12 +40,11 @@ fn sweep_rho(args: &Args) -> crate::Result<()> {
         let ck = env.checkpoint(&model)?;
         let (qm, proxy) = env.quantize(
             &model,
-            QuantConfig {
-                bits,
-                method: Method::Ldlq,
-                processing,
-                ..Default::default()
-            },
+            QuantConfig::builder()
+                .bits(bits)
+                .rounder("ldlq")
+                .processing(processing)
+                .build()?,
         )?;
         let mut m = Transformer::from_checkpoint(&ck)?;
         qm.apply_to(&mut m)?;
@@ -78,12 +77,11 @@ fn sweep_calib(args: &Args) -> crate::Result<()> {
     for segs in [2usize, 8, 24, 64] {
         let calib = train.calibration(128, segs, 0xCA11B);
         let pcfg = PipelineConfig {
-            quant: QuantConfig {
-                bits,
-                method: Method::Ldlq,
-                processing: Processing::incoherent(),
-                ..Default::default()
-            },
+            quant: QuantConfig::builder()
+                .bits(bits)
+                .rounder("ldlq")
+                .processing(Processing::incoherent())
+                .build()?,
             calib_seqs: segs,
             calib_seq_len: 128,
             seed: 0x5155_4950,
@@ -118,13 +116,12 @@ fn sweep_greedy(args: &Args) -> crate::Result<()> {
         let ck = env.checkpoint(&model)?;
         let (qm, proxy) = env.quantize(
             &model,
-            QuantConfig {
-                bits,
-                method: Method::LdlqRg,
-                processing: Processing::incoherent(),
-                greedy_passes: passes,
-                ..Default::default()
-            },
+            QuantConfig::builder()
+                .bits(bits)
+                .rounder("ldlq-rg")
+                .processing(Processing::incoherent())
+                .greedy_passes(passes)
+                .build()?,
         )?;
         let mut m = Transformer::from_checkpoint(&ck)?;
         qm.apply_to(&mut m)?;

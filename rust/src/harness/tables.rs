@@ -6,7 +6,7 @@ use crate::engine::native::{decode_step_with, FpLinears, QuantLinears};
 use crate::linalg::ldl::udu;
 use crate::linalg::Mat;
 use crate::model::Transformer;
-use crate::quant::{Method, Processing, QuantConfig};
+use crate::quant::{quantize_layer_with, Processing, QuantConfig, RounderRegistry};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -21,11 +21,11 @@ pub fn table1(args: &Args) -> crate::Result<()> {
     ]);
     let mut out = Json::obj();
     for bits in [16u32, 4, 3, 2] {
-        for (label, method, processing) in [
-            ("optq", Method::Ldlq, Processing::baseline()),
-            ("quip", Method::Ldlq, Processing::incoherent()),
+        for (label, rounder, processing) in [
+            ("optq", "ldlq", Processing::baseline()),
+            ("quip", "ldlq", Processing::incoherent()),
         ] {
-            let r = env.run_recipe(&model, bits, method, processing)?;
+            let r = env.run_recipe(&model, bits, rounder, processing)?;
             tp.row(vec![
                 bits.to_string(),
                 label.into(),
@@ -55,19 +55,14 @@ pub fn table2(args: &Args) -> crate::Result<()> {
     } else {
         vec![args.opt_or("model", "s1")]
     };
-    let methods = [
-        ("ldlq", Method::Ldlq),
-        ("ldlq-rg", Method::LdlqRg),
-        ("greedy", Method::Greedy),
-        ("near", Method::Nearest),
-    ];
+    let methods = ["ldlq", "ldlq-rg", "greedy", "near"];
     let mut out = Json::obj();
     for model in &models {
         println!("\nTable 2 analog — {model}: methods × processing\n");
         let mut tp = TablePrinter::new(&[
             "processing", "method", "wbits", "wiki↓", "ptb↓", "c4↓", "arce↑", "lamb↑",
         ]);
-        let fp = env.run_recipe(model, 16, Method::Ldlq, Processing::baseline())?;
+        let fp = env.run_recipe(model, 16, "ldlq", Processing::baseline())?;
         tp.row(vec![
             "-".into(),
             "fp32".into(),
@@ -83,9 +78,9 @@ pub fn table2(args: &Args) -> crate::Result<()> {
             ("baseline", Processing::baseline()),
             ("incp", Processing::incoherent()),
         ] {
-            for (mname, method) in methods {
+            for mname in methods {
                 for bits in [4u32, 3, 2] {
-                    let r = env.run_recipe(model, bits, method, processing.clone())?;
+                    let r = env.run_recipe(model, bits, mname, processing.clone())?;
                     tp.row(vec![
                         pname.into(),
                         mname.into(),
@@ -135,7 +130,7 @@ pub fn table3(args: &Args) -> crate::Result<()> {
     for bits in [4u32, 3, 2] {
         let mut cells = vec![bits.to_string()];
         for (name, p) in &variants {
-            let r = env.run_recipe(&model, bits, Method::Ldlq, p.clone())?;
+            let r = env.run_recipe(&model, bits, "ldlq", p.clone())?;
             cells.push(f2(r.mean_ppl()));
             out.set(&format!("{name}_w{bits}"), Json::Num(r.mean_ppl()));
         }
@@ -158,21 +153,19 @@ pub fn table4(args: &Args) -> crate::Result<()> {
 
     let (q_base, _) = env.quantize(
         &model,
-        QuantConfig {
-            bits,
-            method: Method::Ldlq,
-            processing: Processing::baseline(),
-            ..Default::default()
-        },
+        QuantConfig::builder()
+            .bits(bits)
+            .rounder("ldlq")
+            .processing(Processing::baseline())
+            .build()?,
     )?;
     let (q_incp, _) = env.quantize(
         &model,
-        QuantConfig {
-            bits,
-            method: Method::Ldlq,
-            processing: Processing::incoherent(),
-            ..Default::default()
-        },
+        QuantConfig::builder()
+            .bits(bits)
+            .rounder("ldlq")
+            .processing(Processing::incoherent())
+            .build()?,
     )?;
     let lin_base = QuantLinears::from_model(&q_base)?;
     let lin_incp = QuantLinears::from_model(&q_incp)?;
@@ -236,10 +229,10 @@ pub fn table5(args: &Args) -> crate::Result<()> {
     let mut tp = TablePrinter::new(&["wbits", "with perm", "without perm", "Δ(with-without)"]);
     let mut out = Json::obj();
     for bits in [4u32, 3, 2] {
-        let with = env.run_recipe(&model, bits, Method::Ldlq, Processing::incoherent())?;
+        let with = env.run_recipe(&model, bits, "ldlq", Processing::incoherent())?;
         let mut p = Processing::incoherent();
         p.permute = false;
-        let without = env.run_recipe(&model, bits, Method::Ldlq, p)?;
+        let without = env.run_recipe(&model, bits, "ldlq", p)?;
         let d = with.mean_ppl() - without.mean_ppl();
         tp.row(vec![
             bits.to_string(),
@@ -350,29 +343,29 @@ pub fn table14(args: &Args) -> crate::Result<()> {
     let (hessians, weights) = collect_hessians(&env, &ck)?;
     println!("Table 14 analog — {model}: proxy loss by method (normalized by d_model)\n");
     let methods = [
-        ("ldlq/optq", Method::Ldlq),
-        ("ldlq-rg", Method::LdlqRg),
-        ("greedy", Method::Greedy),
-        ("near", Method::Nearest),
+        ("ldlq/optq", "ldlq"),
+        ("ldlq-rg", "ldlq-rg"),
+        ("greedy", "greedy"),
+        ("near", "near"),
     ];
     let mut tp = TablePrinter::new(&["wbits", "ldlq/optq", "ldlq-rg", "greedy", "near"]);
     let mut out = Json::obj();
     for bits in [4u32, 3, 2] {
         let mut cells = vec![bits.to_string()];
-        for (name, method) in methods {
+        for (name, rname) in methods {
+            let rounder = RounderRegistry::global().resolve(rname)?;
+            // Proxy evaluation is about the *rounding* methods: per-row
+            // grid, no incoherence (paper: "We do not conduct any
+            // processing in the proxy evaluation").
+            let cfg = QuantConfig::builder()
+                .bits(bits)
+                .rounder(rname)
+                .processing(Processing::baseline())
+                .greedy_passes(3)
+                .build()?;
             let mut total = 0.0;
             for (h, w) in hessians.iter().zip(&weights) {
-                let cfg = QuantConfig {
-                    bits,
-                    method,
-                    // Proxy evaluation is about the *rounding* methods:
-                    // per-row grid, no incoherence (paper: "We do not
-                    // conduct any processing in the proxy evaluation").
-                    processing: Processing::baseline(),
-                    greedy_passes: 3,
-                    ..Default::default()
-                };
-                let r = crate::quant::quantize_layer(w, h, &cfg, 5);
+                let r = quantize_layer_with(rounder.as_ref(), w, h, &cfg, 5);
                 total += r.proxy_loss;
             }
             let norm = total / ck.config.d_model as f64;
@@ -398,18 +391,17 @@ pub fn table15(args: &Args) -> crate::Result<()> {
         let mut cells = vec![bits.to_string()];
         for processing in [Processing::incoherent(), Processing::baseline()] {
             let pname = if processing.incoherent { "incp" } else { "base" };
-            let biased = env.run_recipe(&model, bits, Method::Ldlq, processing.clone())?;
+            let biased = env.run_recipe(&model, bits, "ldlq", processing.clone())?;
             // Unbiased: force the stochastic Q subroutine inside LDLQ.
             let ck = env.checkpoint(&model)?;
             let mut m = Transformer::from_checkpoint(&ck)?;
             let (qm, _) = {
-                let cfg = QuantConfig {
-                    bits,
-                    method: Method::Ldlq,
-                    processing: processing.clone(),
-                    force_stochastic: true,
-                    ..Default::default()
-                };
+                let cfg = QuantConfig::builder()
+                    .bits(bits)
+                    .rounder("ldlq")
+                    .processing(processing.clone())
+                    .force_stochastic(true)
+                    .build()?;
                 env.quantize(&model, cfg)?
             };
             qm.apply_to(&mut m)?;
@@ -436,8 +428,8 @@ pub fn table16(args: &Args) -> crate::Result<()> {
     for bits in [4u32, 3, 2] {
         for processing in [Processing::incoherent(), Processing::baseline()] {
             let pname = if processing.incoherent { "incp" } else { "base" };
-            let alg5 = env.run_recipe(&model, bits, Method::Alg5, processing.clone())?;
-            let quip = env.run_recipe(&model, bits, Method::Ldlq, processing.clone())?;
+            let alg5 = env.run_recipe(&model, bits, "alg5", processing.clone())?;
+            let quip = env.run_recipe(&model, bits, "ldlq", processing.clone())?;
             tp.row(vec![
                 bits.to_string(),
                 pname.into(),

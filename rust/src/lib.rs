@@ -20,18 +20,42 @@
 //!
 //! ## Quickstart
 //!
+//! Rounding algorithms are [`quant::Rounder`] impls resolved by name (any
+//! CLI alias works: `quip`, `gptq`, `allbal`, …) through the
+//! [`quant::RounderRegistry`]; configuration comes from
+//! [`quant::QuantConfig::builder`]:
+//!
 //! ```no_run
-//! use quip::quant::{QuantConfig, Method, Processing, quantize_layer};
 //! use quip::linalg::Mat;
+//! use quip::quant::{quantize_layer_with, Processing, QuantConfig, RounderRegistry};
 //! use quip::util::rng::Rng;
 //!
-//! let mut rng = Rng::new(0);
-//! let w = Mat::from_fn(16, 64, |_, _| rng.uniform(-1.0, 1.0));
-//! let h = quip::util::testkit::random_spd(&mut rng, 64, 1e-2);
-//! let cfg = QuantConfig { bits: 2, method: Method::Ldlq, processing: Processing::incoherent(), ..Default::default() };
-//! let out = quantize_layer(&w, &h, &cfg, 0xC0FFEE);
-//! println!("proxy loss = {}", out.proxy_loss);
+//! fn main() -> quip::Result<()> {
+//!     let mut rng = Rng::new(0);
+//!     let w = Mat::from_fn(16, 64, |_, _| rng.uniform(-1.0, 1.0));
+//!     let h = quip::util::testkit::random_spd(&mut rng, 64, 1e-2);
+//!
+//!     let cfg = QuantConfig::builder()
+//!         .bits(2)
+//!         .rounder("quip") // alias of "ldlq"; try "gptq", "allbal", …
+//!         .processing(Processing::incoherent())
+//!         .build()?;
+//!     let rounder = RounderRegistry::global().resolve("quip")?;
+//!     let out = quantize_layer_with(rounder.as_ref(), &w, &h, &cfg, 0xC0FFEE);
+//!     println!("proxy loss = {}", out.proxy_loss);
+//!     Ok(())
+//! }
 //! ```
+//!
+//! Whole models go through the coordinator's
+//! [`coordinator::QuantSession`]: explicit `collect_hessians` →
+//! `quantize_block` → `swap_weights` stages per transformer block, typed
+//! [`coordinator::PipelineEvent`] progress streaming, and per-block
+//! cancellation. `coordinator::quantize_model` is the one-shot wrapper.
+//!
+//! New rounding algorithms implement [`quant::Rounder`] (see the
+//! `quant::rounder` module docs for the `wg`/`h` preprocessed-basis
+//! contract) and register under a name — no core dispatch changes.
 
 pub mod util;
 pub mod linalg;

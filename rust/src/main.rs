@@ -10,13 +10,19 @@
 //! quip figure   <1|2|3|4|5|all> [--fast]
 //! quip info
 //! ```
+//!
+//! `--method` accepts any `RounderRegistry` name or alias: `near[est]`,
+//! `stoch[astic]`, `ldlq`/`quip`, `ldlq-rg`/`quip-rg`, `greedy`/`allbal`,
+//! `optq`/`gptq`, `alg5`/`ldlbal_admm`. Flags are assembled into a
+//! `QuantConfig` with `QuantConfig::builder()` — `quant_config` below is
+//! the one place CLI names meet the quantization API.
 
-use quip::coordinator::server::{ServeEngine, Server, ServerConfig};
+use quip::coordinator::server::{EngineKind, Server, ServerConfig};
 use quip::engine::native::{FpLinears, QuantLinears};
 use quip::harness::{env::Env, run_figure, run_table};
 use quip::model::quantized::QuantizedModel;
 use quip::model::Transformer;
-use quip::quant::{Method, Processing, QuantConfig};
+use quip::quant::{Processing, QuantConfig};
 use quip::util::cli::Args;
 use std::sync::Arc;
 
@@ -47,21 +53,21 @@ fn main() {
     }
 }
 
+/// CLI flags → [`QuantConfig`], via the builder + rounder registry.
 fn quant_config(args: &Args) -> quip::Result<QuantConfig> {
-    let method = Method::parse(&args.opt_or("method", "ldlq"))?;
     let processing = if args.flag("baseline") {
         Processing::baseline()
     } else {
         Processing::incoherent()
     };
-    Ok(QuantConfig {
-        bits: args.opt_usize("bits", 2) as u32,
-        method,
-        processing,
-        greedy_passes: args.opt_usize("greedy-passes", 5),
-        force_stochastic: args.flag("stochastic"),
-        alg5_c: args.opt_f64("alg5-c", 0.3),
-    })
+    QuantConfig::builder()
+        .bits(args.opt_usize("bits", 2) as u32)
+        .rounder(&args.opt_or("method", "ldlq"))
+        .processing(processing)
+        .greedy_passes(args.opt_usize("greedy-passes", 5))
+        .force_stochastic(args.flag("stochastic"))
+        .alg5_c(args.opt_f64("alg5-c", 0.3))
+        .build()
 }
 
 fn cmd_quantize(args: &Args) -> quip::Result<()> {
@@ -163,10 +169,7 @@ fn cmd_gen(args: &Args) -> quip::Result<()> {
 fn cmd_serve(args: &Args) -> quip::Result<()> {
     let env = Env::load(args)?;
     let (m, qm) = load_model_pair(args, &env)?;
-    let engine = match qm {
-        Some(q) => ServeEngine::Quant(q),
-        None => ServeEngine::Fp32,
-    };
+    let engine = EngineKind::auto(qm);
     let cfg = ServerConfig {
         addr: args.opt_or("addr", "127.0.0.1:7077"),
         max_batch: args.opt_usize("max-batch", 8),
@@ -210,12 +213,11 @@ fn cmd_pjrt(args: &Args) -> quip::Result<()> {
     if let Some(qspec) = env.registry.find_quant(&model, bits) {
         let (qm, _) = env.quantize(
             &model,
-            QuantConfig {
-                bits,
-                method: Method::Ldlq,
-                processing: Processing::incoherent(),
-                ..Default::default()
-            },
+            QuantConfig::builder()
+                .bits(bits)
+                .rounder("quip")
+                .processing(Processing::incoherent())
+                .build()?,
         )?;
         let qlm = PjrtLm::quant(&rt, qspec, &ck, &qm)?;
         let t1 = std::time::Instant::now();

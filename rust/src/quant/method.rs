@@ -1,18 +1,23 @@
-//! Method × Processing composition — the paper's experiment grid
-//! (Table 2): {Near, Stoch, LDLQ, LDLQ-RG, Greedy, OPTQ, Alg5}
-//! × {Baseline, IncP}. `QuIP = LDLQ + IncP`, `QuIP-RG = LDLQ-RG + IncP`.
+//! Per-layer quantization: configuration ([`QuantConfig`] + builder), the
+//! [`Method`] shorthand enum for the paper's seven builtin algorithms, and
+//! the layer drivers [`quantize_layer_with`] (any [`Rounder`]) /
+//! [`quantize_layer`] (legacy `Method`-keyed shim).
+//!
+//! The paper's experiment grid (Table 2) is {rounder} × {processing}:
+//! `QuIP = LDLQ + IncP`, `QuIP-RG = LDLQ-RG + IncP`. Dispatch lives in
+//! [`super::rounder`]: every algorithm is a [`Rounder`] impl resolved by
+//! name through the [`RounderRegistry`], so new algorithms plug in
+//! without editing this file.
 
-use super::alg5;
-use super::greedy::greedy;
 use super::incoherence::{postprocess, preprocess, PostState, Processing};
-use super::ldlq::{ldlq, ldlq_with_feedback, round_matrix};
-use super::optq::optq;
 use super::proxy::proxy_loss;
-use super::reorder::Reorder;
+use super::rounder::{RoundCtx, Rounder, RounderRegistry};
 use super::rounding::RoundMode;
 use crate::linalg::Mat;
 
-/// The rounding core to use.
+/// Shorthand for the seven builtin rounding algorithms. Kept for
+/// config-struct ergonomics and the legacy [`quantize_layer`] shim; the
+/// open-ended API is [`Rounder`] + [`RounderRegistry`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     /// Nearest rounding, no feedback.
@@ -23,29 +28,32 @@ pub enum Method {
     Ldlq,
     /// LDLQ with diag(H)-descending reorder + greedy polish passes.
     LdlqRg,
-    /// Standalone greedy coordinate descent (Alg 4).
+    /// Standalone greedy coordinate descent (Alg 4; upstream `allbal`).
     Greedy,
     /// The literal OPTQ implementation (equivalent to LDLQ; kept for the
     /// Theorem-6 cross-check and for throughput comparisons).
     Optq,
-    /// Algorithm 5: convex-program feedback + stochastic rounding.
+    /// Algorithm 5: convex-program feedback + stochastic rounding
+    /// (upstream `ldlbal_admm`).
     Alg5,
 }
 
 impl Method {
+    /// Parse a method name or alias. Delegates to the
+    /// [`RounderRegistry`], so the accepted names are exactly the
+    /// registry's (including upstream aliases like `allbal`, `gptq`,
+    /// `ldlbal_admm`).
     pub fn parse(s: &str) -> crate::Result<Method> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "near" | "nearest" => Method::Nearest,
-            "stoch" | "stochastic" => Method::Stochastic,
-            "ldlq" | "quip" => Method::Ldlq,
-            "ldlq-rg" | "ldlqrg" | "quip-rg" => Method::LdlqRg,
-            "greedy" => Method::Greedy,
-            "optq" | "gptq" => Method::Optq,
-            "alg5" => Method::Alg5,
-            other => anyhow::bail!("unknown method '{other}'"),
+        let rounder = RounderRegistry::global().resolve(s)?;
+        Method::from_name(rounder.name()).ok_or_else(|| {
+            anyhow::anyhow!(
+                "rounder '{}' has no Method shorthand; use quantize_layer_with",
+                rounder.name()
+            )
         })
     }
 
+    /// The canonical registry name of this method's rounder.
     pub fn name(&self) -> &'static str {
         match self {
             Method::Nearest => "near",
@@ -57,9 +65,32 @@ impl Method {
             Method::Alg5 => "alg5",
         }
     }
+
+    /// Inverse of [`Method::name`] (canonical names only — aliases go
+    /// through [`Method::parse`]).
+    pub fn from_name(name: &str) -> Option<Method> {
+        Some(match name {
+            "near" => Method::Nearest,
+            "stoch" => Method::Stochastic,
+            "ldlq" => Method::Ldlq,
+            "ldlq-rg" => Method::LdlqRg,
+            "greedy" => Method::Greedy,
+            "optq" => Method::Optq,
+            "alg5" => Method::Alg5,
+            _ => return None,
+        })
+    }
+
+    /// Resolve this method's [`Rounder`] from the global registry.
+    pub fn rounder(&self) -> std::sync::Arc<dyn Rounder> {
+        RounderRegistry::global()
+            .resolve(self.name())
+            .expect("builtin rounder is always registered")
+    }
 }
 
-/// Full per-layer quantization configuration.
+/// Full per-layer quantization configuration. Construct with
+/// [`QuantConfig::builder`] (name-based, alias-aware) or directly.
 #[derive(Clone, Debug)]
 pub struct QuantConfig {
     pub bits: u32,
@@ -87,6 +118,74 @@ impl Default for QuantConfig {
     }
 }
 
+impl QuantConfig {
+    /// Start a fluent builder seeded with the paper defaults
+    /// (2-bit QuIP: LDLQ + incoherence processing).
+    pub fn builder() -> QuantConfigBuilder {
+        QuantConfigBuilder {
+            cfg: QuantConfig::default(),
+            rounder_name: None,
+        }
+    }
+}
+
+/// Fluent builder for [`QuantConfig`]. `rounder` accepts any registry
+/// name/alias; `build` fails on unknown names with the known list.
+#[derive(Clone, Debug)]
+pub struct QuantConfigBuilder {
+    cfg: QuantConfig,
+    rounder_name: Option<String>,
+}
+
+impl QuantConfigBuilder {
+    pub fn bits(mut self, bits: u32) -> Self {
+        self.cfg.bits = bits;
+        self
+    }
+
+    /// Select the rounding algorithm by registry name or alias
+    /// (`"ldlq"`, `"quip"`, `"gptq"`, `"allbal"`, …). Resolved at
+    /// [`build`](Self::build) time.
+    pub fn rounder(mut self, name: &str) -> Self {
+        self.rounder_name = Some(name.to_string());
+        self
+    }
+
+    /// Select the rounding algorithm by enum shorthand.
+    pub fn method(mut self, method: Method) -> Self {
+        self.cfg.method = method;
+        self.rounder_name = None;
+        self
+    }
+
+    pub fn processing(mut self, processing: Processing) -> Self {
+        self.cfg.processing = processing;
+        self
+    }
+
+    pub fn greedy_passes(mut self, passes: usize) -> Self {
+        self.cfg.greedy_passes = passes;
+        self
+    }
+
+    pub fn force_stochastic(mut self, on: bool) -> Self {
+        self.cfg.force_stochastic = on;
+        self
+    }
+
+    pub fn alg5_c(mut self, c: f64) -> Self {
+        self.cfg.alg5_c = c;
+        self
+    }
+
+    pub fn build(mut self) -> crate::Result<QuantConfig> {
+        if let Some(name) = &self.rounder_name {
+            self.cfg.method = Method::parse(name)?;
+        }
+        Ok(self.cfg)
+    }
+}
+
 /// Result of quantizing one layer.
 pub struct LayerQuantOutput {
     /// Integer grid codes (values in [0, 2^b − 1], stored as f64).
@@ -99,37 +198,31 @@ pub struct LayerQuantOutput {
     pub proxy_loss: f64,
 }
 
-/// Quantize one linear layer: W (m×n) with proxy Hessian H (n×n).
+/// Quantize one linear layer with an explicit [`Rounder`]: W (m×n) with
+/// proxy Hessian H (n×n). Runs Algorithm 1 pre-processing, hands the
+/// grid-space problem to `rounder` (see the [`super::rounder`] contract),
+/// then inverts the processing and reports the original-basis proxy loss.
 /// `seed` keys the stochastic rounding and the incoherence orthogonals.
-pub fn quantize_layer(w: &Mat, h: &Mat, cfg: &QuantConfig, seed: u64) -> LayerQuantOutput {
+pub fn quantize_layer_with(
+    rounder: &dyn Rounder,
+    w: &Mat,
+    h: &Mat,
+    cfg: &QuantConfig,
+    seed: u64,
+) -> LayerQuantOutput {
     let pre = preprocess(w, h, cfg.bits, &cfg.processing, seed);
-    let mode = if cfg.force_stochastic {
-        RoundMode::Stochastic
-    } else {
-        RoundMode::Nearest
+    let ctx = RoundCtx {
+        bits: cfg.bits,
+        seed,
+        mode: if cfg.force_stochastic {
+            RoundMode::Stochastic
+        } else {
+            RoundMode::Nearest
+        },
+        greedy_passes: cfg.greedy_passes,
+        alg5_c: cfg.alg5_c,
     };
-
-    let codes = match cfg.method {
-        Method::Nearest => round_matrix(&pre.wg, cfg.bits, RoundMode::Nearest, seed),
-        Method::Stochastic => round_matrix(&pre.wg, cfg.bits, RoundMode::Stochastic, seed),
-        Method::Ldlq => ldlq(&pre.wg, &pre.h, cfg.bits, mode, seed),
-        Method::Optq => optq(&pre.wg, &pre.h, cfg.bits)
-            .unwrap_or_else(|_| ldlq(&pre.wg, &pre.h, cfg.bits, mode, seed)),
-        Method::LdlqRg => {
-            let r = Reorder::by_diag_desc(&pre.h);
-            let wgp = r.apply_w(&pre.wg);
-            let hp = r.apply_h(&pre.h);
-            let base = ldlq(&wgp, &hp, cfg.bits, mode, seed);
-            let polished = greedy(&wgp, &base, &hp, cfg.bits, cfg.greedy_passes);
-            r.undo_w(&polished)
-        }
-        Method::Greedy => greedy(&pre.wg, &pre.wg.clone(), &pre.h, cfg.bits, cfg.greedy_passes),
-        Method::Alg5 => {
-            let plan = alg5::solve(&pre.h, cfg.alg5_c, 200, 1e-9);
-            ldlq_with_feedback(&pre.wg, &plan.u_dot, cfg.bits, RoundMode::Stochastic, seed)
-        }
-    };
-
+    let codes = rounder.round(&pre.wg, &pre.h, &ctx);
     let w_hat = postprocess(&codes, &pre.post);
     let loss = proxy_loss(&w_hat, w, &pre.h_damped);
     LayerQuantOutput {
@@ -138,6 +231,13 @@ pub fn quantize_layer(w: &Mat, h: &Mat, cfg: &QuantConfig, seed: u64) -> LayerQu
         post: pre.post,
         proxy_loss: loss,
     }
+}
+
+/// Compatibility shim: quantize one layer keyed by `cfg.method`. Prefer
+/// [`quantize_layer_with`] (or the coordinator's `QuantSession`) — this
+/// merely resolves the method's rounder from the global registry.
+pub fn quantize_layer(w: &Mat, h: &Mat, cfg: &QuantConfig, seed: u64) -> LayerQuantOutput {
+    quantize_layer_with(cfg.method.rounder().as_ref(), w, h, cfg, seed)
 }
 
 #[cfg(test)]
@@ -309,5 +409,51 @@ mod tests {
         // Greedy polish descends in the reordered basis; allow tiny slack
         // from the basis change.
         assert!(rg.proxy_loss <= plain.proxy_loss * 1.15);
+    }
+
+    #[test]
+    fn builder_resolves_aliases_and_defaults() {
+        let cfg = QuantConfig::builder().build().unwrap();
+        assert_eq!(cfg.bits, 2);
+        assert_eq!(cfg.method, Method::Ldlq);
+        assert!(cfg.processing.incoherent);
+
+        let cfg = QuantConfig::builder()
+            .bits(3)
+            .rounder("gptq")
+            .processing(Processing::baseline())
+            .greedy_passes(4)
+            .force_stochastic(true)
+            .alg5_c(0.7)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.bits, 3);
+        assert_eq!(cfg.method, Method::Optq);
+        assert!(!cfg.processing.incoherent);
+        assert_eq!(cfg.greedy_passes, 4);
+        assert!(cfg.force_stochastic);
+        assert_eq!(cfg.alg5_c, 0.7);
+
+        // Upstream names resolve too; unknown names fail with context.
+        assert_eq!(
+            QuantConfig::builder().rounder("allbal").build().unwrap().method,
+            Method::Greedy
+        );
+        assert_eq!(
+            QuantConfig::builder()
+                .rounder("ldlbal_admm")
+                .build()
+                .unwrap()
+                .method,
+            Method::Alg5
+        );
+        assert!(QuantConfig::builder().rounder("bogus").build().is_err());
+    }
+
+    #[test]
+    fn builder_method_and_rounder_are_equivalent() {
+        let a = QuantConfig::builder().method(Method::LdlqRg).build().unwrap();
+        let b = QuantConfig::builder().rounder("quip-rg").build().unwrap();
+        assert_eq!(a.method, b.method);
     }
 }

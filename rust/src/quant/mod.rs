@@ -2,6 +2,13 @@
 //! §3), incoherence processing (§4), the greedy polish (Alg 4), the literal
 //! OPTQ algorithm (§5.1, for the Theorem-6 equivalence check), and the
 //! finite-grid "fixed" procedure (Alg 5, §5.2).
+//!
+//! Public API shape: rounding algorithms are [`Rounder`] impls resolved by
+//! name through the [`RounderRegistry`] (see [`rounder`] for the trait
+//! contract); per-layer configuration is built with
+//! [`QuantConfig::builder`]; [`quantize_layer_with`] drives one layer
+//! through preprocess → round → postprocess. [`quantize_layer`] is the
+//! legacy `Method`-keyed shim kept for transition-era call sites.
 
 pub mod grid;
 pub mod rounding;
@@ -12,11 +19,16 @@ pub mod reorder;
 pub mod incoherence;
 pub mod alg5;
 pub mod proxy;
+pub mod rounder;
 pub mod method;
 pub mod packed;
 
 pub use grid::GridMap;
 pub use incoherence::{PostState, Processing};
-pub use method::{quantize_layer, LayerQuantOutput, Method, QuantConfig};
+pub use method::{
+    quantize_layer, quantize_layer_with, LayerQuantOutput, Method, QuantConfig,
+    QuantConfigBuilder,
+};
 pub use proxy::proxy_loss;
+pub use rounder::{RoundCtx, Rounder, RounderRegistry};
 pub use rounding::RoundMode;

@@ -228,6 +228,80 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_2_3_4_bits_ragged_lengths() {
+        // The wire widths the .qz format actually ships, exercised on
+        // lengths that are *not* multiples of 8 (so the final byte is
+        // partially filled, and 3-bit codes straddle byte boundaries).
+        for bits in [2u32, 3, 4] {
+            for n in [1usize, 5, 7, 9, 13, 31, 57, 100, 257] {
+                let codes: Vec<u8> = (0..n)
+                    .map(|i| ((i * 7 + 3) % (1usize << bits)) as u8)
+                    .collect();
+                let packed = pack_codes(&codes, bits);
+                assert_eq!(
+                    packed.len(),
+                    (n * bits as usize).div_ceil(8),
+                    "bits={bits} n={n}: packed length"
+                );
+                let back = unpack_codes(&packed, bits, n);
+                assert_eq!(back, codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn codes_stay_in_range_at_extremes() {
+        // Max-value codes (all ones in every position) roundtrip exactly,
+        // and every unpacked value respects the 2^bits bound — i.e. the
+        // unpack mask never leaks bits from neighbouring codes or from
+        // the zero padding of the final byte.
+        for bits in [2u32, 3, 4] {
+            let top = ((1u16 << bits) - 1) as u8;
+            for n in [3usize, 8, 11, 29] {
+                let codes = vec![top; n];
+                let packed = pack_codes(&codes, bits);
+                let back = unpack_codes(&packed, bits, n);
+                assert_eq!(back, codes, "bits={bits} n={n} (all-max)");
+                // Mixed extremes: alternate 0 / max.
+                let codes: Vec<u8> =
+                    (0..n).map(|i| if i % 2 == 0 { 0 } else { top }).collect();
+                let back = unpack_codes(&pack_codes(&codes, bits), bits, n);
+                assert_eq!(back, codes, "bits={bits} n={n} (alternating)");
+                for &c in &back {
+                    assert!((c as u32) < (1 << bits));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_roundtrip_with_non_multiple_of_8_columns() {
+        // A full QuantizedLayer roundtrip (Mat → pack → unpack → Mat) at
+        // each shipped width, with a column count (7) that leaves ragged
+        // rows in the bitstream.
+        let mut rng = Rng::new(11);
+        let w = random_mat(&mut rng, 3, 7);
+        let h = random_hessian(&mut rng, 7, 3, 1e-2);
+        for bits in [2u32, 3, 4] {
+            let pre = preprocess(&w, &h, bits, &Processing::incoherent(), 2);
+            let codes = crate::quant::ldlq::round_matrix(
+                &pre.wg,
+                bits,
+                crate::quant::rounding::RoundMode::Nearest,
+                0,
+            );
+            let layer = QuantizedLayer::from_codes("ragged", &codes, bits, pre.post.clone());
+            assert_eq!(layer.packed.len(), (3 * 7 * bits as usize).div_ceil(8));
+            let back = layer.codes();
+            assert_eq!(back.data, codes.data, "bits={bits}");
+            let qmax = crate::quant::grid::levels(bits) as f64;
+            for &c in &back.data {
+                assert!(c >= 0.0 && c <= qmax && c == c.round(), "bits={bits}: {c}");
+            }
+        }
+    }
+
+    #[test]
     fn two_bit_storage_is_compact() {
         let mut rng = Rng::new(5);
         let w = random_mat(&mut rng, 64, 64);

@@ -1,0 +1,403 @@
+//! The open rounding-algorithm API: an object-safe [`Rounder`] trait (one
+//! impl per adaptive-rounding algorithm), and a name-based
+//! [`RounderRegistry`] so new algorithms plug in without touching core
+//! dispatch.
+//!
+//! The paper's Table 2 is a {rounder} × {processing} grid; follow-up work
+//! (QuIP#'s lattice codebooks, CDQuant's coordinate descent) adds rows to
+//! that grid. This module is the seam those rows plug into: implement
+//! [`Rounder`], register it under a name, and every pipeline/harness
+//! caller can use it.
+//!
+//! # The `Rounder` contract
+//!
+//! `round(wg, h, ctx)` is called *inside* incoherence processing
+//! (Algorithm 1 has already run):
+//!
+//! * `wg` is the weight matrix **in grid coordinates** of the processed
+//!   basis — every entry the rounder should ideally hit lies in
+//!   `[0, 2^ctx.bits − 1]`, and the returned matrix must contain integer
+//!   codes clamped to that range.
+//! * `h` is the proxy Hessian **conjugated into the same basis** (damped,
+//!   rescaled and orthogonally transformed exactly like `wg`), so
+//!   feedback terms computed from `h` are consistent with `wg`.
+//! * `ctx.seed` keys all stochasticity; equal inputs and seeds must give
+//!   byte-identical codes (artifacts are reproducible by construction).
+//!
+//! Post-processing (Algorithm 2) and proxy-loss bookkeeping happen in the
+//! caller ([`super::quantize_layer_with`]); a rounder never sees the
+//! original basis.
+
+use super::alg5;
+use super::greedy::greedy;
+use super::ldlq::{ldlq, ldlq_with_feedback, round_matrix};
+use super::optq::optq;
+use super::reorder::Reorder;
+use super::rounding::RoundMode;
+use crate::linalg::Mat;
+use std::sync::{Arc, OnceLock};
+
+/// Per-call context handed to every rounder. See the module docs for what
+/// is guaranteed about `wg`/`h` when `round` runs.
+#[derive(Clone, Debug)]
+pub struct RoundCtx {
+    /// Grid width: codes lie in `[0, 2^bits − 1]`.
+    pub bits: u32,
+    /// Seed for all stochastic choices (forked per row inside the cores).
+    pub seed: u64,
+    /// The Q subroutine feedback rounders should use (nearest by default;
+    /// stochastic when the config forces the Table-15 unbiased ablation).
+    pub mode: RoundMode,
+    /// Greedy polish passes (paper: 10, or 5 on the largest models).
+    pub greedy_passes: usize,
+    /// Algorithm 5's column-slack hyperparameter c.
+    pub alg5_c: f64,
+}
+
+/// An adaptive-rounding algorithm, object-safe so registries and callers
+/// can hold `dyn Rounder`.
+pub trait Rounder: Send + Sync {
+    /// Canonical (registry) name, e.g. `"ldlq"`.
+    fn name(&self) -> &'static str;
+
+    /// Whether the algorithm consults `h` (feedback / descent); `false`
+    /// for memoryless per-entry rounding. Callers may skip Hessian
+    /// collection entirely for rounders that return `false`.
+    fn supports_feedback(&self) -> bool;
+
+    /// Quantize grid-space weights to integer codes. See the module docs
+    /// for the `wg`/`h` contract.
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat;
+}
+
+/// Nearest rounding, no feedback (§3.2 "Near").
+pub struct NearestRounder;
+
+impl Rounder for NearestRounder {
+    fn name(&self) -> &'static str {
+        "near"
+    }
+    fn supports_feedback(&self) -> bool {
+        false
+    }
+    fn round(&self, wg: &Mat, _h: &Mat, ctx: &RoundCtx) -> Mat {
+        round_matrix(wg, ctx.bits, RoundMode::Nearest, ctx.seed)
+    }
+}
+
+/// Unbiased stochastic rounding, no feedback (§3.2 "Stoch").
+pub struct StochasticRounder;
+
+impl Rounder for StochasticRounder {
+    fn name(&self) -> &'static str {
+        "stoch"
+    }
+    fn supports_feedback(&self) -> bool {
+        false
+    }
+    fn round(&self, wg: &Mat, _h: &Mat, ctx: &RoundCtx) -> Mat {
+        round_matrix(wg, ctx.bits, RoundMode::Stochastic, ctx.seed)
+    }
+}
+
+/// LDLQ (§3.1): linear feedback from the UDUᵀ factors of `h`. With
+/// incoherence processing this is QuIP.
+pub struct LdlqRounder;
+
+impl Rounder for LdlqRounder {
+    fn name(&self) -> &'static str {
+        "ldlq"
+    }
+    fn supports_feedback(&self) -> bool {
+        true
+    }
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat {
+        ldlq(wg, h, ctx.bits, ctx.mode, ctx.seed)
+    }
+}
+
+/// LDLQ with diag(H)-descending reorder + greedy polish passes
+/// ("LDLQ-RG"; QuIP-RG when combined with incoherence processing).
+pub struct LdlqRgRounder;
+
+impl Rounder for LdlqRgRounder {
+    fn name(&self) -> &'static str {
+        "ldlq-rg"
+    }
+    fn supports_feedback(&self) -> bool {
+        true
+    }
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat {
+        let r = Reorder::by_diag_desc(h);
+        let wgp = r.apply_w(wg);
+        let hp = r.apply_h(h);
+        let base = ldlq(&wgp, &hp, ctx.bits, ctx.mode, ctx.seed);
+        let polished = greedy(&wgp, &base, &hp, ctx.bits, ctx.greedy_passes);
+        r.undo_w(&polished)
+    }
+}
+
+/// Standalone greedy coordinate descent on the proxy loss (Algorithm 4;
+/// the reference QuIP repo's `allbal`).
+pub struct GreedyRounder;
+
+impl Rounder for GreedyRounder {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+    fn supports_feedback(&self) -> bool {
+        true
+    }
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat {
+        // Standalone mode: the target is its own starting point.
+        greedy(wg, wg, h, ctx.bits, ctx.greedy_passes)
+    }
+}
+
+/// The literal OPTQ implementation (equivalent to LDLQ by Theorem 6; kept
+/// for the cross-check and throughput comparisons). Falls back to LDLQ if
+/// the Hessian inversion fails.
+pub struct OptqRounder;
+
+impl Rounder for OptqRounder {
+    fn name(&self) -> &'static str {
+        "optq"
+    }
+    fn supports_feedback(&self) -> bool {
+        true
+    }
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat {
+        optq(wg, h, ctx.bits).unwrap_or_else(|_| ldlq(wg, h, ctx.bits, ctx.mode, ctx.seed))
+    }
+}
+
+/// Algorithm 5 (§5.2): norm-capped convex-program feedback + stochastic
+/// rounding (the reference repo's `ldlbal_admm`).
+pub struct Alg5Rounder;
+
+impl Rounder for Alg5Rounder {
+    fn name(&self) -> &'static str {
+        "alg5"
+    }
+    fn supports_feedback(&self) -> bool {
+        true
+    }
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat {
+        let plan = alg5::solve(h, ctx.alg5_c, 200, 1e-9);
+        ldlq_with_feedback(wg, &plan.u_dot, ctx.bits, RoundMode::Stochastic, ctx.seed)
+    }
+}
+
+struct Entry {
+    rounder: Arc<dyn Rounder>,
+    /// Accepted lookup names (canonical name included).
+    aliases: Vec<String>,
+}
+
+/// Name → [`Rounder`] lookup with alias support. Lookups are
+/// ASCII-case-insensitive.
+pub struct RounderRegistry {
+    entries: Vec<Entry>,
+}
+
+impl RounderRegistry {
+    /// An empty registry (for fully custom rounder sets).
+    pub fn new() -> RounderRegistry {
+        RounderRegistry {
+            entries: Vec::new(),
+        }
+    }
+
+    /// A registry with the paper's seven algorithms under their CLI names
+    /// plus the reference QuIP repo's upstream aliases
+    /// (`allbal` → greedy, `ldlbal_admm` → alg5, `gptq` → optq).
+    pub fn with_builtins() -> RounderRegistry {
+        let mut r = RounderRegistry::new();
+        r.register(NearestRounder, &["nearest"]);
+        r.register(StochasticRounder, &["stochastic"]);
+        r.register(LdlqRounder, &["quip"]);
+        r.register(LdlqRgRounder, &["ldlqrg", "quip-rg"]);
+        r.register(GreedyRounder, &["allbal"]);
+        r.register(OptqRounder, &["gptq"]);
+        r.register(Alg5Rounder, &["ldlbal_admm"]);
+        r
+    }
+
+    /// The process-wide registry of builtin rounders. Custom rounders go
+    /// in a local registry (or straight to
+    /// [`super::quantize_layer_with`], which takes any `&dyn Rounder`).
+    pub fn global() -> &'static RounderRegistry {
+        static GLOBAL: OnceLock<RounderRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(RounderRegistry::with_builtins)
+    }
+
+    /// Register a rounder under its canonical name plus extra aliases.
+    pub fn register<R: Rounder + 'static>(&mut self, rounder: R, extra_aliases: &[&str]) {
+        self.register_arc(Arc::new(rounder), extra_aliases);
+    }
+
+    pub fn register_arc(&mut self, rounder: Arc<dyn Rounder>, extra_aliases: &[&str]) {
+        let mut aliases = vec![rounder.name().to_string()];
+        aliases.extend(extra_aliases.iter().map(|a| a.to_string()));
+        self.entries.push(Entry { rounder, aliases });
+    }
+
+    /// Look up by canonical name or alias (case-insensitive).
+    pub fn resolve(&self, name: &str) -> crate::Result<Arc<dyn Rounder>> {
+        for e in &self.entries {
+            if e.aliases.iter().any(|a| a.eq_ignore_ascii_case(name)) {
+                return Ok(Arc::clone(&e.rounder));
+            }
+        }
+        anyhow::bail!(
+            "unknown rounder '{name}' (known: {})",
+            self.known_names().join(", ")
+        )
+    }
+
+    /// Canonical names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.rounder.name()).collect()
+    }
+
+    /// Every accepted lookup name (canonical + aliases), in order.
+    pub fn known_names(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .flat_map(|e| e.aliases.iter().cloned())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_layer, quantize_layer_with, Method, Processing, QuantConfig};
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{random_hessian, random_mat};
+
+    #[test]
+    fn registry_resolves_all_aliases() {
+        // Every CLI alias from the old `Method::parse` plus the upstream
+        // reference-repo names, each mapped to its canonical rounder.
+        let cases = [
+            ("near", "near"),
+            ("nearest", "near"),
+            ("stoch", "stoch"),
+            ("stochastic", "stoch"),
+            ("ldlq", "ldlq"),
+            ("quip", "ldlq"),
+            ("ldlq-rg", "ldlq-rg"),
+            ("ldlqrg", "ldlq-rg"),
+            ("quip-rg", "ldlq-rg"),
+            ("greedy", "greedy"),
+            ("allbal", "greedy"),
+            ("optq", "optq"),
+            ("gptq", "optq"),
+            ("alg5", "alg5"),
+            ("ldlbal_admm", "alg5"),
+        ];
+        let reg = RounderRegistry::global();
+        for (alias, canonical) in cases {
+            let r = reg.resolve(alias).unwrap();
+            assert_eq!(r.name(), canonical, "alias '{alias}'");
+            // Case-insensitive.
+            let r = reg.resolve(&alias.to_ascii_uppercase()).unwrap();
+            assert_eq!(r.name(), canonical, "alias '{alias}' (upper)");
+            // Method::parse stays consistent with the registry.
+            assert_eq!(Method::parse(alias).unwrap().name(), canonical);
+        }
+        assert!(reg.resolve("no-such-rounder").is_err());
+    }
+
+    #[test]
+    fn registry_lists_seven_builtins() {
+        let names = RounderRegistry::global().names();
+        assert_eq!(
+            names,
+            vec!["near", "stoch", "ldlq", "ldlq-rg", "greedy", "optq", "alg5"]
+        );
+    }
+
+    #[test]
+    fn trait_dispatch_matches_enum_dispatch() {
+        // The registry path must produce byte-identical codes to the
+        // legacy `quantize_layer(Method)` shim for every builtin.
+        let mut rng = Rng::new(21);
+        let w = random_mat(&mut rng, 6, 12).scale(0.1);
+        let h = random_hessian(&mut rng, 12, 4, 1e-3);
+        for method in [
+            Method::Nearest,
+            Method::Stochastic,
+            Method::Ldlq,
+            Method::LdlqRg,
+            Method::Greedy,
+            Method::Optq,
+            Method::Alg5,
+        ] {
+            let cfg = QuantConfig {
+                bits: 2,
+                method,
+                processing: Processing::incoherent(),
+                greedy_passes: 3,
+                ..Default::default()
+            };
+            let a = quantize_layer(&w, &h, &cfg, 77);
+            let rounder = RounderRegistry::global().resolve(method.name()).unwrap();
+            let b = quantize_layer_with(rounder.as_ref(), &w, &h, &cfg, 77);
+            assert_eq!(a.codes.data, b.codes.data, "{}", method.name());
+            assert_eq!(a.proxy_loss, b.proxy_loss, "{}", method.name());
+        }
+    }
+
+    #[test]
+    fn feedback_flags_match_algorithms() {
+        let reg = RounderRegistry::global();
+        assert!(!reg.resolve("near").unwrap().supports_feedback());
+        assert!(!reg.resolve("stoch").unwrap().supports_feedback());
+        for adaptive in ["ldlq", "ldlq-rg", "greedy", "optq", "alg5"] {
+            assert!(reg.resolve(adaptive).unwrap().supports_feedback(), "{adaptive}");
+        }
+    }
+
+    #[test]
+    fn custom_rounder_plugs_in() {
+        // The point of the open API: a new algorithm works end to end
+        // without touching core dispatch.
+        struct FloorRounder;
+        impl Rounder for FloorRounder {
+            fn name(&self) -> &'static str {
+                "floor"
+            }
+            fn supports_feedback(&self) -> bool {
+                false
+            }
+            fn round(&self, wg: &Mat, _h: &Mat, ctx: &RoundCtx) -> Mat {
+                let qmax = crate::quant::grid::levels(ctx.bits) as f64;
+                Mat {
+                    rows: wg.rows,
+                    cols: wg.cols,
+                    data: wg.data.iter().map(|&z| z.floor().clamp(0.0, qmax)).collect(),
+                }
+            }
+        }
+        let mut reg = RounderRegistry::new();
+        reg.register(FloorRounder, &["trunc"]);
+        let r = reg.resolve("trunc").unwrap();
+        assert_eq!(r.name(), "floor");
+
+        let mut rng = Rng::new(4);
+        let w = random_mat(&mut rng, 4, 8).scale(0.1);
+        let h = random_hessian(&mut rng, 8, 3, 1e-3);
+        let cfg = QuantConfig {
+            bits: 2,
+            ..Default::default()
+        };
+        let out = quantize_layer_with(r.as_ref(), &w, &h, &cfg, 1);
+        assert_eq!(out.codes.rows, 4);
+        for &c in &out.codes.data {
+            assert!(c >= 0.0 && c <= 3.0 && c == c.round());
+        }
+        assert!(out.proxy_loss.is_finite());
+    }
+}
