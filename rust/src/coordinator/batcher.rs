@@ -1,7 +1,9 @@
 //! Dynamic request batcher: requests queue up; a batch is released when
 //! either `max_batch` requests are waiting or the oldest has waited
-//! `max_wait`. Bounded queue provides backpressure (enqueue fails when
-//! full). The serving loop drains batches onto the worker pool.
+//! `max_wait` (a hard latency bound — see `next_batch`). Bounded queue
+//! provides backpressure (enqueue fails when full). The serving
+//! scheduler parks on `next_batch` while idle and tops up its running
+//! batch with the non-blocking `poll` at token boundaries.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -58,9 +60,23 @@ impl<T> Batcher<T> {
 
     /// Block until a batch is ready (≥1 requests, released by size or
     /// timeout policy). Returns None when closed and drained.
+    ///
+    /// Latency bound: a non-empty queue is *always* flushed once its
+    /// oldest request has waited `max_wait`, even when far below
+    /// `max_batch` — no request waits unboundedly for a full batch — and
+    /// `close` flushes whatever is queued immediately.
     pub fn next_batch(&self) -> Option<Vec<Pending<T>>> {
         let mut g = self.inner.lock().unwrap();
         loop {
+            // Closing flushes the partial batch at once: shutdown must not
+            // sit out the remainder of `max_wait`.
+            if g.closed {
+                if g.queue.is_empty() {
+                    return None;
+                }
+                let n = g.queue.len().min(self.max_batch);
+                return Some(drain(&mut g.queue, n));
+            }
             if g.queue.len() >= self.max_batch {
                 return Some(drain(&mut g.queue, self.max_batch));
             }
@@ -74,9 +90,6 @@ impl<T> Batcher<T> {
                 let (g2, _timeout) = self.cv.wait_timeout(g, remaining).unwrap();
                 g = g2;
             } else {
-                if g.closed {
-                    return None;
-                }
                 let (g2, _t) = self
                     .cv
                     .wait_timeout(g, Duration::from_millis(50))
@@ -84,6 +97,16 @@ impl<T> Batcher<T> {
                 g = g2;
             }
         }
+    }
+
+    /// Non-blocking drain of up to `max_n` queued requests, bypassing the
+    /// size/timeout release policy. Continuous-batching admission: a
+    /// running decode loop tops up its batch at every token boundary
+    /// without ever parking on the queue.
+    pub fn poll(&self, max_n: usize) -> Vec<Pending<T>> {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.queue.len().min(max_n);
+        drain(&mut g.queue, n)
     }
 
     pub fn close(&self) {
@@ -133,6 +156,66 @@ mod tests {
         b.push(2, 2).unwrap();
         assert!(b.push(3, 3).is_err());
         assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn partial_batch_flushes_at_max_wait_latency_bound() {
+        // Regression for the latency audit: a queue stuck far below
+        // max_batch must flush once max_wait elapses. Pin both sides of
+        // the bound: released no earlier than max_wait, and well before
+        // any multiple of it (generous upper slack for CI jitter).
+        let max_wait = Duration::from_millis(40);
+        let b = Batcher::new(64, max_wait, 100);
+        b.push(1, "only").unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch.len(), 1);
+        assert!(waited >= Duration::from_millis(35), "released early: {waited:?}");
+        assert!(
+            waited < Duration::from_millis(2000),
+            "latency bound violated: {waited:?}"
+        );
+        // A second request arriving mid-wait rides the same flush.
+        b.push(2, "a").unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        b.push(3, "b").unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2, "sub-max_batch queue flushed together");
+    }
+
+    #[test]
+    fn close_flushes_waiting_partial_batch_immediately() {
+        // Shutdown must not sit out max_wait: closing releases the
+        // partial batch at once.
+        let b = Arc::new(Batcher::new(64, Duration::from_secs(30), 100));
+        b.push(1, 1).unwrap();
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let batch = b2.next_batch();
+            (batch, t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        b.close();
+        let (batch, waited) = h.join().unwrap();
+        assert_eq!(batch.unwrap().len(), 1);
+        assert!(waited < Duration::from_secs(5), "close did not flush: {waited:?}");
+        // Drained and closed → None.
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn poll_is_nonblocking_and_caps() {
+        let b = Batcher::new(4, Duration::from_secs(30), 100);
+        assert!(b.poll(8).is_empty());
+        for i in 0..5 {
+            b.push(i, i).unwrap();
+        }
+        let got = b.poll(3);
+        assert_eq!(got.iter().map(|p| p.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.depth(), 2);
+        assert_eq!(b.poll(8).len(), 2);
     }
 
     #[test]

@@ -1,9 +1,19 @@
 //! Autoregressive generation against the native engine (fp32 or
 //! quantized linears) with greedy or temperature sampling.
+//!
+//! Two shapes: [`generate`] runs one request to completion with
+//! single-token decode steps; [`ActiveSeq`]/[`step_batch`] are the
+//! continuous-batching substrate — many sequences advance one token per
+//! step through [`decode_step_batch`], new sequences join at token
+//! boundaries (their prompt tokens are just the first tokens fed) and
+//! finished ones leave. [`generate_batch`] drives a fixed request set
+//! through that loop; the serving coordinator adds dynamic admission.
 
-use crate::engine::native::{decode_step_with, LinearOps};
-use crate::model::transformer::Transformer;
+use crate::engine::native::{decode_step_batch, decode_step_with, LinearOps};
+use crate::model::transformer::{KvCache, Transformer};
 use crate::util::rng::Rng;
+use std::collections::VecDeque;
+use std::time::Instant;
 
 #[derive(Clone, Debug)]
 pub struct GenParams {
@@ -73,6 +83,134 @@ pub fn generate(
         prefill_seconds,
         decode_seconds: t1.elapsed().as_secs_f64(),
     }
+}
+
+/// One in-flight sequence of the continuous-batching loop: its KV cache,
+/// the tokens still to be fed (prompt first, then each sampled token),
+/// and the tokens generated so far.
+pub struct ActiveSeq {
+    pub cache: KvCache,
+    /// Tokens not yet fed to the model. Non-empty while the sequence is
+    /// alive: prompt tokens during prefill, then the last sampled token.
+    feed: VecDeque<u32>,
+    /// Generated (sampled) tokens.
+    pub tokens: Vec<u32>,
+    pub params: GenParams,
+    rng: Rng,
+    pub done: bool,
+    max_new: usize,
+    prompt_len: usize,
+    born: Instant,
+    prefill_seconds: f64,
+    finished_seconds: f64,
+}
+
+impl ActiveSeq {
+    pub fn new(model: &Transformer, prompt: &[u32], params: GenParams) -> ActiveSeq {
+        assert!(!prompt.is_empty(), "empty prompt");
+        let budget = model.cfg.max_seq.saturating_sub(prompt.len());
+        let max_new = params.max_tokens.min(budget);
+        let rng = Rng::new(params.seed);
+        ActiveSeq {
+            cache: model.new_cache(),
+            feed: prompt.iter().copied().collect(),
+            tokens: Vec::new(),
+            rng,
+            done: false,
+            max_new,
+            prompt_len: prompt.len(),
+            born: Instant::now(),
+            prefill_seconds: 0.0,
+            finished_seconds: 0.0,
+            params,
+        }
+    }
+
+    /// Still consuming prompt tokens?
+    pub fn prefilling(&self) -> bool {
+        self.cache.len + self.feed.len() <= self.prompt_len
+    }
+
+    fn finish(&mut self) {
+        self.done = true;
+        self.finished_seconds = self.born.elapsed().as_secs_f64();
+    }
+
+    /// Package the finished sequence as a [`Generation`].
+    pub fn into_generation(self) -> Generation {
+        Generation {
+            tokens: self.tokens,
+            prefill_seconds: self.prefill_seconds,
+            decode_seconds: (self.finished_seconds - self.prefill_seconds).max(0.0),
+        }
+    }
+}
+
+/// Advance every non-done sequence by one token (batched decode +
+/// per-sequence sampling at prompt end). Returns the number of sequences
+/// stepped — the batch size of this step, which the serving metrics
+/// record as batch occupancy.
+pub fn step_batch(model: &Transformer, lin: &dyn LinearOps, seqs: &mut [ActiveSeq]) -> usize {
+    let mut ids = Vec::new();
+    let mut toks = Vec::new();
+    let mut caches: Vec<&mut KvCache> = Vec::new();
+    for (i, s) in seqs.iter_mut().enumerate() {
+        if s.done {
+            continue;
+        }
+        let t = s.feed.pop_front().expect("live sequence has a token to feed");
+        ids.push(i);
+        toks.push(t);
+        caches.push(&mut s.cache);
+    }
+    if ids.is_empty() {
+        return 0;
+    }
+    let logits = decode_step_batch(model, lin, &mut caches, &toks);
+    let v = model.cfg.vocab;
+    for (k, &i) in ids.iter().enumerate() {
+        let s = &mut seqs[i];
+        if !s.feed.is_empty() {
+            continue; // still prefilling; these logits are not sampled
+        }
+        if s.prefill_seconds == 0.0 {
+            s.prefill_seconds = s.born.elapsed().as_secs_f64();
+        }
+        if s.tokens.len() >= s.max_new {
+            s.finish(); // zero-budget request (prompt fills the context)
+            continue;
+        }
+        let row = &logits[k * v..(k + 1) * v];
+        let next = sample(row, s.params.temperature, &mut s.rng);
+        s.tokens.push(next);
+        if s.params.stop_token == Some(next)
+            || s.tokens.len() >= s.max_new
+            || s.cache.len >= model.cfg.max_seq
+        {
+            s.finish();
+        } else {
+            s.feed.push_back(next);
+        }
+    }
+    ids.len()
+}
+
+/// Generate continuations for a fixed set of prompts through the
+/// continuous-batching loop: all sequences advance together, finished
+/// ones drop out of the batch. Semantically equivalent to calling
+/// [`generate`] per prompt (identical tokens for greedy sampling).
+pub fn generate_batch(
+    model: &Transformer,
+    lin: &dyn LinearOps,
+    prompts: &[Vec<u32>],
+    params: &GenParams,
+) -> Vec<Generation> {
+    let mut seqs: Vec<ActiveSeq> = prompts
+        .iter()
+        .map(|p| ActiveSeq::new(model, p, params.clone()))
+        .collect();
+    while step_batch(model, lin, &mut seqs) > 0 {}
+    seqs.into_iter().map(ActiveSeq::into_generation).collect()
 }
 
 /// Sample a token from logits.
@@ -149,6 +287,47 @@ mod tests {
         };
         let g = generate(&m, &lin, &[1, 2], &p);
         assert_eq!(g.tokens, vec![first]);
+    }
+
+    #[test]
+    fn generate_batch_matches_sequential_generate() {
+        // Continuous batching is a scheduling change, not a semantic one:
+        // greedy decode must produce identical tokens per prompt, for
+        // prompts of different lengths finishing at different steps.
+        let m = tiny();
+        let lin = FpLinears { model: &m };
+        let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![9], vec![4, 8, 15, 16, 23]];
+        let p = GenParams {
+            max_tokens: 7,
+            ..Default::default()
+        };
+        let batched = generate_batch(&m, &lin, &prompts, &p);
+        assert_eq!(batched.len(), prompts.len());
+        for (prompt, got) in prompts.iter().zip(&batched) {
+            let want = generate(&m, &lin, prompt, &p);
+            assert_eq!(got.tokens, want.tokens, "prompt {prompt:?}");
+        }
+    }
+
+    #[test]
+    fn generate_batch_respects_stop_and_budget() {
+        let m = tiny();
+        let lin = FpLinears { model: &m };
+        // Find each prompt's greedy first token, use it as its stop token.
+        let p1 = GenParams {
+            max_tokens: 1,
+            ..Default::default()
+        };
+        let first = generate(&m, &lin, &[1, 2], &p1).tokens[0];
+        let p = GenParams {
+            max_tokens: 16,
+            stop_token: Some(first),
+            ..Default::default()
+        };
+        let long: Vec<u32> = (0..100).map(|i| (i % 50) as u32).collect();
+        let gens = generate_batch(&m, &lin, &[vec![1, 2], long.clone()], &p);
+        assert_eq!(gens[0].tokens, vec![first]);
+        assert!(long.len() + gens[1].tokens.len() <= m.cfg.max_seq);
     }
 
     #[test]

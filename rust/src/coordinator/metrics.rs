@@ -13,6 +13,12 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
     pub tokens_out: AtomicU64,
+    /// Batched decode steps executed by the continuous-batching loop.
+    pub batched_steps: AtomicU64,
+    /// Sum of batch sizes over those steps (occupancy numerator).
+    pub batch_occupancy_sum: AtomicU64,
+    /// Largest batch seen in a single step.
+    pub max_batch_seen: AtomicU64,
     latency: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -24,9 +30,32 @@ impl Metrics {
             rejected: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             tokens_out: AtomicU64::new(0),
+            batched_steps: AtomicU64::new(0),
+            batch_occupancy_sum: AtomicU64::new(0),
+            max_batch_seen: AtomicU64::new(0),
             latency: std::array::from_fn(|_| AtomicU64::new(0)),
             latency_sum_us: AtomicU64::new(0),
         }
+    }
+
+    /// Record one continuous-batching step that advanced `size` sequences.
+    pub fn record_batch(&self, size: usize) {
+        if size == 0 {
+            return;
+        }
+        self.batched_steps.fetch_add(1, Ordering::Relaxed);
+        self.batch_occupancy_sum
+            .fetch_add(size as u64, Ordering::Relaxed);
+        self.max_batch_seen.fetch_max(size as u64, Ordering::Relaxed);
+    }
+
+    /// Mean sequences per batched step (1.0 = no batching benefit).
+    pub fn mean_batch_size(&self) -> f64 {
+        let steps = self.batched_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.batch_occupancy_sum.load(Ordering::Relaxed) as f64 / steps as f64
     }
 
     pub fn record_latency(&self, seconds: f64) {
@@ -83,6 +112,15 @@ impl Metrics {
         j.set("mean_latency_s", Json::Num(self.mean_latency()));
         j.set("p50_s", Json::Num(self.latency_quantile(0.5)));
         j.set("p95_s", Json::Num(self.latency_quantile(0.95)));
+        j.set(
+            "batched_steps",
+            Json::Num(self.batched_steps.load(Ordering::Relaxed) as f64),
+        );
+        j.set("mean_batch", Json::Num(self.mean_batch_size()));
+        j.set(
+            "max_batch",
+            Json::Num(self.max_batch_seen.load(Ordering::Relaxed) as f64),
+        );
         j
     }
 }
@@ -127,5 +165,21 @@ mod tests {
         m.requests.fetch_add(3, Ordering::Relaxed);
         let j = m.summary();
         assert_eq!(j.req_f64("requests").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn batch_occupancy_counters() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_batch_size(), 0.0);
+        m.record_batch(0); // empty steps are not counted
+        m.record_batch(4);
+        m.record_batch(16);
+        m.record_batch(4);
+        assert_eq!(m.batched_steps.load(Ordering::Relaxed), 3);
+        assert_eq!(m.max_batch_seen.load(Ordering::Relaxed), 16);
+        assert!((m.mean_batch_size() - 8.0).abs() < 1e-12);
+        let j = m.summary();
+        assert_eq!(j.req_f64("batched_steps").unwrap(), 3.0);
+        assert_eq!(j.req_f64("max_batch").unwrap(), 16.0);
     }
 }

@@ -47,14 +47,25 @@ impl Default for PipelineConfig {
 }
 
 /// Typed progress events, emitted in stream order: for each block b,
-/// `BlockStarted(b)`, then one `LayerDone` per linear spec of b, then
-/// `BlockDone(b)`.
+/// `BlockStarted(b)`, then one `LayerDone` per linear spec of b (preceded
+/// by a `HessianDamped` warning when non-PD recovery escalated that
+/// layer's damping), then `BlockDone(b)`.
 #[derive(Clone, Debug, PartialEq)]
 pub enum PipelineEvent {
     BlockStarted {
         block: usize,
         /// Linear layers this block will quantize.
         layers: usize,
+    },
+    /// Warning: the layer's Hessian was not positive definite at the
+    /// configured damping (Cholesky/LDL failure, or non-finite / negative
+    /// proxy output); the layer was retried with damping escalated to
+    /// `alpha` instead of aborting the session.
+    HessianDamped {
+        block: usize,
+        name: String,
+        /// The damping α that made the layer quantize.
+        alpha: f64,
     },
     LayerDone {
         block: usize,
@@ -123,7 +134,65 @@ impl PipelineReport {
 pub struct BlockOutput {
     pub block: usize,
     specs: Vec<LinearSpec>,
-    results: Vec<(crate::quant::LayerQuantOutput, f64)>,
+    /// Per layer: output, seconds, and Some(α) when non-PD recovery had
+    /// to escalate the Hessian damping.
+    results: Vec<(crate::quant::LayerQuantOutput, f64, Option<f64>)>,
+}
+
+/// Quantize one layer, recovering from a non-PD / unusable Hessian by
+/// escalating the damping α → 10α → 100α (the whole-session abort this
+/// replaces: one bad layer Hessian used to panic or poison the artifact).
+/// A Cholesky probe of the damped Hessian detects non-PD inputs before
+/// the rounder sees them; non-finite or negative proxy output (indefinite
+/// H slipping through the factorization) also triggers escalation.
+/// Returns the output and `Some(final α)` when escalation was needed.
+pub fn quantize_layer_robust(
+    rounder: &dyn Rounder,
+    w: &Mat,
+    h: &Mat,
+    cfg: &QuantConfig,
+    seed: u64,
+) -> crate::Result<(crate::quant::LayerQuantOutput, Option<f64>)> {
+    // Escalation base: the configured α, floored so α = 0 configs still
+    // get meaningful damping on retry.
+    let base = cfg.processing.alpha.max(1e-3);
+    for escalation in 0..3u32 {
+        let alpha = if escalation == 0 {
+            cfg.processing.alpha
+        } else {
+            base * 10f64.powi(escalation as i32)
+        };
+        // PD probe: the exact damped matrix the quantizer will factor.
+        // Probing every attempt (not just retries) is deliberate: an
+        // indefinite H can slip through LDL's pivot clamping and produce
+        // finite codes with an accidentally-positive proxy, which the
+        // output checks below cannot distinguish from health. One extra
+        // Cholesky per layer is noise next to the rounding cost, and this
+        // is the offline quantization path, not serving.
+        let damped = crate::quant::incoherence::damp(h, alpha);
+        if crate::linalg::chol::cholesky(&damped).is_err() {
+            continue;
+        }
+        let mut cfg_try = cfg.clone();
+        cfg_try.processing.alpha = alpha;
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            quantize_layer_with(rounder, w, h, &cfg_try, seed)
+        }));
+        match out {
+            Ok(out)
+                if out.proxy_loss.is_finite()
+                    && out.proxy_loss >= -1e-6 * out.proxy_loss.abs().max(1.0)
+                    && out.w_hat.data.iter().all(|x| x.is_finite()) =>
+            {
+                return Ok((out, (escalation > 0).then_some(alpha)));
+            }
+            _ => {}
+        }
+    }
+    anyhow::bail!(
+        "Hessian not usable even at 100× escalated damping (base α = {base}); \
+         the calibration data for this layer is likely corrupt"
+    )
 }
 
 /// A block-by-block quantization session over one checkpoint.
@@ -290,10 +359,24 @@ impl<'a> QuantSession<'a> {
             let layer_seed = seed
                 .wrapping_mul(0x100000001B3)
                 .wrapping_add((block * 16 + i) as u64);
-            let out =
-                quantize_layer_with(rounder.as_ref(), &weights[i], &hessians[i], &qcfg, layer_seed);
+            let out = quantize_layer_robust(
+                rounder.as_ref(),
+                &weights[i],
+                &hessians[i],
+                &qcfg,
+                layer_seed,
+            );
             (out, t.elapsed().as_secs_f64())
         });
+        let results = results
+            .into_iter()
+            .zip(&block_specs)
+            .map(|((out, secs), spec)| {
+                let (lq, damped) = out
+                    .map_err(|e| anyhow::anyhow!("layer {}: {e}", spec.name))?;
+                Ok((lq, secs, damped))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
         Ok(BlockOutput {
             block,
             specs: block_specs,
@@ -322,7 +405,21 @@ impl<'a> QuantSession<'a> {
         } = out;
         let bits = self.cfg.quant.bits;
         let mut control = PipelineControl::Continue;
-        for (spec, (lq, secs)) in specs.iter().zip(results) {
+        for (spec, (lq, secs, damped)) in specs.iter().zip(results) {
+            if let Some(alpha) = damped {
+                crate::log_warn!(
+                    "layer {}: Hessian not PD at configured damping; escalated to α = {alpha}",
+                    spec.name
+                );
+                let c = self.emit(PipelineEvent::HessianDamped {
+                    block,
+                    name: spec.name.clone(),
+                    alpha,
+                });
+                if c == PipelineControl::Stop {
+                    control = PipelineControl::Stop;
+                }
+            }
             let data: Vec<f32> = lq.w_hat.data.iter().map(|&x| x as f32).collect();
             self.model.set_weight(&spec.name, data)?;
             self.reports.push(LayerReport {
@@ -626,6 +723,99 @@ mod tests {
         names.sort();
         names.dedup();
         assert_eq!(names.len(), qm.layers.len(), "no duplicate layers");
+    }
+
+    #[test]
+    fn non_pd_hessian_escalates_damping_instead_of_aborting() {
+        // An indefinite "Hessian" (one negative diagonal direction) fails
+        // the Cholesky probe at the configured α and at 10α; 100α finally
+        // dominates the negative eigenvalue. The layer must quantize with
+        // escalated damping reported, not abort.
+        let n = 8;
+        let mut h = Mat::eye(n);
+        h[(n - 1, n - 1)] = -0.1;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let w = crate::util::testkit::random_mat(&mut rng, 4, n).scale(0.1);
+        let cfg = QuantConfig {
+            bits: 2,
+            ..Default::default()
+        };
+        // Sanity: the damped Hessian really is non-PD at α and 10α.
+        let base = cfg.processing.alpha.max(1e-3);
+        assert!(crate::linalg::chol::cholesky(&crate::quant::incoherence::damp(
+            &h,
+            cfg.processing.alpha
+        ))
+        .is_err());
+        assert!(crate::linalg::chol::cholesky(&crate::quant::incoherence::damp(&h, base * 10.0))
+            .is_err());
+        let rounder = cfg.method.rounder();
+        let (out, damped) = quantize_layer_robust(rounder.as_ref(), &w, &h, &cfg, 7).unwrap();
+        let alpha = damped.expect("escalation must be reported");
+        assert!((alpha - base * 100.0).abs() < 1e-12, "alpha={alpha}");
+        assert!(out.proxy_loss.is_finite());
+        assert!(out.w_hat.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn healthy_hessian_does_not_escalate() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let w = crate::util::testkit::random_mat(&mut rng, 4, 12).scale(0.1);
+        let h = crate::util::testkit::random_hessian(&mut rng, 12, 4, 1e-3);
+        let cfg = QuantConfig::default();
+        let rounder = cfg.method.rounder();
+        let (out, damped) = quantize_layer_robust(rounder.as_ref(), &w, &h, &cfg, 7).unwrap();
+        assert!(damped.is_none(), "healthy Hessian must not be re-damped");
+        // Identical to the plain path (escalation 0 uses the config as-is).
+        let direct = crate::quant::quantize_layer_with(rounder.as_ref(), &w, &h, &cfg, 7);
+        assert_eq!(out.codes.data, direct.codes.data);
+    }
+
+    #[test]
+    fn hopeless_hessian_is_clean_error_not_panic() {
+        // NaN Hessians (overflowed calibration activations) cannot be
+        // rescued by damping: the session must surface a clean error
+        // naming the failure, never a panic/abort.
+        let n = 6;
+        let h = Mat::from_fn(n, n, |_, _| f64::NAN);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let w = crate::util::testkit::random_mat(&mut rng, 3, n);
+        let cfg = QuantConfig::default();
+        let rounder = cfg.method.rounder();
+        let err = quantize_layer_robust(rounder.as_ref(), &w, &h, &cfg, 1).unwrap_err();
+        assert!(err.to_string().contains("damping"), "{err}");
+    }
+
+    #[test]
+    fn damped_retry_emits_warning_event_through_session() {
+        // Event plumbing: a BlockOutput carrying a damped layer must emit
+        // HessianDamped before that layer's LayerDone.
+        let (ck, calib, pcfg) = tiny_setup();
+        let mut events: Vec<PipelineEvent> = Vec::new();
+        {
+            let mut session = QuantSession::new(&ck, pcfg).unwrap();
+            let hset = session.collect_hessians(0, &calib).unwrap();
+            let mut out = session.quantize_block(0, &hset).unwrap();
+            // Simulate non-PD recovery on the first layer of the block.
+            out.results[0].2 = Some(0.1);
+            let mut session = session.on_event(|ev| {
+                events.push(ev.clone());
+                PipelineControl::Continue
+            });
+            session.swap_weights(out).unwrap();
+        }
+        let is_damped = |e: &PipelineEvent| {
+            matches!(e, PipelineEvent::HessianDamped { block: 0, alpha, .. } if *alpha == 0.1)
+        };
+        let damped_at = events
+            .iter()
+            .position(|e| is_damped(e))
+            .expect("HessianDamped emitted");
+        let done_at = events
+            .iter()
+            .position(|e| matches!(e, PipelineEvent::LayerDone { .. }))
+            .unwrap();
+        assert!(damped_at < done_at, "warning precedes LayerDone");
     }
 
     #[test]

@@ -6,18 +6,20 @@
 //!   or      {"id": 1, "error": "..."}
 //!
 //! Architecture: an acceptor thread per listener, a shared [`Batcher`]
-//! for admission + dynamic batching (backpressure → {"error":"overloaded"}),
-//! and a drainer that fans batches out to the worker pool, each worker
-//! running the native decode engine against a shared immutable model.
+//! for admission (backpressure → {"error":"overloaded"}), and a
+//! continuous-batching scheduler: one decode loop advances every active
+//! sequence a token at a time through the batched native engine
+//! (`decode_step_batch`), new requests join at token boundaries and
+//! finished ones respond and leave. The batched linears parallelize
+//! internally across the `util::threadpool` substrate.
 
 use super::batcher::Batcher;
-use super::generate::{generate, GenParams};
+use super::generate::{step_batch, ActiveSeq, GenParams};
 use super::metrics::Metrics;
 use crate::engine::native::{FpLinears, LinearOps, QuantLinears};
 use crate::model::quantized::QuantizedModel;
 use crate::model::Transformer;
 use crate::util::json::Json;
-use crate::util::threadpool::ThreadPool;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -26,10 +28,12 @@ use std::time::{Duration, Instant};
 
 pub struct ServerConfig {
     pub addr: String,
+    /// Upper bound on sequences decoded together per token step. Compute
+    /// parallelism within a step is sized by the batched kernels
+    /// themselves (`util::threadpool::default_threads`).
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_capacity: usize,
-    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -39,7 +43,6 @@ impl Default for ServerConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             queue_capacity: 256,
-            workers: crate::util::threadpool::default_threads(),
         }
     }
 }
@@ -133,28 +136,61 @@ impl Server {
             }));
         }
 
-        // Batch drainer → worker pool.
+        // Continuous-batching scheduler: admit → step all → retire, one
+        // token per iteration.
         {
             let stop = Arc::clone(&stop);
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
-            let pool = ThreadPool::new(cfg.workers);
+            let max_batch = cfg.max_batch.max(1);
             threads.push(std::thread::spawn(move || {
+                let mut active: Vec<ActiveSeq> = Vec::new();
+                let mut slots: Vec<Slot> = Vec::new();
                 loop {
-                    let Some(batch) = batcher.next_batch() else {
-                        break;
-                    };
-                    if stop.load(Ordering::SeqCst) {
-                        break;
+                    // On stop: admit nothing more, but run the already
+                    // admitted sequences to completion so every accepted
+                    // request gets its response (the old worker-pool path
+                    // guaranteed this via pool.wait_idle()).
+                    let stopping = stop.load(Ordering::SeqCst);
+                    if active.is_empty() {
+                        if stopping {
+                            break;
+                        }
+                        // Idle: park on the batcher until work (or close).
+                        let Some(batch) = batcher.next_batch() else {
+                            break;
+                        };
+                        for p in batch {
+                            admit(&model, p, &mut active, &mut slots);
+                        }
+                    } else if !stopping && active.len() < max_batch {
+                        // Token boundary: top up the running batch without
+                        // blocking the in-flight sequences.
+                        for p in batcher.poll(max_batch - active.len()) {
+                            admit(&model, p, &mut active, &mut slots);
+                        }
                     }
-                    for job in batch {
-                        let model = Arc::clone(&model);
-                        let qlin = Arc::clone(&qlin);
-                        let metrics = Arc::clone(&metrics);
-                        pool.execute(move || run_job(job, &model, &qlin, &metrics));
+                    let fp;
+                    let lin: &dyn LinearOps = match &*qlin {
+                        Some(q) => q,
+                        None => {
+                            fp = FpLinears { model: &*model };
+                            &fp
+                        }
+                    };
+                    let stepped = step_batch(&model, lin, &mut active);
+                    metrics.record_batch(stepped);
+                    let mut i = 0;
+                    while i < active.len() {
+                        if active[i].done {
+                            let seq = active.swap_remove(i);
+                            let slot = slots.swap_remove(i);
+                            finish_job(slot, seq, &metrics);
+                        } else {
+                            i += 1;
+                        }
                     }
                 }
-                pool.wait_idle();
             }));
         }
 
@@ -270,35 +306,51 @@ fn parse_request(line: &str) -> crate::Result<(Vec<u32>, GenParams, u64)> {
     Ok((prompt, params, id))
 }
 
-fn run_job(
-    job: super::batcher::Pending<Job>,
+/// Response bookkeeping for one in-flight sequence (same index as its
+/// [`ActiveSeq`] in the scheduler's batch).
+struct Slot {
+    id: u64,
+    resp: Mutex<Option<TcpStream>>,
+    received: Instant,
+}
+
+/// Admit one queued request into the running batch (invalid requests are
+/// answered immediately instead of joining).
+fn admit(
     model: &Transformer,
-    qlin: &Option<QuantLinears>,
-    metrics: &Metrics,
+    p: super::batcher::Pending<Job>,
+    active: &mut Vec<ActiveSeq>,
+    slots: &mut Vec<Slot>,
 ) {
-    let j = job.payload;
-    let fp;
-    let lin: &dyn LinearOps = match qlin {
-        Some(q) => q,
-        None => {
-            fp = FpLinears { model };
-            &fp
+    let job = p.payload;
+    if job.prompt.len() > model.cfg.max_seq {
+        if let Some(s) = job.resp.lock().unwrap().take() {
+            let _ = respond_err(&s, p.id, "prompt exceeds context");
         }
-    };
-    let gen = generate(model, lin, &j.prompt, &j.params);
-    let latency = j.received.elapsed().as_secs_f64();
+        return;
+    }
+    active.push(ActiveSeq::new(model, &job.prompt, job.params));
+    slots.push(Slot {
+        id: p.id,
+        resp: job.resp,
+        received: job.received,
+    });
+}
+
+/// Respond to a finished sequence and record its serving metrics.
+fn finish_job(slot: Slot, seq: ActiveSeq, metrics: &Metrics) {
+    let latency = slot.received.elapsed().as_secs_f64();
     metrics.completed.fetch_add(1, Ordering::Relaxed);
     metrics
         .tokens_out
-        .fetch_add(gen.tokens.len() as u64, Ordering::Relaxed);
+        .fetch_add(seq.tokens.len() as u64, Ordering::Relaxed);
     metrics.record_latency(latency);
-    let stream_opt = j.resp.lock().unwrap().take();
-    if let Some(s) = stream_opt {
+    if let Some(s) = slot.resp.lock().unwrap().take() {
         let mut o = Json::obj();
-        o.set("id", Json::Num(job.id as f64));
+        o.set("id", Json::Num(slot.id as f64));
         o.set(
             "tokens",
-            Json::Arr(gen.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+            Json::Arr(seq.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
         );
         o.set("latency_ms", Json::Num(latency * 1e3));
         let _ = writeln_json(&s, &o);
@@ -415,6 +467,53 @@ mod tests {
             assert_eq!(h.join().unwrap(), 4);
         }
         assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 6);
+        // The continuous-batching loop ran and its occupancy counters moved.
+        assert!(server.metrics.batched_steps.load(Ordering::Relaxed) > 0);
+        assert!(server.metrics.mean_batch_size() >= 1.0);
+        let j = server.metrics.summary();
+        assert!(j.req_f64("mean_batch").unwrap() >= 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn quantized_engine_serves_batched() {
+        // End-to-end through the quantized fused batch kernel.
+        use crate::coordinator::pipeline::{quantize_model, PipelineConfig};
+        use crate::data::gen::markov_stream;
+        use crate::model::weights::Checkpoint;
+        let cfg_m = ModelConfig::sized("t", 32, 2, 4, 64);
+        let ck = Checkpoint::random(&cfg_m, 5);
+        let stream = markov_stream(cfg_m.vocab as u32, 4_000, 2);
+        let calib = stream.calibration(24, 4, 3);
+        let (qm, _) = quantize_model(&ck, &calib, &PipelineConfig::default()).unwrap();
+        let model = Arc::new(Transformer::from_checkpoint(&ck).unwrap());
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, EngineKind::auto(Some(qm)), cfg).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let (tokens, _) = client.request(&[1, 2, 3], 6).unwrap();
+        assert_eq!(tokens.len(), 6);
+        assert!(server.metrics.batched_steps.load(Ordering::Relaxed) > 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_prompt_is_rejected_not_fatal() {
+        let model = tiny_model();
+        let max_seq = model.cfg.max_seq;
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, EngineKind::auto(None), cfg).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let long: Vec<u32> = (0..max_seq + 5).map(|i| (i % 30) as u32).collect();
+        assert!(client.request(&long, 4).is_err());
+        // Server is still alive and serving after the rejection.
+        let (tokens, _) = client.request(&[1, 2], 3).unwrap();
+        assert_eq!(tokens.len(), 3);
         server.shutdown();
     }
 

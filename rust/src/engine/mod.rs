@@ -10,5 +10,5 @@
 pub mod native;
 pub mod pjrt_engine;
 
-pub use native::{decode_step_with, FpLinears, LinearOps, QuantLinears};
+pub use native::{decode_step_batch, decode_step_with, FpLinears, LinearOps, QuantLinears};
 pub use pjrt_engine::PjrtLm;

@@ -4,8 +4,18 @@
 //! (unpack-dequant fused into the matvec) and applies the incoherence
 //! transform as two fast Kronecker multiplies — the Rust twin of the
 //! Pallas kernel path.
+//!
+//! Batched serving path: [`LinearOps::apply_batch`] applies one linear to
+//! a whole batch of query vectors. The quantized implementation decodes a
+//! [`BATCH_TILE`]-row tile of packed codes *once* into a scratch buffer
+//! and reuses it for every query in the batch (`linalg::gemm::
+//! sgemm_bt_fused`), so the bit-unpacking cost is amortized across the
+//! batch instead of being paid per query as in [`QuantLinear::apply`].
+//! [`decode_step_batch`] runs one decode step for several sequences at
+//! independent cache positions — the substrate of the serving
+//! coordinator's continuous batching loop.
 
-use crate::linalg::gemm::sdot;
+use crate::linalg::gemm::{sdot, sgemm_bt, sgemm_bt_fused};
 use crate::linalg::KronOrtho;
 use crate::model::quantized::QuantizedModel;
 use crate::model::transformer::{gelu, layernorm_rows, KvCache, Transformer};
@@ -15,10 +25,32 @@ use crate::quant::packed::QuantizedLayer;
 /// Linear-layer slots within a block, forward order.
 pub const SLOTS: [&str; 6] = ["attn.wq", "attn.wk", "attn.wv", "attn.wo", "mlp.w1", "mlp.w2"];
 
+/// Rows of packed codes decoded per tile in the fused batch kernel. Big
+/// enough to amortize per-tile overhead, small enough that a tile
+/// (BATCH_TILE × n f32) stays cache-resident while the batch streams it.
+pub const BATCH_TILE: usize = 32;
+
 /// Pluggable linear application: y = W x for block `blk`, slot `slot`.
 pub trait LinearOps {
     fn apply(&self, blk: usize, slot: usize, x: &[f32], y: &mut [f32]);
     fn name(&self) -> &'static str;
+
+    /// Batched form: `ys[b] = W xs[b]` for `b in 0..batch` (row-major
+    /// `batch × n` in, `batch × m` out). The default loops [`apply`]
+    /// per query; implementations override it when they can amortize
+    /// work across the batch.
+    ///
+    /// [`apply`]: LinearOps::apply
+    fn apply_batch(&self, blk: usize, slot: usize, xs: &[f32], batch: usize, ys: &mut [f32]) {
+        if batch == 0 {
+            return;
+        }
+        let n = xs.len() / batch;
+        let m = ys.len() / batch;
+        for b in 0..batch {
+            self.apply(blk, slot, &xs[b * n..(b + 1) * n], &mut ys[b * m..(b + 1) * m]);
+        }
+    }
 }
 
 /// fp32 linears straight from the model weights.
@@ -45,6 +77,24 @@ impl<'a> LinearOps for FpLinears<'a> {
 
     fn name(&self) -> &'static str {
         "fp32"
+    }
+
+    fn apply_batch(&self, blk: usize, slot: usize, xs: &[f32], batch: usize, ys: &mut [f32]) {
+        if batch == 0 {
+            return;
+        }
+        let b = &self.model.blocks[blk];
+        let w: &[f32] = match slot {
+            0 => &b.wq,
+            1 => &b.wk,
+            2 => &b.wv,
+            3 => &b.wo,
+            4 => &b.w1,
+            _ => &b.w2,
+        };
+        let n = xs.len() / batch;
+        let m = ys.len() / batch;
+        sgemm_bt(batch, n, m, xs, w, ys);
     }
 }
 
@@ -293,6 +343,124 @@ impl QuantLinear {
             out[i] = acc;
         }
     }
+
+    /// Decode rows `[i0, i1)` of the packed codes into `out`
+    /// ((i1−i0) × n f32, raw code values). The tile decode of the fused
+    /// batch kernel: paid once per tile, amortized over the whole batch.
+    fn decode_rows(&self, i0: usize, i1: usize, out: &mut [f32]) {
+        let n = self.layer.n;
+        let bits = self.layer.bits as usize;
+        debug_assert_eq!(out.len(), (i1 - i0) * n);
+        let packed = &self.layer.packed;
+        match bits {
+            2 if n % 4 == 0 => {
+                let bpr = n / 4;
+                for i in i0..i1 {
+                    let row = &packed[i * bpr..(i + 1) * bpr];
+                    let orow = &mut out[(i - i0) * n..(i - i0 + 1) * n];
+                    let mut j = 0;
+                    for &b in row {
+                        orow[j] = (b & 3) as f32;
+                        orow[j + 1] = ((b >> 2) & 3) as f32;
+                        orow[j + 2] = ((b >> 4) & 3) as f32;
+                        orow[j + 3] = ((b >> 6) & 3) as f32;
+                        j += 4;
+                    }
+                }
+            }
+            4 if n % 2 == 0 => {
+                let bpr = n / 2;
+                for i in i0..i1 {
+                    let row = &packed[i * bpr..(i + 1) * bpr];
+                    let orow = &mut out[(i - i0) * n..(i - i0 + 1) * n];
+                    let mut j = 0;
+                    for &b in row {
+                        orow[j] = (b & 15) as f32;
+                        orow[j + 1] = ((b >> 4) & 15) as f32;
+                        j += 2;
+                    }
+                }
+            }
+            _ => {
+                let mut row = vec![0u8; n];
+                for i in i0..i1 {
+                    self.layer.codes_row(i, &mut row);
+                    let orow = &mut out[(i - i0) * n..(i - i0 + 1) * n];
+                    for (o, &c) in orow.iter_mut().zip(&row) {
+                        *o = c as f32;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Batched `ys[b] = Ŵ xs[b]` without materializing Ŵ: per-query input
+    /// transform (diag + V Kronecker), then the fused tile kernel — each
+    /// [`BATCH_TILE`]-row tile of packed codes is decoded *once* and
+    /// multiplied against every query — then per-query grid affine and
+    /// output Kronecker. Equivalent to calling [`apply`](Self::apply) per
+    /// query, at a fraction of the unpack cost.
+    pub fn apply_batch(&self, xs: &[f32], batch: usize, ys: &mut [f32], s: &mut BatchScratch) {
+        let (m, n) = (self.layer.m, self.layer.n);
+        debug_assert_eq!(xs.len(), batch * n);
+        debug_assert_eq!(ys.len(), batch * m);
+        if batch == 0 {
+            return;
+        }
+        s.ensure(batch, n, m);
+        for b in 0..batch {
+            let dst = &mut s.xt[b * n..(b + 1) * n];
+            dst.copy_from_slice(&xs[b * n..(b + 1) * n]);
+            if let Some(d) = &self.dinv {
+                for (xi, di) in dst.iter_mut().zip(d) {
+                    *xi *= di;
+                }
+            }
+        }
+        if let Some(v) = &self.vkron {
+            let (tmp, rest) = s.tmp.split_at_mut(n);
+            for b in 0..batch {
+                let row = &mut s.xt[b * n..(b + 1) * n];
+                v.apply(&row[..], tmp, &mut rest[..n]);
+                row.copy_from_slice(tmp);
+            }
+        }
+        for b in 0..batch {
+            s.xsum[b] = s.xt[b * n..(b + 1) * n].iter().sum();
+        }
+        {
+            let raw: &mut [f32] = if self.ukron.is_some() {
+                &mut s.raw[..batch * m]
+            } else {
+                &mut ys[..]
+            };
+            sgemm_bt_fused(
+                batch,
+                n,
+                m,
+                BATCH_TILE,
+                &s.xt[..batch * n],
+                &|i0: usize, i1: usize, buf: &mut [f32]| self.decode_rows(i0, i1, buf),
+                raw,
+            );
+            for b in 0..batch {
+                let xsum = s.xsum[b];
+                let rrow = &mut raw[b * m..(b + 1) * m];
+                for i in 0..m {
+                    rrow[i] = self.rowscale[i] * rrow[i] + self.rowoff[i] * xsum;
+                }
+            }
+        }
+        if let Some(u) = &self.ukron {
+            for b in 0..batch {
+                u.apply_t(
+                    &s.raw[b * m..(b + 1) * m],
+                    &mut ys[b * m..(b + 1) * m],
+                    &mut s.tmp[..m],
+                );
+            }
+        }
+    }
 }
 
 /// Reusable scratch buffers (decode loop is allocation-free after warmup).
@@ -325,10 +493,53 @@ impl Default for Scratch {
     }
 }
 
+/// Reusable buffers for the batched fused kernel (transformed inputs,
+/// raw code-space products, per-query input sums, Kronecker scratch).
+pub struct BatchScratch {
+    xt: Vec<f32>,
+    raw: Vec<f32>,
+    xsum: Vec<f32>,
+    tmp: Vec<f32>,
+}
+
+impl BatchScratch {
+    pub fn new() -> BatchScratch {
+        BatchScratch {
+            xt: Vec::new(),
+            raw: Vec::new(),
+            xsum: Vec::new(),
+            tmp: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, batch: usize, n: usize, m: usize) {
+        if self.xt.len() < batch * n {
+            self.xt.resize(batch * n, 0.0);
+        }
+        if self.raw.len() < batch * m {
+            self.raw.resize(batch * m, 0.0);
+        }
+        if self.xsum.len() < batch {
+            self.xsum.resize(batch, 0.0);
+        }
+        let nm = 2 * n.max(m);
+        if self.tmp.len() < nm {
+            self.tmp.resize(nm, 0.0);
+        }
+    }
+}
+
+impl Default for BatchScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Quantized linears for a whole model, indexed blk*6 + slot.
 pub struct QuantLinears {
     pub linears: Vec<QuantLinear>,
     scratch: std::sync::Mutex<Scratch>,
+    batch_scratch: std::sync::Mutex<BatchScratch>,
 }
 
 impl QuantLinears {
@@ -344,6 +555,7 @@ impl QuantLinears {
         Ok(QuantLinears {
             linears,
             scratch: std::sync::Mutex::new(Scratch::new()),
+            batch_scratch: std::sync::Mutex::new(BatchScratch::new()),
         })
     }
 }
@@ -356,6 +568,11 @@ impl LinearOps for QuantLinears {
 
     fn name(&self) -> &'static str {
         "native-quant"
+    }
+
+    fn apply_batch(&self, blk: usize, slot: usize, xs: &[f32], batch: usize, ys: &mut [f32]) {
+        let lin = &self.linears[blk * 6 + slot];
+        lin.apply_batch(xs, batch, ys, &mut self.batch_scratch.lock().unwrap());
     }
 }
 
@@ -432,7 +649,7 @@ pub fn decode_step_with(
             *xi += pi;
         }
         let dff = model.cfg.d_ff;
-        layernorm_rows(&x.clone(), 1, d, &blk.ln2_g, &blk.ln2_b, &mut ln);
+        layernorm_rows(&x, 1, d, &blk.ln2_g, &blk.ln2_b, &mut ln);
         let mut hmid = vec![0.0f32; dff];
         lin.apply(bi, 4, &ln, &mut hmid);
         for (xj, bj) in hmid.iter_mut().zip(&blk.b1) {
@@ -452,6 +669,129 @@ pub fn decode_step_with(
     for o in 0..v {
         logits[o] = sdot(&h, &model.embed[o * d..(o + 1) * d]);
     }
+    logits
+}
+
+/// One decode step for a batch of independent sequences: feed `tokens[b]`
+/// to the sequence behind `caches[b]` (each at its own position — new
+/// requests join and finished ones leave between steps, so positions
+/// differ) and return the next-token logits, row-major `batch × vocab`.
+///
+/// The six per-block linears and the LM head run batched
+/// ([`LinearOps::apply_batch`] / `sgemm_bt`); embeddings, LayerNorm and
+/// attention are per-sequence (attention spans differ). Matches
+/// [`decode_step_with`] per sequence (tested for equality).
+pub fn decode_step_batch(
+    model: &Transformer,
+    lin: &dyn LinearOps,
+    caches: &mut [&mut KvCache],
+    tokens: &[u32],
+) -> Vec<f32> {
+    let bsz = tokens.len();
+    assert_eq!(caches.len(), bsz, "one cache per token");
+    if bsz == 0 {
+        return Vec::new();
+    }
+    let d = model.cfg.d_model;
+    let nh = model.cfg.n_heads;
+    let hd = model.cfg.head_dim();
+    let dff = model.cfg.d_ff;
+
+    let mut x = vec![0.0f32; bsz * d];
+    for (b, (&tok, cache)) in tokens.iter().zip(caches.iter()).enumerate() {
+        let pos = cache.len;
+        assert!(pos < model.cfg.max_seq, "context overflow (seq {b})");
+        let e = &model.embed[(tok as usize) * d..(tok as usize + 1) * d];
+        let p = &model.pos[pos * d..(pos + 1) * d];
+        let row = &mut x[b * d..(b + 1) * d];
+        for j in 0..d {
+            row[j] = e[j] + p[j];
+        }
+    }
+
+    let mut ln = vec![0.0f32; bsz * d];
+    let mut q = vec![0.0f32; bsz * d];
+    let mut kbuf = vec![0.0f32; bsz * d];
+    let mut vbuf = vec![0.0f32; bsz * d];
+    let mut attn = vec![0.0f32; bsz * d];
+    let mut proj = vec![0.0f32; bsz * d];
+    let mut hmid = vec![0.0f32; bsz * dff];
+    let mut mlp = vec![0.0f32; bsz * d];
+    // One scores buffer sized for the longest sequence in the batch.
+    let max_pos = caches.iter().map(|c| c.len).max().unwrap_or(0);
+    let mut scores = vec![0.0f32; max_pos + 1];
+    for (bi, blk) in model.blocks.iter().enumerate() {
+        layernorm_rows(&x, bsz, d, &blk.ln1_g, &blk.ln1_b, &mut ln);
+        lin.apply_batch(bi, 0, &ln, bsz, &mut q);
+        lin.apply_batch(bi, 1, &ln, bsz, &mut kbuf);
+        lin.apply_batch(bi, 2, &ln, bsz, &mut vbuf);
+        // Scatter K/V rows into each sequence's cache at its own position.
+        for (b, cache) in caches.iter_mut().enumerate() {
+            let pos = cache.len;
+            let bc = &mut cache.blocks[bi];
+            bc.k[pos * d..(pos + 1) * d].copy_from_slice(&kbuf[b * d..(b + 1) * d]);
+            bc.v[pos * d..(pos + 1) * d].copy_from_slice(&vbuf[b * d..(b + 1) * d]);
+        }
+        // Attention per sequence (spans differ across the batch).
+        attn.fill(0.0);
+        let scale = 1.0 / (hd as f32).sqrt();
+        for (b, cache) in caches.iter().enumerate() {
+            let pos = cache.len;
+            let bc = &cache.blocks[bi];
+            for h in 0..nh {
+                let off = h * hd;
+                let qh = &q[b * d + off..b * d + off + hd];
+                let mut maxs = f32::NEG_INFINITY;
+                for j in 0..=pos {
+                    let s = sdot(qh, &bc.k[j * d + off..j * d + off + hd]) * scale;
+                    scores[j] = s;
+                    maxs = maxs.max(s);
+                }
+                let mut denom = 0.0f32;
+                for s in scores[..=pos].iter_mut() {
+                    *s = (*s - maxs).exp();
+                    denom += *s;
+                }
+                let inv = 1.0 / denom;
+                let out = &mut attn[b * d + off..b * d + off + hd];
+                for j in 0..=pos {
+                    let w = scores[j] * inv;
+                    let vj = &bc.v[j * d + off..j * d + off + hd];
+                    for l in 0..hd {
+                        out[l] += w * vj[l];
+                    }
+                }
+            }
+        }
+        lin.apply_batch(bi, 3, &attn, bsz, &mut proj);
+        for (xi, pi) in x.iter_mut().zip(&proj) {
+            *xi += pi;
+        }
+        layernorm_rows(&x, bsz, d, &blk.ln2_g, &blk.ln2_b, &mut ln);
+        lin.apply_batch(bi, 4, &ln, bsz, &mut hmid);
+        for b in 0..bsz {
+            let row = &mut hmid[b * dff..(b + 1) * dff];
+            for (xj, bj) in row.iter_mut().zip(&blk.b1) {
+                *xj = gelu(*xj + bj);
+            }
+        }
+        lin.apply_batch(bi, 5, &hmid, bsz, &mut mlp);
+        for b in 0..bsz {
+            let orow = &mlp[b * d..(b + 1) * d];
+            let xrow = &mut x[b * d..(b + 1) * d];
+            for ((xi, oi), bi2) in xrow.iter_mut().zip(orow).zip(&blk.b2) {
+                *xi += oi + bi2;
+            }
+        }
+    }
+    for cache in caches.iter_mut() {
+        cache.len += 1;
+    }
+    let mut h = vec![0.0f32; bsz * d];
+    layernorm_rows(&x, bsz, d, &model.lnf_g, &model.lnf_b, &mut h);
+    let v = model.cfg.vocab;
+    let mut logits = vec![0.0f32; bsz * v];
+    sgemm_bt(bsz, d, v, &h, &model.embed, &mut logits);
     logits
 }
 
@@ -563,6 +903,144 @@ mod tests {
             for (x, y) in a.iter().zip(&b) {
                 assert!((x - y).abs() < 5e-2, "{x} vs {y}");
             }
+        }
+    }
+
+    #[test]
+    fn batched_kernel_matches_dequantized_dense() {
+        // Satellite acceptance: the fused batch kernel must match
+        // `QuantizedLayer::dequantize()` + dense matmul at 2/3/4 bits and
+        // batch sizes 1 and 17 (batch and rows both non-multiples of the
+        // tile). m=40 makes the last tile ragged; n=52 keeps 3-bit rows
+        // off byte boundaries (generic decode path).
+        let (m, n) = (40usize, 52usize);
+        let mut rng = crate::util::rng::Rng::new(21);
+        let w = Mat::from_fn(m, n, |_, _| rng.uniform(-0.5, 0.5));
+        let h = random_hessian(&mut rng, n, n / 4, 1e-2);
+        for processing in [Processing::baseline(), Processing::incoherent()] {
+            for bits in [2u32, 3, 4] {
+                let out = quantize_layer(
+                    &w,
+                    &h,
+                    &QuantConfig {
+                        bits,
+                        method: Method::Ldlq,
+                        processing: processing.clone(),
+                        ..Default::default()
+                    },
+                    17,
+                );
+                let layer = QuantizedLayer::from_codes("t", &out.codes, bits, out.post);
+                let wd = layer.dequantize(); // m×n, original space, f64
+                let lin = QuantLinear::new(layer);
+                for batch in [1usize, 17] {
+                    let xs: Vec<f32> = (0..batch * n)
+                        .map(|i| ((i as f32) * 0.013).sin())
+                        .collect();
+                    let mut ys = vec![0.0f32; batch * m];
+                    let mut s = BatchScratch::new();
+                    lin.apply_batch(&xs, batch, &mut ys, &mut s);
+                    for b in 0..batch {
+                        for i in 0..m {
+                            let mut want = 0.0f64;
+                            for j in 0..n {
+                                want += wd[(i, j)] * xs[b * n + j] as f64;
+                            }
+                            let got = ys[b * m + i] as f64;
+                            assert!(
+                                (got - want).abs() < 1e-3 * want.abs().max(1.0),
+                                "bits={bits} batch={batch} b={b} i={i}: {got} vs {want}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_batch_matches_apply_per_query() {
+        // The batched fused kernel and the single-vector fused matvec are
+        // the same linear map (different summation order only).
+        let m = tiny();
+        let qm = quantize_model(&m, 4, Processing::incoherent());
+        let qlin = QuantLinears::from_model(&qm).unwrap();
+        let d = m.cfg.d_model;
+        let batch = 17usize;
+        let xs: Vec<f32> = (0..batch * d).map(|i| ((i as f32) * 0.11).cos()).collect();
+        for blk in 0..m.cfg.n_layers {
+            for slot in 0..4 {
+                let mut ys = vec![0.0f32; batch * d];
+                qlin.apply_batch(blk, slot, &xs, batch, &mut ys);
+                for b in 0..batch {
+                    let mut y1 = vec![0.0f32; d];
+                    qlin.apply(blk, slot, &xs[b * d..(b + 1) * d], &mut y1);
+                    for (a, e) in ys[b * d..(b + 1) * d].iter().zip(&y1) {
+                        assert!(
+                            (a - e).abs() < 1e-3 * e.abs().max(1.0),
+                            "blk{blk} slot{slot} b{b}: {a} vs {e}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_step_batch_matches_single_at_mixed_positions() {
+        // Three sequences at different cache positions (continuous
+        // batching shape) must decode exactly as three single steps.
+        let m = tiny();
+        let lin = FpLinears { model: &m };
+        let prefixes: [&[u32]; 3] = [&[1, 9, 33], &[7], &[2, 4, 6, 8]];
+        let mut single: Vec<KvCache> = Vec::new();
+        let mut batched: Vec<KvCache> = Vec::new();
+        for p in prefixes {
+            let mut c1 = m.new_cache();
+            let mut c2 = m.new_cache();
+            for &t in p {
+                decode_step_with(&m, &lin, &mut c1, t);
+                decode_step_with(&m, &lin, &mut c2, t);
+            }
+            single.push(c1);
+            batched.push(c2);
+        }
+        let next = [5u32, 11, 17];
+        let mut expect = Vec::new();
+        for (c, &t) in single.iter_mut().zip(&next) {
+            expect.push(decode_step_with(&m, &lin, c, t));
+        }
+        let mut refs: Vec<&mut KvCache> = batched.iter_mut().collect();
+        let got = decode_step_batch(&m, &lin, &mut refs, &next);
+        let v = m.cfg.vocab;
+        for (b, exp) in expect.iter().enumerate() {
+            for (j, e) in exp.iter().enumerate() {
+                let g = got[b * v + j];
+                assert!((g - e).abs() < 1e-5, "seq {b} logit {j}: {g} vs {e}");
+            }
+        }
+        // Cache positions advanced identically.
+        for (c1, c2) in single.iter().zip(&batched) {
+            assert_eq!(c1.len, c2.len);
+        }
+    }
+
+    #[test]
+    fn decode_step_batch_quantized_close_to_single() {
+        let m = tiny();
+        let qm = quantize_model(&m, 4, Processing::incoherent());
+        let qlin = QuantLinears::from_model(&qm).unwrap();
+        let mut c1 = m.new_cache();
+        let mut c2 = m.new_cache();
+        for &t in &[3u32, 8] {
+            decode_step_with(&m, &qlin, &mut c1, t);
+            decode_step_with(&m, &qlin, &mut c2, t);
+        }
+        let a = decode_step_with(&m, &qlin, &mut c1, 20);
+        let mut refs: Vec<&mut KvCache> = vec![&mut c2];
+        let b = decode_step_batch(&m, &qlin, &mut refs, &[20]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 5e-3, "{x} vs {y}");
         }
     }
 

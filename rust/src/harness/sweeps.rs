@@ -6,7 +6,13 @@
 //! * `calib`  — calibration-set size (paper fixes 128 segments)
 //! * `greedy` — greedy polish passes (paper: 10, or 5 on the largest)
 //!
-//! `quip sweep <rho|calib|greedy> [--model s0] [--bits 2]`.
+//! plus the serving-side `batch` sweep: tokens/sec of the batched fused
+//! packed-weight engine vs batch size {1, 4, 16, 64} at 2/3/4 bits,
+//! against the repeated single-vector `QuantLinear::apply` baseline
+//! (EXPERIMENTS.md §Perf records the results).
+//!
+//! `quip sweep <rho|calib|greedy|batch> [--model s0] [--bits 2]`.
+//! `batch` is artifact-free (synthetic checkpoint) so it runs anywhere.
 
 use super::env::{f2, write_result, Env, TablePrinter};
 use crate::coordinator::pipeline::{quantize_model, PipelineConfig};
@@ -20,7 +26,8 @@ pub fn run_sweep(which: &str, args: &Args) -> crate::Result<()> {
         "rho" => sweep_rho(args),
         "calib" => sweep_calib(args),
         "greedy" => sweep_greedy(args),
-        other => anyhow::bail!("unknown sweep '{other}' (rho, calib, greedy)"),
+        "batch" => sweep_batch(args),
+        other => anyhow::bail!("unknown sweep '{other}' (rho, calib, greedy, batch)"),
     }
 }
 
@@ -139,6 +146,140 @@ fn sweep_greedy(args: &Args) -> crate::Result<()> {
     out.set("passes", arr_f64(&xs));
     out.set("proxy", arr_f64(&ys));
     write_result("sweep_greedy", &out)?;
+    Ok(())
+}
+
+/// Tokens/sec vs batch size for the batched fused packed-weight engine,
+/// at 2/3/4 bits, with the repeated single-vector `QuantLinear::apply`
+/// path as the baseline at each batch size. Runs on a synthetic
+/// checkpoint — no artifacts needed — so it doubles as the CI smoke run.
+fn sweep_batch(args: &Args) -> crate::Result<()> {
+    use crate::coordinator::generate::{generate, generate_batch, GenParams};
+    use crate::engine::native::QuantLinears;
+    use crate::linalg::Mat;
+    use crate::model::quantized::QuantizedModel;
+    use crate::model::weights::Checkpoint;
+    use crate::model::ModelConfig;
+    use crate::quant::packed::QuantizedLayer;
+    use crate::quant::{quantize_layer, Method};
+    use crate::util::testkit::random_hessian;
+
+    let fast = args.flag("fast");
+    let cfg = crate::model::ModelConfig::by_name(&args.opt_or("model", "s0"))
+        .unwrap_or_else(|_| ModelConfig::sized("s0", 64, 2, 4, 256));
+    let ck = Checkpoint::random(&cfg, 7);
+    let model = Transformer::from_checkpoint(&ck)?;
+    let max_tokens = if fast { 6 } else { 24 };
+    let prompt_len = 4usize;
+    let batches: &[usize] = if fast { &[1, 4, 16] } else { &[1, 4, 16, 64] };
+    let params = GenParams {
+        max_tokens,
+        ..Default::default()
+    };
+    println!(
+        "batch sweep — {} (d={} L={}), {} new tokens/request, fused batched engine vs \
+         repeated single-vector apply\n",
+        cfg.name, cfg.d_model, cfg.n_layers, max_tokens
+    );
+
+    // Quantize once per bit width (rounding method is irrelevant for
+    // serving throughput; nearest keeps the sweep fast).
+    let quantize = |bits: u32| -> crate::Result<QuantizedModel> {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut layers = Vec::new();
+        for spec in cfg.linear_specs() {
+            let wdata = model.get_weight(&spec.name)?;
+            let w = Mat {
+                rows: spec.out_dim,
+                cols: spec.in_dim,
+                data: wdata.iter().map(|&x| x as f64).collect(),
+            };
+            let h = random_hessian(&mut rng, spec.in_dim, 8, 1e-2);
+            let out = quantize_layer(
+                &w,
+                &h,
+                &QuantConfig {
+                    bits,
+                    method: Method::Nearest,
+                    processing: Processing::incoherent(),
+                    ..Default::default()
+                },
+                5,
+            );
+            layers.push(QuantizedLayer::from_codes(&spec.name, &out.codes, bits, out.post));
+        }
+        Ok(QuantizedModel {
+            config: cfg.clone(),
+            bits,
+            recipe: "sweep".into(),
+            layers,
+        })
+    };
+
+    let prompts = |count: usize| -> Vec<Vec<u32>> {
+        (0..count)
+            .map(|c| {
+                (0..prompt_len)
+                    .map(|i| ((c * 31 + i * 7) % (cfg.vocab - 1) + 1) as u32)
+                    .collect()
+            })
+            .collect()
+    };
+
+    let mut tp = TablePrinter::new(&[
+        "bits", "batch", "batched tok/s", "matvec tok/s", "speedup",
+    ]);
+    let mut out = Json::obj();
+    let mut speedup_at_16 = Vec::new();
+    for bits in [2u32, 3, 4] {
+        let qm = quantize(bits)?;
+        let qlin = QuantLinears::from_model(&qm)?;
+        for &b in batches {
+            let reqs = prompts(b);
+            // Warmup (allocations, scratch growth).
+            generate_batch(&model, &qlin, &reqs[..1.min(reqs.len())], &params);
+            let t0 = std::time::Instant::now();
+            let gens = generate_batch(&model, &qlin, &reqs, &params);
+            let batched_secs = t0.elapsed().as_secs_f64();
+            let toks: usize = gens.iter().map(|g| g.tokens.len()).sum();
+            let batched_tps = toks as f64 / batched_secs.max(1e-9);
+            // Baseline: the same requests served one vector at a time
+            // through the pre-tentpole QuantLinear::apply path.
+            let t1 = std::time::Instant::now();
+            let mut base_toks = 0usize;
+            for r in &reqs {
+                base_toks += generate(&model, &qlin, r, &params).tokens.len();
+            }
+            let matvec_secs = t1.elapsed().as_secs_f64();
+            let matvec_tps = base_toks as f64 / matvec_secs.max(1e-9);
+            let speedup = batched_tps / matvec_tps.max(1e-9);
+            if b == 16 {
+                speedup_at_16.push(speedup);
+            }
+            tp.row(vec![
+                bits.to_string(),
+                b.to_string(),
+                f2(batched_tps),
+                f2(matvec_tps),
+                format!("{speedup:.2}x"),
+            ]);
+            let mut o = Json::obj();
+            o.set("batched_tokens_per_s", Json::Num(batched_tps));
+            o.set("matvec_tokens_per_s", Json::Num(matvec_tps));
+            o.set("speedup", Json::Num(speedup));
+            out.set(&format!("q{bits}_b{b}"), o);
+        }
+    }
+    tp.print();
+    if !speedup_at_16.is_empty() {
+        let mean16 = speedup_at_16.iter().sum::<f64>() / speedup_at_16.len() as f64;
+        println!(
+            "\nbatch-16 speedup over repeated single-vector apply: {mean16:.2}x mean \
+             (acceptance floor: 2.0x; record in EXPERIMENTS.md §Perf)"
+        );
+        out.set("speedup_at_16_mean", Json::Num(mean16));
+    }
+    write_result("sweep_batch", &out)?;
     Ok(())
 }
 

@@ -6,8 +6,11 @@
 //!
 //! * **Layer 3 (this crate)** — the run-time system: the complete QuIP
 //!   quantization algorithm suite ([`quant`]), the Hessian-collection
-//!   pipeline and serving coordinator ([`coordinator`]), a pure-Rust
-//!   transformer inference engine and a PJRT engine executing AOT-compiled
+//!   pipeline and serving coordinator ([`coordinator`]) — including a
+//!   continuous-batching server whose fused batch kernel decodes packed
+//!   2/3/4-bit codes tile-by-tile once per batch
+//!   ([`engine::native::decode_step_batch`]) — a pure-Rust transformer
+//!   inference engine and a PJRT engine executing AOT-compiled
 //!   JAX/Pallas artifacts ([`engine`], [`runtime`]).
 //! * **Layer 2 (python/compile/model.py)** — the JAX model forward lowered
 //!   once, at build time, to HLO text.

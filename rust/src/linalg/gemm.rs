@@ -6,7 +6,7 @@
 //! measured speedup over the naive loop.
 
 use super::matrix::Mat;
-use crate::util::threadpool::{default_threads, parallel_for};
+use crate::util::threadpool::{default_threads, parallel_chunks, parallel_for};
 
 const BLOCK: usize = 64;
 
@@ -169,6 +169,63 @@ struct SendPtrF32(*mut f32);
 unsafe impl Send for SendPtrF32 {}
 unsafe impl Sync for SendPtrF32 {}
 
+/// out[b×m] = a[b×k] · W(tile)ᵀ where W is produced tile-by-tile by
+/// `decode`: for each row tile [i0, i1) of the (m×k) weight matrix,
+/// `decode(i0, i1, buf)` fills `buf` ((i1−i0)×k row-major) with that
+/// tile's weights. The decode cost is paid once per tile and amortized
+/// over all `b` query rows — this is the substrate of the fused
+/// packed-weight batch kernel in `engine::native`. Tiles are parallelized
+/// over the worker threads; each tile owns a disjoint output column range.
+pub fn sgemm_bt_fused<F>(
+    b: usize,
+    k: usize,
+    m: usize,
+    tile_rows: usize,
+    a: &[f32],
+    decode: &F,
+    out: &mut [f32],
+) where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    assert_eq!(a.len(), b * k);
+    assert_eq!(out.len(), b * m);
+    if b == 0 || m == 0 {
+        return;
+    }
+    let tile_rows = tile_rows.max(1);
+    let n_tiles = m.div_ceil(tile_rows);
+    let threads = if b * m * k > 32 * 32 * 32 {
+        default_threads()
+    } else {
+        1
+    };
+    let out_ptr = SendPtrF32(out.as_mut_ptr());
+    // Chunk tiles so each task allocates its tile buffer once and reuses
+    // it (a few chunks per thread for load balance; this runs once per
+    // linear per token step, so per-tile allocation would add up fast).
+    let chunk = n_tiles.div_ceil(threads * 4).max(1);
+    parallel_chunks(n_tiles, threads, chunk, |t0, t1| {
+        let mut wt = vec![0.0f32; tile_rows * k];
+        let out_ptr = &out_ptr;
+        for t in t0..t1 {
+            let i0 = t * tile_rows;
+            let i1 = (i0 + tile_rows).min(m);
+            let buf = &mut wt[..(i1 - i0) * k];
+            decode(i0, i1, buf);
+            for bi in 0..b {
+                let arow = &a[bi * k..(bi + 1) * k];
+                for i in i0..i1 {
+                    let v = sdot(arow, &buf[(i - i0) * k..(i - i0 + 1) * k]);
+                    // SAFETY: tile t exclusively owns columns [i0, i1) of
+                    // every output row; writes from distinct tasks (and
+                    // distinct tiles) never alias.
+                    unsafe { *out_ptr.0.add(bi * m + i) = v };
+                }
+            }
+        }
+    });
+}
+
 /// out[m×n] = a[m×k] · b[n×k]ᵀ — B stored transposed (weight layout:
 /// each output feature's weights contiguous), the natural layout for
 /// matvec-heavy decode.
@@ -268,6 +325,34 @@ mod tests {
                     s += a[i * k + kk] as f64 * b[kk * n + j] as f64;
                 }
                 assert!((out[i * n + j] as f64 - s).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn sgemm_bt_fused_matches_sgemm_bt() {
+        let mut rng = Rng::new(6);
+        // Ragged shapes: batch not a tile multiple, m not a tile multiple.
+        let shapes = [(1usize, 24usize, 40usize, 16usize), (17, 33, 50, 16), (5, 8, 3, 64)];
+        for &(b, k, m, tile) in &shapes {
+            let a: Vec<f32> = (0..b * k).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            let w: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            let mut o1 = vec![0.0f32; b * m];
+            let mut o2 = vec![0.0f32; b * m];
+            sgemm_bt(b, k, m, &a, &w, &mut o1);
+            sgemm_bt_fused(
+                b,
+                k,
+                m,
+                tile,
+                &a,
+                &|i0: usize, i1: usize, buf: &mut [f32]| {
+                    buf.copy_from_slice(&w[i0 * k..i1 * k]);
+                },
+                &mut o2,
+            );
+            for (x, y) in o1.iter().zip(&o2) {
+                assert_eq!(x, y, "b={b} k={k} m={m} tile={tile}");
             }
         }
     }

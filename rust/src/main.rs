@@ -8,6 +8,8 @@
 //! quip pjrt     --model s0 [--bits 2]          # AOT artifact smoke-run
 //! quip table    <1|2|3|4|5|6|14|15|16|optq|all> [--fast]
 //! quip figure   <1|2|3|4|5|all> [--fast]
+//! quip sweep    <rho|calib|greedy|batch> [--fast]   # batch = serving
+//!               tokens/sec vs batch size, artifact-free
 //! quip info
 //! ```
 //!
@@ -42,7 +44,9 @@ fn main() {
         Some("figure") => run_figure(args.pos(1).unwrap_or("all"), &args),
         Some("info") => cmd_info(&args),
         _ => {
-            eprintln!("usage: quip <quantize|eval|gen|serve|pjrt|table|figure|info> [options]");
+            eprintln!(
+                "usage: quip <quantize|eval|gen|serve|pjrt|table|figure|sweep|info> [options]"
+            );
             eprintln!("see `quip info` and README.md");
             std::process::exit(2);
         }

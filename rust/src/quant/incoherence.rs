@@ -94,6 +94,21 @@ pub struct Preprocessed {
     pub post: PostState,
 }
 
+/// Step 1 of Algorithm 1 — the damped Hessian H + α·mean(diag H)·I (with
+/// a tiny floor so exactly-dead input dimensions still get LDL pivots).
+/// Exposed so the pipeline's non-PD recovery can probe exactly the matrix
+/// the quantizer will factor.
+pub fn damp(h: &Mat, alpha: f64) -> Mat {
+    let n = h.rows;
+    let mean_diag = h.trace() / n as f64;
+    let mut hd = h.symmetrize();
+    let bump = (alpha * mean_diag).max(1e-12);
+    for i in 0..n {
+        hd[(i, i)] += bump;
+    }
+    hd
+}
+
 /// Algorithm 1: incoherence pre-processing.
 pub fn preprocess(w: &Mat, h: &Mat, bits: u32, p: &Processing, seed: u64) -> Preprocessed {
     let (m, n) = (w.rows, w.cols);
@@ -101,12 +116,7 @@ pub fn preprocess(w: &Mat, h: &Mat, bits: u32, p: &Processing, seed: u64) -> Pre
 
     // Step 1 — damping (also: any exactly-dead input dimension gets a
     // nonzero diagonal so LDL pivots exist).
-    let mean_diag = h.trace() / n as f64;
-    let mut hd = h.symmetrize();
-    let bump = (p.alpha * mean_diag).max(1e-12);
-    for i in 0..n {
-        hd[(i, i)] += bump;
-    }
+    let hd = damp(h, p.alpha);
     let h_damped = hd.clone();
 
     // Step 2 — diagonal rescale.
