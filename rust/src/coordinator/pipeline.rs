@@ -499,9 +499,11 @@ impl<'a> QuantSession<'a> {
             "{}+{}",
             self.rounder.name(),
             if self.cfg.quant.processing.incoherent {
-                "incp"
+                // Name the incoherence backend so artifacts quantized
+                // with different transforms are distinguishable.
+                format!("incp-{}", self.cfg.quant.processing.transform)
             } else {
-                "baseline"
+                "baseline".to_string()
             }
         );
         (

@@ -2,8 +2,10 @@
 //! per-block linears are pluggable, with an fp32 implementation and a
 //! quantized implementation that reads packed codes directly
 //! (unpack-dequant fused into the matvec) and applies the incoherence
-//! transform as two fast Kronecker multiplies — the Rust twin of the
-//! Pallas kernel path.
+//! transform through the pluggable [`Transform`] subsystem — the seeded
+//! Kronecker multiply or the O(n log n) randomized Hadamard butterfly,
+//! whichever the artifact's layers record — the Rust twin of the Pallas
+//! kernel path.
 //!
 //! Batched serving path: [`LinearOps::apply_batch`] applies one linear to
 //! a whole batch of query vectors. The quantized implementation decodes a
@@ -16,11 +18,12 @@
 //! coordinator's continuous batching loop.
 
 use crate::linalg::gemm::{sdot, sgemm_bt, sgemm_bt_fused};
-use crate::linalg::KronOrtho;
+use crate::linalg::{make_transform, Transform};
 use crate::model::quantized::QuantizedModel;
 use crate::model::transformer::{gelu, layernorm_rows, KvCache, Transformer};
 use crate::quant::grid::GridMap;
 use crate::quant::packed::QuantizedLayer;
+use std::sync::Arc;
 
 /// Linear-layer slots within a block, forward order.
 pub const SLOTS: [&str; 6] = ["attn.wq", "attn.wk", "attn.wv", "attn.wo", "mlp.w1", "mlp.w2"];
@@ -98,110 +101,17 @@ impl<'a> LinearOps for FpLinears<'a> {
     }
 }
 
-/// f32 Kronecker operator regenerated from a seed (KronOrtho → f32).
-pub struct KronF32 {
-    p: usize,
-    q: usize,
-    left: Vec<f32>,
-    right: Vec<f32>,
-    perm: Vec<usize>,
-}
-
-impl KronF32 {
-    pub fn from_seed(seed: u64, n: usize, permute: bool) -> KronF32 {
-        let k = KronOrtho::from_seed_with(seed, n, permute);
-        KronF32 {
-            p: k.p,
-            q: k.q,
-            left: k.left.data.iter().map(|&x| x as f32).collect(),
-            right: k.right.data.iter().map(|&x| x as f32).collect(),
-            perm: k.perm,
-        }
-    }
-
-    /// y = V x (see `KronOrtho::apply_vec`).
-    pub fn apply(&self, x: &[f32], y: &mut [f32], scratch: &mut [f32]) {
-        let (p, q) = (self.p, self.q);
-        let n = p * q;
-        debug_assert_eq!(x.len(), n);
-        // z = P x (into y as temp)
-        for i in 0..n {
-            y[i] = x[self.perm[i]];
-        }
-        // scratch = L Z
-        scratch[..n].fill(0.0);
-        for a in 0..p {
-            let lrow = &self.left[a * p..(a + 1) * p];
-            let srow = &mut scratch[a * q..(a + 1) * q];
-            for (aa, &lv) in lrow.iter().enumerate() {
-                if lv == 0.0 {
-                    continue;
-                }
-                let zrow = &y[aa * q..(aa + 1) * q];
-                for b in 0..q {
-                    srow[b] += lv * zrow[b];
-                }
-            }
-        }
-        // y = (L Z) Rᵀ
-        for a in 0..p {
-            let srow = &scratch[a * q..(a + 1) * q];
-            let yrow = &mut y[a * q..(a + 1) * q];
-            for b in 0..q {
-                yrow[b] = sdot(srow, &self.right[b * q..(b + 1) * q]);
-            }
-        }
-    }
-
-    /// y = Vᵀ x.
-    pub fn apply_t(&self, x: &[f32], y: &mut [f32], scratch: &mut [f32]) {
-        let (p, q) = (self.p, self.q);
-        let n = p * q;
-        // scratch = Lᵀ X
-        scratch[..n].fill(0.0);
-        for a in 0..p {
-            let srow_range = a * q..(a + 1) * q;
-            for aa in 0..p {
-                let lv = self.left[aa * p + a];
-                if lv == 0.0 {
-                    continue;
-                }
-                let xrow = &x[aa * q..(aa + 1) * q];
-                let srow = &mut scratch[srow_range.clone()];
-                for b in 0..q {
-                    srow[b] += lv * xrow[b];
-                }
-            }
-        }
-        // z = (Lᵀ X) R → then un-permute into y
-        let mut zrow = vec![0.0f32; q];
-        for a in 0..p {
-            zrow.fill(0.0);
-            let srow = &scratch[a * q..(a + 1) * q];
-            for (bb, &sv) in srow.iter().enumerate() {
-                if sv == 0.0 {
-                    continue;
-                }
-                let rrow = &self.right[bb * q..(bb + 1) * q];
-                for b in 0..q {
-                    zrow[b] += sv * rrow[b];
-                }
-            }
-            for b in 0..q {
-                y[self.perm[a * q + b]] = zrow[b];
-            }
-        }
-    }
-}
-
-/// One quantized linear layer prepared for the native hot path.
+/// One quantized linear layer prepared for the native hot path. The input
+/// and output incoherence operators are regenerated from the layer's
+/// `(transform, seed)` record through [`make_transform`] — the engine is
+/// backend-agnostic.
 pub struct QuantLinear {
     pub layer: QuantizedLayer,
     rowscale: Vec<f32>,
     rowoff: Vec<f32>,
     dinv: Option<Vec<f32>>,
-    vkron: Option<KronF32>,
-    ukron: Option<KronF32>,
+    vtr: Option<Arc<dyn Transform>>,
+    utr: Option<Arc<dyn Transform>>,
 }
 
 impl QuantLinear {
@@ -226,10 +136,11 @@ impl QuantLinear {
             .d_tilde
             .as_ref()
             .map(|d| d.iter().map(|&x| (1.0 / x) as f32).collect());
-        let (vkron, ukron) = if layer.post.incoherent {
+        let (vtr, utr) = if layer.post.incoherent {
+            let kind = layer.post.transform;
             (
-                Some(KronF32::from_seed(layer.post.v_seed, layer.n, layer.post.permute)),
-                Some(KronF32::from_seed(layer.post.u_seed, layer.m, layer.post.permute)),
+                Some(make_transform(kind, layer.post.v_seed, layer.n, layer.post.permute)),
+                Some(make_transform(kind, layer.post.u_seed, layer.m, layer.post.permute)),
             )
         } else {
             (None, None)
@@ -239,14 +150,14 @@ impl QuantLinear {
             rowscale,
             rowoff,
             dinv,
-            vkron,
-            ukron,
+            vtr,
+            utr,
         }
     }
 
-    /// y = Ŵ x without materializing Ŵ: optional diag + Kronecker on the
-    /// input, fused unpack-dequant matvec over packed codes, optional
-    /// Kronecker on the output.
+    /// y = Ŵ x without materializing Ŵ: optional diag + incoherence
+    /// transform on the input, fused unpack-dequant matvec over packed
+    /// codes, optional inverse transform on the output.
     pub fn apply(&self, x: &[f32], y: &mut [f32], scratch: &mut Scratch) {
         let (m, n) = (self.layer.m, self.layer.n);
         debug_assert_eq!(x.len(), n);
@@ -259,15 +170,15 @@ impl QuantLinear {
                 *xi *= di;
             }
         }
-        if let Some(v) = &self.vkron {
+        if let Some(v) = &self.vtr {
             let (tmp, rest) = scratch.b.split_at_mut(n);
-            v.apply(&scratch.a[..n], tmp, &mut rest[..n]);
+            v.forward_f32(&scratch.a[..n], tmp, &mut rest[..n]);
             scratch.a[..n].copy_from_slice(tmp);
         }
         let xbuf = &scratch.a[..n];
         let xsum: f32 = xbuf.iter().sum();
         // Fused unpack + matvec over the packed bitstream.
-        let target: &mut [f32] = if self.ukron.is_some() {
+        let target: &mut [f32] = if self.utr.is_some() {
             &mut scratch.b[..m]
         } else {
             y
@@ -276,9 +187,9 @@ impl QuantLinear {
         for i in 0..m {
             target[i] = self.rowscale[i] * target[i] + self.rowoff[i] * xsum;
         }
-        if let Some(u) = &self.ukron {
+        if let Some(u) = &self.utr {
             let (bbuf, rest) = scratch.b.split_at_mut(m);
-            u.apply_t(bbuf, y, &mut rest[..m]);
+            u.inverse_f32(bbuf, y, &mut rest[..m]);
         }
     }
 
@@ -395,11 +306,11 @@ impl QuantLinear {
     }
 
     /// Batched `ys[b] = Ŵ xs[b]` without materializing Ŵ: per-query input
-    /// transform (diag + V Kronecker), then the fused tile kernel — each
-    /// [`BATCH_TILE`]-row tile of packed codes is decoded *once* and
-    /// multiplied against every query — then per-query grid affine and
-    /// output Kronecker. Equivalent to calling [`apply`](Self::apply) per
-    /// query, at a fraction of the unpack cost.
+    /// transform (diag + forward incoherence transform), then the fused
+    /// tile kernel — each [`BATCH_TILE`]-row tile of packed codes is
+    /// decoded *once* and multiplied against every query — then per-query
+    /// grid affine and inverse output transform. Equivalent to calling
+    /// [`apply`](Self::apply) per query, at a fraction of the unpack cost.
     pub fn apply_batch(&self, xs: &[f32], batch: usize, ys: &mut [f32], s: &mut BatchScratch) {
         let (m, n) = (self.layer.m, self.layer.n);
         debug_assert_eq!(xs.len(), batch * n);
@@ -417,11 +328,11 @@ impl QuantLinear {
                 }
             }
         }
-        if let Some(v) = &self.vkron {
+        if let Some(v) = &self.vtr {
             let (tmp, rest) = s.tmp.split_at_mut(n);
             for b in 0..batch {
                 let row = &mut s.xt[b * n..(b + 1) * n];
-                v.apply(&row[..], tmp, &mut rest[..n]);
+                v.forward_f32(&row[..], tmp, &mut rest[..n]);
                 row.copy_from_slice(tmp);
             }
         }
@@ -429,7 +340,7 @@ impl QuantLinear {
             s.xsum[b] = s.xt[b * n..(b + 1) * n].iter().sum();
         }
         {
-            let raw: &mut [f32] = if self.ukron.is_some() {
+            let raw: &mut [f32] = if self.utr.is_some() {
                 &mut s.raw[..batch * m]
             } else {
                 &mut ys[..]
@@ -451,9 +362,9 @@ impl QuantLinear {
                 }
             }
         }
-        if let Some(u) = &self.ukron {
+        if let Some(u) = &self.utr {
             for b in 0..batch {
-                u.apply_t(
+                u.inverse_f32(
                     &s.raw[b * m..(b + 1) * m],
                     &mut ys[b * m..(b + 1) * m],
                     &mut s.tmp[..m],
@@ -494,7 +405,7 @@ impl Default for Scratch {
 }
 
 /// Reusable buffers for the batched fused kernel (transformed inputs,
-/// raw code-space products, per-query input sums, Kronecker scratch).
+/// raw code-space products, per-query input sums, transform scratch).
 pub struct BatchScratch {
     xt: Vec<f32>,
     raw: Vec<f32>,
@@ -860,7 +771,11 @@ mod tests {
     #[test]
     fn quant_linears_match_dequantized_weights() {
         // The fused on-the-fly path must equal dequantize-then-f32-matvec.
-        for processing in [Processing::baseline(), Processing::incoherent()] {
+        for processing in [
+            Processing::baseline(),
+            Processing::incoherent(),
+            Processing::incoherent_with(crate::linalg::TransformKind::Hadamard),
+        ] {
             let m = tiny();
             let qm = quantize_model(&m, 4, processing);
             let qlin = QuantLinears::from_model(&qm).unwrap();
@@ -908,16 +823,21 @@ mod tests {
 
     #[test]
     fn batched_kernel_matches_dequantized_dense() {
-        // Satellite acceptance: the fused batch kernel must match
-        // `QuantizedLayer::dequantize()` + dense matmul at 2/3/4 bits and
-        // batch sizes 1 and 17 (batch and rows both non-multiples of the
-        // tile). m=40 makes the last tile ragged; n=52 keeps 3-bit rows
-        // off byte boundaries (generic decode path).
+        // The fused batch kernel must match `QuantizedLayer::dequantize()`
+        // + dense matmul at 2/3/4 bits and batch sizes 1 and 17 (batch
+        // and rows both non-multiples of the tile), for every transform
+        // backend. m=40 makes the last tile ragged; n=52 keeps 3-bit rows
+        // off byte boundaries (generic decode path) and is a non-power-
+        // of-two size for the Hadamard block decomposition.
         let (m, n) = (40usize, 52usize);
         let mut rng = crate::util::rng::Rng::new(21);
         let w = Mat::from_fn(m, n, |_, _| rng.uniform(-0.5, 0.5));
         let h = random_hessian(&mut rng, n, n / 4, 1e-2);
-        for processing in [Processing::baseline(), Processing::incoherent()] {
+        for processing in [
+            Processing::baseline(),
+            Processing::incoherent(),
+            Processing::incoherent_with(crate::linalg::TransformKind::Hadamard),
+        ] {
             for bits in [2u32, 3, 4] {
                 let out = quantize_layer(
                     &w,
@@ -1045,24 +965,30 @@ mod tests {
     }
 
     #[test]
-    fn kron_f32_matches_f64() {
-        let n = 24;
-        let k64 = KronOrtho::from_seed(9, n);
-        let k32 = KronF32::from_seed(9, n, true);
-        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).cos()).collect();
-        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
-        let want = k64.apply_vec(&x64);
-        let mut got = vec![0.0f32; n];
-        let mut scratch = vec![0.0f32; n];
-        k32.apply(&x, &mut got, &mut scratch);
-        for (a, b) in got.iter().zip(&want) {
-            assert!((*a as f64 - b).abs() < 1e-5);
+    fn hadamard_decode_close_to_dequantized() {
+        // End-to-end decode with the RHT backend matches its dequantized
+        // reference model, just like the Kron path above.
+        let m = tiny();
+        let qm = quantize_model(
+            &m,
+            4,
+            Processing::incoherent_with(crate::linalg::TransformKind::Hadamard),
+        );
+        for l in &qm.layers {
+            assert_eq!(l.post.transform, crate::linalg::TransformKind::Hadamard);
         }
-        // apply_t inverts
-        let mut back = vec![0.0f32; n];
-        k32.apply_t(&got.clone(), &mut back, &mut scratch);
-        for (a, b) in back.iter().zip(&x) {
-            assert!((a - b).abs() < 1e-5);
+        let qlin = QuantLinears::from_model(&qm).unwrap();
+        let mut md = tiny();
+        qm.apply_to(&mut md).unwrap();
+        let fp = FpLinears { model: &md };
+        let mut c1 = m.new_cache();
+        let mut c2 = m.new_cache();
+        for &t in &[1u32, 20, 33] {
+            let a = decode_step_with(&m, &qlin, &mut c1, t);
+            let b = decode_step_with(&md, &fp, &mut c2, t);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 5e-2, "{x} vs {y}");
+            }
         }
     }
 }

@@ -152,8 +152,23 @@ fn qparam_input(qm: &QuantizedModel, ispec: &crate::runtime::InputSpec) -> crate
             };
             Input::F32(v, vec![n])
         }
-        "vL" | "vR" | "vperm" => kron_input(layer.post.v_seed, n, layer.post.permute, &ispec.field),
-        "uL" | "uR" | "uperm" => kron_input(layer.post.u_seed, m, layer.post.permute, &ispec.field),
+        "vL" | "vR" | "vperm" | "uL" | "uR" | "uperm" => {
+            // The AOT Pallas artifacts are compiled around the Kronecker
+            // factor structure; layers quantized with another transform
+            // backend must use the native engine.
+            anyhow::ensure!(
+                layer.post.transform == crate::linalg::TransformKind::Kron,
+                "PJRT artifact path supports the kron transform only; layer '{}' \
+                 was quantized with '{}' (serve it with the native engine)",
+                layer.name,
+                layer.post.transform
+            );
+            if ispec.field.starts_with('v') {
+                kron_input(layer.post.v_seed, n, layer.post.permute, &ispec.field)
+            } else {
+                kron_input(layer.post.u_seed, m, layer.post.permute, &ispec.field)
+            }
+        }
         other => anyhow::bail!("unknown qparam field '{other}'"),
     })
 }

@@ -9,10 +9,16 @@
 //! plus the serving-side `batch` sweep: tokens/sec of the batched fused
 //! packed-weight engine vs batch size {1, 4, 16, 64} at 2/3/4 bits,
 //! against the repeated single-vector `QuantLinear::apply` baseline
-//! (EXPERIMENTS.md §Perf records the results).
+//! (EXPERIMENTS.md §Perf records the results),
 //!
-//! `quip sweep <rho|calib|greedy|batch> [--model s0] [--bits 2]`.
-//! `batch` is artifact-free (synthetic checkpoint) so it runs anywhere.
+//! plus the `transform` sweep: the incoherence-transform backends (kron
+//! vs hadamard) compared end-to-end — quantize → save a v2 `.qz` → load →
+//! decode — on proxy loss and per-token transform cost at 2/3/4 bits
+//! (EXPERIMENTS.md §Perf 3).
+//!
+//! `quip sweep <rho|calib|greedy|batch|transform> [--model s0] [--bits 2]`.
+//! `batch` and `transform` are artifact-free (synthetic checkpoint) so
+//! they run anywhere, including CI.
 
 use super::env::{f2, write_result, Env, TablePrinter};
 use crate::coordinator::pipeline::{quantize_model, PipelineConfig};
@@ -27,7 +33,10 @@ pub fn run_sweep(which: &str, args: &Args) -> crate::Result<()> {
         "calib" => sweep_calib(args),
         "greedy" => sweep_greedy(args),
         "batch" => sweep_batch(args),
-        other => anyhow::bail!("unknown sweep '{other}' (rho, calib, greedy, batch)"),
+        "transform" => sweep_transform(args),
+        other => {
+            anyhow::bail!("unknown sweep '{other}' (rho, calib, greedy, batch, transform)")
+        }
     }
 }
 
@@ -280,6 +289,166 @@ fn sweep_batch(args: &Args) -> crate::Result<()> {
         out.set("speedup_at_16_mean", Json::Num(mean16));
     }
     write_result("sweep_batch", &out)?;
+    Ok(())
+}
+
+/// Incoherence-transform backend sweep: kron vs hadamard, end-to-end.
+/// For each (bits, transform) cell the model is quantized (LDLQ + IncP),
+/// written to a v2 `.qz`, loaded back, and decoded through the native
+/// engine — so the cell numbers cover the whole artifact lifecycle. Two
+/// metrics per cell: total proxy loss (quantization quality; QuIP#'s
+/// claim is hadamard ≤ kron) and the per-token cost of the forward +
+/// inverse transform applies on the decode hot path (the RHT's O(n log n)
+/// butterfly vs the Kronecker's O(n(p+q)) multiplies). Artifact-free.
+fn sweep_transform(args: &Args) -> crate::Result<()> {
+    use crate::coordinator::generate::{generate, GenParams};
+    use crate::engine::native::QuantLinears;
+    use crate::linalg::{make_transform, Mat, TransformKind};
+    use crate::model::quantized::QuantizedModel;
+    use crate::model::weights::Checkpoint;
+    use crate::model::ModelConfig;
+    use crate::quant::packed::QuantizedLayer;
+    use crate::quant::{quantize_layer, Method};
+    use crate::util::testkit::random_hessian;
+    use std::hint::black_box;
+
+    let fast = args.flag("fast");
+    let cfg = crate::model::ModelConfig::by_name(&args.opt_or("model", "s0"))
+        .unwrap_or_else(|_| ModelConfig::sized("s0", 64, 2, 4, 256));
+    let ck = Checkpoint::random(&cfg, 7);
+    let model = Transformer::from_checkpoint(&ck)?;
+    let bits_list: &[u32] = if fast { &[2] } else { &[2, 3, 4] };
+    let reps = if fast { 50usize } else { 300 };
+    let max_tokens = if fast { 4 } else { 16 };
+    println!(
+        "transform sweep — {} (d={} L={}), LDLQ + IncP, quantize → save v2 .qz → \
+         load → decode per cell\n",
+        cfg.name, cfg.d_model, cfg.n_layers
+    );
+
+    let dir = std::env::temp_dir().join("quip_sweep_transform");
+    std::fs::create_dir_all(&dir)?;
+    let mut tp = TablePrinter::new(&[
+        "bits",
+        "transform",
+        "proxy loss↓",
+        "transform µs/tok↓",
+        "decode ms/tok↓",
+    ]);
+    let mut out = Json::obj();
+    let mut proxy_at_2 = std::collections::HashMap::new();
+    for &bits in bits_list {
+        for kind in [TransformKind::Kron, TransformKind::Hadamard] {
+            // Quantize every linear with this backend.
+            let mut rng = crate::util::rng::Rng::new(3);
+            let mut layers = Vec::new();
+            let mut proxy_total = 0.0f64;
+            for spec in cfg.linear_specs() {
+                let wdata = model.get_weight(&spec.name)?;
+                let w = Mat {
+                    rows: spec.out_dim,
+                    cols: spec.in_dim,
+                    data: wdata.iter().map(|&x| x as f64).collect(),
+                };
+                let h = random_hessian(&mut rng, spec.in_dim, 8, 1e-2);
+                let lq = quantize_layer(
+                    &w,
+                    &h,
+                    &QuantConfig {
+                        bits,
+                        method: Method::Ldlq,
+                        processing: Processing::incoherent_with(kind),
+                        ..Default::default()
+                    },
+                    5,
+                );
+                proxy_total += lq.proxy_loss;
+                layers.push(QuantizedLayer::from_codes(&spec.name, &lq.codes, bits, lq.post));
+            }
+            let qm = QuantizedModel {
+                config: cfg.clone(),
+                bits,
+                recipe: format!("ldlq+incp-{kind}"),
+                layers,
+            };
+            // Full artifact lifecycle: save v2 → load → decode.
+            let path = dir.join(format!("{}_q{bits}_{kind}.qz", cfg.name));
+            qm.save(&path)?;
+            let loaded = QuantizedModel::load(&path)?;
+            anyhow::ensure!(
+                loaded.layers.iter().all(|l| l.post.transform == kind),
+                "loaded artifact lost the transform kind"
+            );
+            let qlin = QuantLinears::from_model(&loaded)?;
+            let params = GenParams {
+                max_tokens,
+                ..Default::default()
+            };
+            let gen = generate(&model, &qlin, &[1, 5, 9], &params);
+            anyhow::ensure!(
+                !gen.tokens.is_empty(),
+                "decode produced no tokens ({kind} @ {bits} bits)"
+            );
+            let decode_ms_tok = gen.decode_seconds * 1e3 / gen.tokens.len().max(1) as f64;
+
+            // Per-token transform cost: one decode token applies each
+            // linear's forward V (n) and inverse U (m) exactly once.
+            let mut pairs = Vec::new();
+            for l in &loaded.layers {
+                if l.post.incoherent {
+                    pairs.push((
+                        make_transform(l.post.transform, l.post.v_seed, l.n, l.post.permute),
+                        make_transform(l.post.transform, l.post.u_seed, l.m, l.post.permute),
+                        l.n,
+                        l.m,
+                    ));
+                }
+            }
+            let maxd = pairs.iter().map(|&(_, _, n, m)| n.max(m)).max().unwrap_or(1);
+            let mut xbuf: Vec<f32> = (0..maxd).map(|i| (i as f32 * 0.37).sin()).collect();
+            let mut ybuf = vec![0.0f32; maxd];
+            let mut scratch = vec![0.0f32; maxd];
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                for (v, u, n, m) in &pairs {
+                    // One decode token: forward V on the input side,
+                    // inverse U on the output side.
+                    v.forward_f32(&xbuf[..*n], &mut ybuf[..*n], &mut scratch[..*n]);
+                    u.inverse_f32(&ybuf[..*m], &mut xbuf[..*m], &mut scratch[..*m]);
+                }
+            }
+            black_box(&xbuf);
+            let us_per_tok = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+
+            if bits == 2 {
+                proxy_at_2.insert(kind.name(), proxy_total);
+            }
+            tp.row(vec![
+                bits.to_string(),
+                kind.to_string(),
+                format!("{proxy_total:.4}"),
+                f2(us_per_tok),
+                format!("{decode_ms_tok:.3}"),
+            ]);
+            let mut o = Json::obj();
+            o.set("proxy_loss", Json::Num(proxy_total));
+            o.set("transform_us_per_token", Json::Num(us_per_tok));
+            o.set("decode_ms_per_token", Json::Num(decode_ms_tok));
+            out.set(&format!("q{bits}_{kind}"), o);
+        }
+    }
+    tp.print();
+    if let (Some(&had), Some(&kr)) = (proxy_at_2.get("hadamard"), proxy_at_2.get("kron")) {
+        println!(
+            "\n2-bit proxy loss: hadamard {had:.4} vs kron {kr:.4} ({})",
+            if had <= kr {
+                "hadamard ≤ kron, matching QuIP#'s incoherence bound"
+            } else {
+                "kron ahead on this draw — rerun with another seed/model"
+            }
+        );
+    }
+    write_result("sweep_transform", &out)?;
     Ok(())
 }
 

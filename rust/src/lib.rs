@@ -25,7 +25,11 @@
 //!
 //! Rounding algorithms are [`quant::Rounder`] impls resolved by name (any
 //! CLI alias works: `quip`, `gptq`, `allbal`, …) through the
-//! [`quant::RounderRegistry`]; configuration comes from
+//! [`quant::RounderRegistry`]; the incoherence step is a pluggable
+//! [`linalg::Transform`] backend selected by [`linalg::TransformKind`] —
+//! the paper's Kronecker operator (`kron`, default) or QuIP#'s randomized
+//! Hadamard transform (`hadamard`, O(n log n) with tighter incoherence
+//! concentration); configuration comes from
 //! [`quant::QuantConfig::builder`]:
 //!
 //! ```no_run
@@ -58,7 +62,13 @@
 //!
 //! New rounding algorithms implement [`quant::Rounder`] (see the
 //! `quant::rounder` module docs for the `wg`/`h` preprocessed-basis
-//! contract) and register under a name — no core dispatch changes.
+//! contract) and register under a name — no core dispatch changes. New
+//! incoherence operators implement [`linalg::Transform`] (seed-only
+//! serialization, f64 matrix conjugation + f32 fused inference applies)
+//! and gain a [`linalg::TransformKind`] code; quantizer, `.qz` artifacts
+//! (v2 records the kind per layer, with a CRC-32 footer; v1 loads as
+//! `kron`) and the native engine pick them up through
+//! [`linalg::make_transform`].
 
 pub mod util;
 pub mod linalg;

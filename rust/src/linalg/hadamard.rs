@@ -1,0 +1,502 @@
+//! Randomized fast Walsh–Hadamard transform (RHT) — the QuIP# incoherence
+//! backend: V = B · D · P with P a seeded random permutation, D a seeded
+//! random ±1 diagonal, and B the orthonormal fast Walsh–Hadamard butterfly
+//! applied blockwise.
+//!
+//! For n a power of two, B is the single n-point transform at O(n log n).
+//! Other sizes decompose along the binary expansion of n — e.g.
+//! 13 = 8 + 4 + 1 gives blocks H₈ ⊕ H₄ ⊕ H₁ — each block an independent
+//! orthonormal FWHT, so B stays orthogonal. A single blocked round would
+//! leave the trailing small blocks (down to H₁) barely mixed, so for
+//! non-power-of-two sizes a **second** seeded round is composed on top:
+//! V = B·D₂·P₂ · B·D₁·P₁. The second permutation scatters every block's
+//! output across all blocks before the second butterfly, restoring global
+//! mixing; power-of-two sizes keep the single cheap round.
+//!
+//! Compared to the Kronecker operator the RHT needs no stored factor
+//! matrices at all (signs and permutations regenerate from the seed) and
+//! its butterfly is pure add/sub — the per-token inference cost drops from
+//! O(n(p+q)) multiplies to O(n log n) additions plus one scale.
+
+use super::matrix::Mat;
+use super::transform::{Transform, TransformKind};
+use crate::util::rng::Rng;
+
+/// In-place orthonormal FWHT on a power-of-two-length slice:
+/// x ← H x / √len. H is symmetric and H² = len·I, so this same routine is
+/// its own inverse. Generated for f64 (quantization) and f32 (inference).
+macro_rules! fwht_impl {
+    ($name:ident, $t:ty) => {
+        fn $name(x: &mut [$t]) {
+            let n = x.len();
+            debug_assert!(n.is_power_of_two());
+            if n == 1 {
+                return;
+            }
+            let mut h = 1;
+            while h < n {
+                let mut i = 0;
+                while i < n {
+                    for j in i..i + h {
+                        let (a, b) = (x[j], x[j + h]);
+                        x[j] = a + b;
+                        x[j + h] = a - b;
+                    }
+                    i += 2 * h;
+                }
+                h *= 2;
+            }
+            let scale = 1.0 / (n as $t).sqrt();
+            for v in x.iter_mut() {
+                *v *= scale;
+            }
+        }
+    };
+}
+
+fwht_impl!(fwht_f64, f64);
+fwht_impl!(fwht_f32, f32);
+
+/// Power-of-two blocks covering 0..n, descending (binary expansion of n).
+fn blocks_of(n: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut off = 0;
+    let mut rem = n;
+    while rem > 0 {
+        let len = 1usize << (usize::BITS - 1 - rem.leading_zeros());
+        out.push((off, len));
+        off += len;
+        rem -= len;
+    }
+    out
+}
+
+/// One seeded round of randomization: a ±1 diagonal and a permutation.
+struct Round {
+    /// Random ±1 diagonal, stored once as f32 (exact in both widths).
+    sign: Vec<f32>,
+    /// (P x)_i = x[perm[i]]. Identity in round 1 when the Table-5
+    /// `permute` ablation is off; always random in round 2 (structural).
+    perm: Vec<usize>,
+}
+
+impl Round {
+    fn new(sign_rng: &mut Rng, perm_rng: &mut Rng, n: usize, permute: bool) -> Round {
+        let sign = (0..n)
+            .map(|_| if sign_rng.coin(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let perm = if permute {
+            perm_rng.permutation(n)
+        } else {
+            (0..n).collect()
+        };
+        Round { sign, perm }
+    }
+
+    fn inv_perm(&self) -> Vec<usize> {
+        let mut inv = vec![0usize; self.perm.len()];
+        for (i, &pi) in self.perm.iter().enumerate() {
+            inv[pi] = i;
+        }
+        inv
+    }
+}
+
+/// A seeded randomized Hadamard operator on ℝⁿ.
+pub struct RandomizedHadamard {
+    n: usize,
+    seed: u64,
+    r1: Round,
+    /// Second mixing round; present only for non-power-of-two n (see the
+    /// module docs).
+    r2: Option<Round>,
+    /// (offset, len) of each power-of-two butterfly block.
+    blocks: Vec<(usize, usize)>,
+}
+
+impl RandomizedHadamard {
+    /// Deterministically construct from a seed; `permute` toggles the
+    /// random permutations (the Table-5 ablation, matching
+    /// [`super::kron::KronOrtho::from_seed_with`]).
+    pub fn from_seed_with(seed: u64, n: usize, permute: bool) -> RandomizedHadamard {
+        assert!(n > 0);
+        let root = Rng::new(seed);
+        let blocks = blocks_of(n);
+        let r1 = Round::new(&mut root.fork(1), &mut root.fork(3), n, permute);
+        // The second round's permutation is what scatters block outputs
+        // across blocks — it is structural to the non-power-of-two
+        // decomposition, not part of the Table-5 permutation heuristic,
+        // so it stays on even when `permute` is ablated off.
+        let r2 = if blocks.len() > 1 {
+            Some(Round::new(&mut root.fork(2), &mut root.fork(4), n, true))
+        } else {
+            None
+        };
+        RandomizedHadamard {
+            n,
+            seed,
+            r1,
+            r2,
+            blocks,
+        }
+    }
+
+    /// All butterfly blocks in place on a vector.
+    fn fwht_vec64(&self, z: &mut [f64]) {
+        for &(off, len) in &self.blocks {
+            fwht_f64(&mut z[off..off + len]);
+        }
+    }
+
+    fn fwht_vec32(&self, z: &mut [f32]) {
+        for &(off, len) in &self.blocks {
+            fwht_f32(&mut z[off..off + len]);
+        }
+    }
+
+    /// All butterfly blocks across the rows of a matrix (columns ride
+    /// along elementwise) — the one shared implementation both matrix
+    /// directions use.
+    fn fwht_rows(&self, z: &mut Mat) {
+        let c = z.cols;
+        for &(off, len) in &self.blocks {
+            let mut h = 1;
+            while h < len {
+                let mut i = off;
+                while i < off + len {
+                    for j in i..i + h {
+                        for k in 0..c {
+                            let a = z[(j, k)];
+                            let b = z[(j + h, k)];
+                            z[(j, k)] = a + b;
+                            z[(j + h, k)] = a - b;
+                        }
+                    }
+                    i += 2 * h;
+                }
+                h *= 2;
+            }
+            let scale = 1.0 / (len as f64).sqrt();
+            for i in off..off + len {
+                for v in z.row_mut(i) {
+                    *v *= scale;
+                }
+            }
+        }
+    }
+
+    /// One forward round on a matrix: B · D · P applied to the rows.
+    fn round_mat_fwd(&self, m: &Mat, r: &Round) -> Mat {
+        let mut z = m.permute_rows(&r.perm);
+        for i in 0..self.n {
+            let s = r.sign[i] as f64;
+            for v in z.row_mut(i) {
+                *v *= s;
+            }
+        }
+        self.fwht_rows(&mut z);
+        z
+    }
+
+    /// One inverse round on a matrix: Pᵀ · D · B applied to the rows.
+    fn round_mat_inv(&self, m: &Mat, r: &Round) -> Mat {
+        let mut t = m.clone();
+        self.fwht_rows(&mut t);
+        for i in 0..self.n {
+            let s = r.sign[i] as f64;
+            for v in t.row_mut(i) {
+                *v *= s;
+            }
+        }
+        t.permute_rows(&r.inv_perm())
+    }
+}
+
+impl Transform for RandomizedHadamard {
+    fn kind(&self) -> TransformKind {
+        TransformKind::Hadamard
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn forward_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut z = vec![0.0; self.n];
+        for i in 0..self.n {
+            z[i] = x[self.r1.perm[i]] * self.r1.sign[i] as f64;
+        }
+        self.fwht_vec64(&mut z);
+        if let Some(r2) = &self.r2 {
+            let mut t = vec![0.0; self.n];
+            for i in 0..self.n {
+                t[i] = z[r2.perm[i]] * r2.sign[i] as f64;
+            }
+            self.fwht_vec64(&mut t);
+            return t;
+        }
+        z
+    }
+
+    fn inverse_vec(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.n);
+        // Each round's inverse is Pᵀ D B (B and D are symmetric); undo
+        // round 2 first, then round 1.
+        let mut t = y.to_vec();
+        if let Some(r2) = &self.r2 {
+            self.fwht_vec64(&mut t);
+            let mut u = vec![0.0; self.n];
+            for i in 0..self.n {
+                u[r2.perm[i]] = t[i] * r2.sign[i] as f64;
+            }
+            t = u;
+        }
+        self.fwht_vec64(&mut t);
+        let mut x = vec![0.0; self.n];
+        for i in 0..self.n {
+            x[self.r1.perm[i]] = t[i] * self.r1.sign[i] as f64;
+        }
+        x
+    }
+
+    fn forward_mat_left(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows, self.n);
+        let mut z = self.round_mat_fwd(m, &self.r1);
+        if let Some(r2) = &self.r2 {
+            z = self.round_mat_fwd(&z, r2);
+        }
+        z
+    }
+
+    fn inverse_mat_left(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows, self.n);
+        let mut t = m.clone();
+        if let Some(r2) = &self.r2 {
+            t = self.round_mat_inv(&t, r2);
+        }
+        self.round_mat_inv(&t, &self.r1)
+    }
+
+    fn forward_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            y[i] = x[self.r1.perm[i]] * self.r1.sign[i];
+        }
+        self.fwht_vec32(y);
+        if let Some(r2) = &self.r2 {
+            let t = &mut scratch[..self.n];
+            for i in 0..self.n {
+                t[i] = y[r2.perm[i]] * r2.sign[i];
+            }
+            self.fwht_vec32(t);
+            y.copy_from_slice(t);
+        }
+    }
+
+    fn inverse_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert_eq!(y.len(), self.n);
+        let t = &mut scratch[..self.n];
+        t.copy_from_slice(x);
+        if let Some(r2) = &self.r2 {
+            // Undo round 2: scatter B x through P₂ᵀ D₂ into y, then pull
+            // back into the scratch for the round-1 inverse.
+            self.fwht_vec32(t);
+            for i in 0..self.n {
+                y[r2.perm[i]] = t[i] * r2.sign[i];
+            }
+            t.copy_from_slice(y);
+        }
+        self.fwht_vec32(t);
+        for i in 0..self.n {
+            y[self.r1.perm[i]] = t[i] * self.r1.sign[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::max_abs_diff;
+    use crate::util::testkit::{propcheck, random_mat, random_spd};
+
+    #[test]
+    fn blocks_cover_binary_expansion() {
+        assert_eq!(blocks_of(16), vec![(0, 16)]);
+        assert_eq!(blocks_of(13), vec![(0, 8), (8, 4), (12, 1)]);
+        assert_eq!(blocks_of(1), vec![(0, 1)]);
+        assert_eq!(blocks_of(24), vec![(0, 16), (16, 8)]);
+        for n in 1..=64 {
+            let b = blocks_of(n);
+            assert_eq!(b.iter().map(|&(_, l)| l).sum::<usize>(), n);
+            assert!(b.iter().all(|&(_, l)| l.is_power_of_two()));
+        }
+    }
+
+    #[test]
+    fn second_round_only_for_non_powers_of_two() {
+        assert!(RandomizedHadamard::from_seed_with(1, 64, true).r2.is_none());
+        assert!(RandomizedHadamard::from_seed_with(1, 1, true).r2.is_none());
+        assert!(RandomizedHadamard::from_seed_with(1, 13, true).r2.is_some());
+        assert!(RandomizedHadamard::from_seed_with(1, 24, true).r2.is_some());
+    }
+
+    #[test]
+    fn fwht_matches_dense_hadamard() {
+        // H₄ explicitly: Sylvester rows dotted with x, over √4.
+        let mut x = [1.0f64, 2.0, 3.0, 4.0];
+        fwht_f64(&mut x);
+        let want = [5.0, -1.0, -2.0, 0.0];
+        for (a, b) in x.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fwht_is_involutive() {
+        propcheck("fwht-involution", 10, |rng| {
+            let k = 1usize << rng.below(7);
+            let x: Vec<f64> = (0..k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut y = x.clone();
+            fwht_f64(&mut y);
+            fwht_f64(&mut y);
+            for (a, b) in y.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-10, "len={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn dense_is_orthogonal_including_non_powers_of_two() {
+        for n in [2usize, 7, 8, 12, 13, 24, 57] {
+            let t = RandomizedHadamard::from_seed_with(123, n, true);
+            let v = t.dense();
+            let vtv = v.transpose().matmul_naive(&v);
+            assert!(max_abs_diff(&vtv, &Mat::eye(n)) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn inverse_inverts_forward() {
+        propcheck("rht-involution", 10, |rng| {
+            let n = 1 + rng.below(40);
+            let t = RandomizedHadamard::from_seed_with(7, n, true);
+            let x: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let back = t.inverse_vec(&t.forward_vec(&x));
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-10, "n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn mat_left_matches_dense() {
+        for n in [13usize, 16] {
+            // 13 exercises the two-round block path, 16 the single round.
+            let t = RandomizedHadamard::from_seed_with(9, n, true);
+            let m = random_mat(&mut crate::util::rng::Rng::new(2), n, 5);
+            let fast = t.forward_mat_left(&m);
+            let dense = t.dense().matmul_naive(&m);
+            assert!(max_abs_diff(&fast, &dense) < 1e-9, "n={n}");
+            let fast_t = t.inverse_mat_left(&m);
+            let dense_t = t.dense().transpose().matmul_naive(&m);
+            assert!(max_abs_diff(&fast_t, &dense_t) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn conj_preserves_trace_and_inverts() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        for n in [16usize, 13] {
+            let h = random_spd(&mut rng, n, 1e-3);
+            let t = RandomizedHadamard::from_seed_with(3, n, true);
+            let hc = t.conj_sym(&h);
+            assert!((hc.trace() - h.trace()).abs() < 1e-8, "n={n}");
+            let back = t.conj_sym_t(&hc);
+            assert!(max_abs_diff(&back, &h) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn f32_matches_f64_and_inverts() {
+        for n in [24usize, 13, 64] {
+            let t = RandomizedHadamard::from_seed_with(9, n, true);
+            let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).cos()).collect();
+            let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+            let want = t.forward_vec(&x64);
+            let mut got = vec![0.0f32; n];
+            let mut scratch = vec![0.0f32; n];
+            t.forward_f32(&x, &mut got, &mut scratch);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((*a as f64 - b).abs() < 1e-5, "n={n}");
+            }
+            let mut back = vec![0.0f32; n];
+            t.inverse_f32(&got.clone(), &mut back, &mut scratch);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-5, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_reproducible_and_permutation_toggles() {
+        let a = RandomizedHadamard::from_seed_with(42, 24, true);
+        let b = RandomizedHadamard::from_seed_with(42, 24, true);
+        assert_eq!(a.r1.perm, b.r1.perm);
+        assert_eq!(a.r1.sign, b.r1.sign);
+        let c = RandomizedHadamard::from_seed_with(42, 24, false);
+        assert_eq!(c.r1.perm, (0..24).collect::<Vec<_>>());
+        // The second round's block-scattering permutation is structural
+        // and survives the permute ablation.
+        assert_ne!(c.r2.as_ref().unwrap().perm, (0..24).collect::<Vec<_>>());
+        let d = RandomizedHadamard::from_seed_with(43, 24, true);
+        assert_ne!(a.r1.sign, d.r1.sign);
+    }
+
+    #[test]
+    fn spreads_outliers_at_power_of_two() {
+        // The incoherence property: a spike e_j maps to a vector whose
+        // entries all have magnitude exactly 1/√n when n is one block.
+        let n = 64;
+        let t = RandomizedHadamard::from_seed_with(5, n, true);
+        let mut x = vec![0.0; n];
+        x[17] = 1.0;
+        let y = t.forward_vec(&x);
+        let maxabs = y.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        assert!((maxabs - 1.0 / 8.0).abs() < 1e-12, "max {maxabs}");
+    }
+
+    #[test]
+    fn spreads_outliers_at_non_power_of_two() {
+        // With a single blocked round, sizes with a trailing H₁ block
+        // (13, 57) leave exactly one basis vector per seed completely
+        // unmixed (|Ve_j| has a 1.0 entry). The second round scatters
+        // those; an unmixed column survives only when the spike lands in
+        // H₁ in *both* rounds (probability ~1/n per seed). Over three
+        // seeds the single-round construction would score exactly one
+        // near-1 column each; the two-round one almost never does.
+        for n in [13usize, 24, 57] {
+            let mut near_one = 0usize;
+            for seed in [5u64, 6, 7] {
+                let t = RandomizedHadamard::from_seed_with(seed, n, true);
+                let mut x = vec![0.0; n];
+                for j in 0..n {
+                    x[j] = 1.0;
+                    let y = t.forward_vec(&x);
+                    let maxabs = y.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+                    if maxabs > 0.99 {
+                        near_one += 1;
+                    }
+                    x[j] = 0.0;
+                }
+            }
+            assert!(near_one <= 2, "n={n}: {near_one} unmixed basis vectors over 3 seeds");
+        }
+    }
+}

@@ -8,6 +8,8 @@
 
 use super::matrix::Mat;
 use super::orthogonal::{balanced_factor, haar_orthogonal};
+use super::transform::{Transform, TransformKind};
+use crate::linalg::gemm::sdot as sdot32;
 use crate::util::rng::Rng;
 
 /// A seeded fast orthogonal operator on ℝⁿ.
@@ -260,11 +262,156 @@ impl KronOrtho {
     }
 }
 
+/// The Kronecker backend of the incoherence-transform subsystem: a
+/// [`KronOrtho`] plus f32 copies of its factors for the allocation-free
+/// inference applies required by the [`Transform`] contract.
+pub struct KronTransform {
+    k: KronOrtho,
+    seed: u64,
+    left32: Vec<f32>,
+    right32: Vec<f32>,
+}
+
+impl KronTransform {
+    pub fn from_seed_with(seed: u64, n: usize, permute: bool) -> KronTransform {
+        let k = KronOrtho::from_seed_with(seed, n, permute);
+        let left32 = k.left.data.iter().map(|&x| x as f32).collect();
+        let right32 = k.right.data.iter().map(|&x| x as f32).collect();
+        KronTransform {
+            k,
+            seed,
+            left32,
+            right32,
+        }
+    }
+}
+
+impl Transform for KronTransform {
+    fn kind(&self) -> TransformKind {
+        TransformKind::Kron
+    }
+
+    fn n(&self) -> usize {
+        self.k.n
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn forward_vec(&self, x: &[f64]) -> Vec<f64> {
+        self.k.apply_vec(x)
+    }
+
+    fn inverse_vec(&self, y: &[f64]) -> Vec<f64> {
+        self.k.apply_t_vec(y)
+    }
+
+    fn forward_mat_left(&self, m: &Mat) -> Mat {
+        self.k.apply_mat_left(m)
+    }
+
+    fn inverse_mat_left(&self, m: &Mat) -> Mat {
+        self.k.apply_t_mat_left(m)
+    }
+
+    /// y = V x (f32 twin of [`KronOrtho::apply_vec`]); `scratch` holds the
+    /// intermediate L Z product.
+    fn forward_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut [f32]) {
+        let (p, q) = (self.k.p, self.k.q);
+        let n = p * q;
+        debug_assert_eq!(x.len(), n);
+        // z = P x (into y as temp)
+        for i in 0..n {
+            y[i] = x[self.k.perm[i]];
+        }
+        // scratch = L Z
+        scratch[..n].fill(0.0);
+        for a in 0..p {
+            let lrow = &self.left32[a * p..(a + 1) * p];
+            let srow = &mut scratch[a * q..(a + 1) * q];
+            for (aa, &lv) in lrow.iter().enumerate() {
+                if lv == 0.0 {
+                    continue;
+                }
+                let zrow = &y[aa * q..(aa + 1) * q];
+                for b in 0..q {
+                    srow[b] += lv * zrow[b];
+                }
+            }
+        }
+        // y = (L Z) Rᵀ
+        for a in 0..p {
+            let srow = &scratch[a * q..(a + 1) * q];
+            let yrow = &mut y[a * q..(a + 1) * q];
+            for b in 0..q {
+                yrow[b] = sdot32(srow, &self.right32[b * q..(b + 1) * q]);
+            }
+        }
+    }
+
+    /// y = Vᵀ x.
+    fn inverse_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut [f32]) {
+        let (p, q) = (self.k.p, self.k.q);
+        let n = p * q;
+        debug_assert_eq!(x.len(), n);
+        // scratch = Lᵀ X
+        scratch[..n].fill(0.0);
+        for a in 0..p {
+            let srow_range = a * q..(a + 1) * q;
+            for aa in 0..p {
+                let lv = self.left32[aa * p + a];
+                if lv == 0.0 {
+                    continue;
+                }
+                let xrow = &x[aa * q..(aa + 1) * q];
+                let srow = &mut scratch[srow_range.clone()];
+                for b in 0..q {
+                    srow[b] += lv * xrow[b];
+                }
+            }
+        }
+        // y = Pᵀ ((Lᵀ X) R): the contract guarantees only n floats of
+        // scratch (all holding Lᵀ X), so accumulate each output element
+        // directly and scatter through the permutation.
+        for a in 0..p {
+            let srow = &scratch[a * q..(a + 1) * q];
+            for b in 0..q {
+                let mut acc = 0.0f32;
+                for (bb, &sv) in srow.iter().enumerate() {
+                    acc += sv * self.right32[bb * q + b];
+                }
+                y[self.k.perm[a * q + b]] = acc;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::matrix::max_abs_diff;
     use crate::util::testkit::random_spd;
+
+    #[test]
+    fn kron_transform_f32_matches_f64_and_inverts() {
+        let n = 24;
+        let t = KronTransform::from_seed_with(9, n, true);
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).cos()).collect();
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let want = t.forward_vec(&x64);
+        let mut got = vec![0.0f32; n];
+        let mut scratch = vec![0.0f32; n];
+        t.forward_f32(&x, &mut got, &mut scratch);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((*a as f64 - b).abs() < 1e-5);
+        }
+        let mut back = vec![0.0f32; n];
+        t.inverse_f32(&got.clone(), &mut back, &mut scratch);
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
 
     #[test]
     fn dense_is_orthogonal() {

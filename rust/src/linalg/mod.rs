@@ -3,8 +3,10 @@
 //! Everything QuIP's math needs: a row-major `f64` matrix, blocked and
 //! threaded GEMM, the UDUᵀ ("reverse LDL") factorization the paper's
 //! Eq. (4) uses, Cholesky, a cyclic-Jacobi symmetric eigensolver,
-//! Householder QR, Haar-random orthogonal sampling, Kronecker-structured
-//! fast orthogonal multiplication, and triangular solves.
+//! Householder QR, Haar-random orthogonal sampling, the pluggable
+//! incoherence-transform subsystem ([`transform::Transform`]) with its
+//! Kronecker ([`kron`]) and randomized-Hadamard ([`hadamard`]) backends,
+//! and triangular solves.
 
 pub mod matrix;
 pub mod gemm;
@@ -13,7 +15,11 @@ pub mod chol;
 pub mod eigen;
 pub mod orthogonal;
 pub mod kron;
+pub mod hadamard;
+pub mod transform;
 pub mod solve;
 
+pub use hadamard::RandomizedHadamard;
+pub use kron::{KronOrtho, KronTransform};
 pub use matrix::Mat;
-pub use kron::KronOrtho;
+pub use transform::{make_transform, Transform, TransformKind};

@@ -1,0 +1,236 @@
+//! The incoherence-transform subsystem: a pluggable family of seeded fast
+//! orthogonal operators used to conjugate W and H (QuIP §4.1–4.2).
+//!
+//! Every backend is a [`Transform`]: an orthogonal operator V on ℝⁿ that is
+//! (a) regenerated exactly from a 64-bit seed — artifacts store only
+//! `(kind, seed)`, never the matrix — and (b) applicable in o(n²) to
+//! vectors, matrix rows/columns, and f32 inference activations. Two
+//! backends ship:
+//!
+//! * [`TransformKind::Kron`] — the paper's two-factor Kronecker operator
+//!   `(L ⊗ R)·P` with Haar-orthogonal factors ([`super::kron`]),
+//!   O(n(p+q)) per apply.
+//! * [`TransformKind::Hadamard`] — the randomized Hadamard transform of
+//!   QuIP# (Tseng et al., 2024): `B·D·P` with B a (block) fast
+//!   Walsh–Hadamard butterfly, D a random ±1 diagonal and P a random
+//!   permutation ([`super::hadamard`]), O(n log n) per apply with strictly
+//!   better incoherence concentration.
+//!
+//! "No transform" is not a kind: `Processing::incoherent == false` (and
+//! `PostState::incoherent == false`) means the conjugation step is skipped
+//! entirely, which is what the CLI's `--transform none` sets.
+
+use super::matrix::Mat;
+use std::sync::Arc;
+
+/// Which incoherence-transform backend generated (or should generate) the
+/// operator. Serialized by [`TransformKind::as_u8`] into `.qz` v2 layer
+/// records; v1 artifacts predate the enum and are implicitly `Kron`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransformKind {
+    /// Two-factor Kronecker orthogonal (QuIP §4.2).
+    Kron,
+    /// Randomized (block) fast Walsh–Hadamard transform (QuIP#).
+    Hadamard,
+}
+
+impl TransformKind {
+    /// Wire code for artifact serialization (stable across versions).
+    pub fn as_u8(self) -> u8 {
+        match self {
+            TransformKind::Kron => 0,
+            TransformKind::Hadamard => 1,
+        }
+    }
+
+    /// Inverse of [`as_u8`](Self::as_u8); errors on unknown codes so a
+    /// corrupt artifact fails loudly instead of decoding garbage.
+    pub fn from_u8(code: u8) -> crate::Result<TransformKind> {
+        Ok(match code {
+            0 => TransformKind::Kron,
+            1 => TransformKind::Hadamard,
+            other => anyhow::bail!("unknown transform kind code {other}"),
+        })
+    }
+
+    /// Parse a CLI name. `none` is not a kind (it disables the
+    /// incoherence step) and is rejected here — callers handle it before
+    /// parsing.
+    pub fn parse(s: &str) -> crate::Result<TransformKind> {
+        Ok(match s {
+            "kron" | "kronecker" => TransformKind::Kron,
+            "hadamard" | "rht" => TransformKind::Hadamard,
+            other => anyhow::bail!(
+                "unknown transform '{other}' (expected kron, hadamard or none)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransformKind::Kron => "kron",
+            TransformKind::Hadamard => "hadamard",
+        }
+    }
+}
+
+impl std::fmt::Display for TransformKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A seeded fast orthogonal operator V on ℝⁿ. Object-safe: the engine and
+/// the quantizer hold `Arc<dyn Transform>` and never know the backend.
+///
+/// Orthogonality is the contract: `inverse_*` must apply Vᵀ = V⁻¹, so
+/// `inverse(forward(x)) == x` to rounding error, and conjugation preserves
+/// the proxy quadratic form tr(ΔHΔᵀ).
+///
+/// The f32 methods are the inference hot path: they must not allocate.
+/// `scratch` is caller-provided with `len >= self.n()`; `x` and `y` must
+/// not alias.
+pub trait Transform: Send + Sync {
+    fn kind(&self) -> TransformKind;
+    fn n(&self) -> usize;
+    fn seed(&self) -> u64;
+
+    /// y = V x.
+    fn forward_vec(&self, x: &[f64]) -> Vec<f64>;
+    /// x = Vᵀ y.
+    fn inverse_vec(&self, y: &[f64]) -> Vec<f64>;
+    /// V M (M is n×c).
+    fn forward_mat_left(&self, m: &Mat) -> Mat;
+    /// Vᵀ M (M is n×c).
+    fn inverse_mat_left(&self, m: &Mat) -> Mat;
+
+    /// y = V x in f32 (fused inference apply).
+    fn forward_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut [f32]);
+    /// y = Vᵀ x in f32.
+    fn inverse_f32(&self, x: &[f32], y: &mut [f32], scratch: &mut [f32]);
+
+    /// M Vᵀ (M is c×n).
+    fn forward_mat_right_t(&self, m: &Mat) -> Mat {
+        self.forward_mat_left(&m.transpose()).transpose()
+    }
+
+    /// M V (M is c×n).
+    fn inverse_mat_right(&self, m: &Mat) -> Mat {
+        self.inverse_mat_left(&m.transpose()).transpose()
+    }
+
+    /// V H Vᵀ (conjugation; H n×n).
+    fn conj_sym(&self, h: &Mat) -> Mat {
+        let vh = self.forward_mat_left(h);
+        self.forward_mat_left(&vh.transpose()).transpose()
+    }
+
+    /// Vᵀ H V.
+    fn conj_sym_t(&self, h: &Mat) -> Mat {
+        let vth = self.inverse_mat_left(h);
+        self.inverse_mat_left(&vth.transpose()).transpose()
+    }
+
+    /// Materialize V as a dense n×n matrix (tests / diagnostics only).
+    fn dense(&self) -> Mat {
+        let n = self.n();
+        let mut v = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.forward_vec(&e);
+            v.set_col(j, &col);
+            e[j] = 0.0;
+        }
+        v
+    }
+}
+
+/// Construct a transform backend from its seed. The same
+/// `(kind, seed, n, permute)` always regenerates the same operator — this
+/// is what makes storing only `(kind, seed)` in artifacts possible.
+pub fn make_transform(
+    kind: TransformKind,
+    seed: u64,
+    n: usize,
+    permute: bool,
+) -> Arc<dyn Transform> {
+    match kind {
+        TransformKind::Kron => {
+            Arc::new(super::kron::KronTransform::from_seed_with(seed, n, permute))
+        }
+        TransformKind::Hadamard => {
+            Arc::new(super::hadamard::RandomizedHadamard::from_seed_with(seed, n, permute))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::max_abs_diff;
+
+    #[test]
+    fn kind_codes_roundtrip() {
+        for kind in [TransformKind::Kron, TransformKind::Hadamard] {
+            assert_eq!(TransformKind::from_u8(kind.as_u8()).unwrap(), kind);
+            assert_eq!(TransformKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(TransformKind::from_u8(9).is_err());
+        assert!(TransformKind::parse("none").is_err());
+        assert!(TransformKind::parse("dct").is_err());
+        assert_eq!(TransformKind::parse("rht").unwrap(), TransformKind::Hadamard);
+        assert_eq!(TransformKind::parse("kronecker").unwrap(), TransformKind::Kron);
+    }
+
+    #[test]
+    fn every_backend_is_orthogonal_and_involutive() {
+        for kind in [TransformKind::Kron, TransformKind::Hadamard] {
+            for n in [6usize, 12, 13, 16, 24] {
+                let t = make_transform(kind, 11, n, true);
+                assert_eq!(t.kind(), kind);
+                assert_eq!(t.n(), n);
+                let v = t.dense();
+                let vtv = v.transpose().matmul_naive(&v);
+                assert!(
+                    max_abs_diff(&vtv, &Mat::eye(n)) < 1e-9,
+                    "{kind} n={n} not orthogonal"
+                );
+                let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+                let back = t.inverse_vec(&t.forward_vec(&x));
+                for (a, b) in back.iter().zip(&x) {
+                    assert!((a - b).abs() < 1e-10, "{kind} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conjugation_preserves_trace_for_both_backends() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let h = crate::util::testkit::random_spd(&mut rng, 12, 1e-3);
+        for kind in [TransformKind::Kron, TransformKind::Hadamard] {
+            let t = make_transform(kind, 7, 12, true);
+            let hc = t.conj_sym(&h);
+            assert!((hc.trace() - h.trace()).abs() < 1e-8, "{kind}");
+            let back = t.conj_sym_t(&hc);
+            assert!(max_abs_diff(&back, &h) < 1e-8, "{kind}");
+        }
+    }
+
+    #[test]
+    fn mat_side_defaults_match_dense_for_both_backends() {
+        for kind in [TransformKind::Kron, TransformKind::Hadamard] {
+            let n = 12;
+            let t = make_transform(kind, 5, n, true);
+            let d = t.dense();
+            let m = Mat::from_fn(4, n, |i, j| ((i * n + j) as f64 * 0.13).cos());
+            let fast = t.forward_mat_right_t(&m);
+            let dense = m.matmul_naive(&d.transpose());
+            assert!(max_abs_diff(&fast, &dense) < 1e-9, "{kind} MVᵀ");
+            let fast2 = t.inverse_mat_right(&m);
+            let dense2 = m.matmul_naive(&d);
+            assert!(max_abs_diff(&fast2, &dense2) < 1e-9, "{kind} MV");
+        }
+    }
+}

@@ -1,23 +1,29 @@
 //! `quip` — the command-line entry point.
 //!
 //! ```text
-//! quip quantize --model s1 --bits 2 [--method ldlq] [--baseline] [--out path.qz]
+//! quip quantize --model s1 --bits 2 [--method ldlq] [--transform kron]
+//!               [--baseline] [--out path.qz]
 //! quip eval     --model s1 [--qz path.qz]
 //! quip gen      --model s1 [--qz path.qz] --prompt "3,17,9" --max-tokens 32
 //! quip serve    --model s1 [--qz path.qz] [--addr 127.0.0.1:7077]
 //! quip pjrt     --model s0 [--bits 2]          # AOT artifact smoke-run
 //! quip table    <1|2|3|4|5|6|14|15|16|optq|all> [--fast]
 //! quip figure   <1|2|3|4|5|all> [--fast]
-//! quip sweep    <rho|calib|greedy|batch> [--fast]   # batch = serving
-//!               tokens/sec vs batch size, artifact-free
+//! quip sweep    <rho|calib|greedy|batch|transform> [--fast]
+//!               # batch = serving tokens/sec vs batch size;
+//!               # transform = kron vs hadamard incoherence backends;
+//!               # both artifact-free
 //! quip info
 //! ```
 //!
 //! `--method` accepts any `RounderRegistry` name or alias: `near[est]`,
 //! `stoch[astic]`, `ldlq`/`quip`, `ldlq-rg`/`quip-rg`, `greedy`/`allbal`,
-//! `optq`/`gptq`, `alg5`/`ldlbal_admm`. Flags are assembled into a
-//! `QuantConfig` with `QuantConfig::builder()` — `quant_config` below is
-//! the one place CLI names meet the quantization API.
+//! `optq`/`gptq`, `alg5`/`ldlbal_admm`. `--transform` picks the
+//! incoherence backend: `kron` (the paper's Kronecker operator, default),
+//! `hadamard` (the QuIP# randomized Hadamard transform), or `none`
+//! (skip the conjugation step). Flags are assembled into a `QuantConfig`
+//! with `QuantConfig::builder()` — `quant_config` below is the one place
+//! CLI names meet the quantization API.
 
 use quip::coordinator::server::{EngineKind, Server, ServerConfig};
 use quip::engine::native::{FpLinears, QuantLinears};
@@ -58,12 +64,18 @@ fn main() {
 }
 
 /// CLI flags → [`QuantConfig`], via the builder + rounder registry.
+/// `--transform {kron,hadamard,none}` selects the incoherence backend;
+/// `none` keeps the rest of IncP but skips the conjugation step.
 fn quant_config(args: &Args) -> quip::Result<QuantConfig> {
-    let processing = if args.flag("baseline") {
+    let mut processing = if args.flag("baseline") {
         Processing::baseline()
     } else {
         Processing::incoherent()
     };
+    match args.opt_or("transform", "kron").as_str() {
+        "none" => processing.incoherent = false,
+        name => processing.transform = quip::linalg::TransformKind::parse(name)?,
+    }
     QuantConfig::builder()
         .bits(args.opt_usize("bits", 2) as u32)
         .rounder(&args.opt_or("method", "ldlq"))
@@ -82,7 +94,11 @@ fn cmd_quantize(args: &Args) -> quip::Result<()> {
     println!(
         "quantizing {model} to {bits} bits with {} + {}",
         cfg.method.name(),
-        if cfg.processing.incoherent { "IncP" } else { "baseline" }
+        if cfg.processing.incoherent {
+            format!("IncP/{}", cfg.processing.transform)
+        } else {
+            "baseline".to_string()
+        }
     );
     let t0 = std::time::Instant::now();
     let (qm, proxy) = env.quantize(&model, cfg)?;
@@ -269,12 +285,16 @@ fn cmd_inspect(args: &Args) -> quip::Result<()> {
     println!("  quantized params: {total}");
     for l in qm.layers.iter().take(8) {
         println!(
-            "  {:<16} {:>4}x{:<4}  packed {:>7}B  incoherent={} rescale={} grid={}",
+            "  {:<16} {:>4}x{:<4}  packed {:>7}B  transform={} rescale={} grid={}",
             l.name,
             l.m,
             l.n,
             l.packed.len(),
-            l.post.incoherent,
+            if l.post.incoherent {
+                l.post.transform.name()
+            } else {
+                "none"
+            },
             l.post.d_tilde.is_some(),
             match &l.post.grid {
                 quip::quant::GridMap::PerRow { .. } => "per-row",

@@ -1,14 +1,31 @@
 //! Quantized model artifacts: the `.qz` container (config + per-layer
 //! packed codes) and application of dequantized weights onto a
 //! [`Transformer`] for evaluation.
+//!
+//! ## Container layout
+//!
+//! ```text
+//! v2 (current):  magic u32 | version=2 u32 | config json | bits u32 |
+//!                recipe str | layer count u32 | layers… | crc32 u32
+//! v1 (legacy):   magic u32 | version=1 u32 | …same, no crc footer
+//! ```
+//!
+//! v2 layer records carry the incoherence-transform kind
+//! ([`crate::linalg::TransformKind`]) after the `incoherent` flag; v1
+//! layers predate the transform subsystem and load as `Kron`. The v2
+//! trailing CRC-32 covers every preceding byte, so truncated or corrupted
+//! artifacts fail with a clean error before any layer parsing happens.
 
 use super::config::ModelConfig;
 use super::transformer::Transformer;
-use crate::quant::packed::QuantizedLayer;
+use crate::quant::packed::{FORMAT_V1, FORMAT_V2, QuantizedLayer};
 use crate::util::bytes::{Reader, Writer};
+use crate::util::crc32::crc32;
 use crate::util::json::Json;
 
 pub const QZ_MAGIC: u32 = 0x5A51_5051; // "QPQZ" LE-ish
+/// Current container version written by [`QuantizedModel::save`].
+pub const QZ_VERSION: u32 = FORMAT_V2;
 
 /// A fully quantized model: every linear layer's packed codes + metadata.
 pub struct QuantizedModel {
@@ -21,37 +38,90 @@ pub struct QuantizedModel {
 
 impl QuantizedModel {
     pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        let buf = self.to_bytes(QZ_VERSION);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, &buf)?;
+        Ok(())
+    }
+
+    /// Serialize into an in-memory container of the given version (v1 is
+    /// exposed so back-compat tests can author pre-subsystem artifacts).
+    ///
+    /// Panics if `version` is v1 and any layer uses a non-Kron transform
+    /// (see [`QuantizedLayer::serialize_version`]): the v1 layout has no
+    /// transform field, so writing such a model would silently reload as
+    /// Kron and dequantize to garbage.
+    pub fn to_bytes(&self, version: u32) -> Vec<u8> {
+        assert!(version == FORMAT_V1 || version == FORMAT_V2);
         let mut w = Writer::new();
         w.u32(QZ_MAGIC);
-        w.u32(1);
+        w.u32(version);
         w.string(&self.config.to_json().to_string());
         w.u32(self.bits);
         w.string(&self.recipe);
         w.u32(self.layers.len() as u32);
         for l in &self.layers {
-            l.serialize(&mut w);
+            l.serialize_version(&mut w, version);
         }
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
+        if version >= FORMAT_V2 {
+            let crc = crc32(&w.buf);
+            w.u32(crc);
         }
-        std::fs::write(path, &w.buf)?;
-        Ok(())
+        w.buf
     }
 
     pub fn load(path: &std::path::Path) -> crate::Result<QuantizedModel> {
         let raw = std::fs::read(path)
             .map_err(|e| anyhow::anyhow!("reading quantized model {path:?}: {e}"))?;
-        let mut r = Reader::new(&raw);
+        Self::from_bytes(&raw)
+            .map_err(|e| anyhow::anyhow!("loading quantized model {path:?}: {e}"))
+    }
+
+    pub fn from_bytes(raw: &[u8]) -> crate::Result<QuantizedModel> {
+        anyhow::ensure!(raw.len() >= 8, "truncated .qz: {} bytes", raw.len());
+        let mut r = Reader::new(raw);
         anyhow::ensure!(r.u32()? == QZ_MAGIC, "bad .qz magic");
-        anyhow::ensure!(r.u32()? == 1, "unsupported .qz version");
+        let version = r.u32()?;
+        anyhow::ensure!(
+            version == FORMAT_V1 || version == FORMAT_V2,
+            "unsupported .qz version {version} (this build reads v1-v{QZ_VERSION})"
+        );
+        let body = if version >= FORMAT_V2 {
+            // Verify the CRC footer before parsing anything: a truncated
+            // or bit-flipped file fails here with a clean error.
+            anyhow::ensure!(raw.len() >= 12, "truncated .qz: no CRC footer");
+            let (payload, tail) = raw.split_at(raw.len() - 4);
+            let stored = u32::from_le_bytes(tail.try_into().unwrap());
+            let actual = crc32(payload);
+            anyhow::ensure!(
+                stored == actual,
+                "corrupt .qz artifact: CRC mismatch (stored {stored:08x}, \
+                 computed {actual:08x}) — file truncated or damaged"
+            );
+            payload
+        } else {
+            raw
+        };
+        let mut r = Reader::new(body);
+        r.pos = 8; // past magic + version, already validated
         let config = ModelConfig::from_json(&Json::parse(&r.string()?)?)?;
         let bits = r.u32()?;
         let recipe = r.string()?;
         let n = r.u32()? as usize;
-        let mut layers = Vec::with_capacity(n);
-        for _ in 0..n {
-            layers.push(QuantizedLayer::deserialize(&mut r)?);
+        let mut layers = Vec::new();
+        for i in 0..n {
+            layers.push(
+                QuantizedLayer::deserialize(&mut r, version)
+                    .map_err(|e| anyhow::anyhow!("layer {i}/{n}: {e}"))?,
+            );
         }
+        anyhow::ensure!(
+            r.remaining() == 0,
+            "corrupt .qz artifact: {} trailing bytes after {n} layers",
+            r.remaining()
+        );
         Ok(QuantizedModel {
             config,
             bits,
@@ -153,6 +223,90 @@ mod tests {
         let after = model.forward(&[1, 2, 3], None);
         assert_ne!(before, after);
         assert!(after.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn v1_container_still_loads() {
+        // Acceptance: a `.qz` written before the transform subsystem (v1
+        // layout, no transform byte, no CRC footer) must keep loading,
+        // with Kron implied on every layer.
+        let (qm, _) = quantize_tiny(2);
+        let v1 = qm.to_bytes(crate::quant::packed::FORMAT_V1);
+        let v2 = qm.to_bytes(crate::quant::packed::FORMAT_V2);
+        // v2 = v1 + one transform byte per layer + 4-byte CRC footer.
+        assert_eq!(v2.len(), v1.len() + qm.layers.len() + 4);
+        let loaded = QuantizedModel::from_bytes(&v1).unwrap();
+        assert_eq!(loaded.layers.len(), qm.layers.len());
+        for (a, b) in loaded.layers.iter().zip(&qm.layers) {
+            assert_eq!(a.post.transform, crate::linalg::TransformKind::Kron);
+            assert_eq!(a.dequantize().data, b.dequantize().data);
+        }
+    }
+
+    #[test]
+    fn corrupt_v2_container_is_clean_crc_error() {
+        let (qm, _) = quantize_tiny(2);
+        let good = qm.to_bytes(QZ_VERSION);
+        assert!(QuantizedModel::from_bytes(&good).is_ok());
+        // Flip one byte anywhere in the payload: CRC must catch it.
+        for at in [9usize, good.len() / 2, good.len() - 5] {
+            let mut bad = good.clone();
+            bad[at] ^= 0x10;
+            let err = QuantizedModel::from_bytes(&bad).unwrap_err().to_string();
+            assert!(err.contains("CRC"), "byte {at}: unexpected error: {err}");
+        }
+        // Truncations at every region: clean errors, never a panic.
+        for cut in [0usize, 4, 7, 11, good.len() / 3, good.len() - 1] {
+            assert!(
+                QuantizedModel::from_bytes(&good[..cut]).is_err(),
+                "cut={cut} should fail"
+            );
+        }
+        // Trailing garbage after a valid container: rejected (the CRC
+        // covers len-4 bytes, so appended bytes shift the footer).
+        let mut padded = good.clone();
+        padded.extend_from_slice(&[0u8; 16]);
+        assert!(QuantizedModel::from_bytes(&padded).is_err());
+    }
+
+    #[test]
+    fn hadamard_model_roundtrips_through_v2_container() {
+        let cfg = ModelConfig::sized("t", 32, 2, 4, 64);
+        let ck = Checkpoint::random(&cfg, 11);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut layers = Vec::new();
+        for spec in cfg.linear_specs() {
+            let wdata = model.get_weight(&spec.name).unwrap();
+            let w = Mat {
+                rows: spec.out_dim,
+                cols: spec.in_dim,
+                data: wdata.iter().map(|&x| x as f64).collect(),
+            };
+            let h = random_hessian(&mut rng, spec.in_dim, spec.in_dim / 4, 1e-3);
+            let qcfg = QuantConfig {
+                bits: 2,
+                method: Method::Ldlq,
+                processing: Processing::incoherent_with(crate::linalg::TransformKind::Hadamard),
+                ..Default::default()
+            };
+            let out = quantize_layer(&w, &h, &qcfg, 99);
+            layers.push(crate::quant::packed::QuantizedLayer::from_codes(
+                &spec.name, &out.codes, 2, out.post,
+            ));
+        }
+        let qm = QuantizedModel {
+            config: cfg,
+            bits: 2,
+            recipe: "ldlq+incp-rht".into(),
+            layers,
+        };
+        let bytes = qm.to_bytes(QZ_VERSION);
+        let loaded = QuantizedModel::from_bytes(&bytes).unwrap();
+        for (a, b) in loaded.layers.iter().zip(&qm.layers) {
+            assert_eq!(a.post.transform, crate::linalg::TransformKind::Hadamard);
+            assert_eq!(a.dequantize().data, b.dequantize().data);
+        }
     }
 
     #[test]

@@ -5,22 +5,29 @@
 //!   2. diagonal rescale: W ← W·D̃, H ← D̃⁻¹HD̃⁻¹ with
 //!      D̃ᵢ = Hᵢᵢ^{1/4}/‖W_{:,i}‖^{1/2} — the minimizer of
 //!      (Σᵢ Hᵢᵢ/dᵢ)(Σⱼ ‖W_{:,j}‖²dⱼ) over dᵢ = D̃ᵢ² (Supplement B.1)
-//!   3. incoherence: W ← U W Vᵀ, H ← V H Vᵀ with U, V seeded two-factor
-//!      Kronecker orthogonal operators (with random permutation, §4.2)
+//!   3. incoherence: W ← U W Vᵀ, H ← V H Vᵀ with U, V seeded fast
+//!      orthogonal operators from the transform subsystem — the paper's
+//!      two-factor Kronecker operator or the QuIP# randomized Hadamard
+//!      transform, selected by [`Processing::transform`]
+//!      (see [`crate::linalg::transform`])
 //!   4. quantization range: s = ρ‖W‖_F/√(mn) (Alg 1 line 6) and map to the
 //!      grid; baseline uses per-row min-max instead.
 //!
-//! Post-processing inverts in reverse order. Only *seeds* are stored for
-//! the orthogonal factors — they regenerate exactly (see `util::rng`).
+//! Post-processing inverts in reverse order. Only *seeds* (plus the
+//! transform kind) are stored for the orthogonal factors — they regenerate
+//! exactly (see `util::rng`).
 
 use super::grid::GridMap;
-use crate::linalg::{KronOrtho, Mat};
+use crate::linalg::{make_transform, Mat, TransformKind};
 
 /// Which processing steps to apply around the rounding core.
 #[derive(Clone, Debug)]
 pub struct Processing {
-    /// Conjugate by random Kronecker orthogonal matrices (step 3).
+    /// Conjugate by seeded random orthogonal operators (step 3).
     pub incoherent: bool,
+    /// Which fast orthogonal operator family to conjugate with. Ignored
+    /// when `incoherent` is off.
+    pub transform: TransformKind,
     /// Diagonal rescale (step 2).
     pub rescale: bool,
     /// ‖W‖_F-based symmetric global quantization range (step 4); when
@@ -40,6 +47,7 @@ impl Processing {
     pub fn baseline() -> Processing {
         Processing {
             incoherent: false,
+            transform: TransformKind::Kron,
             rescale: false,
             frob_range: false,
             permute: false,
@@ -48,15 +56,26 @@ impl Processing {
         }
     }
 
-    /// Full QuIP incoherence processing ("IncP").
+    /// Full QuIP incoherence processing ("IncP") with the paper's
+    /// Kronecker operator.
     pub fn incoherent() -> Processing {
         Processing {
             incoherent: true,
+            transform: TransformKind::Kron,
             rescale: true,
             frob_range: true,
             permute: true,
             alpha: 0.01,
             rho: 2.4,
+        }
+    }
+
+    /// Full IncP with an explicit transform backend (e.g. the QuIP#
+    /// randomized Hadamard transform).
+    pub fn incoherent_with(transform: TransformKind) -> Processing {
+        Processing {
+            transform,
+            ..Processing::incoherent()
         }
     }
 }
@@ -75,6 +94,9 @@ pub struct PostState {
     pub m: usize,
     pub n: usize,
     pub incoherent: bool,
+    /// Which transform family `u_seed`/`v_seed` regenerate. `.qz` v1
+    /// artifacts predate the field and deserialize as `Kron`.
+    pub transform: TransformKind,
     pub permute: bool,
     pub u_seed: u64,
     pub v_seed: u64,
@@ -152,14 +174,14 @@ pub fn preprocess(w: &Mat, h: &Mat, bits: u32, p: &Processing, seed: u64) -> Pre
         None
     };
 
-    // Step 3 — incoherence via seeded Kronecker orthogonal conjugation.
+    // Step 3 — incoherence via seeded fast orthogonal conjugation.
     let u_seed = seed ^ 0x5157_4950_5F55_5F31; // "QuIP_U_1"
     let v_seed = seed ^ 0x5157_4950_5F56_5F32; // "QuIP_V_2"
     if p.incoherent {
-        let u = KronOrtho::from_seed_with(u_seed, m, p.permute);
-        let v = KronOrtho::from_seed_with(v_seed, n, p.permute);
+        let u = make_transform(p.transform, u_seed, m, p.permute);
+        let v = make_transform(p.transform, v_seed, n, p.permute);
         // W ← U W Vᵀ
-        wp = v.apply_mat_right_t(&u.apply_mat_left(&wp));
+        wp = v.forward_mat_right_t(&u.forward_mat_left(&wp));
         // H ← V H Vᵀ
         hp = v.conj_sym(&hp).symmetrize();
     }
@@ -180,6 +202,7 @@ pub fn preprocess(w: &Mat, h: &Mat, bits: u32, p: &Processing, seed: u64) -> Pre
             m,
             n,
             incoherent: p.incoherent,
+            transform: p.transform,
             permute: p.permute,
             u_seed,
             v_seed,
@@ -194,10 +217,10 @@ pub fn preprocess(w: &Mat, h: &Mat, bits: u32, p: &Processing, seed: u64) -> Pre
 pub fn postprocess(codes: &Mat, post: &PostState) -> Mat {
     let mut w = post.grid.from_grid(codes);
     if post.incoherent {
-        let u = KronOrtho::from_seed_with(post.u_seed, post.m, post.permute);
-        let v = KronOrtho::from_seed_with(post.v_seed, post.n, post.permute);
+        let u = make_transform(post.transform, post.u_seed, post.m, post.permute);
+        let v = make_transform(post.transform, post.v_seed, post.n, post.permute);
         // W ← Uᵀ W V
-        w = v.apply_mat_right(&u.apply_t_mat_left(&w));
+        w = v.inverse_mat_right(&u.inverse_mat_left(&w));
     }
     if let Some(d) = &post.d_tilde {
         let inv: Vec<f64> = d.iter().map(|x| 1.0 / x).collect();
@@ -207,10 +230,17 @@ pub fn postprocess(codes: &Mat, post: &PostState) -> Mat {
 }
 
 impl PostState {
-    pub fn serialize(&self, w: &mut crate::util::bytes::Writer) {
+    /// Serialize in the given `.qz` format version (see
+    /// [`super::packed`]): v2 records the transform kind after the
+    /// `incoherent` flag; v1 predates the subsystem (Kron implied) and is
+    /// only written by tests pinning back-compat.
+    pub fn serialize(&self, w: &mut crate::util::bytes::Writer, version: u32) {
         w.u64(self.m as u64);
         w.u64(self.n as u64);
         w.u8(self.incoherent as u8);
+        if version >= super::packed::FORMAT_V2 {
+            w.u8(self.transform.as_u8());
+        }
         w.u8(self.permute as u8);
         w.u64(self.u_seed);
         w.u64(self.v_seed);
@@ -224,10 +254,18 @@ impl PostState {
         self.grid.serialize(w);
     }
 
-    pub fn deserialize(r: &mut crate::util::bytes::Reader) -> crate::Result<PostState> {
+    pub fn deserialize(
+        r: &mut crate::util::bytes::Reader,
+        version: u32,
+    ) -> crate::Result<PostState> {
         let m = r.u64()? as usize;
         let n = r.u64()? as usize;
         let incoherent = r.u8()? != 0;
+        let transform = if version >= super::packed::FORMAT_V2 {
+            TransformKind::from_u8(r.u8()?)?
+        } else {
+            TransformKind::Kron
+        };
         let permute = r.u8()? != 0;
         let u_seed = r.u64()?;
         let v_seed = r.u64()?;
@@ -237,6 +275,7 @@ impl PostState {
             m,
             n,
             incoherent,
+            transform,
             permute,
             u_seed,
             v_seed,
@@ -271,20 +310,24 @@ mod tests {
 
     #[test]
     fn full_incp_roundtrips_weights_without_rounding() {
-        propcheck("incp-roundtrip", 8, |rng| {
-            let m = 4 + rng.below(8);
-            let n = 6 + rng.below(10);
-            let w = random_mat(rng, m, n);
-            let h = random_hessian(rng, n, 3, 1e-3);
-            let p = Processing::incoherent();
-            let pre = preprocess(&w, &h, 8, &p, 0xBEEF);
-            // Feed the *continuous* grid values through post — must invert
-            // pre exactly (orthogonal + diagonal + affine are all inverted).
-            let back = postprocess(&pre.wg, &pre.post);
-            for (a, b) in back.data.iter().zip(&w.data) {
-                assert!((a - b).abs() < 1e-8, "{a} vs {b}");
-            }
-        });
+        for kind in [TransformKind::Kron, TransformKind::Hadamard] {
+            propcheck("incp-roundtrip", 8, |rng| {
+                let m = 4 + rng.below(8);
+                let n = 6 + rng.below(10);
+                let w = random_mat(rng, m, n);
+                let h = random_hessian(rng, n, 3, 1e-3);
+                let p = Processing::incoherent_with(kind);
+                let pre = preprocess(&w, &h, 8, &p, 0xBEEF);
+                assert_eq!(pre.post.transform, kind);
+                // Feed the *continuous* grid values through post — must
+                // invert pre exactly (orthogonal + diagonal + affine are
+                // all inverted).
+                let back = postprocess(&pre.wg, &pre.post);
+                for (a, b) in back.data.iter().zip(&w.data) {
+                    assert!((a - b).abs() < 1e-8, "{kind}: {a} vs {b}");
+                }
+            });
+        }
     }
 
     #[test]
@@ -295,7 +338,11 @@ mod tests {
             let (m, n) = (6, 12);
             let w = random_mat(rng, m, n);
             let h = random_hessian(rng, n, 4, 1e-2);
-            let mut p = Processing::incoherent();
+            let mut p = Processing::incoherent_with(if rng.coin(0.5) {
+                TransformKind::Kron
+            } else {
+                TransformKind::Hadamard
+            });
             p.rescale = false; // isolate the orthogonal step
             p.frob_range = true;
             let pre = preprocess(&w, &h, 4, &p, 7);
@@ -327,17 +374,19 @@ mod tests {
         w[(3, 7)] = 4.0; // outlier
         w[(11, 2)] = -5.0;
         let h = random_hessian(&mut rng, n, 6, 1e-3);
-        let mut p = Processing::incoherent();
-        p.rescale = false;
-        let pre = preprocess(&w, &h, 8, &p, 3);
-        // Recover processed-space W from continuous grid coords.
-        let w_proc = pre.post.grid.from_grid(&pre.wg);
-        assert!(
-            w_proc.max_abs() < w.max_abs() * 0.5,
-            "processed max {} vs original {}",
-            w_proc.max_abs(),
-            w.max_abs()
-        );
+        for kind in [TransformKind::Kron, TransformKind::Hadamard] {
+            let mut p = Processing::incoherent_with(kind);
+            p.rescale = false;
+            let pre = preprocess(&w, &h, 8, &p, 3);
+            // Recover processed-space W from continuous grid coords.
+            let w_proc = pre.post.grid.from_grid(&pre.wg);
+            assert!(
+                w_proc.max_abs() < w.max_abs() * 0.5,
+                "{kind}: processed max {} vs original {}",
+                w_proc.max_abs(),
+                w.max_abs()
+            );
+        }
     }
 
     #[test]
@@ -370,17 +419,42 @@ mod tests {
 
     #[test]
     fn poststate_serialization_roundtrip() {
+        use crate::quant::packed::FORMAT_V2;
         let mut rng = Rng::new(7);
         let w = random_mat(&mut rng, 6, 9);
         let h = random_hessian(&mut rng, 9, 3, 1e-2);
-        let pre = preprocess(&w, &h, 2, &Processing::incoherent(), 42);
+        for kind in [TransformKind::Kron, TransformKind::Hadamard] {
+            let pre = preprocess(&w, &h, 2, &Processing::incoherent_with(kind), 42);
+            let mut buf = crate::util::bytes::Writer::new();
+            pre.post.serialize(&mut buf, FORMAT_V2);
+            let mut r = crate::util::bytes::Reader::new(&buf.buf);
+            let post2 = PostState::deserialize(&mut r, FORMAT_V2).unwrap();
+            assert_eq!(post2.transform, kind);
+            let codes = Mat::from_fn(6, 9, |i, j| (((i + j) % 4) as f64).min(3.0));
+            let a = postprocess(&codes, &pre.post);
+            let b = postprocess(&codes, &post2);
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn v1_poststate_bytes_deserialize_as_kron() {
+        use crate::quant::packed::{FORMAT_V1, FORMAT_V2};
+        let mut rng = Rng::new(8);
+        let w = random_mat(&mut rng, 5, 8);
+        let h = random_hessian(&mut rng, 8, 3, 1e-2);
+        let pre = preprocess(&w, &h, 2, &Processing::incoherent(), 13);
+        // v1 layout omits the transform byte entirely.
         let mut buf = crate::util::bytes::Writer::new();
-        pre.post.serialize(&mut buf);
+        pre.post.serialize(&mut buf, FORMAT_V1);
+        let mut buf2 = crate::util::bytes::Writer::new();
+        pre.post.serialize(&mut buf2, FORMAT_V2);
+        assert_eq!(buf.buf.len() + 1, buf2.buf.len());
         let mut r = crate::util::bytes::Reader::new(&buf.buf);
-        let post2 = PostState::deserialize(&mut r).unwrap();
-        let codes = Mat::from_fn(6, 9, |i, j| (((i + j) % 4) as f64).min(3.0));
-        let a = postprocess(&codes, &pre.post);
-        let b = postprocess(&codes, &post2);
-        assert_eq!(a.data, b.data);
+        let post2 = PostState::deserialize(&mut r, FORMAT_V1).unwrap();
+        assert_eq!(post2.transform, TransformKind::Kron);
+        assert_eq!(r.remaining(), 0);
+        let codes = Mat::from_fn(5, 8, |i, j| ((i + j) % 4) as f64);
+        assert_eq!(postprocess(&codes, &pre.post).data, postprocess(&codes, &post2).data);
     }
 }

@@ -163,6 +163,15 @@ impl QuantConfigBuilder {
         self
     }
 
+    /// Select the incoherence-transform backend (CLI `--transform`).
+    /// Overrides whatever the current processing carries; disabling the
+    /// incoherence step entirely is `processing.incoherent = false`, not
+    /// a transform kind.
+    pub fn transform(mut self, kind: crate::linalg::TransformKind) -> Self {
+        self.cfg.processing.transform = kind;
+        self
+    }
+
     pub fn greedy_passes(mut self, passes: usize) -> Self {
         self.cfg.greedy_passes = passes;
         self
@@ -455,5 +464,40 @@ mod tests {
         let a = QuantConfig::builder().method(Method::LdlqRg).build().unwrap();
         let b = QuantConfig::builder().rounder("quip-rg").build().unwrap();
         assert_eq!(a.method, b.method);
+    }
+
+    #[test]
+    fn builder_selects_transform_backend() {
+        use crate::linalg::TransformKind;
+        let cfg = QuantConfig::builder().build().unwrap();
+        assert_eq!(cfg.processing.transform, TransformKind::Kron);
+        let cfg = QuantConfig::builder().transform(TransformKind::Hadamard).build().unwrap();
+        assert_eq!(cfg.processing.transform, TransformKind::Hadamard);
+        assert!(cfg.processing.incoherent);
+    }
+
+    #[test]
+    fn hadamard_pipeline_produces_valid_output_at_all_bits() {
+        use crate::linalg::TransformKind;
+        let (w, h) = setup(9, 8, 16);
+        for bits in [2u32, 3, 4] {
+            let out = quantize_layer(
+                &w,
+                &h,
+                &QuantConfig {
+                    bits,
+                    method: Method::Ldlq,
+                    processing: Processing::incoherent_with(TransformKind::Hadamard),
+                    ..Default::default()
+                },
+                42,
+            );
+            assert!(out.proxy_loss.is_finite() && out.proxy_loss >= 0.0);
+            let top = crate::quant::grid::levels(bits) as f64;
+            for &c in &out.codes.data {
+                assert!(c >= 0.0 && c <= top && c == c.round(), "bits={bits}: {c}");
+            }
+            assert_eq!(out.post.transform, TransformKind::Hadamard);
+        }
     }
 }

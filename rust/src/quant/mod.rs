@@ -5,10 +5,14 @@
 //!
 //! Public API shape: rounding algorithms are [`Rounder`] impls resolved by
 //! name through the [`RounderRegistry`] (see [`rounder`] for the trait
-//! contract); per-layer configuration is built with
-//! [`QuantConfig::builder`]; [`quantize_layer_with`] drives one layer
-//! through preprocess → round → postprocess. [`quantize_layer`] is the
-//! legacy `Method`-keyed shim kept for transition-era call sites.
+//! contract); the incoherence step is a pluggable transform backend
+//! ([`TransformKind`]: the paper's Kronecker operator or the QuIP#
+//! randomized Hadamard transform, selected via
+//! [`Processing::incoherent_with`] / `QuantConfigBuilder::transform`);
+//! per-layer configuration is built with [`QuantConfig::builder`];
+//! [`quantize_layer_with`] drives one layer through preprocess → round →
+//! postprocess. [`quantize_layer`] is the legacy `Method`-keyed shim kept
+//! for transition-era call sites.
 
 pub mod grid;
 pub mod rounding;
@@ -23,6 +27,7 @@ pub mod rounder;
 pub mod method;
 pub mod packed;
 
+pub use crate::linalg::TransformKind;
 pub use grid::GridMap;
 pub use incoherence::{PostState, Processing};
 pub use method::{

@@ -9,6 +9,13 @@ use super::incoherence::PostState;
 use crate::linalg::Mat;
 use crate::util::bytes::{Reader, Writer};
 
+/// `.qz` wire-format versions. v1 is the seed format (Kron transform
+/// implied); v2 adds the per-layer transform kind and the container-level
+/// CRC32 footer (see [`crate::model::quantized`]). Layers always write
+/// the current version; readers accept both.
+pub const FORMAT_V1: u32 = 1;
+pub const FORMAT_V2: u32 = 2;
+
 /// Pack `codes` (each < 2^bits) into an LSB-first bitstream.
 pub fn pack_codes(codes: &[u8], bits: u32) -> Vec<u8> {
     assert!((1..=8).contains(&bits));
@@ -122,24 +129,52 @@ impl QuantizedLayer {
         w.buf.len()
     }
 
+    /// Serialize in the current format ([`FORMAT_V2`]).
     pub fn serialize(&self, w: &mut Writer) {
+        self.serialize_version(w, FORMAT_V2);
+    }
+
+    /// Serialize in an explicit format version. v1 exists so tests can
+    /// pin that pre-subsystem artifacts still load; it cannot represent
+    /// non-Kron transforms (no transform field), so writing one is a
+    /// refusal here rather than silent corruption at reload.
+    pub fn serialize_version(&self, w: &mut Writer, version: u32) {
+        assert!(
+            version >= FORMAT_V2
+                || !self.post.incoherent
+                || self.post.transform == crate::linalg::TransformKind::Kron,
+            "layer '{}' uses the {} transform, which the v1 .qz layout cannot represent",
+            self.name,
+            self.post.transform
+        );
         w.string(&self.name);
         w.u32(self.bits);
         w.u64(self.m as u64);
         w.u64(self.n as u64);
         w.u64(self.packed.len() as u64);
         w.bytes(&self.packed);
-        self.post.serialize(w);
+        self.post.serialize(w, version);
     }
 
-    pub fn deserialize(r: &mut Reader) -> crate::Result<QuantizedLayer> {
+    pub fn deserialize(r: &mut Reader, version: u32) -> crate::Result<QuantizedLayer> {
         let name = r.string()?;
         let bits = r.u32()?;
+        anyhow::ensure!((1..=8).contains(&bits), "corrupt layer '{name}': {bits} bits");
         let m = r.u64()? as usize;
         let n = r.u64()? as usize;
         let plen = r.u64()? as usize;
+        // Checked arithmetic: corrupt v1 files have no CRC shield, so a
+        // garbage m/n must not wrap into a passing bound.
+        let need = m
+            .checked_mul(n)
+            .and_then(|mn| mn.checked_mul(bits as usize))
+            .map(|b| b.div_ceil(8));
+        anyhow::ensure!(
+            plen <= r.remaining() && need.is_some_and(|nb| plen >= nb),
+            "corrupt layer '{name}': {plen}-byte code block for {m}x{n} @ {bits} bits"
+        );
         let packed = r.bytes(plen)?.to_vec();
-        let post = PostState::deserialize(r)?;
+        let post = PostState::deserialize(r, version)?;
         Ok(QuantizedLayer {
             name,
             bits,
@@ -206,25 +241,120 @@ mod tests {
 
     #[test]
     fn layer_serialization_roundtrip() {
+        use crate::linalg::TransformKind;
         let mut rng = Rng::new(4);
         let w = random_mat(&mut rng, 6, 12);
         let h = random_hessian(&mut rng, 12, 4, 1e-2);
-        let pre = preprocess(&w, &h, 2, &Processing::incoherent(), 9);
-        let codes = crate::quant::ldlq::ldlq(
+        for kind in [TransformKind::Kron, TransformKind::Hadamard] {
+            let pre = preprocess(&w, &h, 2, &Processing::incoherent_with(kind), 9);
+            let codes = crate::quant::ldlq::ldlq(
+                &pre.wg,
+                &pre.h,
+                2,
+                crate::quant::rounding::RoundMode::Nearest,
+                9,
+            );
+            let layer = QuantizedLayer::from_codes("blk0.attn.q", &codes, 2, pre.post);
+            let mut buf = Writer::new();
+            layer.serialize(&mut buf);
+            let mut r = Reader::new(&buf.buf);
+            let layer2 = QuantizedLayer::deserialize(&mut r, FORMAT_V2).unwrap();
+            assert_eq!(layer2.name, "blk0.attn.q");
+            assert_eq!(layer2.post.transform, kind);
+            assert_eq!(layer2.codes().data, layer.codes().data);
+            assert_eq!(layer2.dequantize().data, layer.dequantize().data);
+        }
+    }
+
+    #[test]
+    fn v1_layer_bytes_still_deserialize() {
+        // A layer written in the pre-subsystem v1 layout (no transform
+        // byte) must load with TransformKind::Kron implied.
+        let mut rng = Rng::new(14);
+        let w = random_mat(&mut rng, 4, 8);
+        let h = random_hessian(&mut rng, 8, 3, 1e-2);
+        let pre = preprocess(&w, &h, 2, &Processing::incoherent(), 3);
+        let codes = crate::quant::ldlq::round_matrix(
             &pre.wg,
-            &pre.h,
             2,
             crate::quant::rounding::RoundMode::Nearest,
-            9,
+            0,
         );
-        let layer = QuantizedLayer::from_codes("blk0.attn.q", &codes, 2, pre.post);
+        let layer = QuantizedLayer::from_codes("old", &codes, 2, pre.post);
+        let mut buf = Writer::new();
+        layer.serialize_version(&mut buf, FORMAT_V1);
+        let mut r = Reader::new(&buf.buf);
+        let layer2 = QuantizedLayer::deserialize(&mut r, FORMAT_V1).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(layer2.post.transform, crate::linalg::TransformKind::Kron);
+        assert_eq!(layer2.dequantize().data, layer.dequantize().data);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot represent")]
+    fn v1_refuses_non_kron_layers() {
+        let mut rng = Rng::new(16);
+        let w = random_mat(&mut rng, 4, 8);
+        let h = random_hessian(&mut rng, 8, 3, 1e-2);
+        let kind = crate::linalg::TransformKind::Hadamard;
+        let pre = preprocess(&w, &h, 2, &Processing::incoherent_with(kind), 3);
+        let codes = crate::quant::ldlq::round_matrix(
+            &pre.wg,
+            2,
+            crate::quant::rounding::RoundMode::Nearest,
+            0,
+        );
+        let layer = QuantizedLayer::from_codes("rht", &codes, 2, pre.post);
+        let mut buf = Writer::new();
+        layer.serialize_version(&mut buf, FORMAT_V1); // must refuse
+    }
+
+    #[test]
+    fn truncated_layer_is_clean_error() {
+        let mut rng = Rng::new(15);
+        let w = random_mat(&mut rng, 4, 8);
+        let h = random_hessian(&mut rng, 8, 3, 1e-2);
+        let pre = preprocess(&w, &h, 2, &Processing::incoherent(), 3);
+        let codes = crate::quant::ldlq::round_matrix(
+            &pre.wg,
+            2,
+            crate::quant::rounding::RoundMode::Nearest,
+            0,
+        );
+        let layer = QuantizedLayer::from_codes("t", &codes, 2, pre.post);
         let mut buf = Writer::new();
         layer.serialize(&mut buf);
-        let mut r = Reader::new(&buf.buf);
-        let layer2 = QuantizedLayer::deserialize(&mut r).unwrap();
-        assert_eq!(layer2.name, "blk0.attn.q");
-        assert_eq!(layer2.codes().data, layer.codes().data);
-        assert_eq!(layer2.dequantize().data, layer.dequantize().data);
+        for cut in [1usize, 8, buf.buf.len() / 2, buf.buf.len() - 1] {
+            let mut r = Reader::new(&buf.buf[..cut]);
+            assert!(
+                QuantizedLayer::deserialize(&mut r, FORMAT_V2).is_err(),
+                "cut={cut} should fail cleanly"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_5_to_8_bits_ragged_lengths() {
+        // The wide widths: 5/6/7-bit codes straddle byte boundaries in
+        // several phases; 8-bit is the byte-aligned degenerate case.
+        for bits in [5u32, 6, 7, 8] {
+            for n in [1usize, 3, 7, 8, 13, 31, 64, 100] {
+                let codes: Vec<u8> = (0..n)
+                    .map(|i| ((i * 11 + 5) % (1usize << bits)) as u8)
+                    .collect();
+                let packed = pack_codes(&codes, bits);
+                assert_eq!(
+                    packed.len(),
+                    (n * bits as usize).div_ceil(8),
+                    "bits={bits} n={n}: packed length"
+                );
+                let back = unpack_codes(&packed, bits, n);
+                assert_eq!(back, codes, "bits={bits} n={n}");
+                // Max-value codes: the mask must not leak neighbour bits.
+                let top = vec![((1u16 << bits) - 1) as u8; n];
+                assert_eq!(unpack_codes(&pack_codes(&top, bits), bits, n), top);
+            }
+        }
     }
 
     #[test]

@@ -70,7 +70,10 @@ impl<'a> Reader<'a> {
     }
 
     fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
-        let end = self.pos + n;
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow::anyhow!("corrupt length {n} at offset {}", self.pos))?;
         if end > self.buf.len() {
             anyhow::bail!("truncated input: need {n} bytes at offset {}", self.pos);
         }
@@ -110,7 +113,12 @@ impl<'a> Reader<'a> {
 
     pub fn f32s(&mut self) -> crate::Result<Vec<f32>> {
         let n = self.u64()? as usize;
-        let raw = self.take(n * 4)?;
+        // Checked: a corrupt length prefix must produce a clean error,
+        // not an overflow-wrapped short read.
+        let nbytes = n
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("corrupt f32 array length {n}"))?;
+        let raw = self.take(nbytes)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -119,7 +127,10 @@ impl<'a> Reader<'a> {
 
     pub fn f64s(&mut self) -> crate::Result<Vec<f64>> {
         let n = self.u64()? as usize;
-        let raw = self.take(n * 8)?;
+        let nbytes = n
+            .checked_mul(8)
+            .ok_or_else(|| anyhow::anyhow!("corrupt f64 array length {n}"))?;
+        let raw = self.take(nbytes)?;
         Ok(raw
             .chunks_exact(8)
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))

@@ -1,0 +1,66 @@
+//! CRC-32 (IEEE 802.3, the zlib/gzip polynomial) — the integrity footer of
+//! `.qz` v2 containers. Table-driven, one lookup per byte; the table is
+//! built at compile time so there is no init path or dependency.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 {
+                (crc >> 1) ^ 0xEDB8_8320
+            } else {
+                crc >> 1
+            };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+const TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `data` (initial value 0xFFFFFFFF, final XOR 0xFFFFFFFF —
+/// matches zlib's `crc32(0, data)`).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard check value for "123456789" and a couple of anchors.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn detects_any_single_byte_flip() {
+        let data: Vec<u8> = (0..255u8).collect();
+        let base = crc32(&data);
+        for i in 0..data.len() {
+            let mut bad = data.clone();
+            bad[i] ^= 0x40;
+            assert_ne!(crc32(&bad), base, "flip at {i} undetected");
+        }
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let data = vec![7u8; 1024];
+        let base = crc32(&data);
+        assert_ne!(crc32(&data[..1023]), base);
+    }
+}

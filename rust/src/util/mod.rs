@@ -3,6 +3,7 @@
 //! exactly the slices of those crates the system needs).
 
 pub mod bytes;
+pub mod crc32;
 pub mod rng;
 pub mod json;
 pub mod cli;
