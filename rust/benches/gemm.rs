@@ -2,7 +2,7 @@
 //! Baseline vs blocked+threaded f64 GEMM, f32 weight matvec, and the fast
 //! Kronecker multiply vs its dense equivalent.
 
-use quip::linalg::gemm::{matmul, sgemm_bt};
+use quip::linalg::gemm::{matmul, sgemm_bt, syrk};
 use quip::linalg::{KronOrtho, Mat};
 use quip::util::rng::Rng;
 use quip::util::timer::{bench_budget, report};
@@ -19,6 +19,17 @@ fn main() {
         report(&format!("gemm_f64_blocked_{n}"), &s_fast);
         let gflops = 2.0 * (n as f64).powi(3) / s_fast.p50 / 1e9;
         println!("  blocked {n}: {gflops:.2} GFLOP/s (speedup {:.2}x)", s_naive.p50 / s_fast.p50);
+    }
+
+    // SYRK (AᵀA) rank-k kernel — the Hessian-accumulation substrate
+    // (EXPERIMENTS.md §Perf 4) — vs composing transpose + naive GEMM.
+    for n in [256usize, 1024] {
+        let a = Mat::from_fn(2 * n, n, |_, _| rng.uniform(-1.0, 1.0));
+        let s_syrk = bench_budget(1, 0.5, || syrk(&a));
+        let s_naive = bench_budget(1, 0.5, || a.transpose().matmul_naive(&a));
+        report(&format!("syrk_f64_{n}"), &s_syrk);
+        report(&format!("syrk_naive_{n}"), &s_naive);
+        println!("  syrk {n}: {:.2}x over transpose+naive", s_naive.p50 / s_syrk.p50);
     }
 
     // f32 weight matvec (decode shape): y[1,out] = x[1,in] · Wᵀ

@@ -32,6 +32,19 @@ fn main() {
             report(&format!("quantize_{name}_{m}x{n}"), &s);
         }
 
+        // factorization kernels: blocked (auto) vs scalar (§Perf 4)
+        {
+            let hd = quip::quant::incoherence::damp(&h, 0.01);
+            let s_ldl_scalar = bench(1, 3, || quip::linalg::ldl::udu_scalar(&hd, 1e-12));
+            report(&format!("udu_scalar_{n}"), &s_ldl_scalar);
+            let s_ldl_blocked = bench(1, 3, || quip::linalg::ldl::udu(&hd, 1e-12));
+            report(&format!("udu_blocked_{n}"), &s_ldl_blocked);
+            let s_chol_scalar = bench(1, 3, || quip::linalg::chol::cholesky_scalar(&hd));
+            report(&format!("chol_scalar_{n}"), &s_chol_scalar);
+            let s_chol_blocked = bench(1, 3, || quip::linalg::chol::cholesky(&hd));
+            report(&format!("chol_blocked_{n}"), &s_chol_blocked);
+        }
+
         // blocked ("lazy batch") LDLQ vs the plain recurrence
         {
             let f = quip::linalg::ldl::udu(&h, 1e-12);

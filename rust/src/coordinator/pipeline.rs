@@ -47,9 +47,10 @@ impl Default for PipelineConfig {
 }
 
 /// Typed progress events, emitted in stream order: for each block b,
-/// `BlockStarted(b)`, then one `LayerDone` per linear spec of b (preceded
-/// by a `HessianDamped` warning when non-PD recovery escalated that
-/// layer's damping), then `BlockDone(b)`.
+/// `BlockStarted(b)`, then per linear spec of b an optional
+/// `HessianDamped` warning (non-PD recovery escalated that layer's
+/// damping), a `LayerStageTimings` breakdown, and a `LayerDone`, then
+/// `BlockDone(b)`.
 #[derive(Clone, Debug, PartialEq)]
 pub enum PipelineEvent {
     BlockStarted {
@@ -66,6 +67,24 @@ pub enum PipelineEvent {
         name: String,
         /// The damping α that made the layer quantize.
         alpha: f64,
+    },
+    /// Per-stage wall-clock of one layer (EXPERIMENTS.md §Perf 4):
+    /// Hessian accumulation (for this layer's hkey accumulator, shared
+    /// across layers with the same input), the LDL/Cholesky
+    /// factorizations inside the rounder, and the remaining rounding
+    /// time. Emitted immediately before the layer's `LayerDone`.
+    LayerStageTimings {
+        block: usize,
+        name: String,
+        /// Wall-clock of the hkey's Hessian accumulation this block.
+        accumulate_seconds: f64,
+        /// Effective accumulate bandwidth (see
+        /// [`crate::hessian::HessianAccum::effective_gbps`]).
+        accumulate_gbps: f64,
+        /// Seconds inside LDL/Cholesky factorizations while rounding.
+        factorize_seconds: f64,
+        /// Seconds in the rounding core outside the factorizations.
+        round_seconds: f64,
     },
     LayerDone {
         block: usize,
@@ -94,6 +113,10 @@ pub struct LayerReport {
     pub name: String,
     pub proxy_loss: f64,
     pub seconds: f64,
+    /// Stage breakdown (§Perf 4): Hessian accumulate / factorize / round.
+    pub accumulate_seconds: f64,
+    pub factorize_seconds: f64,
+    pub round_seconds: f64,
 }
 
 pub struct PipelineReport {
@@ -115,6 +138,9 @@ impl PipelineReport {
                         o.set("name", Json::Str(l.name.clone()));
                         o.set("proxy_loss", Json::Num(l.proxy_loss));
                         o.set("seconds", Json::Num(l.seconds));
+                        o.set("accumulate_seconds", Json::Num(l.accumulate_seconds));
+                        o.set("factorize_seconds", Json::Num(l.factorize_seconds));
+                        o.set("round_seconds", Json::Num(l.round_seconds));
                         o
                     })
                     .collect(),
@@ -128,15 +154,24 @@ impl PipelineReport {
     }
 }
 
+/// Per-layer result inside a [`BlockOutput`]: the quantizer output, its
+/// wall-clock, the escalated damping α (when non-PD recovery ran), and
+/// the layer's hkey Hessian-accumulation stats from stage 1.
+struct LayerResult {
+    lq: crate::quant::LayerQuantOutput,
+    seconds: f64,
+    damped: Option<f64>,
+    accumulate_seconds: f64,
+    accumulate_gbps: f64,
+}
+
 /// The quantized output of one block, produced by
 /// [`QuantSession::quantize_block`] and consumed by
 /// [`QuantSession::swap_weights`].
 pub struct BlockOutput {
     pub block: usize,
     specs: Vec<LinearSpec>,
-    /// Per layer: output, seconds, and Some(α) when non-PD recovery had
-    /// to escalate the Hessian damping.
-    results: Vec<(crate::quant::LayerQuantOutput, f64, Option<f64>)>,
+    results: Vec<LayerResult>,
 }
 
 /// Quantize one layer, recovering from a non-PD / unusable Hessian by
@@ -156,20 +191,32 @@ pub fn quantize_layer_robust(
     // Escalation base: the configured α, floored so α = 0 configs still
     // get meaningful damping on retry.
     let base = cfg.processing.alpha.max(1e-3);
+    // Escalation retries re-damp the already-symmetrized copy in place
+    // (diagonal += Δbump, magnitude from the shared
+    // `incoherence::damp_bump`) instead of re-cloning the n×n matrix from
+    // scratch each attempt; the first attempt's probe is bit-identical to
+    // `incoherence::damp(h, α)`, escalated probes differ from a fresh
+    // damp only in the last ulp of the diagonal.
+    let mut damped = h.symmetrize();
+    let mut applied_bump = 0.0f64;
     for escalation in 0..3u32 {
         let alpha = if escalation == 0 {
             cfg.processing.alpha
         } else {
             base * 10f64.powi(escalation as i32)
         };
-        // PD probe: the exact damped matrix the quantizer will factor.
-        // Probing every attempt (not just retries) is deliberate: an
-        // indefinite H can slip through LDL's pivot clamping and produce
-        // finite codes with an accidentally-positive proxy, which the
-        // output checks below cannot distinguish from health. One extra
-        // Cholesky per layer is noise next to the rounding cost, and this
-        // is the offline quantization path, not serving.
-        let damped = crate::quant::incoherence::damp(h, alpha);
+        // PD probe: the damped matrix the quantizer will factor. Probing
+        // every attempt (not just retries) is deliberate: an indefinite H
+        // can slip through LDL's pivot clamping and produce finite codes
+        // with an accidentally-positive proxy, which the output checks
+        // below cannot distinguish from health. One extra Cholesky per
+        // layer is noise next to the rounding cost, and this is the
+        // offline quantization path, not serving.
+        let bump = crate::quant::incoherence::damp_bump(h, alpha);
+        for i in 0..damped.rows {
+            damped[(i, i)] += bump - applied_bump;
+        }
+        applied_bump = bump;
         if crate::linalg::chol::cholesky(&damped).is_err() {
             continue;
         }
@@ -374,7 +421,18 @@ impl<'a> QuantSession<'a> {
             .map(|((out, secs), spec)| {
                 let (lq, damped) = out
                     .map_err(|e| anyhow::anyhow!("layer {}: {e}", spec.name))?;
-                Ok((lq, secs, damped))
+                let (accumulate_seconds, accumulate_gbps) = hset
+                    .accums
+                    .get(&spec.hkey)
+                    .map(|a| (a.seconds, a.effective_gbps()))
+                    .unwrap_or((0.0, 0.0));
+                Ok(LayerResult {
+                    lq,
+                    seconds: secs,
+                    damped,
+                    accumulate_seconds,
+                    accumulate_gbps,
+                })
             })
             .collect::<crate::Result<Vec<_>>>()?;
         Ok(BlockOutput {
@@ -405,7 +463,14 @@ impl<'a> QuantSession<'a> {
         } = out;
         let bits = self.cfg.quant.bits;
         let mut control = PipelineControl::Continue;
-        for (spec, (lq, secs, damped)) in specs.iter().zip(results) {
+        for (spec, res) in specs.iter().zip(results) {
+            let LayerResult {
+                lq,
+                seconds: secs,
+                damped,
+                accumulate_seconds,
+                accumulate_gbps,
+            } = res;
             if let Some(alpha) = damped {
                 crate::log_warn!(
                     "layer {}: Hessian not PD at configured damping; escalated to α = {alpha}",
@@ -420,12 +485,26 @@ impl<'a> QuantSession<'a> {
                     control = PipelineControl::Stop;
                 }
             }
+            let c = self.emit(PipelineEvent::LayerStageTimings {
+                block,
+                name: spec.name.clone(),
+                accumulate_seconds,
+                accumulate_gbps,
+                factorize_seconds: lq.stages.factorize_seconds,
+                round_seconds: lq.stages.round_seconds,
+            });
+            if c == PipelineControl::Stop {
+                control = PipelineControl::Stop;
+            }
             let data: Vec<f32> = lq.w_hat.data.iter().map(|&x| x as f32).collect();
             self.model.set_weight(&spec.name, data)?;
             self.reports.push(LayerReport {
                 name: spec.name.clone(),
                 proxy_loss: lq.proxy_loss,
                 seconds: secs,
+                accumulate_seconds,
+                factorize_seconds: lq.stages.factorize_seconds,
+                round_seconds: lq.stages.round_seconds,
             });
             self.layers
                 .push(QuantizedLayer::from_codes(&spec.name, &lq.codes, bits, lq.post));
@@ -588,6 +667,12 @@ mod tests {
         assert_eq!(qm.layers.len(), ck.config.linear_specs().len());
         assert_eq!(report.layers.len(), qm.layers.len());
         assert!(report.layers.iter().all(|l| l.proxy_loss.is_finite()));
+        // Stage breakdown is populated and consistent with the total.
+        for l in &report.layers {
+            assert!(l.accumulate_seconds >= 0.0);
+            assert!(l.factorize_seconds >= 0.0 && l.round_seconds >= 0.0);
+            assert!(l.factorize_seconds + l.round_seconds <= l.seconds + 0.05);
+        }
         // Applying the artifact reproduces a working model.
         let mut m = Transformer::from_checkpoint(&ck).unwrap();
         qm.apply_to(&mut m).unwrap();
@@ -646,6 +731,25 @@ mod tests {
             }
             idx += 1;
             for spec in &block_layers {
+                match &events[idx] {
+                    PipelineEvent::LayerStageTimings {
+                        block,
+                        name,
+                        accumulate_seconds,
+                        accumulate_gbps,
+                        factorize_seconds,
+                        round_seconds,
+                    } => {
+                        assert_eq!(*block, b);
+                        assert_eq!(name, &spec.name, "stage timings precede LayerDone");
+                        assert!(*accumulate_seconds >= 0.0);
+                        assert!(accumulate_gbps.is_finite() && *accumulate_gbps >= 0.0);
+                        assert!(*factorize_seconds >= 0.0);
+                        assert!(*round_seconds >= 0.0);
+                    }
+                    other => panic!("expected LayerStageTimings({}), got {other:?}", spec.name),
+                }
+                idx += 1;
                 match &events[idx] {
                     PipelineEvent::LayerDone {
                         block,
@@ -799,7 +903,7 @@ mod tests {
             let hset = session.collect_hessians(0, &calib).unwrap();
             let mut out = session.quantize_block(0, &hset).unwrap();
             // Simulate non-PD recovery on the first layer of the block.
-            out.results[0].2 = Some(0.1);
+            out.results[0].damped = Some(0.1);
             let mut session = session.on_event(|ev| {
                 events.push(ev.clone());
                 PipelineControl::Continue

@@ -14,11 +14,17 @@
 //! plus the `transform` sweep: the incoherence-transform backends (kron
 //! vs hadamard) compared end-to-end — quantize → save a v2 `.qz` → load →
 //! decode — on proxy loss and per-token transform cost at 2/3/4 bits
-//! (EXPERIMENTS.md §Perf 3).
+//! (EXPERIMENTS.md §Perf 3),
 //!
-//! `quip sweep <rho|calib|greedy|batch|transform> [--model s0] [--bits 2]`.
-//! `batch` and `transform` are artifact-free (synthetic checkpoint) so
-//! they run anywhere, including CI.
+//! plus the `quant` sweep: quantization-throughput stages — Hessian
+//! accumulation (scalar rank-1 vs blocked SYRK), LDL/Cholesky
+//! factorization (scalar vs blocked), and LDLQ rounding — timed per stage
+//! across n ∈ {256, 512, 1024} × bits ∈ {2, 4}, with end-to-end
+//! seconds/layer for both kernel sets (EXPERIMENTS.md §Perf 4).
+//!
+//! `quip sweep <rho|calib|greedy|batch|transform|quant> [--model s0]
+//! [--bits 2]`. `batch`, `transform` and `quant` are artifact-free
+//! (synthetic inputs) so they run anywhere, including CI (`--fast`).
 
 use super::env::{f2, write_result, Env, TablePrinter};
 use crate::coordinator::pipeline::{quantize_model, PipelineConfig};
@@ -34,8 +40,11 @@ pub fn run_sweep(which: &str, args: &Args) -> crate::Result<()> {
         "greedy" => sweep_greedy(args),
         "batch" => sweep_batch(args),
         "transform" => sweep_transform(args),
+        "quant" => sweep_quant(args),
         other => {
-            anyhow::bail!("unknown sweep '{other}' (rho, calib, greedy, batch, transform)")
+            anyhow::bail!(
+                "unknown sweep '{other}' (rho, calib, greedy, batch, transform, quant)"
+            )
         }
     }
 }
@@ -449,6 +458,159 @@ fn sweep_transform(args: &Args) -> crate::Result<()> {
         );
     }
     write_result("sweep_transform", &out)?;
+    Ok(())
+}
+
+/// Quantization-throughput sweep: per-stage wall-clock of the quantize
+/// hot path — Hessian accumulation (scalar rank-1 baseline vs the blocked
+/// SYRK panel kernel), UDUᵀ/Cholesky factorization (scalar vs blocked),
+/// and LDLQ rounding — plus end-to-end seconds/layer for both kernel
+/// sets, on synthetic activations/weights (artifact-free; `--fast` is the
+/// CI smoke shape). Each cell self-checks blocked-vs-scalar numerical
+/// equivalence before reporting. Results feed EXPERIMENTS.md §Perf 4.
+fn sweep_quant(args: &Args) -> crate::Result<()> {
+    use crate::hessian::{accumulate_reference, HessianAccum};
+    use crate::linalg::chol::{cholesky, cholesky_scalar};
+    use crate::linalg::ldl::{udu, udu_scalar};
+    use crate::linalg::matrix::max_abs_diff;
+    use crate::linalg::Mat;
+    use crate::quant::ldlq::ldlq_with_feedback;
+    use crate::quant::RoundMode;
+    use crate::util::rng::Rng;
+    use crate::util::threadpool::default_threads;
+    use crate::util::timer::time_once;
+
+    let fast = args.flag("fast");
+    let sizes: &[usize] = if fast { &[96, 160] } else { &[256, 512, 1024] };
+    let bits_list: &[u32] = if fast { &[2] } else { &[2, 4] };
+    let threads = default_threads();
+    println!(
+        "quant-throughput sweep — {} worker threads, scalar vs blocked kernels \
+         (accumulate / factorize / round per layer)\n",
+        threads
+    );
+
+    let mut kt = TablePrinter::new(&[
+        "n",
+        "accum scalar ms",
+        "accum syrk ms",
+        "GB/s",
+        "speedup",
+        "udu scalar ms",
+        "udu blocked ms",
+        "chol scalar ms",
+        "chol blocked ms",
+    ]);
+    let mut et = TablePrinter::new(&[
+        "n", "bits", "round ms", "s/layer blocked", "s/layer scalar", "speedup",
+    ]);
+    let mut out = Json::obj();
+    out.set("threads", Json::Num(threads as f64));
+    out.set("fast", Json::Num(fast as u8 as f64));
+
+    for &n in sizes {
+        // Synthetic calibration stream: enough rows that the accumulate
+        // stage dominates cache effects (2n rows ⇒ rank-deficient is fine,
+        // damping restores PD below).
+        let rows = if fast { n } else { 2 * n };
+        let mut rng = Rng::new(0x9E37 ^ n as u64);
+        let x: Vec<f32> = (0..rows * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+
+        // --- Stage 1: Hessian accumulation, scalar vs blocked SYRK. ---
+        let (scalar_s, h_ref) = time_once(|| accumulate_reference(&x, n));
+        let (blocked_s, h) = time_once(|| {
+            let mut acc = HessianAccum::new(n);
+            acc.add_rows(&x, n);
+            acc.finish()
+        });
+        let h_scale = h_ref.max_abs().max(1.0);
+        anyhow::ensure!(
+            max_abs_diff(&h, &h_ref) < 1e-9 * h_scale,
+            "blocked Hessian diverged from scalar at n={n}"
+        );
+        let bytes = rows as f64 * (n * n) as f64 * 8.0;
+        let gbps_blocked = bytes / blocked_s.max(1e-9) / 1e9;
+
+        // --- Stage 2: factorization, scalar vs blocked. ---
+        let hd = crate::quant::incoherence::damp(&h, 0.01);
+        let (udu_scalar_s, f_scalar) = time_once(|| udu_scalar(&hd, 1e-12));
+        let (udu_blocked_s, f_blocked) = time_once(|| udu(&hd, 1e-12));
+        anyhow::ensure!(
+            max_abs_diff(&f_blocked.u, &f_scalar.u) < 1e-6,
+            "blocked UDU diverged from scalar at n={n}"
+        );
+        let (chol_scalar_s, cs) = time_once(|| cholesky_scalar(&hd));
+        let (chol_blocked_s, cb) = time_once(|| cholesky(&hd));
+        anyhow::ensure!(
+            max_abs_diff(&cs?, &cb?) < 1e-6,
+            "blocked Cholesky diverged from scalar at n={n}"
+        );
+
+        kt.row(vec![
+            n.to_string(),
+            f2(scalar_s * 1e3),
+            f2(blocked_s * 1e3),
+            f2(gbps_blocked),
+            format!("{:.2}x", scalar_s / blocked_s.max(1e-9)),
+            f2(udu_scalar_s * 1e3),
+            f2(udu_blocked_s * 1e3),
+            f2(chol_scalar_s * 1e3),
+            f2(chol_blocked_s * 1e3),
+        ]);
+        let mut o = Json::obj();
+        o.set("rows", Json::Num(rows as f64));
+        o.set("accum_scalar_ms", Json::Num(scalar_s * 1e3));
+        o.set("accum_blocked_ms", Json::Num(blocked_s * 1e3));
+        o.set("accum_gbps_blocked", Json::Num(gbps_blocked));
+        o.set(
+            "accum_gbps_scalar",
+            Json::Num(bytes / scalar_s.max(1e-9) / 1e9),
+        );
+        o.set("udu_scalar_ms", Json::Num(udu_scalar_s * 1e3));
+        o.set("udu_blocked_ms", Json::Num(udu_blocked_s * 1e3));
+        o.set("chol_scalar_ms", Json::Num(chol_scalar_s * 1e3));
+        o.set("chol_blocked_ms", Json::Num(chol_blocked_s * 1e3));
+        out.set(&format!("n{n}"), o);
+
+        // --- Stage 3: LDLQ rounding (same kernel either way — it was
+        // already row-parallel) + end-to-end seconds/layer. ---
+        let u_dot = f_blocked.strictly_upper();
+        for &bits in bits_list {
+            let qmax = crate::quant::grid::levels(bits) as f64;
+            let wg = Mat::from_fn(n, n, |_, _| rng.uniform(0.0, qmax));
+            let (round_s, codes) =
+                time_once(|| ldlq_with_feedback(&wg, &u_dot, bits, RoundMode::Nearest, 7));
+            anyhow::ensure!(
+                codes.data.iter().all(|&c| c >= 0.0 && c <= qmax),
+                "LDLQ codes out of range at n={n} bits={bits}"
+            );
+            let e2e_blocked = blocked_s + udu_blocked_s + round_s;
+            let e2e_scalar = scalar_s + udu_scalar_s + round_s;
+            et.row(vec![
+                n.to_string(),
+                bits.to_string(),
+                f2(round_s * 1e3),
+                format!("{:.3}", e2e_blocked),
+                format!("{:.3}", e2e_scalar),
+                format!("{:.2}x", e2e_scalar / e2e_blocked.max(1e-9)),
+            ]);
+            let mut o = Json::obj();
+            o.set("round_ms", Json::Num(round_s * 1e3));
+            o.set("seconds_per_layer_blocked", Json::Num(e2e_blocked));
+            o.set("seconds_per_layer_scalar", Json::Num(e2e_scalar));
+            o.set("speedup", Json::Num(e2e_scalar / e2e_blocked.max(1e-9)));
+            out.set(&format!("n{n}_q{bits}"), o);
+        }
+    }
+    kt.print();
+    println!();
+    et.print();
+    println!(
+        "\nper-stage kernels: accumulate = hessian::HessianAccum (SYRK panels) vs \
+         hessian::accumulate_reference; factorize = linalg::{{ldl,chol}} blocked vs \
+         scalar; record the n=1024 numbers in EXPERIMENTS.md §Perf 4."
+    );
+    write_result("sweep_quant", &out)?;
     Ok(())
 }
 

@@ -1,9 +1,26 @@
 //! Proxy-Hessian collection: H = (2/N) Σ x xᵀ over calibration
 //! activations, accumulated in f64, with the paper's damping
 //! H ← H + α·mean(diag H)·I applied downstream (quant::incoherence).
+//!
+//! Incoming f32 activation rows are buffered into a [`PANEL`]-row panel
+//! and flushed through the blocked threaded rank-k kernel
+//! [`crate::linalg::gemm::syrk_acc_upper`] instead of the old scalar
+//! one-row-at-a-time rank-1 triple loop (kept as
+//! [`accumulate_reference`] for equivalence tests and the `quip sweep
+//! quant` baseline). Panel boundaries depend only on the stream position,
+//! so the accumulated Hessian is bit-identical no matter how rows are
+//! split across [`HessianAccum::add_rows`] calls. Measured speedup:
+//! EXPERIMENTS.md §Perf 4.
 
+use crate::linalg::gemm::{mirror_upper, syrk_acc_upper};
 use crate::linalg::Mat;
 use std::collections::HashMap;
+use std::time::Instant;
+
+/// Rows per rank-k flush. Fixed (not tunable) so that flush boundaries —
+/// and therefore f64 summation order — are a pure function of the stream
+/// position.
+pub const PANEL: usize = 128;
 
 /// Streaming accumulator for one layer's proxy Hessian.
 pub struct HessianAccum {
@@ -11,6 +28,17 @@ pub struct HessianAccum {
     /// Σ x xᵀ (upper triangle maintained, mirrored on finish).
     sum: Mat,
     pub count: usize,
+    /// Buffered rows (< PANEL) awaiting the next rank-k flush.
+    pending: Vec<f32>,
+    /// Reusable f64 conversion buffer for one panel.
+    panel: Vec<f64>,
+    /// Rows that have gone through a timed rank-k flush (multiples of
+    /// PANEL); the sub-panel tail applied inside `finish` is untimed and
+    /// excluded from the bandwidth figure.
+    flushed: usize,
+    /// Wall-clock spent accumulating (buffer copies + rank-k flushes);
+    /// feeds the pipeline's per-layer stage timings.
+    pub seconds: f64,
 }
 
 impl HessianAccum {
@@ -19,40 +47,60 @@ impl HessianAccum {
             n,
             sum: Mat::zeros(n, n),
             count: 0,
+            pending: Vec::new(),
+            panel: Vec::new(),
+            flushed: 0,
+            seconds: 0.0,
         }
     }
 
     /// Add a batch of activation rows (row-major `rows × n`, f32 as
-    /// produced by the model forward).
+    /// produced by the model forward). Full panels flush straight from
+    /// the input slice; only the sub-panel remainder is buffered.
     pub fn add_rows(&mut self, rows: &[f32], n: usize) {
         assert_eq!(n, self.n, "activation dim mismatch");
         assert_eq!(rows.len() % n, 0);
+        let t0 = Instant::now();
         let r = rows.len() / n;
-        for t in 0..r {
-            let x = &rows[t * n..(t + 1) * n];
-            for i in 0..n {
-                let xi = x[i] as f64;
-                if xi == 0.0 {
-                    continue;
-                }
-                let srow = &mut self.sum.data[i * n..(i + 1) * n];
-                for j in i..n {
-                    srow[j] += xi * x[j] as f64;
-                }
+        let mut off = 0;
+        // Top up the pending panel first (stream order).
+        if !self.pending.is_empty() {
+            let take = (PANEL * n - self.pending.len()).min(rows.len());
+            self.pending.extend_from_slice(&rows[..take]);
+            off = take;
+            if self.pending.len() == PANEL * n {
+                Self::flush(&mut self.sum, &mut self.panel, &self.pending, n);
+                self.pending.clear();
+                self.flushed += PANEL;
             }
         }
+        while rows.len() - off >= PANEL * n {
+            Self::flush(&mut self.sum, &mut self.panel, &rows[off..off + PANEL * n], n);
+            off += PANEL * n;
+            self.flushed += PANEL;
+        }
+        self.pending.extend_from_slice(&rows[off..]);
         self.count += r;
+        self.seconds += t0.elapsed().as_secs_f64();
     }
 
-    /// Finalize: H = (2/N) Σ x xᵀ, symmetric.
+    /// Flush one panel of f32 rows through the blocked rank-k kernel.
+    fn flush(sum: &mut Mat, panel: &mut Vec<f64>, src: &[f32], n: usize) {
+        panel.clear();
+        panel.extend(src.iter().map(|&x| x as f64));
+        syrk_acc_upper(src.len() / n, n, panel, sum);
+    }
+
+    /// Finalize: H = (2/N) Σ x xᵀ, symmetric. Non-destructive — the
+    /// sub-panel remainder is applied to a copy, so streaming can
+    /// continue afterwards.
     pub fn finish(&self) -> Mat {
         let mut h = self.sum.clone();
-        // Mirror the upper triangle.
-        for i in 0..self.n {
-            for j in 0..i {
-                h[(i, j)] = h[(j, i)];
-            }
+        if !self.pending.is_empty() {
+            let tail: Vec<f64> = self.pending.iter().map(|&x| x as f64).collect();
+            syrk_acc_upper(tail.len() / self.n, self.n, &tail, &mut h);
         }
+        mirror_upper(&mut h);
         let scale = if self.count > 0 {
             2.0 / self.count as f64
         } else {
@@ -60,6 +108,48 @@ impl HessianAccum {
         };
         h.scale(scale)
     }
+
+    /// Effective accumulate bandwidth in GB/s: each accumulated row
+    /// streams the n²/2-entry f64 upper triangle of the accumulator
+    /// (read + write ⇒ n²·8 bytes per row). Defined against the scalar
+    /// rank-1 kernel's traffic, so panel reuse shows up as bandwidth
+    /// above DRAM speed. Only rows that went through a *timed* panel
+    /// flush count — the sub-panel tail is applied untimed inside
+    /// [`finish`](Self::finish) — so streams shorter than [`PANEL`] rows
+    /// report 0 rather than a fictitious figure.
+    pub fn effective_gbps(&self) -> f64 {
+        if self.flushed == 0 {
+            return 0.0;
+        }
+        let bytes = self.flushed as f64 * (self.n * self.n) as f64 * 8.0;
+        bytes / self.seconds.max(1e-9) / 1e9
+    }
+}
+
+/// The scalar rank-1 baseline (the pre-§Perf-4 kernel): one row at a
+/// time, upper triangle, mirrored and scaled like
+/// [`HessianAccum::finish`]. Kept for blocked-vs-scalar equivalence tests
+/// and as the baseline leg of `quip sweep quant`.
+pub fn accumulate_reference(rows: &[f32], n: usize) -> Mat {
+    assert_eq!(rows.len() % n, 0);
+    let r = rows.len() / n;
+    let mut sum = Mat::zeros(n, n);
+    for t in 0..r {
+        let x = &rows[t * n..(t + 1) * n];
+        for i in 0..n {
+            let xi = x[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            let srow = &mut sum.data[i * n..(i + 1) * n];
+            for j in i..n {
+                srow[j] += xi * x[j] as f64;
+            }
+        }
+    }
+    mirror_upper(&mut sum);
+    let scale = if r > 0 { 2.0 / r as f64 } else { 1.0 };
+    sum.scale(scale)
 }
 
 /// A set of accumulators keyed by the model's Hessian-sharing keys.
@@ -150,6 +240,74 @@ mod tests {
         let e = crate::linalg::eigen::eigen_sym(&h, 1e-12, 60);
         let nonzero = e.values.iter().filter(|&&l| l > 1e-8).count();
         assert!(nonzero <= 4);
+    }
+
+    #[test]
+    fn bit_identical_regardless_of_add_rows_split() {
+        // Panel flush boundaries are a pure function of the stream
+        // position, so any way of chunking the same row stream across
+        // add_rows calls must produce bit-identical Hessians — including
+        // splits that straddle the PANEL boundary.
+        let mut rng = Rng::new(9);
+        let n = 24;
+        let total = 2 * PANEL + 37; // two full panels + a remainder
+        let x: Vec<f32> = (0..total * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut whole = HessianAccum::new(n);
+        whole.add_rows(&x, n);
+        let reference = whole.finish();
+        let splits: &[&[usize]] = &[
+            &[1, total - 1],
+            &[PANEL, PANEL, 37],
+            &[PANEL - 1, 2, total - PANEL - 1],
+            &[7, 130, total - 137],
+        ];
+        for split in splits {
+            assert_eq!(split.iter().sum::<usize>(), total);
+            let mut acc = HessianAccum::new(n);
+            let mut off = 0;
+            for &chunk in *split {
+                acc.add_rows(&x[off * n..(off + chunk) * n], n);
+                off += chunk;
+            }
+            let h = acc.finish();
+            assert_eq!(h.data, reference.data, "split {split:?} changed bits");
+            assert_eq!(acc.count, total);
+        }
+    }
+
+    #[test]
+    fn blocked_accumulator_matches_scalar_reference() {
+        // Equivalence up to f64 summation order against the rank-1
+        // baseline, at sizes that are not panel/block multiples.
+        let mut rng = Rng::new(10);
+        for &(rows, n) in &[(1usize, 7usize), (33, 33), (PANEL + 9, 130), (300, 65)] {
+            let x: Vec<f32> = (0..rows * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            let mut acc = HessianAccum::new(n);
+            acc.add_rows(&x, n);
+            let h = acc.finish();
+            let h_ref = accumulate_reference(&x, n);
+            let scale = h_ref.max_abs().max(1.0);
+            assert!(
+                crate::linalg::matrix::max_abs_diff(&h, &h_ref) < 1e-12 * scale,
+                "rows={rows} n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn finish_is_non_destructive_mid_stream() {
+        // finish() with a partial panel pending must not consume it: more
+        // rows can stream in afterwards and the final H is unchanged.
+        let mut rng = Rng::new(11);
+        let n = 8;
+        let x: Vec<f32> = (0..40 * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut acc = HessianAccum::new(n);
+        acc.add_rows(&x[..15 * n], n);
+        let _mid = acc.finish();
+        acc.add_rows(&x[15 * n..], n);
+        let mut whole = HessianAccum::new(n);
+        whole.add_rows(&x, n);
+        assert_eq!(acc.finish().data, whole.finish().data);
     }
 
     #[test]

@@ -57,8 +57,11 @@
 //! Whole models go through the coordinator's
 //! [`coordinator::QuantSession`]: explicit `collect_hessians` →
 //! `quantize_block` → `swap_weights` stages per transformer block, typed
-//! [`coordinator::PipelineEvent`] progress streaming, and per-block
-//! cancellation. `coordinator::quantize_model` is the one-shot wrapper.
+//! [`coordinator::PipelineEvent`] progress streaming — including
+//! per-layer stage timings (Hessian-accumulate GB/s, factorize ms, round
+//! ms; benchmark with `quip sweep quant`, numbers in EXPERIMENTS.md
+//! §Perf 4) — and per-block cancellation. `coordinator::quantize_model`
+//! is the one-shot wrapper.
 //!
 //! New rounding algorithms implement [`quant::Rounder`] (see the
 //! `quant::rounder` module docs for the `wg`/`h` preprocessed-basis

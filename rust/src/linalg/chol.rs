@@ -1,10 +1,37 @@
 //! Cholesky decomposition (H = L Lᵀ) and SPD solves. Used by the OPTQ
-//! reference implementation (which Cholesky-decomposes H⁻¹) and by tests.
+//! reference implementation (which Cholesky-decomposes H⁻¹), by the
+//! pipeline's non-PD probe (`quantize_layer_robust`), and by tests.
+//!
+//! Above [`CHOL_BLOCK`] columns, [`cholesky`] runs a blocked right-looking
+//! panel factorization (scalar diagonal panel → threaded per-row panel
+//! solve → threaded trailing downdate via
+//! `gemm::trailing_downdate_lower`), equal to the scalar kernel up to f64
+//! summation order and bit-deterministic across thread counts. Measured
+//! speedup: EXPERIMENTS.md §Perf 4.
 
 use super::matrix::Mat;
 
+/// Panel width of the blocked factorization; also the size threshold
+/// below which [`cholesky`] stays on the scalar kernel.
+pub const CHOL_BLOCK: usize = 64;
+
 /// Cholesky H = L Lᵀ, L lower triangular. Errors on non-PD input.
+/// Dispatches to the blocked threaded kernel above [`CHOL_BLOCK`] columns
+/// (deterministic: the dispatch depends only on `n`).
 pub fn cholesky(h: &Mat) -> crate::Result<Mat> {
+    let t0 = std::time::Instant::now();
+    let out = if h.rows <= CHOL_BLOCK {
+        cholesky_scalar(h)
+    } else {
+        cholesky_blocked(h, CHOL_BLOCK)
+    };
+    crate::util::stagetimer::credit_factorize(t0.elapsed().as_secs_f64());
+    out
+}
+
+/// The scalar left-looking kernel. Reference implementation for the
+/// blocked path.
+pub fn cholesky_scalar(h: &Mat) -> crate::Result<Mat> {
     assert_eq!(h.rows, h.cols);
     let n = h.rows;
     let mut l = Mat::zeros(n, n);
@@ -23,6 +50,75 @@ pub fn cholesky(h: &Mat) -> crate::Result<Mat> {
                 l[(i, j)] = s / l[(j, j)];
             }
         }
+    }
+    Ok(l)
+}
+
+/// Blocked right-looking Cholesky with panel width `nb`: scalar
+/// factorization of each diagonal panel, threaded per-row triangular
+/// solve of the panel below it, then one threaded symmetric downdate of
+/// the trailing submatrix (A22 −= L21·L21ᵀ, lower triangle only).
+pub fn cholesky_blocked(h: &Mat, nb: usize) -> crate::Result<Mat> {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    let nb = nb.max(1);
+    let mut l = Mat::zeros(n, n);
+    // Working copy; trailing downdates write its lower triangle, the
+    // panel steps read it (the initial matrix is symmetric).
+    let mut a = h.clone();
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + nb).min(n);
+        let w = k1 - k0;
+        // 1. Scalar Cholesky of the diagonal panel; contributions from
+        // columns < k0 were already folded into `a` by trailing downdates.
+        for i in k0..k1 {
+            for j in k0..=i {
+                let mut s = a[(i, j)];
+                for k in k0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        anyhow::bail!("matrix not positive definite at pivot {i} (s={s})");
+                    }
+                    l[(i, i)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        if k1 < n {
+            // 2. Panel solve L21·L11ᵀ = A21: row i of L over columns
+            // k0..k1 depends only on the diagonal panel and row i's own
+            // earlier panel entries — rows solve independently in parallel.
+            // Spawn workers only when the panel has real work
+            // (~rows·w²/2 flops); small trailing panels run inline.
+            let threads = if (n - k1) * w * w / 2 > 64 * 64 * 64 {
+                crate::util::threadpool::default_threads()
+            } else {
+                1
+            };
+            let l11 = l.slice(k0, k1, k0, k1);
+            let a_ref = &a;
+            super::gemm::par_rows(&mut l, k1, n, threads, |i, lrow| {
+                for j in k0..k1 {
+                    let mut s = a_ref[(i, j)];
+                    for k in k0..j {
+                        s -= lrow[k] * l11[(j - k0, k - k0)];
+                    }
+                    lrow[j] = s / l11[(j - k0, j - k0)];
+                }
+            });
+            // 3. Trailing downdate A22 −= L21·L21ᵀ.
+            let rows_t = n - k1;
+            let mut p = vec![0.0f64; rows_t * w];
+            for i in k1..n {
+                p[(i - k1) * w..(i - k1 + 1) * w].copy_from_slice(&l.row(i)[k0..k1]);
+            }
+            super::gemm::trailing_downdate_lower(&mut a, k1, &p, &p, w);
+        }
+        k0 = k1;
     }
     Ok(l)
 }
@@ -71,6 +167,41 @@ mod tests {
     #[test]
     fn cholesky_rejects_indefinite() {
         let h = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eig = 3, -1
+        assert!(cholesky(&h).is_err());
+    }
+
+    #[test]
+    fn blocked_matches_scalar_at_ragged_sizes() {
+        // nb = 16 so 33/130 exercise partial panels; 130 also covers the
+        // auto dispatch threshold.
+        let mut rng = Rng::new(23);
+        for n in [1usize, 7, 33, 130] {
+            let h = random_spd(&mut rng, n, 1e-3);
+            let s = cholesky_scalar(&h).unwrap();
+            for nb in [16usize, 64] {
+                let b = cholesky_blocked(&h, nb).unwrap();
+                assert!(max_abs_diff(&b, &s) < 1e-8, "n={n} nb={nb}");
+                let back = b.matmul_naive(&b.transpose());
+                assert!(max_abs_diff(&back, &h) < 1e-8, "n={n} nb={nb} reconstruct");
+            }
+        }
+        let h = random_spd(&mut rng, 130, 1e-3);
+        let auto = cholesky(&h).unwrap();
+        let forced = cholesky_blocked(&h, CHOL_BLOCK).unwrap();
+        assert_eq!(auto.data, forced.data, "auto dispatch is the nb=64 kernel");
+    }
+
+    #[test]
+    fn blocked_rejects_indefinite_in_late_panel() {
+        // A negative direction deep in the trailing submatrix: the blocked
+        // path must surface the same clean error as the scalar kernel,
+        // not a NaN factor.
+        let n = 100;
+        let mut h = Mat::eye(n);
+        h[(n - 1, n - 1)] = -0.5;
+        let be = cholesky_blocked(&h, 16).unwrap_err();
+        assert!(be.to_string().contains("not positive definite"), "{be}");
+        assert!(cholesky_scalar(&h).is_err());
         assert!(cholesky(&h).is_err());
     }
 

@@ -93,30 +93,133 @@ pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
     out
 }
 
-/// C = Aᵀ · A (Gram matrix), exploiting symmetry; used by Hessian collection.
-pub fn gram(a: &Mat) -> Mat {
-    let n = a.cols;
-    let mut out = Mat::zeros(n, n);
-    for r in 0..a.rows {
-        let row = a.row(r);
-        for i in 0..n {
-            let v = row[i];
-            if v == 0.0 {
-                continue;
-            }
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for j in i..n {
-                orow[j] += v * row[j];
+/// Accumulate the rank-k update AᵀA into the **upper triangle** of `out`
+/// (n×n): `out[i][j] += Σ_t a[t·n+i]·a[t·n+j]` for j ≥ i. Blocked over
+/// output row blocks and threaded like [`matmul`]; the per-entry reduction
+/// runs over t in ascending order regardless of thread count, so results
+/// are bit-deterministic (EXPERIMENTS.md §Perf 4). This is the substrate
+/// of [`syrk`]/[`gram`] and of the panel flush in
+/// [`crate::hessian::HessianAccum`].
+pub fn syrk_acc_upper(r: usize, n: usize, a: &[f64], out: &mut Mat) {
+    assert_eq!(a.len(), r * n, "syrk panel is {r}×{n}");
+    assert_eq!((out.rows, out.cols), (n, n), "syrk output must be {n}×{n}");
+    if r == 0 || n == 0 {
+        return;
+    }
+    let threads = if r * n * n > 2 * 64 * 64 * 64 {
+        default_threads()
+    } else {
+        1
+    };
+    let n_row_blocks = n.div_ceil(BLOCK);
+    // Each task owns output rows [i0, i1); writes never alias.
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    parallel_for(n_row_blocks, threads, |bi| {
+        let i0 = bi * BLOCK;
+        let i1 = (i0 + BLOCK).min(n);
+        let out_ptr = &out_ptr;
+        // SAFETY: row blocks [i0, i1) are disjoint across tasks.
+        let block =
+            unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i0 * n), (i1 - i0) * n) };
+        for t in 0..r {
+            let x = &a[t * n..(t + 1) * n];
+            for i in i0..i1 {
+                let xi = x[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let orow = &mut block[(i - i0) * n..(i - i0 + 1) * n];
+                // saxpy over the row's upper-triangle tail.
+                for j in i..n {
+                    orow[j] += xi * x[j];
+                }
             }
         }
-    }
-    // mirror
-    for i in 0..n {
+    });
+}
+
+/// Mirror the upper triangle of a square matrix into the lower — the
+/// finalize step of [`syrk`] and of `HessianAccum::finish`.
+pub fn mirror_upper(m: &mut Mat) {
+    assert_eq!(m.rows, m.cols);
+    for i in 0..m.rows {
         for j in 0..i {
-            out[(i, j)] = out[(j, i)];
+            m[(i, j)] = m[(j, i)];
         }
     }
+}
+
+/// C = AᵀA, symmetric: blocked threaded rank-k update over the upper
+/// triangle ([`syrk_acc_upper`]), mirrored once at the end.
+pub fn syrk(a: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.cols, a.cols);
+    syrk_acc_upper(a.rows, a.cols, &a.data, &mut out);
+    mirror_upper(&mut out);
     out
+}
+
+/// C = Aᵀ · A (Gram matrix). Thin wrapper over [`syrk`], kept under the
+/// established name for Hessian-collection call sites.
+pub fn gram(a: &Mat) -> Mat {
+    syrk(a)
+}
+
+/// Apply `f(i, row_i)` to rows [r0, r1) of `m` in parallel; each task
+/// mutates only its own row, so writes never alias. Substrate for the
+/// panel solves in the blocked LDL/Cholesky factorizations.
+pub(crate) fn par_rows<F>(m: &mut Mat, r0: usize, r1: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    if r1 <= r0 {
+        return;
+    }
+    let cols = m.cols;
+    let ptr = SendPtr(m.data.as_mut_ptr());
+    parallel_for(r1 - r0, threads, |li| {
+        let i = r0 + li;
+        let ptr = &ptr;
+        // SAFETY: each task touches only row i; rows are disjoint.
+        let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * cols), cols) };
+        f(i, row);
+    });
+}
+
+/// Symmetric trailing downdate of blocked LDL/Cholesky:
+/// `a[i][j] −= pd_row(i) · p_row(j)` for rows i in [r0, n) and columns
+/// r0 ≤ j ≤ i (lower triangle only), with `p`/`pd` the packed panel
+/// `(n−r0)×w` (for LDL, `pd` is the panel scaled by the block pivots; for
+/// Cholesky pass the panel twice). Threaded over row blocks; the
+/// per-entry dot has a fixed reduction order, so results do not depend on
+/// the thread count.
+pub(crate) fn trailing_downdate_lower(a: &mut Mat, r0: usize, pd: &[f64], p: &[f64], w: usize) {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    let rows_t = n - r0;
+    if rows_t == 0 || w == 0 {
+        return;
+    }
+    assert_eq!(p.len(), rows_t * w);
+    assert_eq!(pd.len(), rows_t * w);
+    let threads = if rows_t * rows_t / 2 * w > 64 * 64 * 64 {
+        default_threads()
+    } else {
+        1
+    };
+    let ptr = SendPtr(a.data.as_mut_ptr());
+    parallel_for(rows_t.div_ceil(BLOCK), threads, |bi| {
+        let lo = r0 + bi * BLOCK;
+        let hi = (lo + BLOCK).min(n);
+        let ptr = &ptr;
+        for i in lo..hi {
+            // SAFETY: each task owns rows [lo, hi) of `a`; disjoint.
+            let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * n), n) };
+            let pdi = &pd[(i - r0) * w..(i - r0 + 1) * w];
+            for j in r0..=i {
+                row[j] -= super::matrix::dot(pdi, &p[(j - r0) * w..(j - r0 + 1) * w]);
+            }
+        }
+    });
 }
 
 // ----------------------------------------------------------------------
@@ -308,6 +411,71 @@ mod tests {
         let g = gram(&a);
         let slow = a.transpose().matmul_naive(&a);
         assert!(super::super::matrix::max_abs_diff(&g, &slow) < 1e-9);
+    }
+
+    #[test]
+    fn syrk_matches_naive_at_ragged_sizes() {
+        // Sizes straddle the 64-wide block boundary (1, 7, 33, 130) so the
+        // partial-block paths and the threaded multi-block path both run.
+        let mut rng = Rng::new(30);
+        for &n in &[1usize, 7, 33, 130] {
+            for &r in &[1usize, 5, 130] {
+                let a = random_mat(&mut rng, r, n);
+                let fast = syrk(&a);
+                let slow = a.transpose().matmul_naive(&a);
+                assert!(
+                    super::super::matrix::max_abs_diff(&fast, &slow) < 1e-9,
+                    "r={r} n={n}"
+                );
+                // Exactly symmetric (mirror, not recompute).
+                for i in 0..n {
+                    for j in 0..i {
+                        assert_eq!(fast[(i, j)], fast[(j, i)]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_acc_accumulates_on_top() {
+        // Two panel flushes must equal one combined flush bit for bit:
+        // the reduction order per entry is t-ascending either way.
+        let mut rng = Rng::new(31);
+        let n = 33;
+        let a = random_mat(&mut rng, 20, n);
+        let mut two = Mat::zeros(n, n);
+        syrk_acc_upper(8, n, &a.data[..8 * n], &mut two);
+        syrk_acc_upper(12, n, &a.data[8 * n..], &mut two);
+        let mut one = Mat::zeros(n, n);
+        syrk_acc_upper(20, n, &a.data, &mut one);
+        assert_eq!(one.data, two.data);
+    }
+
+    #[test]
+    fn trailing_downdate_matches_reference() {
+        let mut rng = Rng::new(32);
+        let n = 90;
+        let r0 = 20;
+        let w = 13;
+        let mut a = random_mat(&mut rng, n, n);
+        let reference = a.clone();
+        let p: Vec<f64> = (0..(n - r0) * w).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let pd: Vec<f64> = p.iter().map(|x| x * 1.5).collect();
+        trailing_downdate_lower(&mut a, r0, &pd, &p, w);
+        for i in 0..n {
+            for j in 0..n {
+                if i >= r0 && j >= r0 && j <= i {
+                    let mut s = 0.0;
+                    for k in 0..w {
+                        s += pd[(i - r0) * w + k] * p[(j - r0) * w + k];
+                    }
+                    assert!((a[(i, j)] - (reference[(i, j)] - s)).abs() < 1e-12);
+                } else {
+                    assert_eq!(a[(i, j)], reference[(i, j)], "untouched ({i},{j})");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Dense linear-algebra substrate (no BLAS/LAPACK available offline).
 //!
 //! Everything QuIP's math needs: a row-major `f64` matrix, blocked and
-//! threaded GEMM, the UDUᵀ ("reverse LDL") factorization the paper's
-//! Eq. (4) uses, Cholesky, a cyclic-Jacobi symmetric eigensolver,
+//! threaded GEMM and SYRK (rank-k AᵀA) kernels, the UDUᵀ ("reverse LDL")
+//! factorization the paper's Eq. (4) uses and Cholesky — both blocked and
+//! threaded above one panel (EXPERIMENTS.md §Perf 4) — a cyclic-Jacobi
+//! symmetric eigensolver,
 //! Householder QR, Haar-random orthogonal sampling, the pluggable
 //! incoherence-transform subsystem ([`transform::Transform`]) with its
 //! Kronecker ([`kron`]) and randomized-Hadamard ([`hadamard`]) backends,

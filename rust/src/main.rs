@@ -9,10 +9,12 @@
 //! quip pjrt     --model s0 [--bits 2]          # AOT artifact smoke-run
 //! quip table    <1|2|3|4|5|6|14|15|16|optq|all> [--fast]
 //! quip figure   <1|2|3|4|5|all> [--fast]
-//! quip sweep    <rho|calib|greedy|batch|transform> [--fast]
+//! quip sweep    <rho|calib|greedy|batch|transform|quant> [--fast]
 //!               # batch = serving tokens/sec vs batch size;
 //!               # transform = kron vs hadamard incoherence backends;
-//!               # both artifact-free
+//!               # quant = quantize-throughput stages, scalar vs blocked
+//!               #         (accumulate / factorize / round);
+//!               # batch, transform and quant are artifact-free
 //! quip info
 //! ```
 //!

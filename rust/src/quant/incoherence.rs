@@ -116,16 +116,23 @@ pub struct Preprocessed {
     pub post: PostState,
 }
 
-/// Step 1 of Algorithm 1 — the damped Hessian H + α·mean(diag H)·I (with
-/// a tiny floor so exactly-dead input dimensions still get LDL pivots).
-/// Exposed so the pipeline's non-PD recovery can probe exactly the matrix
-/// the quantizer will factor.
+/// The diagonal bump [`damp`] adds: α·mean(diag H), floored at 1e-12 so
+/// exactly-dead input dimensions still get LDL pivots. The single
+/// authority for the damping magnitude — the pipeline's non-PD recovery
+/// re-damps its probe matrix in place with this same formula, so the
+/// probe stays bit-consistent with the matrix the quantizer factors.
+pub fn damp_bump(h: &Mat, alpha: f64) -> f64 {
+    let mean_diag = h.trace() / h.rows.max(1) as f64;
+    (alpha * mean_diag).max(1e-12)
+}
+
+/// Step 1 of Algorithm 1 — the damped Hessian H + α·mean(diag H)·I (see
+/// [`damp_bump`]). Exposed so the pipeline's non-PD recovery can probe
+/// exactly the matrix the quantizer will factor.
 pub fn damp(h: &Mat, alpha: f64) -> Mat {
-    let n = h.rows;
-    let mean_diag = h.trace() / n as f64;
     let mut hd = h.symmetrize();
-    let bump = (alpha * mean_diag).max(1e-12);
-    for i in 0..n {
+    let bump = damp_bump(h, alpha);
+    for i in 0..h.rows {
         hd[(i, i)] += bump;
     }
     hd

@@ -46,7 +46,12 @@ pub fn ldlq_with_feedback(
     Mat::from_rows(&rows)
 }
 
-/// Full LDLQ: factor H (UDUᵀ) and round with the LDL feedback.
+/// Full LDLQ: factor H (UDUᵀ) and round with the LDL feedback. The
+/// factorization runs on the blocked threaded LDL kernel above one panel
+/// (see `linalg::ldl`; EXPERIMENTS.md §Perf 4), so at LLM widths both the
+/// factor and the row-parallel rounding scale with cores; its wall-clock
+/// is credited to the `factorize` stage of the pipeline's
+/// `LayerStageTimings`.
 pub fn ldlq(wg: &Mat, h: &Mat, bits: u32, mode: RoundMode, seed: u64) -> Mat {
     let f = udu(h, 1e-12);
     ldlq_with_feedback(wg, &f.strictly_upper(), bits, mode, seed)

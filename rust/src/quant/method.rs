@@ -195,6 +195,19 @@ impl QuantConfigBuilder {
     }
 }
 
+/// Per-stage wall-clock of one layer quantization (EXPERIMENTS.md
+/// §Perf 4). Factorization time is credited by the `linalg::ldl` /
+/// `linalg::chol` entry points through the thread-local
+/// [`crate::util::stagetimer`] ledger; round time is the remainder of the
+/// rounder call.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageTimings {
+    /// Seconds inside LDL/Cholesky factorizations during rounding.
+    pub factorize_seconds: f64,
+    /// Seconds in the rounding core outside the factorizations.
+    pub round_seconds: f64,
+}
+
 /// Result of quantizing one layer.
 pub struct LayerQuantOutput {
     /// Integer grid codes (values in [0, 2^b − 1], stored as f64).
@@ -205,6 +218,8 @@ pub struct LayerQuantOutput {
     pub post: PostState,
     /// tr((Ŵ−W)H̃(Ŵ−W)ᵀ) against the damped original-basis Hessian.
     pub proxy_loss: f64,
+    /// Factorize/round wall-clock split of the rounder call.
+    pub stages: StageTimings,
 }
 
 /// Quantize one linear layer with an explicit [`Rounder`]: W (m×n) with
@@ -231,7 +246,13 @@ pub fn quantize_layer_with(
         greedy_passes: cfg.greedy_passes,
         alg5_c: cfg.alg5_c,
     };
+    // Drain residue (e.g. the pipeline's Cholesky probe) so the ledger
+    // measures only this rounder call, then split factorize from round.
+    let _ = crate::util::stagetimer::take_factorize();
+    let t_round = std::time::Instant::now();
     let codes = rounder.round(&pre.wg, &pre.h, &ctx);
+    let round_total = t_round.elapsed().as_secs_f64();
+    let factorize_seconds = crate::util::stagetimer::take_factorize();
     let w_hat = postprocess(&codes, &pre.post);
     let loss = proxy_loss(&w_hat, w, &pre.h_damped);
     LayerQuantOutput {
@@ -239,6 +260,10 @@ pub fn quantize_layer_with(
         w_hat,
         post: pre.post,
         proxy_loss: loss,
+        stages: StageTimings {
+            factorize_seconds,
+            round_seconds: (round_total - factorize_seconds).max(0.0),
+        },
     }
 }
 
@@ -418,6 +443,36 @@ mod tests {
         // Greedy polish descends in the reordered basis; allow tiny slack
         // from the basis change.
         assert!(rg.proxy_loss <= plain.proxy_loss * 1.15);
+    }
+
+    #[test]
+    fn stage_timings_split_the_rounder_call() {
+        let (w, h) = setup(11, 8, 96); // n > LDL_BLOCK: blocked factor path
+        let ldlq = quantize_layer(
+            &w,
+            &h,
+            &QuantConfig {
+                bits: 2,
+                method: Method::Ldlq,
+                ..Default::default()
+            },
+            3,
+        );
+        assert!(ldlq.stages.factorize_seconds >= 0.0);
+        assert!(ldlq.stages.round_seconds >= 0.0);
+        // Nearest rounding never factors: the ledger must stay empty.
+        let near = quantize_layer(
+            &w,
+            &h,
+            &QuantConfig {
+                bits: 2,
+                method: Method::Nearest,
+                ..Default::default()
+            },
+            3,
+        );
+        assert_eq!(near.stages.factorize_seconds, 0.0);
+        assert!(near.stages.round_seconds >= 0.0);
     }
 
     #[test]

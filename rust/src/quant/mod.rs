@@ -32,7 +32,7 @@ pub use grid::GridMap;
 pub use incoherence::{PostState, Processing};
 pub use method::{
     quantize_layer, quantize_layer_with, LayerQuantOutput, Method, QuantConfig,
-    QuantConfigBuilder,
+    QuantConfigBuilder, StageTimings,
 };
 pub use proxy::proxy_loss;
 pub use rounder::{RoundCtx, Rounder, RounderRegistry};

@@ -9,5 +9,6 @@ pub mod json;
 pub mod cli;
 pub mod threadpool;
 pub mod timer;
+pub mod stagetimer;
 pub mod logging;
 pub mod testkit;

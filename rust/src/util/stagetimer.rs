@@ -1,0 +1,51 @@
+//! Thread-local stage-timing ledger for the quantization hot path.
+//!
+//! The factorization entry points (`linalg::ldl::ldl_lower`,
+//! `linalg::chol::cholesky`) credit their wall-clock here, and
+//! `quant::quantize_layer_with` drains the ledger around the rounder call
+//! to split "factorize" time from "round" time without widening the
+//! object-safe `Rounder` trait. A thread-local works because layers
+//! quantize one-per-worker-thread (`coordinator::pipeline`) and the
+//! factorization itself always runs on the thread that called `round` —
+//! only the per-row rounding fans out. See EXPERIMENTS.md §Perf 4 for the
+//! stage breakdown this feeds.
+
+use std::cell::Cell;
+
+thread_local! {
+    static FACTORIZE: Cell<f64> = const { Cell::new(0.0) };
+}
+
+/// Credit `seconds` of factorization work to the current thread's ledger.
+pub fn credit_factorize(seconds: f64) {
+    FACTORIZE.with(|c| c.set(c.get() + seconds));
+}
+
+/// Drain the current thread's factorization ledger, returning the total
+/// credited since the last drain (0.0 when nothing was credited).
+pub fn take_factorize() -> f64 {
+    FACTORIZE.with(|c| c.replace(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn credits_accumulate_and_drain() {
+        let _ = take_factorize(); // clear residue from other tests on this thread
+        credit_factorize(0.25);
+        credit_factorize(0.5);
+        assert!((take_factorize() - 0.75).abs() < 1e-12);
+        assert_eq!(take_factorize(), 0.0);
+    }
+
+    #[test]
+    fn ledger_is_per_thread() {
+        let _ = take_factorize();
+        credit_factorize(1.0);
+        let other = std::thread::spawn(take_factorize).join().unwrap();
+        assert_eq!(other, 0.0, "fresh thread starts at zero");
+        assert!((take_factorize() - 1.0).abs() < 1e-12);
+    }
+}
