@@ -20,6 +20,7 @@ fn main() {
             ("optq", Method::Optq),
             ("greedy", Method::Greedy),
             ("near", Method::Nearest),
+            ("vq", Method::Vq),
         ] {
             let cfg = QuantConfig {
                 bits: 2,

@@ -461,7 +461,6 @@ impl<'a> QuantSession<'a> {
             specs,
             results,
         } = out;
-        let bits = self.cfg.quant.bits;
         let mut control = PipelineControl::Continue;
         for (spec, res) in specs.iter().zip(results) {
             let LayerResult {
@@ -506,12 +505,14 @@ impl<'a> QuantSession<'a> {
                 factorize_seconds: lq.stages.factorize_seconds,
                 round_seconds: lq.stages.round_seconds,
             });
-            self.layers
-                .push(QuantizedLayer::from_codes(&spec.name, &lq.codes, bits, lq.post));
+            // Vector-rounded layers store per-group codebook indices
+            // (`.qz` v3); scalar layers store bit-packed integer codes.
+            let proxy_loss = lq.proxy_loss;
+            self.layers.push(lq.into_layer(&spec.name));
             let c = self.emit(PipelineEvent::LayerDone {
                 block,
                 name: spec.name.clone(),
-                proxy_loss: lq.proxy_loss,
+                proxy_loss,
                 seconds: secs,
             });
             if c == PipelineControl::Stop {
@@ -678,6 +679,33 @@ mod tests {
         qm.apply_to(&mut m).unwrap();
         let logits = m.forward(&[1, 2, 3], None);
         assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn vq_pipeline_stores_codebook_layers() {
+        // End-to-end session with the vq rounder: every artifact layer
+        // stores vector-codebook indices, and the artifact survives a
+        // full v3 container roundtrip with identical dequantization.
+        let (qm, report, ck) = run_pipeline(2, Method::Vq, Processing::incoherent());
+        assert_eq!(qm.layers.len(), ck.config.linear_specs().len());
+        assert!(report.layers.iter().all(|l| l.proxy_loss.is_finite()));
+        assert_eq!(qm.recipe, "vq+incp-kron");
+        for l in &qm.layers {
+            assert!(
+                matches!(l.layout, crate::quant::CodeLayout::Vq { .. }),
+                "layer {} not vq",
+                l.name
+            );
+        }
+        let bytes = qm.to_bytes(crate::model::quantized::QZ_VERSION);
+        let loaded = QuantizedModel::from_bytes(&bytes).unwrap();
+        for (a, b) in loaded.layers.iter().zip(&qm.layers) {
+            assert_eq!(a.dequantize().data, b.dequantize().data);
+        }
+        // And the artifact drives a working model.
+        let mut m = Transformer::from_checkpoint(&ck).unwrap();
+        loaded.apply_to(&mut m).unwrap();
+        assert!(m.forward(&[1, 2, 3], None).iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -7,6 +7,14 @@
 //! whichever the artifact's layers record — the Rust twin of the Pallas
 //! kernel path.
 //!
+//! Both code layouts decode through the same kernels: scalar layers
+//! bit-unpack 2/3/4-bit integer codes; vector-quantized layers (`.qz`
+//! v3, the `vq` rounder) expand one byte-aligned group index per 8
+//! weights through a per-layer codebook LUT
+//! ([`crate::quant::grid::VqLut`], regenerated from the layer's stored
+//! seed), so serving and [`LinearOps::apply_batch`] work unchanged on
+//! codebook artifacts.
+//!
 //! Batched serving path: [`LinearOps::apply_batch`] applies one linear to
 //! a whole batch of query vectors. The quantized implementation decodes a
 //! [`BATCH_TILE`]-row tile of packed codes *once* into a scratch buffer
@@ -21,8 +29,8 @@ use crate::linalg::gemm::{sdot, sgemm_bt, sgemm_bt_fused};
 use crate::linalg::{make_transform, Transform};
 use crate::model::quantized::QuantizedModel;
 use crate::model::transformer::{gelu, layernorm_rows, KvCache, Transformer};
-use crate::quant::grid::GridMap;
-use crate::quant::packed::QuantizedLayer;
+use crate::quant::grid::{Codebook, GridMap, VqLut, VQ_GROUP};
+use crate::quant::packed::{CodeLayout, QuantizedLayer};
 use std::sync::Arc;
 
 /// Linear-layer slots within a block, forward order.
@@ -112,6 +120,17 @@ pub struct QuantLinear {
     dinv: Option<Vec<f32>>,
     vtr: Option<Arc<dyn Transform>>,
     utr: Option<Arc<dyn Transform>>,
+    /// Codebook expansion state for vq layers (`None` for scalar codes):
+    /// the per-layer LUT regenerated from the layer's stored seed.
+    vq: Option<VqState>,
+}
+
+/// Per-layer vector-codebook decode state: the f32 LUT plus the packed
+/// geometry (⌈n/8⌉ groups per row, `bits` bytes per group index).
+struct VqState {
+    lut: VqLut,
+    groups_per_row: usize,
+    bytes_per_group: usize,
 }
 
 impl QuantLinear {
@@ -145,6 +164,18 @@ impl QuantLinear {
         } else {
             (None, None)
         };
+        let vq = match layer.layout {
+            CodeLayout::Scalar => None,
+            CodeLayout::Vq { cb_seed } => {
+                let cb = Codebook::e8(layer.bits, cb_seed)
+                    .expect("vq layer bits validated at construction/deserialize");
+                Some(VqState {
+                    lut: cb.lut_f32().expect("e8 codebooks always have a LUT"),
+                    groups_per_row: layer.n.div_ceil(VQ_GROUP),
+                    bytes_per_group: layer.bits as usize,
+                })
+            }
+        };
         QuantLinear {
             layer,
             rowscale,
@@ -152,6 +183,7 @@ impl QuantLinear {
             dinv,
             vtr,
             utr,
+            vq,
         }
     }
 
@@ -193,9 +225,48 @@ impl QuantLinear {
         }
     }
 
+    /// Read the group index for (row `i`, group `g`) straight from the
+    /// packed bytes. Vq group indices are `8·bits` bits = `bits` bytes
+    /// wide, so every group is byte-aligned: a plain little-endian read.
+    #[inline]
+    fn read_group_index(&self, vq: &VqState, i: usize, g: usize) -> u64 {
+        let off = (i * vq.groups_per_row + g) * vq.bytes_per_group;
+        let mut v = 0u64;
+        for (b, &byte) in self.layer.packed[off..off + vq.bytes_per_group]
+            .iter()
+            .enumerate()
+        {
+            v |= (byte as u64) << (8 * b);
+        }
+        v
+    }
+
+    /// raw_i = Σ_j codes[i,j]·x[j] for a vq layer: expand each group
+    /// index through the per-layer LUT into an 8-wide stack buffer and
+    /// accumulate — no byte-level bit extraction at all.
+    fn matvec_vq(&self, vq: &VqState, x: &[f32], out: &mut [f32]) {
+        let (m, n) = (self.layer.m, self.layer.n);
+        let mut buf = [0.0f32; VQ_GROUP];
+        for (i, o) in out.iter_mut().enumerate().take(m) {
+            let mut acc = 0.0f32;
+            for g in 0..vq.groups_per_row {
+                let r = (n - g * VQ_GROUP).min(VQ_GROUP);
+                vq.lut.decode(self.read_group_index(vq, i, g), &mut buf[..r]);
+                let xs = &x[g * VQ_GROUP..g * VQ_GROUP + r];
+                for j in 0..r {
+                    acc += buf[j] * xs[j];
+                }
+            }
+            *o = acc;
+        }
+    }
+
     /// raw_i = Σ_j codes[i,j]·x[j], reading codes straight from the packed
-    /// bitstream.
+    /// bitstream (or through the codebook LUT for vq layers).
     fn matvec_codes(&self, x: &[f32], out: &mut [f32]) {
+        if let Some(vq) = &self.vq {
+            return self.matvec_vq(vq, x, out);
+        }
         let (m, n) = (self.layer.m, self.layer.n);
         let bits = self.layer.bits as usize;
         let packed = &self.layer.packed;
@@ -256,12 +327,26 @@ impl QuantLinear {
     }
 
     /// Decode rows `[i0, i1)` of the packed codes into `out`
-    /// ((i1−i0) × n f32, raw code values). The tile decode of the fused
-    /// batch kernel: paid once per tile, amortized over the whole batch.
+    /// ((i1−i0) × n f32, raw code values — codebook points for vq
+    /// layers). The tile decode of the fused batch kernel: paid once per
+    /// tile, amortized over the whole batch.
     fn decode_rows(&self, i0: usize, i1: usize, out: &mut [f32]) {
         let n = self.layer.n;
         let bits = self.layer.bits as usize;
         debug_assert_eq!(out.len(), (i1 - i0) * n);
+        if let Some(vq) = &self.vq {
+            for i in i0..i1 {
+                let orow = &mut out[(i - i0) * n..(i - i0 + 1) * n];
+                for g in 0..vq.groups_per_row {
+                    let r = (n - g * VQ_GROUP).min(VQ_GROUP);
+                    vq.lut.decode(
+                        self.read_group_index(vq, i, g),
+                        &mut orow[g * VQ_GROUP..g * VQ_GROUP + r],
+                    );
+                }
+            }
+            return;
+        }
         let packed = &self.layer.packed;
         match bits {
             2 if n % 4 == 0 => {
@@ -736,7 +821,12 @@ mod tests {
         }
     }
 
-    fn quantize_model(m: &Transformer, bits: u32, processing: Processing) -> QuantizedModel {
+    fn quantize_model_with(
+        m: &Transformer,
+        bits: u32,
+        method: Method,
+        processing: Processing,
+    ) -> QuantizedModel {
         let mut rng = crate::util::rng::Rng::new(3);
         let mut layers = Vec::new();
         for spec in m.cfg.linear_specs() {
@@ -752,13 +842,13 @@ mod tests {
                 &h,
                 &QuantConfig {
                     bits,
-                    method: Method::Ldlq,
+                    method,
                     processing: processing.clone(),
                     ..Default::default()
                 },
                 11,
             );
-            layers.push(QuantizedLayer::from_codes(&spec.name, &out.codes, bits, out.post));
+            layers.push(out.into_layer(&spec.name));
         }
         QuantizedModel {
             config: m.cfg.clone(),
@@ -766,6 +856,10 @@ mod tests {
             recipe: "test".into(),
             layers,
         }
+    }
+
+    fn quantize_model(m: &Transformer, bits: u32, processing: Processing) -> QuantizedModel {
+        quantize_model_with(m, bits, Method::Ldlq, processing)
     }
 
     #[test]
@@ -977,6 +1071,127 @@ mod tests {
         for l in &qm.layers {
             assert_eq!(l.post.transform, crate::linalg::TransformKind::Hadamard);
         }
+        let qlin = QuantLinears::from_model(&qm).unwrap();
+        let mut md = tiny();
+        qm.apply_to(&mut md).unwrap();
+        let fp = FpLinears { model: &md };
+        let mut c1 = m.new_cache();
+        let mut c2 = m.new_cache();
+        for &t in &[1u32, 20, 33] {
+            let a = decode_step_with(&m, &qlin, &mut c1, t);
+            let b = decode_step_with(&md, &fp, &mut c2, t);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 5e-2, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn vq_fused_decode_matches_dequantized_through_v3_artifact() {
+        // Acceptance: quantize with the vq rounder → save a v3 container
+        // → load → the fused LUT decode (single-vector and batched at
+        // batch {1, 17}) equals the dequantized dense reference.
+        for bits in [2u32, 4] {
+            let m = tiny();
+            let qm = quantize_model_with(&m, bits, Method::Vq, Processing::incoherent());
+            let bytes = qm.to_bytes(crate::model::quantized::QZ_VERSION);
+            let loaded = QuantizedModel::from_bytes(&bytes).unwrap();
+            let qlin = QuantLinears::from_model(&loaded).unwrap();
+            let mut md = tiny();
+            loaded.apply_to(&mut md).unwrap();
+            let fp = FpLinears { model: &md };
+            let d = m.cfg.d_model;
+            for blk in 0..m.cfg.n_layers {
+                for slot in 0..4 {
+                    for batch in [1usize, 17] {
+                        let xs: Vec<f32> =
+                            (0..batch * d).map(|i| ((i as f32) * 0.053).sin()).collect();
+                        let mut ya = vec![0.0f32; batch * d];
+                        let mut yb = vec![0.0f32; batch * d];
+                        qlin.apply_batch(blk, slot, &xs, batch, &mut ya);
+                        fp.apply_batch(blk, slot, &xs, batch, &mut yb);
+                        for (a, b) in ya.iter().zip(&yb) {
+                            assert!(
+                                (a - b).abs() < 1e-3 * b.abs().max(1.0),
+                                "bits={bits} blk{blk} slot{slot} batch{batch}: {a} vs {b}"
+                            );
+                        }
+                        // Single-vector fused path agrees with the batch.
+                        if batch == 1 {
+                            let mut y1 = vec![0.0f32; d];
+                            qlin.apply(blk, slot, &xs, &mut y1);
+                            for (a, b) in y1.iter().zip(&ya) {
+                                assert!((a - b).abs() < 1e-3 * b.abs().max(1.0));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vq_layer_kernel_matches_dense_at_ragged_sizes() {
+        // A single vq QuantLinear at m=40, n=52 (ragged last tile AND a
+        // ragged last 8-group) against dequantize + dense matmul, for
+        // both transform backends.
+        let (m, n) = (40usize, 52usize);
+        let mut rng = crate::util::rng::Rng::new(21);
+        let w = Mat::from_fn(m, n, |_, _| rng.uniform(-0.5, 0.5));
+        let h = random_hessian(&mut rng, n, n / 4, 1e-2);
+        for processing in [
+            Processing::incoherent(),
+            Processing::incoherent_with(crate::linalg::TransformKind::Hadamard),
+        ] {
+            for bits in [2u32, 4] {
+                let out = quantize_layer(
+                    &w,
+                    &h,
+                    &QuantConfig {
+                        bits,
+                        method: Method::Vq,
+                        processing: processing.clone(),
+                        ..Default::default()
+                    },
+                    17,
+                );
+                let vq = out.vq.as_ref().expect("vq indices");
+                let layer = crate::quant::packed::QuantizedLayer::from_vq_indices(
+                    "t", m, n, bits, vq, out.post,
+                );
+                let wd = layer.dequantize();
+                let lin = QuantLinear::new(layer);
+                for batch in [1usize, 17] {
+                    let xs: Vec<f32> = (0..batch * n)
+                        .map(|i| ((i as f32) * 0.013).sin())
+                        .collect();
+                    let mut ys = vec![0.0f32; batch * m];
+                    let mut s = BatchScratch::new();
+                    lin.apply_batch(&xs, batch, &mut ys, &mut s);
+                    for b in 0..batch {
+                        for i in 0..m {
+                            let mut want = 0.0f64;
+                            for j in 0..n {
+                                want += wd[(i, j)] * xs[b * n + j] as f64;
+                            }
+                            let got = ys[b * m + i] as f64;
+                            assert!(
+                                (got - want).abs() < 1e-3 * want.abs().max(1.0),
+                                "bits={bits} batch={batch} b={b} i={i}: {got} vs {want}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vq_decode_step_close_to_dequantized() {
+        // Full decode loop over a vq artifact stays close to the
+        // dequantized fp32 reference — serving works unchanged.
+        let m = tiny();
+        let qm = quantize_model_with(&m, 4, Method::Vq, Processing::incoherent());
         let qlin = QuantLinears::from_model(&qm).unwrap();
         let mut md = tiny();
         qm.apply_to(&mut md).unwrap();

@@ -102,6 +102,15 @@ impl PjrtLm {
 /// semantics) from a quantized layer.
 fn qparam_input(qm: &QuantizedModel, ispec: &crate::runtime::InputSpec) -> crate::Result<Input> {
     let layer = qm.layer(&ispec.name)?;
+    // The AOT Pallas artifacts bit-unpack scalar integer codes; a layer
+    // storing vector-codebook indices (`.qz` v3, the vq rounder) has no
+    // scalar codes to marshal — route it to the native engine instead.
+    anyhow::ensure!(
+        layer.layout == crate::quant::packed::CodeLayout::Scalar,
+        "layer '{}' stores vector-codebook indices; the AOT Pallas artifacts \
+         decode scalar codes — use the native engine for vq models",
+        layer.name
+    );
     let (m, n) = (layer.m, layer.n);
     let bits = layer.bits;
     let qmax = crate::quant::grid::levels(bits) as f64;

@@ -20,11 +20,17 @@
 //! accumulation (scalar rank-1 vs blocked SYRK), LDL/Cholesky
 //! factorization (scalar vs blocked), and LDLQ rounding — timed per stage
 //! across n ∈ {256, 512, 1024} × bits ∈ {2, 4}, with end-to-end
-//! seconds/layer for both kernel sets (EXPERIMENTS.md §Perf 4).
+//! seconds/layer for both kernel sets (EXPERIMENTS.md §Perf 4),
 //!
-//! `quip sweep <rho|calib|greedy|batch|transform|quant> [--model s0]
-//! [--bits 2]`. `batch`, `transform` and `quant` are artifact-free
-//! (synthetic inputs) so they run anywhere, including CI (`--fast`).
+//! plus the `codebook` sweep: scalar-LDLQ vs the E8-style vector
+//! codebook (`vq`) at equal bitrate — proxy loss, bits/weight and decode
+//! ms/token through quantize → save v3 `.qz` → load → decode
+//! (EXPERIMENTS.md §Quality).
+//!
+//! `quip sweep <rho|calib|greedy|batch|transform|quant|codebook>
+//! [--model s0] [--bits 2]`. `batch`, `transform`, `quant` and
+//! `codebook` are artifact-free (synthetic inputs) so they run anywhere,
+//! including CI (`--fast`).
 
 use super::env::{f2, write_result, Env, TablePrinter};
 use crate::coordinator::pipeline::{quantize_model, PipelineConfig};
@@ -41,9 +47,10 @@ pub fn run_sweep(which: &str, args: &Args) -> crate::Result<()> {
         "batch" => sweep_batch(args),
         "transform" => sweep_transform(args),
         "quant" => sweep_quant(args),
+        "codebook" => sweep_codebook(args),
         other => {
             anyhow::bail!(
-                "unknown sweep '{other}' (rho, calib, greedy, batch, transform, quant)"
+                "unknown sweep '{other}' (rho, calib, greedy, batch, transform, quant, codebook)"
             )
         }
     }
@@ -611,6 +618,134 @@ fn sweep_quant(args: &Args) -> crate::Result<()> {
          scalar; record the n=1024 numbers in EXPERIMENTS.md §Perf 4."
     );
     write_result("sweep_quant", &out)?;
+    Ok(())
+}
+
+/// Rounding-target sweep: scalar-LDLQ vs the E8-style vector codebook
+/// (`vq`) at equal bitrate, end-to-end. For each (bits, rounder) cell the
+/// model is quantized (IncP on both), written to a v3 `.qz`, loaded back,
+/// and decoded through the native engine — proxy loss measures
+/// quantization quality (QuIP#'s claim: the lattice codebook closes the
+/// 2-bit gap, so vq ≤ scalar at 2 bits), decode ms/token measures the
+/// LUT-expansion path against the bit-unpack path, and bits/weight pins
+/// the equal-bitrate comparison. Artifact-free; `--fast` is the CI smoke
+/// shape (EXPERIMENTS.md §Quality).
+fn sweep_codebook(args: &Args) -> crate::Result<()> {
+    use crate::coordinator::generate::{generate, GenParams};
+    use crate::engine::native::QuantLinears;
+    use crate::linalg::Mat;
+    use crate::model::quantized::QuantizedModel;
+    use crate::model::weights::Checkpoint;
+    use crate::model::ModelConfig;
+    use crate::quant::quantize_layer;
+
+    let fast = args.flag("fast");
+    let cfg = crate::model::ModelConfig::by_name(&args.opt_or("model", "s0"))
+        .unwrap_or_else(|_| ModelConfig::sized("s0", 64, 2, 4, 256));
+    let ck = Checkpoint::random(&cfg, 7);
+    let model = Transformer::from_checkpoint(&ck)?;
+    let bits_list: &[u32] = if fast { &[2] } else { &[2, 4] };
+    let max_tokens = if fast { 4 } else { 16 };
+    println!(
+        "codebook sweep — {} (d={} L={}), LDLQ feedback + IncP, scalar grid vs \
+         E8-style vq at equal bitrate; quantize → save v3 .qz → load → decode per cell\n",
+        cfg.name, cfg.d_model, cfg.n_layers
+    );
+
+    let dir = std::env::temp_dir().join("quip_sweep_codebook");
+    std::fs::create_dir_all(&dir)?;
+    let mut tp = TablePrinter::new(&[
+        "bits",
+        "rounder",
+        "proxy loss↓",
+        "bits/weight",
+        "decode ms/tok↓",
+    ]);
+    let mut out = Json::obj();
+    let mut proxy_at_2 = std::collections::HashMap::new();
+    for &bits in bits_list {
+        for rounder in ["ldlq", "vq"] {
+            let qcfg = QuantConfig::builder()
+                .bits(bits)
+                .rounder(rounder)
+                .processing(Processing::incoherent())
+                .build()?;
+            let mut rng = crate::util::rng::Rng::new(3);
+            let mut layers = Vec::new();
+            let mut proxy_total = 0.0f64;
+            for spec in cfg.linear_specs() {
+                let wdata = model.get_weight(&spec.name)?;
+                let w = Mat {
+                    rows: spec.out_dim,
+                    cols: spec.in_dim,
+                    data: wdata.iter().map(|&x| x as f64).collect(),
+                };
+                let h = crate::util::testkit::random_hessian(&mut rng, spec.in_dim, 8, 1e-2);
+                let lq = quantize_layer(&w, &h, &qcfg, 5);
+                proxy_total += lq.proxy_loss;
+                layers.push(lq.into_layer(&spec.name));
+            }
+            let qm = QuantizedModel {
+                config: cfg.clone(),
+                bits,
+                recipe: format!("{rounder}+incp"),
+                layers,
+            };
+            let bpw = qm.bits_per_weight();
+            // Full artifact lifecycle: save v3 → load → decode.
+            let path = dir.join(format!("{}_q{bits}_{rounder}.qz", cfg.name));
+            qm.save(&path)?;
+            let loaded = QuantizedModel::load(&path)?;
+            anyhow::ensure!(
+                loaded
+                    .layers
+                    .iter()
+                    .all(|l| matches!(l.layout, crate::quant::CodeLayout::Vq { .. })
+                        == (rounder == "vq")),
+                "loaded artifact lost the code layout"
+            );
+            let qlin = QuantLinears::from_model(&loaded)?;
+            let params = GenParams {
+                max_tokens,
+                ..Default::default()
+            };
+            let gen = generate(&model, &qlin, &[1, 5, 9], &params);
+            anyhow::ensure!(
+                !gen.tokens.is_empty(),
+                "decode produced no tokens ({rounder} @ {bits} bits)"
+            );
+            let decode_ms_tok = gen.decode_seconds * 1e3 / gen.tokens.len().max(1) as f64;
+
+            if bits == 2 {
+                proxy_at_2.insert(rounder, proxy_total);
+            }
+            tp.row(vec![
+                bits.to_string(),
+                rounder.to_string(),
+                format!("{proxy_total:.4}"),
+                format!("{bpw:.3}"),
+                format!("{decode_ms_tok:.3}"),
+            ]);
+            let mut o = Json::obj();
+            o.set("proxy_loss", Json::Num(proxy_total));
+            o.set("bits_per_weight", Json::Num(bpw));
+            o.set("decode_ms_per_token", Json::Num(decode_ms_tok));
+            out.set(&format!("q{bits}_{rounder}"), o);
+        }
+    }
+    tp.print();
+    if let (Some(&vq), Some(&sc)) = (proxy_at_2.get("vq"), proxy_at_2.get("ldlq")) {
+        println!(
+            "\n2-bit proxy loss at equal bitrate: vq {vq:.4} vs scalar-LDLQ {sc:.4} ({})",
+            if vq <= sc {
+                "vq ≤ scalar — the E8 shaping gain, matching QuIP#"
+            } else {
+                "scalar ahead on this draw — rerun with another seed/model"
+            }
+        );
+        out.set("vq_beats_scalar_at_2", Json::Num((vq <= sc) as u8 as f64));
+    }
+    write_result("sweep_codebook", &out)?;
     Ok(())
 }
 

@@ -24,12 +24,16 @@
 //! ## Quickstart
 //!
 //! Rounding algorithms are [`quant::Rounder`] impls resolved by name (any
-//! CLI alias works: `quip`, `gptq`, `allbal`, …) through the
+//! CLI alias works: `quip`, `gptq`, `allbal`, `vq`, …) through the
 //! [`quant::RounderRegistry`]; the incoherence step is a pluggable
 //! [`linalg::Transform`] backend selected by [`linalg::TransformKind`] —
 //! the paper's Kronecker operator (`kron`, default) or QuIP#'s randomized
 //! Hadamard transform (`hadamard`, O(n log n) with tighter incoherence
-//! concentration); configuration comes from
+//! concentration); what rounders round *to* is a [`quant::Codebook`] —
+//! the scalar integer grid, or the `vq` rounder's seeded E8-style
+//! 8-dimensional vector codebook (QuIP#'s lattice-codebook idea, stored
+//! as per-group indices in `.qz` v3 and decoded through a per-layer LUT;
+//! DESIGN.md §6); configuration comes from
 //! [`quant::QuantConfig::builder`]:
 //!
 //! ```no_run
@@ -69,9 +73,13 @@
 //! incoherence operators implement [`linalg::Transform`] (seed-only
 //! serialization, f64 matrix conjugation + f32 fused inference applies)
 //! and gain a [`linalg::TransformKind`] code; quantizer, `.qz` artifacts
-//! (v2 records the kind per layer, with a CRC-32 footer; v1 loads as
-//! `kron`) and the native engine pick them up through
-//! [`linalg::make_transform`].
+//! (v2 added the per-layer transform kind + CRC-32 footer, v3 adds the
+//! per-layer code layout; v1 loads as `kron`, v1/v2 load as scalar) and
+//! the native engine pick them up through [`linalg::make_transform`].
+//!
+//! Repo-level documentation: README.md (build/CLI/repo map), DESIGN.md
+//! (substrate substitutions, numerics, paper → substrate mapping),
+//! EXPERIMENTS.md (measured results), PAPER.md (the source abstract).
 
 pub mod util;
 pub mod linalg;

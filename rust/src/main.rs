@@ -1,31 +1,35 @@
 //! `quip` — the command-line entry point.
 //!
 //! ```text
-//! quip quantize --model s1 --bits 2 [--method ldlq] [--transform kron]
+//! quip quantize --model s1 --bits 2 [--rounder ldlq] [--transform kron]
 //!               [--baseline] [--out path.qz]
 //! quip eval     --model s1 [--qz path.qz]
 //! quip gen      --model s1 [--qz path.qz] --prompt "3,17,9" --max-tokens 32
 //! quip serve    --model s1 [--qz path.qz] [--addr 127.0.0.1:7077]
 //! quip pjrt     --model s0 [--bits 2]          # AOT artifact smoke-run
+//! quip inspect  <file.qz>                      # artifact introspection
 //! quip table    <1|2|3|4|5|6|14|15|16|optq|all> [--fast]
 //! quip figure   <1|2|3|4|5|all> [--fast]
-//! quip sweep    <rho|calib|greedy|batch|transform|quant> [--fast]
+//! quip sweep    <rho|calib|greedy|batch|transform|quant|codebook> [--fast]
 //!               # batch = serving tokens/sec vs batch size;
 //!               # transform = kron vs hadamard incoherence backends;
 //!               # quant = quantize-throughput stages, scalar vs blocked
 //!               #         (accumulate / factorize / round);
-//!               # batch, transform and quant are artifact-free
+//!               # codebook = scalar-LDLQ vs E8-style vq at equal bitrate;
+//!               # batch, transform, quant and codebook are artifact-free
 //! quip info
 //! ```
 //!
-//! `--method` accepts any `RounderRegistry` name or alias: `near[est]`,
-//! `stoch[astic]`, `ldlq`/`quip`, `ldlq-rg`/`quip-rg`, `greedy`/`allbal`,
-//! `optq`/`gptq`, `alg5`/`ldlbal_admm`. `--transform` picks the
-//! incoherence backend: `kron` (the paper's Kronecker operator, default),
-//! `hadamard` (the QuIP# randomized Hadamard transform), or `none`
-//! (skip the conjugation step). Flags are assembled into a `QuantConfig`
-//! with `QuantConfig::builder()` — `quant_config` below is the one place
-//! CLI names meet the quantization API.
+//! `--rounder` (alias `--method`) accepts any `RounderRegistry` name or
+//! alias: `near[est]`, `stoch[astic]`, `ldlq`/`quip`, `ldlq-rg`/`quip-rg`,
+//! `greedy`/`allbal`, `optq`/`gptq`, `alg5`/`ldlbal_admm`,
+//! `vq`/`codebook`/`e8` (the QuIP#-style E8 vector codebook; even bit
+//! widths only). `--transform` picks the incoherence backend: `kron` (the
+//! paper's Kronecker operator, default), `hadamard` (the QuIP# randomized
+//! Hadamard transform), or `none` (skip the conjugation step). Flags are
+//! assembled into a `QuantConfig` with `QuantConfig::builder()` —
+//! `quant_config` below is the one place CLI names meet the quantization
+//! API.
 
 use quip::coordinator::server::{EngineKind, Server, ServerConfig};
 use quip::engine::native::{FpLinears, QuantLinears};
@@ -53,7 +57,8 @@ fn main() {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: quip <quantize|eval|gen|serve|pjrt|table|figure|sweep|info> [options]"
+                "usage: quip <quantize|eval|gen|serve|pjrt|inspect|table|figure|sweep|info> \
+                 [options]"
             );
             eprintln!("see `quip info` and README.md");
             std::process::exit(2);
@@ -66,6 +71,8 @@ fn main() {
 }
 
 /// CLI flags → [`QuantConfig`], via the builder + rounder registry.
+/// `--rounder` / `--method` are interchangeable (`--rounder` is the
+/// canonical spelling; `--method` predates the registry).
 /// `--transform {kron,hadamard,none}` selects the incoherence backend;
 /// `none` keeps the rest of IncP but skips the conjugation step.
 fn quant_config(args: &Args) -> quip::Result<QuantConfig> {
@@ -78,9 +85,13 @@ fn quant_config(args: &Args) -> quip::Result<QuantConfig> {
         "none" => processing.incoherent = false,
         name => processing.transform = quip::linalg::TransformKind::parse(name)?,
     }
+    let rounder = args
+        .opt("rounder")
+        .map(str::to_string)
+        .unwrap_or_else(|| args.opt_or("method", "ldlq"));
     QuantConfig::builder()
         .bits(args.opt_usize("bits", 2) as u32)
-        .rounder(&args.opt_or("method", "ldlq"))
+        .rounder(&rounder)
         .processing(processing)
         .greedy_passes(args.opt_usize("greedy-passes", 5))
         .force_stochastic(args.flag("stochastic"))
@@ -287,11 +298,15 @@ fn cmd_inspect(args: &Args) -> quip::Result<()> {
     println!("  quantized params: {total}");
     for l in qm.layers.iter().take(8) {
         println!(
-            "  {:<16} {:>4}x{:<4}  packed {:>7}B  transform={} rescale={} grid={}",
+            "  {:<16} {:>4}x{:<4}  packed {:>7}B  codes={} transform={} rescale={} grid={}",
             l.name,
             l.m,
             l.n,
             l.packed.len(),
+            match l.layout {
+                quip::quant::CodeLayout::Scalar => "scalar",
+                quip::quant::CodeLayout::Vq { .. } => "vq8",
+            },
             if l.post.incoherent {
                 l.post.transform.name()
             } else {

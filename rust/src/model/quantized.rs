@@ -5,27 +5,33 @@
 //! ## Container layout
 //!
 //! ```text
-//! v2 (current):  magic u32 | version=2 u32 | config json | bits u32 |
+//! v3 (current):  magic u32 | version=3 u32 | config json | bits u32 |
 //!                recipe str | layer count u32 | layers… | crc32 u32
+//! v2 (legacy):   magic u32 | version=2 u32 | …same layout, layer
+//!                records lack the code-layout tag
 //! v1 (legacy):   magic u32 | version=1 u32 | …same, no crc footer
 //! ```
 //!
 //! v2 layer records carry the incoherence-transform kind
 //! ([`crate::linalg::TransformKind`]) after the `incoherent` flag; v1
-//! layers predate the transform subsystem and load as `Kron`. The v2
-//! trailing CRC-32 covers every preceding byte, so truncated or corrupted
-//! artifacts fail with a clean error before any layer parsing happens.
+//! layers predate the transform subsystem and load as `Kron`. v3 layer
+//! records additionally carry a [`crate::quant::CodeLayout`] tag —
+//! scalar bit-packed codes, or vector-codebook indices plus the seed
+//! that regenerates the E8-style codebook; v1/v2 layers load as scalar.
+//! The v2+ trailing CRC-32 covers every preceding byte, so truncated or
+//! corrupted artifacts fail with a clean error before any layer parsing
+//! happens.
 
 use super::config::ModelConfig;
 use super::transformer::Transformer;
-use crate::quant::packed::{FORMAT_V1, FORMAT_V2, QuantizedLayer};
+use crate::quant::packed::{FORMAT_V1, FORMAT_V2, FORMAT_V3, QuantizedLayer};
 use crate::util::bytes::{Reader, Writer};
 use crate::util::crc32::crc32;
 use crate::util::json::Json;
 
 pub const QZ_MAGIC: u32 = 0x5A51_5051; // "QPQZ" LE-ish
 /// Current container version written by [`QuantizedModel::save`].
-pub const QZ_VERSION: u32 = FORMAT_V2;
+pub const QZ_VERSION: u32 = FORMAT_V3;
 
 /// A fully quantized model: every linear layer's packed codes + metadata.
 pub struct QuantizedModel {
@@ -46,15 +52,17 @@ impl QuantizedModel {
         Ok(())
     }
 
-    /// Serialize into an in-memory container of the given version (v1 is
-    /// exposed so back-compat tests can author pre-subsystem artifacts).
+    /// Serialize into an in-memory container of the given version (v1/v2
+    /// are exposed so back-compat tests can author pre-subsystem
+    /// artifacts).
     ///
-    /// Panics if `version` is v1 and any layer uses a non-Kron transform
-    /// (see [`QuantizedLayer::serialize_version`]): the v1 layout has no
-    /// transform field, so writing such a model would silently reload as
-    /// Kron and dequantize to garbage.
+    /// Panics if `version` is v1 and any layer uses a non-Kron transform,
+    /// or `version` < v3 and any layer stores vector-codebook indices
+    /// (see [`QuantizedLayer::serialize_version`]): the older layouts
+    /// have no field for either, so writing such a model would silently
+    /// reload wrong and dequantize to garbage.
     pub fn to_bytes(&self, version: u32) -> Vec<u8> {
-        assert!(version == FORMAT_V1 || version == FORMAT_V2);
+        assert!((FORMAT_V1..=FORMAT_V3).contains(&version));
         let mut w = Writer::new();
         w.u32(QZ_MAGIC);
         w.u32(version);
@@ -85,7 +93,7 @@ impl QuantizedModel {
         anyhow::ensure!(r.u32()? == QZ_MAGIC, "bad .qz magic");
         let version = r.u32()?;
         anyhow::ensure!(
-            version == FORMAT_V1 || version == FORMAT_V2,
+            (FORMAT_V1..=FORMAT_V3).contains(&version),
             "unsupported .qz version {version} (this build reads v1-v{QZ_VERSION})"
         );
         let body = if version >= FORMAT_V2 {
@@ -241,6 +249,78 @@ mod tests {
             assert_eq!(a.post.transform, crate::linalg::TransformKind::Kron);
             assert_eq!(a.dequantize().data, b.dequantize().data);
         }
+    }
+
+    #[test]
+    fn v2_container_still_loads() {
+        // A `.qz` written before the codebook subsystem (v2 layout, no
+        // code-layout tag) must keep loading, as scalar on every layer.
+        let (qm, _) = quantize_tiny(2);
+        let v2 = qm.to_bytes(crate::quant::packed::FORMAT_V2);
+        let v3 = qm.to_bytes(crate::quant::packed::FORMAT_V3);
+        // v3 = v2 + one (scalar) layout byte per layer.
+        assert_eq!(v3.len(), v2.len() + qm.layers.len());
+        let loaded = QuantizedModel::from_bytes(&v2).unwrap();
+        assert_eq!(loaded.layers.len(), qm.layers.len());
+        for (a, b) in loaded.layers.iter().zip(&qm.layers) {
+            assert_eq!(a.layout, crate::quant::CodeLayout::Scalar);
+            assert_eq!(a.dequantize().data, b.dequantize().data);
+        }
+        // Unknown future versions fail loudly.
+        let mut v9 = v3.clone();
+        v9[4] = 9;
+        let err = QuantizedModel::from_bytes(&v9).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn vq_model_roundtrips_through_v3_container() {
+        // Acceptance: quantize with the vq rounder → save → load →
+        // dequantize identically, with the codebook seed preserved.
+        let cfg = ModelConfig::sized("t", 32, 2, 4, 64);
+        let ck = Checkpoint::random(&cfg, 11);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut layers = Vec::new();
+        for spec in cfg.linear_specs() {
+            let wdata = model.get_weight(&spec.name).unwrap();
+            let w = Mat {
+                rows: spec.out_dim,
+                cols: spec.in_dim,
+                data: wdata.iter().map(|&x| x as f64).collect(),
+            };
+            let h = random_hessian(&mut rng, spec.in_dim, spec.in_dim / 4, 1e-3);
+            let qcfg = QuantConfig {
+                bits: 2,
+                method: Method::Vq,
+                processing: Processing::incoherent(),
+                ..Default::default()
+            };
+            let out = quantize_layer(&w, &h, &qcfg, 99);
+            let vq = out.vq.expect("vq rounder emits indices");
+            layers.push(crate::quant::packed::QuantizedLayer::from_vq_indices(
+                &spec.name, w.rows, w.cols, 2, &vq, out.post,
+            ));
+        }
+        let qm = QuantizedModel {
+            config: cfg,
+            bits: 2,
+            recipe: "vq+incp-kron".into(),
+            layers,
+        };
+        let bytes = qm.to_bytes(QZ_VERSION);
+        let loaded = QuantizedModel::from_bytes(&bytes).unwrap();
+        for (a, b) in loaded.layers.iter().zip(&qm.layers) {
+            assert_eq!(a.layout, b.layout);
+            assert!(matches!(a.layout, crate::quant::CodeLayout::Vq { .. }));
+            assert_eq!(a.dequantize().data, b.dequantize().data);
+        }
+        // v1/v2 cannot represent vq layers.
+        let qm2 = loaded;
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            qm2.to_bytes(crate::quant::packed::FORMAT_V2)
+        }));
+        assert!(caught.is_err(), "v2 write of vq layers must refuse");
     }
 
     #[test]

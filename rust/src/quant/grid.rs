@@ -1,8 +1,26 @@
-//! b-bit quantization grids and the affine maps into/out of grid
-//! coordinates. LDLQ and friends always round to the integer grid
-//! {0, …, 2^b − 1}; processing decides how real weights map onto it.
+//! b-bit quantization grids, the affine maps into/out of grid
+//! coordinates, and the [`Codebook`] abstraction that rounding targets
+//! plug into.
+//!
+//! Two layers live here:
+//!
+//! * [`GridMap`] — the affine map between real weights and *grid
+//!   coordinates* (per-row min-max, or QuIP's Frobenius-based symmetric
+//!   global range). Processing decides how real weights map onto the
+//!   grid; rounders work entirely in grid space.
+//! * [`Codebook`] — what a rounder rounds *to* once it is in grid space:
+//!   either the scalar integer grid {0, …, 2^b − 1} (one code per
+//!   weight), or an E8-style 8-dimensional vector codebook (one index
+//!   per [`VQ_GROUP`]-wide group of weights, QuIP#'s lattice-codebook
+//!   idea). Both sit behind the same `round_group`/`decode_group`
+//!   interface, so quantizer code is codebook-agnostic.
+//!
+//! The E8-style construction, nearest-neighbor search and index layout
+//! are documented in DESIGN.md §6; the `.qz` v3 storage of codebook
+//! indices is in [`super::packed`].
 
 use crate::linalg::Mat;
+use crate::util::rng::splitmix64;
 
 /// Number of grid levels for b bits.
 pub fn levels(bits: u32) -> u32 {
@@ -160,6 +178,310 @@ impl GridMap {
     }
 }
 
+/// Number of weights covered by one vector-codebook index: the codebook
+/// dimension of the E8-style construction (QuIP# quantizes in groups of
+/// 8 along the LDLQ column order).
+pub const VQ_GROUP: usize = 8;
+
+/// Base codewords in the E8-style codebook: 8 index bits select one of
+/// 256 nonnegative magnitude vectors; 8 more flip per-coordinate signs.
+const E8_BASE: usize = 256;
+
+/// Derive the codebook-construction seed from a layer's quantization
+/// seed. Shared by the `vq` rounder (which builds the codebook it rounds
+/// against) and the pipeline's artifact packing (which records the same
+/// seed in the `.qz` v3 layer so decode regenerates the codebook).
+pub fn codebook_seed(layer_seed: u64) -> u64 {
+    layer_seed ^ 0x4538_5F43_4F44_4245 // "E8_CODBE"
+}
+
+/// Enumerate the seeded E8-style base table: the [`E8_BASE`] lowest-norm
+/// vectors with coordinates in {0.5, 1.5, 2.5, 3.5} whose integer parts
+/// sum to an even number (the D8 parity constraint that gives the E8
+/// lattice its packing gain — see DESIGN.md §6). `seed` breaks norm ties
+/// deterministically, so equal-norm orbit members are cut reproducibly.
+fn e8_base_table(seed: u64) -> Vec<f64> {
+    // 4^8 = 65536 candidate integer-part vectors; the parity constraint
+    // keeps 32768. Norm key in quarter units: Σ (2p_j + 1)².
+    let mut cands: Vec<(u32, u64, u16)> = Vec::with_capacity(32768);
+    for code in 0u32..(1 << 16) {
+        let mut sum = 0u32;
+        let mut norm = 0u32;
+        for j in 0..VQ_GROUP {
+            let p = (code >> (2 * j)) & 3;
+            sum += p;
+            norm += (2 * p + 1) * (2 * p + 1);
+        }
+        if sum % 2 == 0 {
+            let mut s = seed ^ (code as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let tie = splitmix64(&mut s);
+            cands.push((norm, tie, code as u16));
+        }
+    }
+    cands.sort_unstable();
+    let mut base = Vec::with_capacity(E8_BASE * VQ_GROUP);
+    for &(_, _, code) in cands.iter().take(E8_BASE) {
+        for j in 0..VQ_GROUP {
+            let p = (code >> (2 * j)) & 3;
+            base.push(p as f64 + 0.5);
+        }
+    }
+    base
+}
+
+/// What a rounder rounds to in grid space: the scalar integer grid, or a
+/// seeded E8-style vector codebook. One `round_group` call quantizes
+/// [`Codebook::dim`] consecutive grid-space values to the nearest
+/// representable point and returns the packed index
+/// ([`Codebook::index_bits`] wide) that [`Codebook::decode_group`]
+/// expands back.
+///
+/// # E8-style construction
+///
+/// At `b` bits per weight the vector codebook spends `8·b` index bits
+/// per 8-wide group, in `b/2` residual stages of 16 bits each. A stage
+/// word is `(base << 8) | signs`: 8 sign bits (bit j set ⇒ coordinate j
+/// negative) and 8 bits selecting one of 256 nonnegative half-integer
+/// base vectors (seeded lowest-norm shell of the D8+½ coset — see
+/// [`codebook_seed`] / DESIGN.md §6). Stage `s` (coarsest first, stored
+/// at index bits `[16·s, 16·s+16)`) contributes
+/// `(2^b−1)/3 · 4^(−s) ×` its codeword — the coarsest stage spans the
+/// grid half-range (scale exactly 1 at 2 bits), each deeper stage
+/// refines 4× — and the sum, recentered on the grid midpoint, is the
+/// decoded grid-space value. Nearest-neighbor search is exact per
+/// stage: signs fold the target into the nonnegative orthant (valid
+/// because every base coordinate is ≥ 0.5), then a 256-entry scan picks
+/// the base vector.
+///
+/// Decoded values are *grid-space reals*, not integers: the codebook can
+/// place mass outside [0, 2^b − 1] for isolated outlier coordinates
+/// while the parity constraint prunes improbable combinations — that is
+/// the lattice shaping gain over the scalar grid at equal bitrate.
+#[derive(Clone, Debug)]
+pub enum Codebook {
+    /// The scalar integer grid {0, …, 2^b − 1}: `dim` 1, nearest-with-
+    /// clamp rounding — the existing grids behind the common interface.
+    Scalar { bits: u32 },
+    /// The seeded E8-style vector codebook described above.
+    E8 {
+        bits: u32,
+        seed: u64,
+        /// Residual stages = bits/2 (each stage spends 16 index bits).
+        stages: u32,
+        /// 256 × [`VQ_GROUP`] nonnegative magnitudes, flattened.
+        base: Vec<f64>,
+    },
+}
+
+impl Codebook {
+    /// The scalar integer grid at `bits` (nearest rounding + clamp —
+    /// exactly [`super::rounding::round_clamp`] with `Nearest`).
+    pub fn scalar(bits: u32) -> Codebook {
+        let _ = levels(bits); // validate 1..=8
+        Codebook::Scalar { bits }
+    }
+
+    /// Seeded E8-style vector codebook. Even bit widths 2–8 only: each
+    /// 16-bit residual stage spends 2 bits/weight across the 8-group.
+    pub fn e8(bits: u32, seed: u64) -> crate::Result<Codebook> {
+        anyhow::ensure!(
+            bits % 2 == 0 && (2..=8).contains(&bits),
+            "vector codebook supports even bit widths 2-8 \
+             (16 index bits per residual stage across an 8-group), got {bits}"
+        );
+        Ok(Codebook::E8 {
+            bits,
+            seed,
+            stages: bits / 2,
+            base: e8_base_table(seed),
+        })
+    }
+
+    /// Weights covered per index: 1 (scalar) or [`VQ_GROUP`].
+    pub fn dim(&self) -> usize {
+        match self {
+            Codebook::Scalar { .. } => 1,
+            Codebook::E8 { .. } => VQ_GROUP,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match self {
+            Codebook::Scalar { bits } | Codebook::E8 { bits, .. } => *bits,
+        }
+    }
+
+    /// Construction seed (0 for the unseeded scalar grid).
+    pub fn seed(&self) -> u64 {
+        match self {
+            Codebook::Scalar { .. } => 0,
+            Codebook::E8 { seed, .. } => *seed,
+        }
+    }
+
+    /// Index width per group: `bits · dim` — both variants spend exactly
+    /// `bits` per weight (equal bitrate by construction).
+    pub fn index_bits(&self) -> u32 {
+        self.bits() * self.dim() as u32
+    }
+
+    /// Grid midpoint (2^b − 1)/2 — the E8 codebook is centered here.
+    pub fn center(&self) -> f64 {
+        levels(self.bits()) as f64 / 2.0
+    }
+
+    /// Coarsest-stage scale `(2^b − 1)/3`: normalizes the base shell
+    /// (reach ±3.5) to the grid half-range, so every bit width sees
+    /// 2-bit-shaped targets at stage 0 and each deeper stage refines 4×.
+    /// Exactly 1 at 2 bits — and an exact dyadic×integer value at every
+    /// even width (5, 21, 85), so decoded values stay exact in f32.
+    fn stage0_scale(&self) -> f64 {
+        levels(self.bits()) as f64 / 3.0
+    }
+
+    /// Quantize `target` (grid-space, `len ≤ dim`; shorter only for a
+    /// layer's ragged last group) to the nearest representable point.
+    /// Writes the decoded grid-space values to `out` and returns the
+    /// group index. Deterministic: NN ties break to the lowest base
+    /// index, zero coordinates fold to positive sign.
+    pub fn round_group(&self, target: &[f64], out: &mut [f64]) -> u64 {
+        assert_eq!(target.len(), out.len());
+        match self {
+            Codebook::Scalar { bits } => {
+                assert_eq!(target.len(), 1, "scalar codebook rounds one value");
+                let q = clamp_grid(target[0].round(), *bits);
+                out[0] = q;
+                q as u64
+            }
+            Codebook::E8 { stages, base, .. } => {
+                let r = target.len();
+                assert!((1..=VQ_GROUP).contains(&r), "group of {r} exceeds dim 8");
+                let c = self.center();
+                let scale0 = self.stage0_scale();
+                let mut resid = [0.0f64; VQ_GROUP];
+                for j in 0..r {
+                    resid[j] = target[j] - c;
+                }
+                let mut decoded = [0.0f64; VQ_GROUP];
+                let mut idx = 0u64;
+                for s in 0..*stages {
+                    let scale = scale0 / 4f64.powi(s as i32);
+                    // Fold into the nonnegative orthant; record signs.
+                    let mut fold = [0.0f64; VQ_GROUP];
+                    let mut signs = 0u64;
+                    for j in 0..r {
+                        let v = resid[j] / scale;
+                        if v < 0.0 {
+                            signs |= 1 << j;
+                            fold[j] = -v;
+                        } else {
+                            fold[j] = v;
+                        }
+                    }
+                    // Exact NN over the base shell (first r coords).
+                    let mut best = 0usize;
+                    let mut best_d = f64::INFINITY;
+                    for e in 0..E8_BASE {
+                        let row = &base[e * VQ_GROUP..e * VQ_GROUP + r];
+                        let mut d = 0.0;
+                        for j in 0..r {
+                            let t = fold[j] - row[j];
+                            d += t * t;
+                        }
+                        if d < best_d {
+                            best_d = d;
+                            best = e;
+                        }
+                    }
+                    idx |= (((best as u64) << 8) | signs) << (16 * s);
+                    for j in 0..r {
+                        let mag = base[best * VQ_GROUP + j];
+                        let v = if (signs >> j) & 1 == 1 { -mag } else { mag };
+                        decoded[j] += scale * v;
+                        resid[j] -= scale * v;
+                    }
+                }
+                for j in 0..r {
+                    out[j] = c + decoded[j];
+                }
+                idx
+            }
+        }
+    }
+
+    /// Expand a group index back to grid-space values (`out.len() ≤ dim`;
+    /// shorter only for a ragged last group).
+    pub fn decode_group(&self, idx: u64, out: &mut [f64]) {
+        match self {
+            Codebook::Scalar { bits } => {
+                assert_eq!(out.len(), 1);
+                out[0] = clamp_grid(idx as f64, *bits);
+            }
+            Codebook::E8 { stages, base, .. } => {
+                let r = out.len();
+                assert!((1..=VQ_GROUP).contains(&r));
+                let c = self.center();
+                let scale0 = self.stage0_scale();
+                for (j, o) in out.iter_mut().enumerate() {
+                    let mut acc = c;
+                    for s in 0..*stages {
+                        let word = (idx >> (16 * s)) & 0xFFFF;
+                        let mag = base[((word >> 8) as usize & 0xFF) * VQ_GROUP + j];
+                        let scale = scale0 / 4f64.powi(s as i32);
+                        acc += if (word >> j) & 1 == 1 { -scale * mag } else { scale * mag };
+                    }
+                    *o = acc;
+                }
+            }
+        }
+    }
+
+    /// The f32 decode table for the engine hot path: `None` for the
+    /// scalar grid (codes decode through the bit-unpack kernels), the
+    /// per-layer LUT for E8 layers.
+    pub fn lut_f32(&self) -> Option<VqLut> {
+        match self {
+            Codebook::Scalar { .. } => None,
+            Codebook::E8 { stages, base, .. } => Some(VqLut {
+                base: base.iter().map(|&x| x as f32).collect(),
+                scales: (0..*stages)
+                    .map(|s| (self.stage0_scale() / 4f64.powi(s as i32)) as f32)
+                    .collect(),
+                center: self.center() as f32,
+            }),
+        }
+    }
+}
+
+/// Per-layer f32 expansion table for E8 indices: the 256×8 base
+/// magnitudes plus stage scales and the grid center. Built once per
+/// [`Codebook`] by [`Codebook::lut_f32`]; `decode` is the allocation-free
+/// inner step of the engine's fused decode kernels.
+#[derive(Clone, Debug)]
+pub struct VqLut {
+    base: Vec<f32>,
+    /// One scale per residual stage, coarsest first.
+    scales: Vec<f32>,
+    center: f32,
+}
+
+impl VqLut {
+    /// Expand one group index into grid-space f32 values
+    /// (`out.len() ≤ 8`; shorter only for a ragged last group).
+    #[inline]
+    pub fn decode(&self, idx: u64, out: &mut [f32]) {
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut acc = self.center;
+            for (s, &scale) in self.scales.iter().enumerate() {
+                let word = (idx >> (16 * s)) & 0xFFFF;
+                let mag = self.base[((word >> 8) as usize & 0xFF) * VQ_GROUP + j];
+                acc += if (word >> j) & 1 == 1 { -scale * mag } else { scale * mag };
+            }
+            *o = acc;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,5 +558,194 @@ mod tests {
             let wg2 = g2.to_grid(&w);
             assert_eq!(wg1.data, wg2.data);
         }
+    }
+
+    #[test]
+    fn e8_base_has_parity_structure() {
+        let cb = Codebook::e8(2, 7).unwrap();
+        let Codebook::E8 { base, .. } = &cb else {
+            panic!("e8 constructor returned scalar")
+        };
+        assert_eq!(base.len(), 256 * VQ_GROUP);
+        for e in 0..256 {
+            let row = &base[e * VQ_GROUP..(e + 1) * VQ_GROUP];
+            let mut int_sum = 0i64;
+            for &x in row {
+                // Every coordinate is a positive half-integer ≤ 3.5.
+                assert!((0.5..=3.5).contains(&x) && (2.0 * x) == (2.0 * x).round());
+                int_sum += (x - 0.5) as i64;
+            }
+            assert_eq!(int_sum % 2, 0, "entry {e} breaks the D8 parity constraint");
+        }
+        // Sorted by norm: the first entry is the all-½ vector.
+        assert!(base[..VQ_GROUP].iter().all(|&x| x == 0.5));
+    }
+
+    #[test]
+    fn codebook_is_seed_deterministic() {
+        let a = Codebook::e8(2, 42).unwrap();
+        let b = Codebook::e8(2, 42).unwrap();
+        let (Codebook::E8 { base: ba, .. }, Codebook::E8 { base: bb, .. }) = (&a, &b) else {
+            unreachable!()
+        };
+        assert_eq!(ba, bb);
+        // The low-norm shell below the tie-broken cut is seed-independent.
+        let c = Codebook::e8(2, 43).unwrap();
+        let Codebook::E8 { base: bc, .. } = &c else { unreachable!() };
+        assert_eq!(&ba[..VQ_GROUP], &bc[..VQ_GROUP]);
+    }
+
+    #[test]
+    fn odd_or_out_of_range_bits_rejected() {
+        for bits in [1u32, 3, 5, 7] {
+            assert!(Codebook::e8(bits, 0).is_err(), "bits={bits}");
+        }
+        for bits in [2u32, 4, 6, 8] {
+            let cb = Codebook::e8(bits, 0).unwrap();
+            assert_eq!(cb.index_bits(), 8 * bits);
+            assert_eq!(cb.dim(), VQ_GROUP);
+        }
+    }
+
+    #[test]
+    fn round_decode_group_roundtrips() {
+        // decode(round(t)) must reproduce exactly the values round wrote.
+        let mut rng = Rng::new(9);
+        for bits in [2u32, 4] {
+            let cb = Codebook::e8(bits, 5).unwrap();
+            for _ in 0..200 {
+                let t: Vec<f64> = (0..8)
+                    .map(|_| rng.uniform(-1.0, levels(bits) as f64 + 1.0))
+                    .collect();
+                let mut out = vec![0.0; 8];
+                let idx = cb.round_group(&t, &mut out);
+                assert!(cb.index_bits() == 64 || idx < 1u64 << cb.index_bits());
+                let mut back = vec![0.0; 8];
+                cb.decode_group(idx, &mut back);
+                assert_eq!(out, back);
+                // Single-stage only: re-rounding a codebook point is a
+                // fixed point (distance 0 to itself). Multi-stage greedy
+                // residual search is not idempotent in general.
+                if bits == 2 {
+                    let mut again = vec![0.0; 8];
+                    let idx2 = cb.round_group(&out, &mut again);
+                    assert_eq!(idx2, idx);
+                    assert_eq!(again, out);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nn_is_no_worse_than_random_codewords() {
+        // round_group must return a point at least as close as any other
+        // codebook point (spot-checked against random indices).
+        let mut rng = Rng::new(11);
+        let cb = Codebook::e8(2, 3).unwrap();
+        for _ in 0..50 {
+            let t: Vec<f64> = (0..8).map(|_| rng.uniform(-0.5, 3.5)).collect();
+            let mut got = vec![0.0; 8];
+            cb.round_group(&t, &mut got);
+            let d_got: f64 = t.iter().zip(&got).map(|(a, b)| (a - b) * (a - b)).sum();
+            for _ in 0..100 {
+                let idx = (rng.below(1 << 16)) as u64;
+                let mut other = vec![0.0; 8];
+                cb.decode_group(idx, &mut other);
+                let d: f64 = t.iter().zip(&other).map(|(a, b)| (a - b) * (a - b)).sum();
+                assert!(d_got <= d + 1e-12, "NN missed: {d_got} vs {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn four_bit_residual_refines_two_bit() {
+        // Each codebook is evaluated on its own grid scale (targets
+        // centered on its midpoint with σ = half-range/ρ, the shape the
+        // Frobenius grid map produces); the *relative* error — MSE over
+        // target variance — must drop sharply with the extra residual
+        // stage (per-coordinate step (2^b−1)/3·4^(1−b/2)·1 vs grid span).
+        let mut rng = Rng::new(13);
+        let mut rel = Vec::new();
+        for bits in [2u32, 4] {
+            let cb = Codebook::e8(bits, 1).unwrap();
+            let c = cb.center();
+            let sigma = c / 2.4;
+            let (mut err, mut var) = (0.0, 0.0);
+            for _ in 0..200 {
+                let t: Vec<f64> = (0..8).map(|_| c + sigma * rng.normal()).collect();
+                let mut out = vec![0.0; 8];
+                cb.round_group(&t, &mut out);
+                err += t.iter().zip(&out).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+                var += t.iter().map(|a| (a - c) * (a - c)).sum::<f64>();
+            }
+            rel.push(err / var);
+        }
+        assert!(
+            rel[1] < rel[0] * 0.25,
+            "4-bit residual stage barely helped: rel {rel:?}"
+        );
+    }
+
+    #[test]
+    fn scalar_codebook_matches_round_clamp() {
+        let mut rng = Rng::new(15);
+        for bits in [2u32, 3, 4] {
+            let cb = Codebook::scalar(bits);
+            assert_eq!(cb.dim(), 1);
+            assert_eq!(cb.index_bits(), bits);
+            for _ in 0..100 {
+                let t = rng.uniform(-2.0, levels(bits) as f64 + 2.0);
+                let mut out = [0.0];
+                let idx = cb.round_group(&[t], &mut out);
+                let want = crate::quant::rounding::round_clamp(
+                    crate::quant::rounding::RoundMode::Nearest,
+                    t,
+                    bits,
+                    &mut Rng::new(0),
+                );
+                assert_eq!(out[0], want);
+                assert_eq!(idx, want as u64);
+                let mut back = [0.0];
+                cb.decode_group(idx, &mut back);
+                assert_eq!(back[0], want);
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_group_uses_leading_coords() {
+        let cb = Codebook::e8(2, 21).unwrap();
+        let mut rng = Rng::new(17);
+        for r in 1..=7usize {
+            let t: Vec<f64> = (0..r).map(|_| rng.uniform(0.0, 3.0)).collect();
+            let mut out = vec![0.0; r];
+            let idx = cb.round_group(&t, &mut out);
+            let mut back = vec![0.0; r];
+            cb.decode_group(idx, &mut back);
+            assert_eq!(out, back, "r={r}");
+            // Ragged-group signs beyond r are canonical zero.
+            assert_eq!((idx & 0xFF) >> r, 0, "r={r}: stray sign bits");
+        }
+    }
+
+    #[test]
+    fn lut_matches_f64_decode() {
+        let mut rng = Rng::new(19);
+        for bits in [2u32, 4] {
+            let cb = Codebook::e8(bits, 77).unwrap();
+            let lut = cb.lut_f32().unwrap();
+            for _ in 0..100 {
+                let t: Vec<f64> = (0..8).map(|_| rng.uniform(-1.0, 4.0)).collect();
+                let mut out = vec![0.0; 8];
+                let idx = cb.round_group(&t, &mut out);
+                let mut f = vec![0.0f32; 8];
+                lut.decode(idx, &mut f);
+                for (a, b) in f.iter().zip(&out) {
+                    // Half-integer sums at these magnitudes are exact in f32.
+                    assert_eq!(*a as f64, *b);
+                }
+            }
+        }
+        assert!(Codebook::scalar(2).lut_f32().is_none());
     }
 }

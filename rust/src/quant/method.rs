@@ -15,7 +15,7 @@ use super::rounder::{RoundCtx, Rounder, RounderRegistry};
 use super::rounding::RoundMode;
 use crate::linalg::Mat;
 
-/// Shorthand for the seven builtin rounding algorithms. Kept for
+/// Shorthand for the eight builtin rounding algorithms. Kept for
 /// config-struct ergonomics and the legacy [`quantize_layer`] shim; the
 /// open-ended API is [`Rounder`] + [`RounderRegistry`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,6 +36,10 @@ pub enum Method {
     /// Algorithm 5: convex-program feedback + stochastic rounding
     /// (upstream `ldlbal_admm`).
     Alg5,
+    /// Vector quantization (QuIP#): group-LDLQ against a seeded E8-style
+    /// codebook, 8 columns per index at the scalar bitrate. Even bit
+    /// widths 2-8 only (validated by [`QuantConfigBuilder::build`]).
+    Vq,
 }
 
 impl Method {
@@ -63,6 +67,7 @@ impl Method {
             Method::Greedy => "greedy",
             Method::Optq => "optq",
             Method::Alg5 => "alg5",
+            Method::Vq => "vq",
         }
     }
 
@@ -77,6 +82,7 @@ impl Method {
             "greedy" => Method::Greedy,
             "optq" => Method::Optq,
             "alg5" => Method::Alg5,
+            "vq" => Method::Vq,
             _ => return None,
         })
     }
@@ -191,6 +197,20 @@ impl QuantConfigBuilder {
         if let Some(name) = &self.rounder_name {
             self.cfg.method = Method::parse(name)?;
         }
+        if self.cfg.method == Method::Vq {
+            anyhow::ensure!(
+                self.cfg.bits % 2 == 0 && (2..=8).contains(&self.cfg.bits),
+                "the vq rounder supports even bit widths 2-8 (16 codebook \
+                 index bits per residual stage across an 8-group); got {} bits",
+                self.cfg.bits
+            );
+            anyhow::ensure!(
+                !self.cfg.force_stochastic,
+                "the vq rounder is deterministic nearest-codeword search and \
+                 has no stochastic mode; drop --stochastic or pick a scalar \
+                 rounder for the Table-15 ablation"
+            );
+        }
         Ok(self.cfg)
     }
 }
@@ -210,8 +230,12 @@ pub struct StageTimings {
 
 /// Result of quantizing one layer.
 pub struct LayerQuantOutput {
-    /// Integer grid codes (values in [0, 2^b − 1], stored as f64).
+    /// Grid-space codes: integers in [0, 2^b − 1] for scalar rounders,
+    /// decoded codebook points for vector rounders (stored as f64).
     pub codes: Mat,
+    /// Vector-codebook indices when the rounder quantized in groups
+    /// ([`Method::Vq`]); the `.qz` v3 payload. `None` for scalar codes.
+    pub vq: Option<crate::quant::rounder::VqCodes>,
     /// Dequantized weights in the original coordinate system.
     pub w_hat: Mat,
     /// Post-processing state (seeds, scales, grid).
@@ -220,6 +244,30 @@ pub struct LayerQuantOutput {
     pub proxy_loss: f64,
     /// Factorize/round wall-clock split of the rounder call.
     pub stages: StageTimings,
+}
+
+impl LayerQuantOutput {
+    /// Package into a `.qz` layer record: vector-rounded outputs store
+    /// their per-group codebook indices ([`CodeLayout::Vq`]), scalar
+    /// outputs bit-pack integer codes. The bit width comes from the
+    /// fitted grid (always the config's `bits`).
+    ///
+    /// [`CodeLayout::Vq`]: crate::quant::CodeLayout::Vq
+    pub fn into_layer(self, name: &str) -> crate::quant::packed::QuantizedLayer {
+        use crate::quant::packed::QuantizedLayer;
+        let bits = self.post.grid.bits();
+        match &self.vq {
+            Some(vq) => QuantizedLayer::from_vq_indices(
+                name,
+                self.codes.rows,
+                self.codes.cols,
+                bits,
+                vq,
+                self.post,
+            ),
+            None => QuantizedLayer::from_codes(name, &self.codes, bits, self.post),
+        }
+    }
 }
 
 /// Quantize one linear layer with an explicit [`Rounder`]: W (m×n) with
@@ -250,13 +298,15 @@ pub fn quantize_layer_with(
     // measures only this rounder call, then split factorize from round.
     let _ = crate::util::stagetimer::take_factorize();
     let t_round = std::time::Instant::now();
-    let codes = rounder.round(&pre.wg, &pre.h, &ctx);
+    let rounded = rounder.round(&pre.wg, &pre.h, &ctx);
     let round_total = t_round.elapsed().as_secs_f64();
     let factorize_seconds = crate::util::stagetimer::take_factorize();
+    let crate::quant::rounder::Rounded { codes, vq } = rounded;
     let w_hat = postprocess(&codes, &pre.post);
     let loss = proxy_loss(&w_hat, w, &pre.h_damped);
     LayerQuantOutput {
         codes,
+        vq,
         w_hat,
         post: pre.post,
         proxy_loss: loss,
@@ -316,6 +366,68 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn vq_method_produces_valid_output() {
+        // Vq codes are codebook points, not integers, so it gets its own
+        // validity check next to `all_methods_produce_valid_output`.
+        let (w, h) = setup(13, 8, 16);
+        for processing in [Processing::baseline(), Processing::incoherent()] {
+            for bits in [2u32, 4] {
+                let cfg = QuantConfig {
+                    bits,
+                    method: Method::Vq,
+                    processing: processing.clone(),
+                    ..Default::default()
+                };
+                let out = quantize_layer(&w, &h, &cfg, 42);
+                assert_eq!(out.w_hat.rows, 8);
+                assert_eq!(out.w_hat.cols, 16);
+                assert!(out.proxy_loss.is_finite() && out.proxy_loss >= 0.0);
+                let vq = out.vq.expect("vq indices");
+                assert_eq!(vq.indices.len(), 8 * 2);
+                // Codes are half-integer grid-space reals.
+                for &c in &out.codes.data {
+                    assert!(c.is_finite() && (2.0 * c) == (2.0 * c).round());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn builder_validates_vq_bit_widths() {
+        for bits in [3u32, 5, 7] {
+            let err = QuantConfig::builder()
+                .bits(bits)
+                .rounder("vq")
+                .build()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("even bit widths"), "bits={bits}: {err}");
+        }
+        for bits in [2u32, 4, 6, 8] {
+            let cfg = QuantConfig::builder().bits(bits).rounder("vq").build().unwrap();
+            assert_eq!(cfg.method, Method::Vq);
+        }
+        // vq has no stochastic Q mode: the Table-15 ablation flag is a
+        // clean error, not a silent no-op.
+        let err = QuantConfig::builder()
+            .rounder("vq")
+            .force_stochastic(true)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stochastic"), "{err}");
+        // Aliases resolve to the same method.
+        assert_eq!(
+            QuantConfig::builder().rounder("codebook").build().unwrap().method,
+            Method::Vq
+        );
+        assert_eq!(
+            QuantConfig::builder().rounder("e8").build().unwrap().method,
+            Method::Vq
+        );
     }
 
     #[test]

@@ -9,10 +9,12 @@
 //! ([`TransformKind`]: the paper's Kronecker operator or the QuIP#
 //! randomized Hadamard transform, selected via
 //! [`Processing::incoherent_with`] / `QuantConfigBuilder::transform`);
-//! per-layer configuration is built with [`QuantConfig::builder`];
-//! [`quantize_layer_with`] drives one layer through preprocess → round →
-//! postprocess. [`quantize_layer`] is the legacy `Method`-keyed shim kept
-//! for transition-era call sites.
+//! what a rounder rounds *to* is a [`Codebook`] — the scalar integer grid
+//! or the QuIP#-style E8 vector codebook behind the `vq` rounder (see
+//! [`grid`] and DESIGN.md §6); per-layer configuration is built with
+//! [`QuantConfig::builder`]; [`quantize_layer_with`] drives one layer
+//! through preprocess → round → postprocess. [`quantize_layer`] is the
+//! legacy `Method`-keyed shim kept for transition-era call sites.
 
 pub mod grid;
 pub mod rounding;
@@ -28,12 +30,13 @@ pub mod method;
 pub mod packed;
 
 pub use crate::linalg::TransformKind;
-pub use grid::GridMap;
+pub use grid::{codebook_seed, Codebook, GridMap, VqLut, VQ_GROUP};
 pub use incoherence::{PostState, Processing};
 pub use method::{
     quantize_layer, quantize_layer_with, LayerQuantOutput, Method, QuantConfig,
     QuantConfigBuilder, StageTimings,
 };
+pub use packed::CodeLayout;
 pub use proxy::proxy_loss;
-pub use rounder::{RoundCtx, Rounder, RounderRegistry};
+pub use rounder::{RoundCtx, Rounded, Rounder, RounderRegistry, VqCodes};
 pub use rounding::RoundMode;

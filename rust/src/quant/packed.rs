@@ -1,20 +1,43 @@
 //! Bit-packed storage of quantized codes — the `.qz` wire format.
 //!
-//! Codes (values in [0, 2^b − 1]) are packed LSB-first into a contiguous
-//! bitstream: true 2/3/4-bit storage, including the cross-byte 3-bit case.
+//! Two [`CodeLayout`]s share the `packed` bitstream:
+//!
+//! * **Scalar** — one integer code (value in [0, 2^b − 1]) per weight,
+//!   packed LSB-first: true 2/3/4-bit storage, including the cross-byte
+//!   3-bit case.
+//! * **Vq** — one E8-style codebook index per
+//!   [`VQ_GROUP`](super::grid::VQ_GROUP)-wide group of weights, `8·b`
+//!   bits wide (the same b bits/weight), plus the stored codebook seed
+//!   so decode regenerates the [`super::grid::Codebook`].
+//!
 //! A `QuantizedLayer` bundles codes + the post-processing state (seeds,
 //! scales, grid); the whole model artifact is a sequence of layers.
 
+use super::grid::{Codebook, VQ_GROUP};
 use super::incoherence::PostState;
+use super::rounder::VqCodes;
 use crate::linalg::Mat;
 use crate::util::bytes::{Reader, Writer};
 
 /// `.qz` wire-format versions. v1 is the seed format (Kron transform
 /// implied); v2 adds the per-layer transform kind and the container-level
-/// CRC32 footer (see [`crate::model::quantized`]). Layers always write
-/// the current version; readers accept both.
+/// CRC32 footer (see [`crate::model::quantized`]); v3 adds the per-layer
+/// [`CodeLayout`] tag (scalar codes vs vector-codebook indices). Layers
+/// always write the current version; readers accept all three.
 pub const FORMAT_V1: u32 = 1;
 pub const FORMAT_V2: u32 = 2;
+pub const FORMAT_V3: u32 = 3;
+
+/// How a layer's `packed` bitstream encodes the code matrix. `.qz` v3
+/// layer records carry the tag; v1/v2 records are always scalar.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodeLayout {
+    /// One integer code per weight, `bits` wide, LSB-first.
+    Scalar,
+    /// One codebook index per 8-wide group of weights (`8·bits` wide);
+    /// `cb_seed` regenerates the E8-style codebook at decode time.
+    Vq { cb_seed: u64 },
+}
 
 /// Pack `codes` (each < 2^bits) into an LSB-first bitstream.
 pub fn pack_codes(codes: &[u8], bits: u32) -> Vec<u8> {
@@ -56,6 +79,58 @@ pub fn unpack_codes(packed: &[u8], bits: u32, n: usize) -> Vec<u8> {
     out
 }
 
+/// Pack group indices (`index_bits` wide each, up to 64) LSB-first into
+/// a contiguous bitstream — the vq counterpart of [`pack_codes`]. At the
+/// shipped widths (8·bits with even bits: 16/32/48/64) indices are
+/// byte-aligned, but the packer is generic.
+pub fn pack_group_indices(indices: &[u64], index_bits: u32) -> Vec<u8> {
+    assert!((1..=64).contains(&index_bits));
+    let total_bits = indices.len() * index_bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &ix in indices {
+        debug_assert!(index_bits == 64 || ix < (1u64 << index_bits));
+        let mut val = ix;
+        let mut rem = index_bits as usize;
+        let mut pos = bitpos;
+        while rem > 0 {
+            let byte = pos / 8;
+            let off = pos % 8;
+            let take = (8 - off).min(rem);
+            out[byte] |= ((val & ((1u64 << take) - 1)) as u8) << off;
+            val >>= take;
+            pos += take;
+            rem -= take;
+        }
+        bitpos += index_bits as usize;
+    }
+    out
+}
+
+/// Unpack `count` group indices from an LSB-first bitstream.
+pub fn unpack_group_indices(packed: &[u8], index_bits: u32, count: usize) -> Vec<u64> {
+    assert!((1..=64).contains(&index_bits));
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let mut val = 0u64;
+        let mut got = 0usize;
+        let mut pos = bitpos;
+        while got < index_bits as usize {
+            let byte = pos / 8;
+            let off = pos % 8;
+            let take = (8 - off).min(index_bits as usize - got);
+            let chunk = (packed[byte] as u64 >> off) & ((1u64 << take) - 1);
+            val |= chunk << got;
+            got += take;
+            pos += take;
+        }
+        out.push(val);
+        bitpos += index_bits as usize;
+    }
+    out
+}
+
 /// A quantized linear layer as stored on disk / held by the native engine.
 #[derive(Clone)]
 pub struct QuantizedLayer {
@@ -63,13 +138,16 @@ pub struct QuantizedLayer {
     pub bits: u32,
     pub m: usize,
     pub n: usize,
-    /// Packed codes, row-major.
+    /// Packed codes (scalar) or group indices (vq), row-major.
     pub packed: Vec<u8>,
+    /// What `packed` contains; see [`CodeLayout`].
+    pub layout: CodeLayout,
     pub post: PostState,
 }
 
 impl QuantizedLayer {
-    /// Build from a float code matrix (integer values) + post state.
+    /// Build a scalar-layout layer from a float code matrix (integer
+    /// values) + post state.
     pub fn from_codes(name: &str, codes: &Mat, bits: u32, post: PostState) -> QuantizedLayer {
         let raw: Vec<u8> = codes.data.iter().map(|&c| c as u8).collect();
         QuantizedLayer {
@@ -78,22 +156,83 @@ impl QuantizedLayer {
             m: codes.rows,
             n: codes.cols,
             packed: pack_codes(&raw, bits),
+            layout: CodeLayout::Scalar,
             post,
         }
     }
 
-    /// Unpack codes back to a float matrix.
+    /// Build a vector-quantized layer from the `vq` rounder's per-group
+    /// codebook indices (row-major, ⌈n/8⌉ per row — see
+    /// [`crate::quant::Rounded`]).
+    pub fn from_vq_indices(
+        name: &str,
+        m: usize,
+        n: usize,
+        bits: u32,
+        vq: &VqCodes,
+        post: PostState,
+    ) -> QuantizedLayer {
+        assert!(
+            bits % 2 == 0 && (2..=8).contains(&bits),
+            "vq layers use even bit widths 2-8"
+        );
+        let gpr = n.div_ceil(VQ_GROUP);
+        assert_eq!(vq.indices.len(), m * gpr, "one index per (row, 8-group)");
+        QuantizedLayer {
+            name: name.to_string(),
+            bits,
+            m,
+            n,
+            packed: pack_group_indices(&vq.indices, 8 * bits),
+            layout: CodeLayout::Vq { cb_seed: vq.cb_seed },
+            post,
+        }
+    }
+
+    /// Unpack codes back to a float matrix: integer values for scalar
+    /// layers, decoded codebook points for vq layers.
     pub fn codes(&self) -> Mat {
-        let raw = unpack_codes(&self.packed, self.bits, self.m * self.n);
-        Mat {
-            rows: self.m,
-            cols: self.n,
-            data: raw.into_iter().map(|c| c as f64).collect(),
+        match self.layout {
+            CodeLayout::Scalar => {
+                let raw = unpack_codes(&self.packed, self.bits, self.m * self.n);
+                Mat {
+                    rows: self.m,
+                    cols: self.n,
+                    data: raw.into_iter().map(|c| c as f64).collect(),
+                }
+            }
+            CodeLayout::Vq { cb_seed } => {
+                let cb = Codebook::e8(self.bits, cb_seed)
+                    .expect("vq layer bits validated at construction/deserialize");
+                let gpr = self.n.div_ceil(VQ_GROUP);
+                let idxs = unpack_group_indices(&self.packed, 8 * self.bits, self.m * gpr);
+                let mut data = vec![0.0f64; self.m * self.n];
+                let mut buf = [0.0f64; VQ_GROUP];
+                for i in 0..self.m {
+                    for g in 0..gpr {
+                        let r = (self.n - g * VQ_GROUP).min(VQ_GROUP);
+                        cb.decode_group(idxs[i * gpr + g], &mut buf[..r]);
+                        data[i * self.n + g * VQ_GROUP..i * self.n + g * VQ_GROUP + r]
+                            .copy_from_slice(&buf[..r]);
+                    }
+                }
+                Mat {
+                    rows: self.m,
+                    cols: self.n,
+                    data,
+                }
+            }
         }
     }
 
     /// Unpack one row of codes (decode hot path; avoids full unpack).
+    /// Scalar layout only — vq rows decode through the engine's LUT path.
     pub fn codes_row(&self, i: usize, out: &mut [u8]) {
+        assert_eq!(
+            self.layout,
+            CodeLayout::Scalar,
+            "codes_row reads scalar codes; vq layers decode via the codebook LUT"
+        );
         assert_eq!(out.len(), self.n);
         let bits = self.bits as usize;
         let mask = ((1u16 << bits) - 1) as u16;
@@ -129,15 +268,16 @@ impl QuantizedLayer {
         w.buf.len()
     }
 
-    /// Serialize in the current format ([`FORMAT_V2`]).
+    /// Serialize in the current format ([`FORMAT_V3`]).
     pub fn serialize(&self, w: &mut Writer) {
-        self.serialize_version(w, FORMAT_V2);
+        self.serialize_version(w, FORMAT_V3);
     }
 
-    /// Serialize in an explicit format version. v1 exists so tests can
-    /// pin that pre-subsystem artifacts still load; it cannot represent
-    /// non-Kron transforms (no transform field), so writing one is a
-    /// refusal here rather than silent corruption at reload.
+    /// Serialize in an explicit format version. v1/v2 exist so tests can
+    /// pin that pre-subsystem artifacts still load; v1 cannot represent
+    /// non-Kron transforms (no transform field) and v1/v2 cannot
+    /// represent vector-codebook layers (no layout field), so writing
+    /// either is a refusal here rather than silent corruption at reload.
     pub fn serialize_version(&self, w: &mut Writer, version: u32) {
         assert!(
             version >= FORMAT_V2
@@ -147,10 +287,25 @@ impl QuantizedLayer {
             self.name,
             self.post.transform
         );
+        assert!(
+            version >= FORMAT_V3 || self.layout == CodeLayout::Scalar,
+            "layer '{}' stores vector-codebook indices, which the v{} .qz layout cannot represent",
+            self.name,
+            version
+        );
         w.string(&self.name);
         w.u32(self.bits);
         w.u64(self.m as u64);
         w.u64(self.n as u64);
+        if version >= FORMAT_V3 {
+            match self.layout {
+                CodeLayout::Scalar => w.u8(0),
+                CodeLayout::Vq { cb_seed } => {
+                    w.u8(1);
+                    w.u64(cb_seed);
+                }
+            }
+        }
         w.u64(self.packed.len() as u64);
         w.bytes(&self.packed);
         self.post.serialize(w, version);
@@ -162,13 +317,34 @@ impl QuantizedLayer {
         anyhow::ensure!((1..=8).contains(&bits), "corrupt layer '{name}': {bits} bits");
         let m = r.u64()? as usize;
         let n = r.u64()? as usize;
+        let layout = if version >= FORMAT_V3 {
+            match r.u8()? {
+                0 => CodeLayout::Scalar,
+                1 => {
+                    anyhow::ensure!(
+                        bits % 2 == 0 && (2..=8).contains(&bits),
+                        "corrupt layer '{name}': vq layout at {bits} bits"
+                    );
+                    CodeLayout::Vq { cb_seed: r.u64()? }
+                }
+                t => anyhow::bail!("corrupt layer '{name}': unknown code layout {t}"),
+            }
+        } else {
+            CodeLayout::Scalar
+        };
         let plen = r.u64()? as usize;
         // Checked arithmetic: corrupt v1 files have no CRC shield, so a
         // garbage m/n must not wrap into a passing bound.
-        let need = m
-            .checked_mul(n)
-            .and_then(|mn| mn.checked_mul(bits as usize))
-            .map(|b| b.div_ceil(8));
+        let need = match layout {
+            CodeLayout::Scalar => m
+                .checked_mul(n)
+                .and_then(|mn| mn.checked_mul(bits as usize))
+                .map(|b| b.div_ceil(8)),
+            // One 8·bits-wide index per 8-group: exactly `bits` bytes.
+            CodeLayout::Vq { .. } => m
+                .checked_mul(n.div_ceil(VQ_GROUP))
+                .and_then(|groups| groups.checked_mul(bits as usize)),
+        };
         anyhow::ensure!(
             plen <= r.remaining() && need.is_some_and(|nb| plen >= nb),
             "corrupt layer '{name}': {plen}-byte code block for {m}x{n} @ {bits} bits"
@@ -181,6 +357,7 @@ impl QuantizedLayer {
             m,
             n,
             packed,
+            layout,
             post,
         })
     }
@@ -258,8 +435,9 @@ mod tests {
             let mut buf = Writer::new();
             layer.serialize(&mut buf);
             let mut r = Reader::new(&buf.buf);
-            let layer2 = QuantizedLayer::deserialize(&mut r, FORMAT_V2).unwrap();
+            let layer2 = QuantizedLayer::deserialize(&mut r, FORMAT_V3).unwrap();
             assert_eq!(layer2.name, "blk0.attn.q");
+            assert_eq!(layer2.layout, CodeLayout::Scalar);
             assert_eq!(layer2.post.transform, kind);
             assert_eq!(layer2.codes().data, layer.codes().data);
             assert_eq!(layer2.dequantize().data, layer.dequantize().data);
@@ -327,7 +505,7 @@ mod tests {
         for cut in [1usize, 8, buf.buf.len() / 2, buf.buf.len() - 1] {
             let mut r = Reader::new(&buf.buf[..cut]);
             assert!(
-                QuantizedLayer::deserialize(&mut r, FORMAT_V2).is_err(),
+                QuantizedLayer::deserialize(&mut r, FORMAT_V3).is_err(),
                 "cut={cut} should fail cleanly"
             );
         }
@@ -447,5 +625,181 @@ mod tests {
         // 2-bit codes + small metadata: well under 3 bits/weight at 64×64.
         assert!(layer.bits_per_weight() < 3.5, "bpw={}", layer.bits_per_weight());
         assert_eq!(layer.packed.len(), 64 * 64 * 2 / 8);
+    }
+
+    #[test]
+    fn group_index_roundtrip_at_vq_widths() {
+        // The vq index widths: 16 bits (2 bits/weight) and 32 bits
+        // (4 bits/weight) are the acceptance widths; 48/64 cover the
+        // 6/8-bit stages, and 13 exercises the non-byte-aligned generic
+        // path of the packer.
+        for index_bits in [13u32, 16, 32, 48, 64] {
+            for count in [1usize, 3, 7, 8, 100] {
+                let mask = if index_bits == 64 {
+                    u64::MAX
+                } else {
+                    (1u64 << index_bits) - 1
+                };
+                let idxs: Vec<u64> = (0..count)
+                    .map(|i| {
+                        (i as u64)
+                            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                            .rotate_left(i as u32)
+                            & mask
+                    })
+                    .collect();
+                let packed = pack_group_indices(&idxs, index_bits);
+                assert_eq!(
+                    packed.len(),
+                    (count * index_bits as usize).div_ceil(8),
+                    "bits={index_bits} count={count}"
+                );
+                let back = unpack_group_indices(&packed, index_bits, count);
+                assert_eq!(back, idxs, "bits={index_bits} count={count}");
+                // All-ones indices must not leak into neighbours.
+                let top = vec![mask; count];
+                assert_eq!(
+                    unpack_group_indices(&pack_group_indices(&top, index_bits), index_bits, count),
+                    top
+                );
+            }
+        }
+    }
+
+    /// Quantize a small layer with the vq rounder and return the layer.
+    fn vq_layer(bits: u32, m: usize, n: usize, seed: u64) -> (QuantizedLayer, Mat) {
+        use crate::quant::rounder::{RoundCtx, Rounder, VqRounder};
+        let mut rng = Rng::new(seed);
+        let w = random_mat(&mut rng, m, n).scale(0.1);
+        let h = random_hessian(&mut rng, n, 4.max(n / 4), 1e-2);
+        let pre = preprocess(&w, &h, bits, &Processing::incoherent(), seed);
+        let ctx = RoundCtx {
+            bits,
+            seed,
+            mode: crate::quant::rounding::RoundMode::Nearest,
+            greedy_passes: 0,
+            alg5_c: 0.3,
+        };
+        let rounded = VqRounder.round(&pre.wg, &pre.h, &ctx);
+        let vq = rounded.vq.expect("vq indices");
+        (
+            QuantizedLayer::from_vq_indices("vql", m, n, bits, &vq, pre.post),
+            rounded.codes,
+        )
+    }
+
+    #[test]
+    fn vq_layer_codes_and_v3_roundtrip() {
+        // n = 20 leaves a ragged last group (8, 8, 4).
+        for bits in [2u32, 4] {
+            let (layer, codes) = vq_layer(bits, 5, 20, 9);
+            assert!(matches!(layer.layout, CodeLayout::Vq { .. }));
+            // Equal bitrate: ⌈20/8⌉ groups × bits bytes per row.
+            assert_eq!(layer.packed.len(), 5 * 3 * bits as usize);
+            // codes() decodes indices back to exactly the rounder's codes.
+            assert_eq!(layer.codes().data, codes.data, "bits={bits}");
+            // v3 serialize → deserialize preserves everything.
+            let mut buf = Writer::new();
+            layer.serialize(&mut buf);
+            let mut r = Reader::new(&buf.buf);
+            let layer2 = QuantizedLayer::deserialize(&mut r, FORMAT_V3).unwrap();
+            assert_eq!(r.remaining(), 0);
+            assert_eq!(layer2.layout, layer.layout);
+            assert_eq!(layer2.packed, layer.packed);
+            assert_eq!(layer2.codes().data, codes.data);
+            assert_eq!(layer2.dequantize().data, layer.dequantize().data);
+        }
+    }
+
+    #[test]
+    fn v2_layer_bytes_still_deserialize() {
+        // A scalar layer written in the v2 layout (no code-layout byte)
+        // must load unchanged — pinned against real recorded v2 bytes.
+        let mut rng = Rng::new(24);
+        let w = random_mat(&mut rng, 4, 8);
+        let h = random_hessian(&mut rng, 8, 3, 1e-2);
+        let kind = crate::linalg::TransformKind::Hadamard;
+        let pre = preprocess(&w, &h, 2, &Processing::incoherent_with(kind), 3);
+        let codes = crate::quant::ldlq::round_matrix(
+            &pre.wg,
+            2,
+            crate::quant::rounding::RoundMode::Nearest,
+            0,
+        );
+        let layer = QuantizedLayer::from_codes("v2era", &codes, 2, pre.post);
+        let mut v2 = Writer::new();
+        layer.serialize_version(&mut v2, FORMAT_V2);
+        let mut v3 = Writer::new();
+        layer.serialize_version(&mut v3, FORMAT_V3);
+        // v3 scalar records differ from v2 by exactly the layout byte.
+        assert_eq!(v2.buf.len() + 1, v3.buf.len());
+        let mut r = Reader::new(&v2.buf);
+        let layer2 = QuantizedLayer::deserialize(&mut r, FORMAT_V2).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(layer2.layout, CodeLayout::Scalar);
+        assert_eq!(layer2.post.transform, kind);
+        assert_eq!(layer2.dequantize().data, layer.dequantize().data);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot represent")]
+    fn v2_refuses_vq_layers() {
+        let (layer, _) = vq_layer(2, 3, 16, 5);
+        let mut buf = Writer::new();
+        layer.serialize_version(&mut buf, FORMAT_V2); // must refuse
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot represent")]
+    fn v1_refuses_vq_layers() {
+        let (mut layer, _) = vq_layer(2, 3, 16, 5);
+        // Even with a v1-representable transform, the layout is enough
+        // to refuse.
+        layer.post.incoherent = false;
+        let mut buf = Writer::new();
+        layer.serialize_version(&mut buf, FORMAT_V1); // must refuse
+    }
+
+    #[test]
+    fn truncated_vq_layer_is_clean_error() {
+        let (layer, _) = vq_layer(2, 4, 16, 7);
+        let mut buf = Writer::new();
+        layer.serialize(&mut buf);
+        for cut in [1usize, 8, 20, buf.buf.len() / 2, buf.buf.len() - 1] {
+            let mut r = Reader::new(&buf.buf[..cut]);
+            assert!(
+                QuantizedLayer::deserialize(&mut r, FORMAT_V3).is_err(),
+                "cut={cut} should fail cleanly"
+            );
+        }
+        // A corrupt layout tag is a clean error, not a panic.
+        let mut bad = buf.buf.clone();
+        // name("vql": 4+3 bytes) + bits(4) + m(8) + n(8) → layout at 27.
+        assert_eq!(bad[27], 1, "layout byte location");
+        bad[27] = 9;
+        let mut r = Reader::new(&bad);
+        let err = QuantizedLayer::deserialize(&mut r, FORMAT_V3).unwrap_err();
+        assert!(err.to_string().contains("layout"), "{err}");
+    }
+
+    #[test]
+    fn vq_and_scalar_layers_have_equal_bitrate() {
+        // The acceptance bitrate condition: at n % 8 == 0 the vq payload
+        // is byte-for-byte the same size as the scalar payload.
+        for bits in [2u32, 4] {
+            let (vql, _) = vq_layer(bits, 6, 24, 11);
+            let mut rng = Rng::new(11);
+            let w = random_mat(&mut rng, 6, 24);
+            let h = random_hessian(&mut rng, 24, 6, 1e-2);
+            let pre = preprocess(&w, &h, bits, &Processing::incoherent(), 11);
+            let codes = crate::quant::ldlq::round_matrix(
+                &pre.wg,
+                bits,
+                crate::quant::rounding::RoundMode::Nearest,
+                0,
+            );
+            let scl = QuantizedLayer::from_codes("scl", &codes, bits, pre.post);
+            assert_eq!(vql.packed.len(), scl.packed.len(), "bits={bits}");
+        }
     }
 }

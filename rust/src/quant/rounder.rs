@@ -16,8 +16,10 @@
 //!
 //! * `wg` is the weight matrix **in grid coordinates** of the processed
 //!   basis — every entry the rounder should ideally hit lies in
-//!   `[0, 2^ctx.bits − 1]`, and the returned matrix must contain integer
-//!   codes clamped to that range.
+//!   `[0, 2^ctx.bits − 1]`. Scalar rounders return integer codes clamped
+//!   to that range; vector rounders ([`VqRounder`]) return codebook
+//!   points in the same grid coordinates plus their group indices (see
+//!   [`Rounded`]).
 //! * `h` is the proxy Hessian **conjugated into the same basis** (damped,
 //!   rescaled and orthogonally transformed exactly like `wg`), so
 //!   feedback terms computed from `h` are consistent with `wg`.
@@ -30,7 +32,8 @@
 
 use super::alg5;
 use super::greedy::greedy;
-use super::ldlq::{ldlq, ldlq_with_feedback, round_matrix};
+use super::grid::{codebook_seed, Codebook};
+use super::ldlq::{ldlq, ldlq_vq, ldlq_with_feedback, round_matrix};
 use super::optq::optq;
 use super::reorder::Reorder;
 use super::rounding::RoundMode;
@@ -54,6 +57,34 @@ pub struct RoundCtx {
     pub alg5_c: f64,
 }
 
+/// Output of one [`Rounder::round`] call: grid-space code values, plus
+/// the codebook indices when the rounder quantized in vector groups.
+pub struct Rounded {
+    /// Grid-space code values — integers in `[0, 2^bits − 1]` for scalar
+    /// rounders; E8 codebook points (half-integer-built reals, possibly
+    /// outside the scalar grid range) for vector rounders.
+    pub codes: Mat,
+    /// `Some` iff the codes are vector-codebook points: the per-group
+    /// indices that `.qz` v3 stores instead of per-weight scalar codes.
+    pub vq: Option<VqCodes>,
+}
+
+impl Rounded {
+    /// Wrap a scalar-grid code matrix (the seven classic rounders).
+    pub fn scalar(codes: Mat) -> Rounded {
+        Rounded { codes, vq: None }
+    }
+}
+
+/// Vector-codebook indices produced by a group-rounding algorithm:
+/// row-major, ⌈n/8⌉ per row, plus the seed that regenerates the
+/// [`Codebook`] at decode time (stored in the `.qz` v3 layer record).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VqCodes {
+    pub indices: Vec<u64>,
+    pub cb_seed: u64,
+}
+
 /// An adaptive-rounding algorithm, object-safe so registries and callers
 /// can hold `dyn Rounder`.
 pub trait Rounder: Send + Sync {
@@ -65,9 +96,11 @@ pub trait Rounder: Send + Sync {
     /// collection entirely for rounders that return `false`.
     fn supports_feedback(&self) -> bool;
 
-    /// Quantize grid-space weights to integer codes. See the module docs
-    /// for the `wg`/`h` contract.
-    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat;
+    /// Quantize grid-space weights to codes. See the module docs for the
+    /// `wg`/`h` contract; scalar rounders return
+    /// [`Rounded::scalar`]-wrapped integer codes, vector rounders also
+    /// carry their group indices.
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Rounded;
 }
 
 /// Nearest rounding, no feedback (§3.2 "Near").
@@ -80,8 +113,8 @@ impl Rounder for NearestRounder {
     fn supports_feedback(&self) -> bool {
         false
     }
-    fn round(&self, wg: &Mat, _h: &Mat, ctx: &RoundCtx) -> Mat {
-        round_matrix(wg, ctx.bits, RoundMode::Nearest, ctx.seed)
+    fn round(&self, wg: &Mat, _h: &Mat, ctx: &RoundCtx) -> Rounded {
+        Rounded::scalar(round_matrix(wg, ctx.bits, RoundMode::Nearest, ctx.seed))
     }
 }
 
@@ -95,8 +128,8 @@ impl Rounder for StochasticRounder {
     fn supports_feedback(&self) -> bool {
         false
     }
-    fn round(&self, wg: &Mat, _h: &Mat, ctx: &RoundCtx) -> Mat {
-        round_matrix(wg, ctx.bits, RoundMode::Stochastic, ctx.seed)
+    fn round(&self, wg: &Mat, _h: &Mat, ctx: &RoundCtx) -> Rounded {
+        Rounded::scalar(round_matrix(wg, ctx.bits, RoundMode::Stochastic, ctx.seed))
     }
 }
 
@@ -111,8 +144,8 @@ impl Rounder for LdlqRounder {
     fn supports_feedback(&self) -> bool {
         true
     }
-    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat {
-        ldlq(wg, h, ctx.bits, ctx.mode, ctx.seed)
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Rounded {
+        Rounded::scalar(ldlq(wg, h, ctx.bits, ctx.mode, ctx.seed))
     }
 }
 
@@ -127,13 +160,13 @@ impl Rounder for LdlqRgRounder {
     fn supports_feedback(&self) -> bool {
         true
     }
-    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat {
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Rounded {
         let r = Reorder::by_diag_desc(h);
         let wgp = r.apply_w(wg);
         let hp = r.apply_h(h);
         let base = ldlq(&wgp, &hp, ctx.bits, ctx.mode, ctx.seed);
         let polished = greedy(&wgp, &base, &hp, ctx.bits, ctx.greedy_passes);
-        r.undo_w(&polished)
+        Rounded::scalar(r.undo_w(&polished))
     }
 }
 
@@ -148,9 +181,9 @@ impl Rounder for GreedyRounder {
     fn supports_feedback(&self) -> bool {
         true
     }
-    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat {
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Rounded {
         // Standalone mode: the target is its own starting point.
-        greedy(wg, wg, h, ctx.bits, ctx.greedy_passes)
+        Rounded::scalar(greedy(wg, wg, h, ctx.bits, ctx.greedy_passes))
     }
 }
 
@@ -166,8 +199,10 @@ impl Rounder for OptqRounder {
     fn supports_feedback(&self) -> bool {
         true
     }
-    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat {
-        optq(wg, h, ctx.bits).unwrap_or_else(|_| ldlq(wg, h, ctx.bits, ctx.mode, ctx.seed))
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Rounded {
+        Rounded::scalar(
+            optq(wg, h, ctx.bits).unwrap_or_else(|_| ldlq(wg, h, ctx.bits, ctx.mode, ctx.seed)),
+        )
     }
 }
 
@@ -182,9 +217,47 @@ impl Rounder for Alg5Rounder {
     fn supports_feedback(&self) -> bool {
         true
     }
-    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Mat {
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Rounded {
         let plan = alg5::solve(h, ctx.alg5_c, 200, 1e-9);
-        ldlq_with_feedback(wg, &plan.u_dot, ctx.bits, RoundMode::Stochastic, ctx.seed)
+        Rounded::scalar(ldlq_with_feedback(
+            wg,
+            &plan.u_dot,
+            ctx.bits,
+            RoundMode::Stochastic,
+            ctx.seed,
+        ))
+    }
+}
+
+/// QuIP#-style vector quantization ("vq"): group-LDLQ feedback with
+/// 8-wide column groups rounded jointly against a seeded E8-style
+/// [`Codebook`] at the same bitrate as the scalar grid (see
+/// [`super::grid`] and DESIGN.md §6). Even bit widths 2–8 only, and no
+/// stochastic Q mode (nearest-codeword search is deterministic;
+/// `ctx.mode` is ignored) — `QuantConfigBuilder::build` rejects both
+/// misuses; this impl asserts on bits.
+pub struct VqRounder;
+
+impl Rounder for VqRounder {
+    fn name(&self) -> &'static str {
+        "vq"
+    }
+    fn supports_feedback(&self) -> bool {
+        true
+    }
+    fn round(&self, wg: &Mat, h: &Mat, ctx: &RoundCtx) -> Rounded {
+        let cb = Codebook::e8(ctx.bits, codebook_seed(ctx.seed)).expect(
+            "vq rounder requires an even bit width in 2..=8 \
+             (QuantConfigBuilder::build validates this)",
+        );
+        let (codes, indices) = ldlq_vq(wg, h, &cb);
+        Rounded {
+            codes,
+            vq: Some(VqCodes {
+                indices,
+                cb_seed: cb.seed(),
+            }),
+        }
     }
 }
 
@@ -210,7 +283,8 @@ impl RounderRegistry {
 
     /// A registry with the paper's seven algorithms under their CLI names
     /// plus the reference QuIP repo's upstream aliases
-    /// (`allbal` → greedy, `ldlbal_admm` → alg5, `gptq` → optq).
+    /// (`allbal` → greedy, `ldlbal_admm` → alg5, `gptq` → optq) and the
+    /// QuIP# vector-codebook rounder (`vq`, aliases `codebook`/`e8`).
     pub fn with_builtins() -> RounderRegistry {
         let mut r = RounderRegistry::new();
         r.register(NearestRounder, &["nearest"]);
@@ -220,6 +294,7 @@ impl RounderRegistry {
         r.register(GreedyRounder, &["allbal"]);
         r.register(OptqRounder, &["gptq"]);
         r.register(Alg5Rounder, &["ldlbal_admm"]);
+        r.register(VqRounder, &["codebook", "e8"]);
         r
     }
 
@@ -296,6 +371,9 @@ mod tests {
             ("gptq", "optq"),
             ("alg5", "alg5"),
             ("ldlbal_admm", "alg5"),
+            ("vq", "vq"),
+            ("codebook", "vq"),
+            ("e8", "vq"),
         ];
         let reg = RounderRegistry::global();
         for (alias, canonical) in cases {
@@ -311,11 +389,11 @@ mod tests {
     }
 
     #[test]
-    fn registry_lists_seven_builtins() {
+    fn registry_lists_eight_builtins() {
         let names = RounderRegistry::global().names();
         assert_eq!(
             names,
-            vec!["near", "stoch", "ldlq", "ldlq-rg", "greedy", "optq", "alg5"]
+            vec!["near", "stoch", "ldlq", "ldlq-rg", "greedy", "optq", "alg5", "vq"]
         );
     }
 
@@ -334,6 +412,7 @@ mod tests {
             Method::Greedy,
             Method::Optq,
             Method::Alg5,
+            Method::Vq,
         ] {
             let cfg = QuantConfig {
                 bits: 2,
@@ -355,7 +434,7 @@ mod tests {
         let reg = RounderRegistry::global();
         assert!(!reg.resolve("near").unwrap().supports_feedback());
         assert!(!reg.resolve("stoch").unwrap().supports_feedback());
-        for adaptive in ["ldlq", "ldlq-rg", "greedy", "optq", "alg5"] {
+        for adaptive in ["ldlq", "ldlq-rg", "greedy", "optq", "alg5", "vq"] {
             assert!(reg.resolve(adaptive).unwrap().supports_feedback(), "{adaptive}");
         }
     }
@@ -372,13 +451,13 @@ mod tests {
             fn supports_feedback(&self) -> bool {
                 false
             }
-            fn round(&self, wg: &Mat, _h: &Mat, ctx: &RoundCtx) -> Mat {
+            fn round(&self, wg: &Mat, _h: &Mat, ctx: &RoundCtx) -> Rounded {
                 let qmax = crate::quant::grid::levels(ctx.bits) as f64;
-                Mat {
+                Rounded::scalar(Mat {
                     rows: wg.rows,
                     cols: wg.cols,
                     data: wg.data.iter().map(|&z| z.floor().clamp(0.0, qmax)).collect(),
-                }
+                })
             }
         }
         let mut reg = RounderRegistry::new();
@@ -399,5 +478,48 @@ mod tests {
             assert!(c >= 0.0 && c <= 3.0 && c == c.round());
         }
         assert!(out.proxy_loss.is_finite());
+    }
+
+    #[test]
+    fn vq_rounder_flows_through_the_layer_driver() {
+        // End-to-end through quantize_layer_with: vq output carries one
+        // index per 8-group, the codes are the decoded codebook points
+        // (generally non-integer grid values), and the proxy loss is
+        // finite under full incoherence processing.
+        let mut rng = Rng::new(31);
+        let w = random_mat(&mut rng, 6, 32).scale(0.1);
+        let h = random_hessian(&mut rng, 32, 8, 1e-3);
+        for bits in [2u32, 4] {
+            let cfg = QuantConfig {
+                bits,
+                method: Method::Vq,
+                processing: Processing::incoherent(),
+                ..Default::default()
+            };
+            let out = quantize_layer_with(&VqRounder, &w, &h, &cfg, 77);
+            let vq = out.vq.as_ref().expect("vq rounder must emit indices");
+            assert_eq!(vq.indices.len(), 6 * 4, "one index per (row, 8-group)");
+            assert_eq!(
+                vq.cb_seed,
+                crate::quant::grid::codebook_seed(77),
+                "codebook seed derives from the layer seed"
+            );
+            // Decoding the indices reproduces the code matrix exactly.
+            let cb = Codebook::e8(bits, vq.cb_seed).unwrap();
+            for i in 0..6 {
+                for g in 0..4 {
+                    let mut vals = vec![0.0; 8];
+                    cb.decode_group(vq.indices[i * 4 + g], &mut vals);
+                    assert_eq!(&out.codes.row(i)[g * 8..(g + 1) * 8], &vals[..]);
+                }
+            }
+            assert!(out.proxy_loss.is_finite() && out.proxy_loss >= 0.0);
+            assert_eq!(out.w_hat.rows, 6);
+            assert!(out.w_hat.data.iter().all(|x| x.is_finite()));
+        }
+        // Scalar rounders carry no indices.
+        let cfg = QuantConfig::default();
+        let out = quantize_layer_with(&LdlqRounder, &w, &h, &cfg, 77);
+        assert!(out.vq.is_none());
     }
 }

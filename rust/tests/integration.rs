@@ -77,6 +77,38 @@ fn qz_roundtrip_through_disk_and_native_engine() {
 }
 
 #[test]
+fn vq_qz_roundtrip_through_disk_and_native_engine() {
+    // The vector-codebook path end to end: pipeline with the vq rounder
+    // → v3 `.qz` on disk → load → LUT-expansion decode ≈ dequantized fwd,
+    // at the same storage footprint as the scalar 2-bit artifact.
+    let (ck, qm) = pipeline(2, Method::Vq, Processing::incoherent());
+    for l in &qm.layers {
+        assert!(matches!(l.layout, quip::quant::CodeLayout::Vq { .. }));
+        assert_eq!(l.packed.len(), l.m * l.n.div_ceil(8) * 2);
+    }
+    let dir = std::env::temp_dir().join("quip_it_vq");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.qz");
+    qm.save(&path).unwrap();
+    let loaded = QuantizedModel::load(&path).unwrap();
+
+    let model = Transformer::from_checkpoint(&ck).unwrap();
+    let qlin = QuantLinears::from_model(&loaded).unwrap();
+    let mut deq = Transformer::from_checkpoint(&ck).unwrap();
+    loaded.apply_to(&mut deq).unwrap();
+    let fp = FpLinears { model: &deq };
+    let mut c1 = model.new_cache();
+    let mut c2 = deq.new_cache();
+    for &t in &[1u32, 30, 12, 55] {
+        let a = decode_step_with(&model, &qlin, &mut c1, t);
+        let b = decode_step_with(&deq, &fp, &mut c2, t);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 2e-2, "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
 fn storage_is_actually_two_bit() {
     // On this deliberately tiny model (32×32 layers) the per-layer
     // metadata (grid + D̃ vector) is a visible constant; it amortizes to
