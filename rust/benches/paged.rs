@@ -1,0 +1,124 @@
+//! Paged vs contiguous KV-cache decode: tracks the KV-read overhead of
+//! the block-table indirection (per-page `for_each_run` visits + pool
+//! mutex) against the flat contiguous baseline, batch 1 and batched.
+//! Uses random checkpoints so `cargo bench` always runs; the interesting
+//! number is the paged/contig ratio, which should stay close to 1.0 —
+//! the linears dominate and the KV walk is a small fraction of a step.
+
+use quip::engine::native::{decode_step_batch, decode_step_with, FpLinears, LinearOps};
+use quip::model::kvpool::KvPool;
+use quip::model::weights::Checkpoint;
+use quip::model::{KvCache, ModelConfig, Transformer, DEFAULT_PAGE_TOKENS};
+
+/// Per-token latency for a single sequence decoded `tokens` steps.
+fn tok_latency(model: &Transformer, lin: &dyn LinearOps, cache: &mut KvCache, tokens: usize) -> f64 {
+    for t in 0..8u32 {
+        decode_step_with(model, lin, cache, t + 1);
+    }
+    let t0 = std::time::Instant::now();
+    let mut tok = 1u32;
+    for _ in 0..tokens {
+        if cache.len() >= model.cfg.max_seq {
+            cache.reset();
+        }
+        let logits = decode_step_with(model, lin, cache, tok);
+        tok = (logits[3].abs() as u32 % 250) + 1;
+    }
+    t0.elapsed().as_secs_f64() / tokens as f64
+}
+
+/// Per-token latency across a batch of independent sequences stepped
+/// together for `steps` rounds (batch × steps tokens total).
+fn batch_latency(
+    model: &Transformer,
+    lin: &dyn LinearOps,
+    caches: &mut [KvCache],
+    steps: usize,
+) -> f64 {
+    let bsz = caches.len();
+    let vocab = model.cfg.vocab;
+    let mut toks: Vec<u32> = (0..bsz as u32).map(|b| b % 250 + 1).collect();
+    let mut run = |rounds: usize, timed: bool| -> f64 {
+        let t0 = std::time::Instant::now();
+        for _ in 0..rounds {
+            if caches.iter().any(|c| c.len() >= model.cfg.max_seq) {
+                for c in caches.iter_mut() {
+                    c.reset();
+                }
+            }
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            let logits = decode_step_batch(model, lin, &mut refs, &toks);
+            for (b, t) in toks.iter_mut().enumerate() {
+                *t = (logits[b * vocab + 3].abs() as u32 % 250) + 1;
+            }
+        }
+        if timed {
+            t0.elapsed().as_secs_f64() / (rounds * bsz) as f64
+        } else {
+            0.0
+        }
+    };
+    run(4, false);
+    run(steps, true)
+}
+
+fn main() {
+    let tokens = 96;
+    println!("Paged-KV decode overhead (native fp32 engine)\n");
+    for name in ["s0", "s1"] {
+        let cfg = ModelConfig::by_name(name).unwrap();
+        let ck = Checkpoint::random(&cfg, 1);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let lin = FpLinears { model: &model };
+
+        // Batch 1: contiguous slab vs one paged sequence.
+        let mut contig = model.new_cache();
+        let t_c = tok_latency(&model, &lin, &mut contig, tokens);
+        let pool = KvPool::shared(
+            cfg.n_layers,
+            cfg.d_model,
+            cfg.max_seq.div_ceil(DEFAULT_PAGE_TOKENS) + 1,
+            DEFAULT_PAGE_TOKENS,
+        );
+        let mut paged = model.new_paged_cache(&pool);
+        let t_p = tok_latency(&model, &lin, &mut paged, tokens);
+        println!(
+            "bench  paged_decode_{name}_b1    contig {:8.3}ms  paged {:8.3}ms  (paged/contig {:.3}x)",
+            t_c * 1e3,
+            t_p * 1e3,
+            t_p / t_c
+        );
+
+        // Batch 8: the serving shape — ragged positions, shared pool.
+        let bsz = 8usize;
+        let steps = tokens / 2;
+        let mut contigs: Vec<KvCache> = (0..bsz).map(|_| model.new_cache()).collect();
+        let t_cb = batch_latency(&model, &lin, &mut contigs, steps);
+        let pool = KvPool::shared(
+            cfg.n_layers,
+            cfg.d_model,
+            bsz * (cfg.max_seq.div_ceil(DEFAULT_PAGE_TOKENS) + 1),
+            DEFAULT_PAGE_TOKENS,
+        );
+        let mut pageds: Vec<KvCache> = (0..bsz).map(|_| model.new_paged_cache(&pool)).collect();
+        let t_pb = batch_latency(&model, &lin, &mut pageds, steps);
+        println!(
+            "bench  paged_decode_{name}_b{bsz}    contig {:8.3}ms  paged {:8.3}ms  (paged/contig {:.3}x)",
+            t_cb * 1e3,
+            t_pb * 1e3,
+            t_pb / t_cb
+        );
+        let snap = {
+            drop(pageds);
+            pool.lock().unwrap().snapshot()
+        };
+        println!(
+            "       pool: peak {} pages ({} total), cow {}, all released: {}",
+            snap.peak_pages,
+            snap.pages_total,
+            snap.cow_copies,
+            snap.pages_used == 0
+        );
+    }
+    println!("\ntarget: paged/contig ≈ 1.0x — the block-table walk must not tax decode.");
+}

@@ -58,7 +58,7 @@ fn tok_latency(model: &Transformer, lin: &dyn LinearOps, tokens: usize) -> f64 {
     let t0 = std::time::Instant::now();
     let mut tok = 1u32;
     for _ in 0..tokens {
-        if cache.len >= model.cfg.max_seq {
+        if cache.len() >= model.cfg.max_seq {
             cache.reset();
         }
         let logits = decode_step_with(model, lin, &mut cache, tok);

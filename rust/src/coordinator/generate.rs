@@ -36,9 +36,29 @@ impl Default for GenParams {
     }
 }
 
+/// Why a sequence stopped. `Stop` means the model produced the stop
+/// token; `Length` means the request's `max_tokens` budget or the
+/// model context (`max_seq`) was exhausted. Reported per response so
+/// clients can tell a completed answer from a truncated one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Stop,
+    Length,
+}
+
+impl FinishReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Stop => "stop",
+            FinishReason::Length => "length",
+        }
+    }
+}
+
 /// Generation output with timing for the serving metrics.
 pub struct Generation {
     pub tokens: Vec<u32>,
+    pub finish: FinishReason,
     pub prefill_seconds: f64,
     pub decode_seconds: f64,
 }
@@ -67,19 +87,22 @@ pub fn generate(
 
     let t1 = std::time::Instant::now();
     let mut out = Vec::new();
+    let mut finish = FinishReason::Length;
     for _ in 0..max_new {
         let next = sample(&logits, params.temperature, &mut rng);
         out.push(next);
         if params.stop_token == Some(next) {
+            finish = FinishReason::Stop;
             break;
         }
-        if cache.len >= model.cfg.max_seq {
+        if out.len() >= max_new || cache.len() >= model.cfg.max_seq {
             break;
         }
         logits = decode_step_with(model, lin, &mut cache, next);
     }
     Generation {
         tokens: out,
+        finish,
         prefill_seconds,
         decode_seconds: t1.elapsed().as_secs_f64(),
     }
@@ -98,6 +121,11 @@ pub struct ActiveSeq {
     pub params: GenParams,
     rng: Rng,
     pub done: bool,
+    /// Why the sequence finished (set exactly when `done` flips).
+    pub finish: Option<FinishReason>,
+    /// Set when the KV pool could not reserve this sequence's next slot;
+    /// the sequence sat out the last step and retries on the next one.
+    pub stalled: bool,
     max_new: usize,
     prompt_len: usize,
     born: Instant,
@@ -107,16 +135,36 @@ pub struct ActiveSeq {
 
 impl ActiveSeq {
     pub fn new(model: &Transformer, prompt: &[u32], params: GenParams) -> ActiveSeq {
+        ActiveSeq::with_cache(model, prompt, params, model.new_cache())
+    }
+
+    /// Build a sequence over a caller-provided cache — the serving path,
+    /// where the cache is paged and may already hold a shared prompt
+    /// prefix (from [`crate::model::KvPool::try_admit`]). Only the
+    /// unshared prompt tail `prompt[cache.len()..]` is fed.
+    pub fn with_cache(
+        model: &Transformer,
+        prompt: &[u32],
+        params: GenParams,
+        cache: KvCache,
+    ) -> ActiveSeq {
         assert!(!prompt.is_empty(), "empty prompt");
+        let shared = cache.len();
+        assert!(
+            shared < prompt.len(),
+            "shared prefix ({shared}) must leave at least the last prompt token"
+        );
         let budget = model.cfg.max_seq.saturating_sub(prompt.len());
         let max_new = params.max_tokens.min(budget);
         let rng = Rng::new(params.seed);
         ActiveSeq {
-            cache: model.new_cache(),
-            feed: prompt.iter().copied().collect(),
+            cache,
+            feed: prompt[shared..].iter().copied().collect(),
             tokens: Vec::new(),
             rng,
             done: false,
+            finish: None,
+            stalled: false,
             max_new,
             prompt_len: prompt.len(),
             born: Instant::now(),
@@ -128,11 +176,12 @@ impl ActiveSeq {
 
     /// Still consuming prompt tokens?
     pub fn prefilling(&self) -> bool {
-        self.cache.len + self.feed.len() <= self.prompt_len
+        self.cache.len() + self.feed.len() <= self.prompt_len
     }
 
-    fn finish(&mut self) {
+    fn finish(&mut self, reason: FinishReason) {
         self.done = true;
+        self.finish = Some(reason);
         self.finished_seconds = self.born.elapsed().as_secs_f64();
     }
 
@@ -140,31 +189,51 @@ impl ActiveSeq {
     pub fn into_generation(self) -> Generation {
         Generation {
             tokens: self.tokens,
+            finish: self.finish.unwrap_or(FinishReason::Length),
             prefill_seconds: self.prefill_seconds,
             decode_seconds: (self.finished_seconds - self.prefill_seconds).max(0.0),
         }
     }
 }
 
+/// Outcome of one continuous-batching step: how many sequences advanced
+/// (the batch occupancy the serving metrics record) and how many were
+/// stalled by KV-pool exhaustion and sat the step out.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepReport {
+    pub stepped: usize,
+    pub stalled: usize,
+}
+
 /// Advance every non-done sequence by one token (batched decode +
-/// per-sequence sampling at prompt end). Returns the number of sequences
-/// stepped — the batch size of this step, which the serving metrics
-/// record as batch occupancy.
-pub fn step_batch(model: &Transformer, lin: &dyn LinearOps, seqs: &mut [ActiveSeq]) -> usize {
+/// per-sequence sampling at prompt end). A sequence whose KV cache
+/// cannot reserve its next slot (paged pool exhausted) is marked
+/// [`ActiveSeq::stalled`] and skipped this step — it retries when pages
+/// free up; the serving scheduler sheds it if the stall never clears.
+pub fn step_batch(model: &Transformer, lin: &dyn LinearOps, seqs: &mut [ActiveSeq]) -> StepReport {
     let mut ids = Vec::new();
     let mut toks = Vec::new();
     let mut caches: Vec<&mut KvCache> = Vec::new();
+    let mut stalled = 0usize;
     for (i, s) in seqs.iter_mut().enumerate() {
         if s.done {
             continue;
         }
+        // Pre-reserve the write slot; decode_step_batch panics on
+        // exhaustion, so admission to the batch happens here.
+        if s.cache.ensure_append().is_err() {
+            s.stalled = true;
+            stalled += 1;
+            continue;
+        }
+        s.stalled = false;
         let t = s.feed.pop_front().expect("live sequence has a token to feed");
         ids.push(i);
         toks.push(t);
         caches.push(&mut s.cache);
     }
     if ids.is_empty() {
-        return 0;
+        return StepReport { stepped: 0, stalled };
     }
     let logits = decode_step_batch(model, lin, &mut caches, &toks);
     let v = model.cfg.vocab;
@@ -177,22 +246,25 @@ pub fn step_batch(model: &Transformer, lin: &dyn LinearOps, seqs: &mut [ActiveSe
             s.prefill_seconds = s.born.elapsed().as_secs_f64();
         }
         if s.tokens.len() >= s.max_new {
-            s.finish(); // zero-budget request (prompt fills the context)
+            // Zero-budget request (prompt fills the context).
+            s.finish(FinishReason::Length);
             continue;
         }
         let row = &logits[k * v..(k + 1) * v];
         let next = sample(row, s.params.temperature, &mut s.rng);
         s.tokens.push(next);
-        if s.params.stop_token == Some(next)
-            || s.tokens.len() >= s.max_new
-            || s.cache.len >= model.cfg.max_seq
-        {
-            s.finish();
+        if s.params.stop_token == Some(next) {
+            s.finish(FinishReason::Stop);
+        } else if s.tokens.len() >= s.max_new || s.cache.len() >= model.cfg.max_seq {
+            s.finish(FinishReason::Length);
         } else {
             s.feed.push_back(next);
         }
     }
-    ids.len()
+    StepReport {
+        stepped: ids.len(),
+        stalled,
+    }
 }
 
 /// Generate continuations for a fixed set of prompts through the
@@ -209,7 +281,9 @@ pub fn generate_batch(
         .iter()
         .map(|p| ActiveSeq::new(model, p, params.clone()))
         .collect();
-    while step_batch(model, lin, &mut seqs) > 0 {}
+    // Contiguous caches never stall; a caller handing in paged sequences
+    // must size the pool (the serving scheduler sheds instead).
+    while step_batch(model, lin, &mut seqs).stepped > 0 {}
     seqs.into_iter().map(ActiveSeq::into_generation).collect()
 }
 
@@ -328,6 +402,93 @@ mod tests {
         let gens = generate_batch(&m, &lin, &[vec![1, 2], long.clone()], &p);
         assert_eq!(gens[0].tokens, vec![first]);
         assert!(long.len() + gens[1].tokens.len() <= m.cfg.max_seq);
+    }
+
+    #[test]
+    fn finish_reason_distinguishes_stop_from_length() {
+        let m = tiny();
+        let lin = FpLinears { model: &m };
+        let p0 = GenParams {
+            max_tokens: 1,
+            ..Default::default()
+        };
+        let first = generate(&m, &lin, &[1, 2], &p0).tokens[0];
+        // Budget exhaustion (no stop token) reports "length"...
+        let g = generate(&m, &lin, &[1, 2], &p0);
+        assert_eq!(g.finish, FinishReason::Length);
+        assert_eq!(g.finish.as_str(), "length");
+        // ...producing the stop token reports "stop", in both the
+        // single-request and the continuous-batching paths.
+        let p = GenParams {
+            max_tokens: 16,
+            stop_token: Some(first),
+            ..Default::default()
+        };
+        let g = generate(&m, &lin, &[1, 2], &p);
+        assert_eq!(g.finish, FinishReason::Stop);
+        let long: Vec<u32> = (0..120).map(|i| (i % 50) as u32).collect();
+        let gens = generate_batch(&m, &lin, &[vec![1, 2], long], &p);
+        assert_eq!(gens[0].finish, FinishReason::Stop);
+        // The long prompt hits max_seq before 16 tokens: length-finished.
+        assert_eq!(gens[1].finish, FinishReason::Length);
+        assert_eq!(gens[1].finish.as_str(), "length");
+    }
+
+    #[test]
+    fn paged_batch_generation_matches_contiguous() {
+        // The continuous-batching loop over paged caches produces the
+        // same greedy tokens as plain generate() per prompt.
+        let m = tiny();
+        let lin = FpLinears { model: &m };
+        let pool = crate::model::KvPool::shared(m.cfg.n_layers, m.cfg.d_model, 64, 4);
+        let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![9], vec![4, 8, 15, 16, 23]];
+        let p = GenParams {
+            max_tokens: 7,
+            ..Default::default()
+        };
+        let mut seqs: Vec<ActiveSeq> = prompts
+            .iter()
+            .map(|pr| ActiveSeq::with_cache(&m, pr, p.clone(), m.new_paged_cache(&pool)))
+            .collect();
+        while step_batch(&m, &lin, &mut seqs).stepped > 0 {}
+        for (prompt, seq) in prompts.iter().zip(seqs) {
+            let want = generate(&m, &lin, prompt, &p);
+            let got = seq.into_generation();
+            assert_eq!(got.tokens, want.tokens, "prompt {prompt:?}");
+            assert_eq!(got.finish, want.finish);
+        }
+        assert_eq!(pool.lock().unwrap().pages_in_use(), 0, "drops released pages");
+    }
+
+    #[test]
+    fn stalled_sequence_resumes_when_pages_free_up() {
+        // One-page pool: sequence A holds the page, B stalls instead of
+        // panicking, then proceeds once A is dropped and its page freed.
+        let m = tiny();
+        let lin = FpLinears { model: &m };
+        let pool = crate::model::KvPool::shared(m.cfg.n_layers, m.cfg.d_model, 1, 4);
+        let p = GenParams {
+            max_tokens: 2,
+            ..Default::default()
+        };
+        let mut seqs = vec![
+            ActiveSeq::with_cache(&m, &[1, 2], p.clone(), m.new_paged_cache(&pool)),
+            ActiveSeq::with_cache(&m, &[1, 2], p.clone(), m.new_paged_cache(&pool)),
+        ];
+        let r = step_batch(&m, &lin, &mut seqs);
+        assert_eq!((r.stepped, r.stalled), (1, 1));
+        assert!(seqs[1].stalled && !seqs[1].done);
+        while !seqs[0].done {
+            step_batch(&m, &lin, &mut seqs);
+        }
+        // A: 2 prompt + 2 generated = len 3 fed, fits the single page.
+        let a = seqs.remove(0).into_generation();
+        let r = step_batch(&m, &lin, &mut seqs);
+        assert_eq!((r.stepped, r.stalled), (1, 0));
+        assert!(!seqs[0].stalled);
+        while step_batch(&m, &lin, &mut seqs).stepped > 0 {}
+        let b = seqs.remove(0).into_generation();
+        assert_eq!(a.tokens, b.tokens, "same prompt, same greedy tokens");
     }
 
     #[test]

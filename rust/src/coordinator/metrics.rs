@@ -1,6 +1,10 @@
-//! Serving metrics: counters + streaming latency histogram (log-spaced
-//! buckets), all lock-free on the record path.
+//! Serving metrics: counters + streaming latency histograms (log-spaced
+//! buckets), all lock-free on the record path. Request latency and
+//! per-token (inter-step) latency get separate histograms; KV-pool
+//! gauges are copied in from [`crate::model::kvpool::PoolSnapshot`]
+//! after each scheduler step.
 
+use crate::model::kvpool::PoolSnapshot;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 const BUCKETS: usize = 40;
@@ -8,19 +12,68 @@ const BUCKETS: usize = 40;
 const BASE: f64 = 1e-5;
 const GROWTH: f64 = 1.45;
 
+fn bucket_index(seconds: f64) -> usize {
+    let mut idx = 0usize;
+    let mut bound = BASE;
+    while idx < BUCKETS - 1 && seconds >= bound {
+        bound *= GROWTH;
+        idx += 1;
+    }
+    idx
+}
+
+fn quantile_from(counts: &[u64], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = (q * total as f64).ceil() as u64;
+    let mut acc = 0u64;
+    let mut bound = BASE;
+    for &c in counts.iter() {
+        acc += c;
+        if acc >= target {
+            return bound;
+        }
+        bound *= GROWTH;
+    }
+    bound
+}
+
 pub struct Metrics {
     pub requests: AtomicU64,
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
     pub tokens_out: AtomicU64,
+    /// Requests refused or dropped by admission control ("overloaded"):
+    /// pool could not cover the prompt + reservation, or the wait in the
+    /// admission queue timed out, or a stalled sequence was dropped.
+    pub shed: AtomicU64,
+    /// Admitted-then-dropped sequences (stalled on an exhausted pool with
+    /// no step progressing); a subset of `shed`.
+    pub evicted: AtomicU64,
+    /// Tokens pushed to clients as incremental stream frames.
+    pub streamed_tokens: AtomicU64,
     /// Batched decode steps executed by the continuous-batching loop.
     pub batched_steps: AtomicU64,
     /// Sum of batch sizes over those steps (occupancy numerator).
     pub batch_occupancy_sum: AtomicU64,
     /// Largest batch seen in a single step.
     pub max_batch_seen: AtomicU64,
+    // KV-pool gauges/counters, refreshed from the pool snapshot.
+    pub kv_pages_used: AtomicU64,
+    pub kv_pages_total: AtomicU64,
+    pub kv_pages_peak: AtomicU64,
+    pub cow_copies: AtomicU64,
+    pub prefix_lookups: AtomicU64,
+    pub prefix_hits: AtomicU64,
+    pub prefix_tokens_shared: AtomicU64,
+    pub pool_evictions: AtomicU64,
     latency: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
+    tok_latency: [AtomicU64; BUCKETS],
+    tok_latency_sum_us: AtomicU64,
+    tok_latency_count: AtomicU64,
 }
 
 impl Metrics {
@@ -30,11 +83,25 @@ impl Metrics {
             rejected: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             tokens_out: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            streamed_tokens: AtomicU64::new(0),
             batched_steps: AtomicU64::new(0),
             batch_occupancy_sum: AtomicU64::new(0),
             max_batch_seen: AtomicU64::new(0),
+            kv_pages_used: AtomicU64::new(0),
+            kv_pages_total: AtomicU64::new(0),
+            kv_pages_peak: AtomicU64::new(0),
+            cow_copies: AtomicU64::new(0),
+            prefix_lookups: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            prefix_tokens_shared: AtomicU64::new(0),
+            pool_evictions: AtomicU64::new(0),
             latency: std::array::from_fn(|_| AtomicU64::new(0)),
             latency_sum_us: AtomicU64::new(0),
+            tok_latency: std::array::from_fn(|_| AtomicU64::new(0)),
+            tok_latency_sum_us: AtomicU64::new(0),
+            tok_latency_count: AtomicU64::new(0),
         }
     }
 
@@ -59,39 +126,38 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, seconds: f64) {
-        let mut idx = 0usize;
-        let mut bound = BASE;
-        while idx < BUCKETS - 1 && seconds >= bound {
-            bound *= GROWTH;
-            idx += 1;
-        }
-        self.latency[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency[bucket_index(seconds)].fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us
             .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
     }
 
-    /// Approximate latency quantile from the histogram.
+    /// Record one inter-token interval (one scheduler step's duration,
+    /// from the perspective of every sequence it advanced).
+    pub fn record_token_latency(&self, seconds: f64) {
+        self.tok_latency[bucket_index(seconds)].fetch_add(1, Ordering::Relaxed);
+        self.tok_latency_sum_us
+            .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.tok_latency_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate request-latency quantile from the histogram.
     pub fn latency_quantile(&self, q: f64) -> f64 {
         let counts: Vec<u64> = self
             .latency
             .iter()
             .map(|c| c.load(Ordering::Relaxed))
             .collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = (q * total as f64).ceil() as u64;
-        let mut acc = 0u64;
-        let mut bound = BASE;
-        for &c in counts.iter() {
-            acc += c;
-            if acc >= target {
-                return bound;
-            }
-            bound *= GROWTH;
-        }
-        bound
+        quantile_from(&counts, q)
+    }
+
+    /// Approximate per-token latency quantile from the histogram.
+    pub fn token_latency_quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self
+            .tok_latency
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        quantile_from(&counts, q)
     }
 
     pub fn mean_latency(&self) -> f64 {
@@ -102,25 +168,64 @@ impl Metrics {
         self.latency_sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
     }
 
+    pub fn mean_token_latency(&self) -> f64 {
+        let n = self.tok_latency_count.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.tok_latency_sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+    }
+
+    /// Fraction of admission lookups that found a shared prompt prefix.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let lookups = self.prefix_lookups.load(Ordering::Relaxed);
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits.load(Ordering::Relaxed) as f64 / lookups as f64
+    }
+
+    /// Refresh the pool gauges from a snapshot (taken under the pool
+    /// lock once per scheduler step).
+    pub fn record_pool(&self, s: &PoolSnapshot) {
+        self.kv_pages_used.store(s.pages_used as u64, Ordering::Relaxed);
+        self.kv_pages_total.store(s.pages_total as u64, Ordering::Relaxed);
+        self.kv_pages_peak.store(s.peak_pages as u64, Ordering::Relaxed);
+        self.cow_copies.store(s.cow_copies, Ordering::Relaxed);
+        self.prefix_lookups.store(s.prefix_lookups, Ordering::Relaxed);
+        self.prefix_hits.store(s.prefix_hits, Ordering::Relaxed);
+        self.prefix_tokens_shared
+            .store(s.prefix_tokens_shared, Ordering::Relaxed);
+        self.pool_evictions.store(s.evictions, Ordering::Relaxed);
+    }
+
     pub fn summary(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
+        let g = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
         let mut j = Json::obj();
-        j.set("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64));
-        j.set("rejected", Json::Num(self.rejected.load(Ordering::Relaxed) as f64));
-        j.set("completed", Json::Num(self.completed.load(Ordering::Relaxed) as f64));
-        j.set("tokens_out", Json::Num(self.tokens_out.load(Ordering::Relaxed) as f64));
+        j.set("requests", g(&self.requests));
+        j.set("rejected", g(&self.rejected));
+        j.set("completed", g(&self.completed));
+        j.set("tokens_out", g(&self.tokens_out));
+        j.set("shed", g(&self.shed));
+        j.set("evicted", g(&self.evicted));
+        j.set("streamed_tokens", g(&self.streamed_tokens));
         j.set("mean_latency_s", Json::Num(self.mean_latency()));
         j.set("p50_s", Json::Num(self.latency_quantile(0.5)));
         j.set("p95_s", Json::Num(self.latency_quantile(0.95)));
-        j.set(
-            "batched_steps",
-            Json::Num(self.batched_steps.load(Ordering::Relaxed) as f64),
-        );
+        j.set("mean_tok_latency_s", Json::Num(self.mean_token_latency()));
+        j.set("p50_tok_s", Json::Num(self.token_latency_quantile(0.5)));
+        j.set("p95_tok_s", Json::Num(self.token_latency_quantile(0.95)));
+        j.set("batched_steps", g(&self.batched_steps));
         j.set("mean_batch", Json::Num(self.mean_batch_size()));
-        j.set(
-            "max_batch",
-            Json::Num(self.max_batch_seen.load(Ordering::Relaxed) as f64),
-        );
+        j.set("max_batch", g(&self.max_batch_seen));
+        j.set("kv_pages_used", g(&self.kv_pages_used));
+        j.set("kv_pages_total", g(&self.kv_pages_total));
+        j.set("kv_pages_peak", g(&self.kv_pages_peak));
+        j.set("cow_copies", g(&self.cow_copies));
+        j.set("prefix_hit_rate", Json::Num(self.prefix_hit_rate()));
+        j.set("prefix_tokens_shared", g(&self.prefix_tokens_shared));
+        j.set("pool_evictions", g(&self.pool_evictions));
         j
     }
 }
@@ -165,6 +270,7 @@ mod tests {
         m.requests.fetch_add(3, Ordering::Relaxed);
         let j = m.summary();
         assert_eq!(j.req_f64("requests").unwrap(), 3.0);
+        assert_eq!(j.req_f64("shed").unwrap(), 0.0);
     }
 
     #[test]
@@ -181,5 +287,41 @@ mod tests {
         let j = m.summary();
         assert_eq!(j.req_f64("batched_steps").unwrap(), 3.0);
         assert_eq!(j.req_f64("max_batch").unwrap(), 16.0);
+    }
+
+    #[test]
+    fn token_latency_histogram_is_separate() {
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.record_token_latency(2e-3);
+        }
+        assert!((m.mean_token_latency() - 2e-3).abs() < 2e-4);
+        let p50 = m.token_latency_quantile(0.5);
+        // Within one log-bucket (×1.45) of the true value.
+        assert!((1e-3..5e-3).contains(&p50), "p50_tok={p50}");
+        // The request-latency histogram is untouched.
+        assert_eq!(m.latency_quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn pool_gauges_come_from_snapshot() {
+        let m = Metrics::new();
+        let s = PoolSnapshot {
+            pages_used: 7,
+            pages_total: 64,
+            peak_pages: 12,
+            cow_copies: 3,
+            prefix_lookups: 10,
+            prefix_hits: 4,
+            prefix_tokens_shared: 36,
+            evictions: 1,
+        };
+        m.record_pool(&s);
+        assert_eq!(m.kv_pages_used.load(Ordering::Relaxed), 7);
+        assert!((m.prefix_hit_rate() - 0.4).abs() < 1e-12);
+        let j = m.summary();
+        assert_eq!(j.req_f64("kv_pages_total").unwrap(), 64.0);
+        assert_eq!(j.req_f64("cow_copies").unwrap(), 3.0);
+        assert_eq!(j.req_f64("pool_evictions").unwrap(), 1.0);
     }
 }

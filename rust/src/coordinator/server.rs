@@ -1,25 +1,37 @@
 //! Generation server: newline-delimited JSON over TCP.
 //!
 //! Request : {"id": 1, "prompt": [3, 17, 9], "max_tokens": 16,
-//!            "temperature": 0.0}
-//! Response: {"id": 1, "tokens": [...], "latency_ms": 12.3}
+//!            "temperature": 0.0, "stream": false}
+//! Response: {"id": 1, "tokens": [...], "finish_reason": "stop"|"length",
+//!            "latency_ms": 12.3}
 //!   or      {"id": 1, "error": "..."}
 //!
+//! With `"stream": true` the server additionally pushes one frame per
+//! generated token, {"id": 1, "index": 0, "token": 42}, before the final
+//! frame (which carries `"done": true` plus the full token list).
+//!
 //! Architecture: an acceptor thread per listener, a shared [`Batcher`]
-//! for admission (backpressure → {"error":"overloaded"}), and a
+//! for intake (overflow → {"error":"overloaded"}), and a
 //! continuous-batching scheduler: one decode loop advances every active
 //! sequence a token at a time through the batched native engine
 //! (`decode_step_batch`), new requests join at token boundaries and
-//! finished ones respond and leave. The batched linears parallelize
-//! internally across the `util::threadpool` substrate.
+//! finished ones respond and leave. KV memory comes from a paged
+//! [`KvPool`] (O(active tokens), prompt-prefix sharing); admission
+//! control only moves a request from the intake queue into the batch
+//! when the pool can cover its prompt plus a decode reservation, so
+//! under overload requests queue briefly and are then shed with a clean
+//! "overloaded" error instead of the pool OOMing. The batched linears
+//! parallelize internally across the `util::threadpool` substrate.
 
-use super::batcher::Batcher;
-use super::generate::{step_batch, ActiveSeq, GenParams};
+use super::batcher::{Batcher, Pending};
+use super::generate::{step_batch, ActiveSeq, FinishReason, GenParams};
 use super::metrics::Metrics;
 use crate::engine::native::{FpLinears, LinearOps, QuantLinears};
 use crate::model::quantized::QuantizedModel;
-use crate::model::Transformer;
+use crate::model::transformer::KvCache;
+use crate::model::{KvPool, SharedKvPool, Transformer, DEFAULT_PAGE_TOKENS};
 use crate::util::json::Json;
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -34,6 +46,24 @@ pub struct ServerConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_capacity: usize,
+    /// Serve KV from the paged pool (default). `false` restores the
+    /// contiguous per-sequence caches (no admission control: every
+    /// sequence preallocates `max_seq` rows).
+    pub paged: bool,
+    /// Pool size in pages; 0 = auto-size to `max_batch` worst-case
+    /// sequences (`max_batch · ⌈max_seq / page_tokens⌉`), which can never
+    /// shed an admitted sequence mid-flight.
+    pub kv_pages: usize,
+    /// Token rows per page.
+    pub page_tokens: usize,
+    /// Decode-ahead reservation demanded at admission, capped by the
+    /// request's own `max_tokens`. Larger values admit more
+    /// conservatively; smaller values pack tighter but stall/shed more
+    /// under pressure.
+    pub reserve_tokens: usize,
+    /// How long a request may sit in the admission queue waiting for
+    /// pool pages before it is shed with "overloaded".
+    pub admit_timeout: Duration,
 }
 
 impl Default for ServerConfig {
@@ -43,6 +73,11 @@ impl Default for ServerConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             queue_capacity: 256,
+            paged: true,
+            kv_pages: 0,
+            page_tokens: DEFAULT_PAGE_TOKENS,
+            reserve_tokens: 32,
+            admit_timeout: Duration::from_secs(2),
         }
     }
 }
@@ -71,6 +106,7 @@ pub type ServeEngine = EngineKind;
 struct Job {
     prompt: Vec<u32>,
     params: GenParams,
+    stream: bool,
     resp: Mutex<Option<TcpStream>>,
     received: Instant,
 }
@@ -136,40 +172,96 @@ impl Server {
             }));
         }
 
-        // Continuous-batching scheduler: admit → step all → retire, one
-        // token per iteration.
+        // Continuous-batching scheduler: intake → admit (pool permitting)
+        // → step all → stream/retire, one token per iteration.
         {
             let stop = Arc::clone(&stop);
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
             let max_batch = cfg.max_batch.max(1);
+            let page_tokens = cfg.page_tokens.max(1);
+            let pool: Option<SharedKvPool> = if cfg.paged {
+                let pages = if cfg.kv_pages > 0 {
+                    cfg.kv_pages
+                } else {
+                    max_batch * model.cfg.max_seq.div_ceil(page_tokens)
+                };
+                Some(KvPool::shared(
+                    model.cfg.n_layers,
+                    model.cfg.d_model,
+                    pages,
+                    page_tokens,
+                ))
+            } else {
+                None
+            };
+            let reserve_tokens = cfg.reserve_tokens;
+            let admit_timeout = cfg.admit_timeout;
             threads.push(std::thread::spawn(move || {
                 let mut active: Vec<ActiveSeq> = Vec::new();
                 let mut slots: Vec<Slot> = Vec::new();
+                let mut waiting: VecDeque<Pending<Job>> = VecDeque::new();
                 loop {
-                    // On stop: admit nothing more, but run the already
-                    // admitted sequences to completion so every accepted
-                    // request gets its response (the old worker-pool path
-                    // guaranteed this via pool.wait_idle()).
+                    // On stop: admit nothing more (waiting jobs are shed
+                    // with "overloaded"), but run the already admitted
+                    // sequences to completion so every admitted request
+                    // gets its response.
                     let stopping = stop.load(Ordering::SeqCst);
-                    if active.is_empty() {
-                        if stopping {
+                    if stopping {
+                        for p in waiting.drain(..) {
+                            shed(p, &metrics, "overloaded: shutting down");
+                        }
+                        if active.is_empty() {
                             break;
                         }
+                    } else if active.is_empty() && waiting.is_empty() {
                         // Idle: park on the batcher until work (or close).
                         let Some(batch) = batcher.next_batch() else {
                             break;
                         };
-                        for p in batch {
-                            admit(&model, p, &mut active, &mut slots);
-                        }
-                    } else if !stopping && active.len() < max_batch {
-                        // Token boundary: top up the running batch without
-                        // blocking the in-flight sequences.
-                        for p in batcher.poll(max_batch - active.len()) {
-                            admit(&model, p, &mut active, &mut slots);
+                        waiting.extend(batch);
+                    } else {
+                        // Token boundary: top up without blocking the
+                        // in-flight sequences. The batcher's bounded queue
+                        // (overflow → immediate "overloaded") backstops
+                        // the admission queue, which stays ≤ max_batch.
+                        let room = max_batch.saturating_sub(active.len() + waiting.len());
+                        if room > 0 {
+                            waiting.extend(batcher.poll(room));
                         }
                     }
+
+                    // Admission: FIFO from the waiting queue. A request
+                    // the pool cannot cover blocks the queue head (no
+                    // overtaking) until pages free up or its admission
+                    // timeout sheds it.
+                    while !stopping && active.len() < max_batch && !waiting.is_empty() {
+                        let p = waiting.pop_front().expect("non-empty queue");
+                        match admit(&model, pool.as_ref(), reserve_tokens, p) {
+                            Admit::Taken(seq, slot) => {
+                                active.push(seq);
+                                slots.push(slot);
+                            }
+                            Admit::Answered => {}
+                            Admit::Blocked(p) => {
+                                if p.enqueued.elapsed() >= admit_timeout {
+                                    shed(p, &metrics, "overloaded");
+                                } else {
+                                    waiting.push_front(p);
+                                }
+                                break;
+                            }
+                        }
+                    }
+                    if active.is_empty() {
+                        if !waiting.is_empty() {
+                            // Head blocked with nothing running: wait for
+                            // its shed timeout without spinning hot.
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        continue;
+                    }
+
                     let fp;
                     let lin: &dyn LinearOps = match &*qlin {
                         Some(q) => q,
@@ -178,10 +270,27 @@ impl Server {
                             &fp
                         }
                     };
-                    let stepped = step_batch(&model, lin, &mut active);
-                    metrics.record_batch(stepped);
+                    let t0 = Instant::now();
+                    let report = step_batch(&model, lin, &mut active);
+                    metrics.record_batch(report.stepped);
+                    if report.stepped > 0 {
+                        // One step = one inter-token interval for every
+                        // sequence it advanced.
+                        metrics.record_token_latency(t0.elapsed().as_secs_f64());
+                    }
+                    if let Some(pool) = &pool {
+                        metrics.record_pool(&pool.lock().unwrap().snapshot());
+                    }
+                    if report.stepped == 0 && report.stalled > 0 {
+                        // Every live sequence is stalled on the exhausted
+                        // pool: no step will ever free pages. Shed the
+                        // youngest stalled sequence (least work lost) so
+                        // the rest can make progress.
+                        drop_youngest_stalled(&mut active, &mut slots, &metrics);
+                    }
                     let mut i = 0;
                     while i < active.len() {
+                        flush_stream(&mut slots[i], &active[i], &metrics);
                         if active[i].done {
                             let seq = active.swap_remove(i);
                             let slot = slots.swap_remove(i);
@@ -259,7 +368,7 @@ fn handle_connection(
         }
         metrics.requests.fetch_add(1, Ordering::Relaxed);
         let parsed = parse_request(&line);
-        let (prompt, params, req_id) = match parsed {
+        let (prompt, params, req_id, stream_resp) = match parsed {
             Ok(v) => v,
             Err(e) => {
                 let _ = respond_err(&stream, 0, &e.to_string());
@@ -273,6 +382,7 @@ fn handle_connection(
         let job = Job {
             prompt,
             params,
+            stream: stream_resp,
             resp: Mutex::new(Some(out)),
             received: Instant::now(),
         };
@@ -286,7 +396,7 @@ fn handle_connection(
     }
 }
 
-fn parse_request(line: &str) -> crate::Result<(Vec<u32>, GenParams, u64)> {
+fn parse_request(line: &str) -> crate::Result<(Vec<u32>, GenParams, u64, bool)> {
     let j = Json::parse(line)?;
     let prompt: Vec<u32> = j
         .req("prompt")?
@@ -303,7 +413,8 @@ fn parse_request(line: &str) -> crate::Result<(Vec<u32>, GenParams, u64)> {
         stop_token: None,
     };
     let id = j.get("id").and_then(|x| x.as_u64()).unwrap_or(0);
-    Ok((prompt, params, id))
+    let stream = j.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
+    Ok((prompt, params, id, stream))
 }
 
 /// Response bookkeeping for one in-flight sequence (same index as its
@@ -312,29 +423,128 @@ struct Slot {
     id: u64,
     resp: Mutex<Option<TcpStream>>,
     received: Instant,
+    /// Client asked for per-token frames.
+    stream: bool,
+    /// Generated tokens already pushed as stream frames.
+    sent: usize,
 }
 
-/// Admit one queued request into the running batch (invalid requests are
-/// answered immediately instead of joining).
+/// Outcome of trying to admit the waiting-queue head.
+enum Admit {
+    /// Joined the batch.
+    Taken(ActiveSeq, Slot),
+    /// Answered immediately (invalid request); gone from the queue.
+    Answered,
+    /// The pool cannot cover prompt + reservation yet; handed back.
+    Blocked(Pending<Job>),
+}
+
+/// Admission control: move one queued request into the running batch if
+/// the KV pool can cover its prompt plus `reserve_tokens` of decode
+/// margin (contiguous mode admits unconditionally — every cache
+/// preallocates `max_seq` rows).
 fn admit(
     model: &Transformer,
-    p: super::batcher::Pending<Job>,
-    active: &mut Vec<ActiveSeq>,
-    slots: &mut Vec<Slot>,
-) {
-    let job = p.payload;
-    if job.prompt.len() > model.cfg.max_seq {
-        if let Some(s) = job.resp.lock().unwrap().take() {
+    pool: Option<&SharedKvPool>,
+    reserve_tokens: usize,
+    p: Pending<Job>,
+) -> Admit {
+    if p.payload.prompt.len() > model.cfg.max_seq {
+        if let Some(s) = p.payload.resp.lock().unwrap().take() {
             let _ = respond_err(&s, p.id, "prompt exceeds context");
         }
+        return Admit::Answered;
+    }
+    let cache = match pool {
+        None => model.new_cache(),
+        Some(pool) => {
+            let reserve = p.payload.params.max_tokens.min(reserve_tokens);
+            match pool
+                .lock()
+                .unwrap()
+                .try_admit(&p.payload.prompt, reserve)
+            {
+                Some(table) => KvCache::paged(pool, table),
+                None => return Admit::Blocked(p),
+            }
+        }
+    };
+    let job = p.payload;
+    let seq = ActiveSeq::with_cache(model, &job.prompt, job.params, cache);
+    Admit::Taken(
+        seq,
+        Slot {
+            id: p.id,
+            resp: job.resp,
+            received: job.received,
+            stream: job.stream,
+            sent: 0,
+        },
+    )
+}
+
+/// Refuse a queued request with a protocol-level error.
+fn shed(p: Pending<Job>, metrics: &Metrics, msg: &str) {
+    metrics.shed.fetch_add(1, Ordering::Relaxed);
+    if let Some(s) = p.payload.resp.lock().unwrap().take() {
+        let _ = respond_err(&s, p.id, msg);
+    }
+}
+
+/// Deadlock breaker: every live sequence is stalled on an exhausted
+/// pool. Drop the youngest stalled sequence (least decode work lost,
+/// FIFO fairness for the old ones) and answer it "overloaded"; its
+/// released pages unblock the rest next step.
+fn drop_youngest_stalled(active: &mut Vec<ActiveSeq>, slots: &mut Vec<Slot>, metrics: &Metrics) {
+    let mut victim: Option<usize> = None;
+    for (i, s) in active.iter().enumerate() {
+        if s.done || !s.stalled {
+            continue;
+        }
+        let younger = match victim {
+            None => true,
+            Some(v) => slots[i].received > slots[v].received,
+        };
+        if younger {
+            victim = Some(i);
+        }
+    }
+    let Some(i) = victim else { return };
+    let _seq = active.swap_remove(i); // dropped: releases its pool pages
+    let slot = slots.swap_remove(i);
+    metrics.shed.fetch_add(1, Ordering::Relaxed);
+    metrics.evicted.fetch_add(1, Ordering::Relaxed);
+    if let Some(s) = slot.resp.lock().unwrap().take() {
+        let _ = respond_err(&s, slot.id, "overloaded: kv pool exhausted");
+    }
+}
+
+/// Push per-token frames for a streaming sequence (no-op otherwise).
+fn flush_stream(slot: &mut Slot, seq: &ActiveSeq, metrics: &Metrics) {
+    if !slot.stream || slot.sent >= seq.tokens.len() {
         return;
     }
-    active.push(ActiveSeq::new(model, &job.prompt, job.params));
-    slots.push(Slot {
-        id: p.id,
-        resp: job.resp,
-        received: job.received,
-    });
+    let dead = {
+        let guard = slot.resp.lock().unwrap();
+        let Some(s) = guard.as_ref() else { return };
+        let mut dead = false;
+        while slot.sent < seq.tokens.len() {
+            let mut o = Json::obj();
+            o.set("id", Json::Num(slot.id as f64));
+            o.set("index", Json::Num(slot.sent as f64));
+            o.set("token", Json::Num(seq.tokens[slot.sent] as f64));
+            if writeln_json(s, &o).is_err() {
+                dead = true; // client gone; stop pushing frames
+                break;
+            }
+            slot.sent += 1;
+            metrics.streamed_tokens.fetch_add(1, Ordering::Relaxed);
+        }
+        dead
+    };
+    if dead {
+        *slot.resp.lock().unwrap() = None;
+    }
 }
 
 /// Respond to a finished sequence and record its serving metrics.
@@ -345,13 +555,18 @@ fn finish_job(slot: Slot, seq: ActiveSeq, metrics: &Metrics) {
         .tokens_out
         .fetch_add(seq.tokens.len() as u64, Ordering::Relaxed);
     metrics.record_latency(latency);
+    let reason = seq.finish.unwrap_or(FinishReason::Length);
     if let Some(s) = slot.resp.lock().unwrap().take() {
         let mut o = Json::obj();
         o.set("id", Json::Num(slot.id as f64));
+        if slot.stream {
+            o.set("done", Json::Bool(true));
+        }
         o.set(
             "tokens",
             Json::Arr(seq.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
         );
+        o.set("finish_reason", Json::Str(reason.as_str().to_string()));
         o.set("latency_ms", Json::Num(latency * 1e3));
         let _ = writeln_json(&s, &o);
     }
@@ -413,6 +628,55 @@ impl Client {
         let latency = j.req_f64("latency_ms")? / 1e3;
         Ok((tokens, latency))
     }
+
+    /// Streaming request: collects per-token frames until the final
+    /// `"done"` frame. Returns (streamed tokens in arrival order, final
+    /// token list, finish reason).
+    pub fn request_stream(
+        &mut self,
+        prompt: &[u32],
+        max_tokens: usize,
+    ) -> crate::Result<(Vec<u32>, Vec<u32>, String)> {
+        let mut o = Json::obj();
+        o.set(
+            "prompt",
+            Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+        );
+        o.set("max_tokens", Json::Num(max_tokens as f64));
+        o.set("stream", Json::Bool(true));
+        let mut line = o.to_string();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes())?;
+        let mut streamed = Vec::new();
+        loop {
+            let mut resp = String::new();
+            self.reader.read_line(&mut resp)?;
+            anyhow::ensure!(!resp.is_empty(), "connection closed mid-stream");
+            let j = Json::parse(&resp)?;
+            if let Some(err) = j.get("error") {
+                anyhow::bail!("server error: {}", err.as_str().unwrap_or("?"));
+            }
+            if j.get("done").and_then(|x| x.as_bool()).unwrap_or(false) {
+                let tokens: Vec<u32> = j
+                    .req("tokens")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_f64().map(|v| v as u32))
+                    .collect();
+                let reason = j
+                    .get("finish_reason")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("?")
+                    .to_string();
+                return Ok((streamed, tokens, reason));
+            }
+            let tok = j.req_f64("token")? as u32;
+            let idx = j.req_f64("index")? as usize;
+            anyhow::ensure!(idx == streamed.len(), "stream frame out of order");
+            streamed.push(tok);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -442,6 +706,27 @@ mod tests {
         let (t2, _) = client.request(&[4, 5], 3).unwrap();
         assert_eq!(t2.len(), 3);
         assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 2);
+        // The paged pool is the default serving path and its gauges moved.
+        let j = server.metrics.summary();
+        assert!(j.req_f64("kv_pages_total").unwrap() > 0.0);
+        assert!(j.req_f64("kv_pages_peak").unwrap() > 0.0);
+        assert!(j.req_f64("p50_tok_s").unwrap() > 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn contiguous_mode_still_serves() {
+        let model = tiny_model();
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            paged: false,
+            ..Default::default()
+        };
+        let mut server = Server::start(model, EngineKind::auto(None), cfg).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let (tokens, _) = client.request(&[1, 2, 3], 5).unwrap();
+        assert_eq!(tokens.len(), 5);
+        assert_eq!(server.metrics.kv_pages_total.load(Ordering::Relaxed), 0);
         server.shutdown();
     }
 
@@ -535,6 +820,84 @@ mod tests {
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("error"), "{line}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn streaming_roundtrip_matches_final_tokens() {
+        let model = tiny_model();
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, EngineKind::auto(None), cfg).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let (streamed, fin, reason) = client.request_stream(&[1, 2, 3], 5).unwrap();
+        assert_eq!(streamed, fin, "per-token frames must replay the answer");
+        assert_eq!(fin.len(), 5);
+        assert_eq!(reason, "length");
+        assert!(server.metrics.streamed_tokens.load(Ordering::Relaxed) >= 5);
+        // Non-streaming requests still work on the same connection.
+        let (tokens, _) = client.request(&[4, 5], 3).unwrap();
+        assert_eq!(tokens.len(), 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn admission_control_sheds_cleanly_when_pool_cannot_fit() {
+        // A pool of 2×4-token pages can never cover prompt 8 + reserve 8,
+        // so the request waits out its admission timeout and is shed with
+        // "overloaded" — no panic, no OOM — while small requests still fit.
+        let model = tiny_model();
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_batch: 2,
+            kv_pages: 2,
+            page_tokens: 4,
+            reserve_tokens: 8,
+            admit_timeout: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, EngineKind::auto(None), cfg).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let big: Vec<u32> = (0..8).map(|i| i as u32).collect();
+        let err = client.request(&big, 8).unwrap_err();
+        assert!(err.to_string().contains("overloaded"), "{err}");
+        assert!(server.metrics.shed.load(Ordering::Relaxed) >= 1);
+        // The server is alive and a pool-sized request is served.
+        let (tokens, _) = client.request(&[1, 2], 2).unwrap();
+        assert_eq!(tokens.len(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn mid_flight_stall_is_shed_not_wedged() {
+        // Zero decode reservation lets a long request through admission,
+        // but it outgrows the 3-page pool mid-flight (prompt 4 + 40-token
+        // budget vs 12 rows). Once every live sequence is stalled the
+        // scheduler drops the youngest stalled one with "overloaded"
+        // instead of wedging the decode loop forever.
+        let model = tiny_model();
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_batch: 2,
+            kv_pages: 3,
+            page_tokens: 4,
+            reserve_tokens: 0,
+            admit_timeout: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, EngineKind::auto(None), cfg).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let err = client.request(&[5, 6, 7, 8], 40).unwrap_err();
+        assert!(err.to_string().contains("overloaded"), "{err}");
+        assert!(server.metrics.evicted.load(Ordering::Relaxed) >= 1);
+        assert!(server.metrics.shed.load(Ordering::Relaxed) >= 1);
+        // The shed sequence's pages were released: the pool serves a
+        // fitting request afterwards.
+        let (tokens, _) = client.request(&[1, 2], 2).unwrap();
+        assert_eq!(tokens.len(), 2);
+        assert_eq!(server.metrics.kv_pages_total.load(Ordering::Relaxed), 3);
         server.shutdown();
     }
 }

@@ -28,7 +28,7 @@
 use crate::linalg::gemm::{sdot, sgemm_bt, sgemm_bt_fused};
 use crate::linalg::{make_transform, Transform};
 use crate::model::quantized::QuantizedModel;
-use crate::model::transformer::{gelu, layernorm_rows, KvCache, Transformer};
+use crate::model::transformer::{attend_cached, gelu, layernorm_rows, KvCache, Transformer};
 use crate::quant::grid::{Codebook, GridMap, VqLut, VQ_GROUP};
 use crate::quant::packed::{CodeLayout, QuantizedLayer};
 use std::sync::Arc;
@@ -584,8 +584,9 @@ pub fn decode_step_with(
     let d = model.cfg.d_model;
     let nh = model.cfg.n_heads;
     let hd = model.cfg.head_dim();
-    let pos = cache.len;
+    let pos = cache.len();
     assert!(pos < model.cfg.max_seq, "context overflow");
+    cache.ensure_append().expect("kv pool exhausted");
 
     let mut x = vec![0.0f32; d];
     {
@@ -597,48 +598,18 @@ pub fn decode_step_with(
     }
     let mut ln = vec![0.0f32; d];
     let mut q = vec![0.0f32; d];
+    let mut krow = vec![0.0f32; d];
+    let mut vrow = vec![0.0f32; d];
     for (bi, blk) in model.blocks.iter().enumerate() {
         layernorm_rows(&x, 1, d, &blk.ln1_g, &blk.ln1_b, &mut ln);
         lin.apply(bi, 0, &ln, &mut q);
-        let bc = &mut cache.blocks[bi];
-        let koff = pos * d;
-        {
-            let (krow, vrow) = (
-                &mut bc.k[koff..koff + d],
-                &mut bc.v[koff..koff + d],
-            );
-            lin.apply(bi, 1, &ln, krow);
-            lin.apply(bi, 2, &ln, vrow);
-        }
-        let kcache = &bc.k;
-        let vcache = &bc.v;
+        lin.apply(bi, 1, &ln, &mut krow);
+        lin.apply(bi, 2, &ln, &mut vrow);
+        cache.write_kv(bi, &krow, &vrow);
         let scale = 1.0 / (hd as f32).sqrt();
         let mut attn = vec![0.0f32; d];
-        let mut scores = vec![0.0f32; pos + 1];
-        for h in 0..nh {
-            let off = h * hd;
-            let qh = &q[off..off + hd];
-            let mut maxs = f32::NEG_INFINITY;
-            for j in 0..=pos {
-                let s = sdot(qh, &kcache[j * d + off..j * d + off + hd]) * scale;
-                scores[j] = s;
-                maxs = maxs.max(s);
-            }
-            let mut denom = 0.0f32;
-            for s in scores[..=pos].iter_mut() {
-                *s = (*s - maxs).exp();
-                denom += *s;
-            }
-            let inv = 1.0 / denom;
-            let out = &mut attn[off..off + hd];
-            for j in 0..=pos {
-                let w = scores[j] * inv;
-                let vj = &vcache[j * d + off..j * d + off + hd];
-                for l in 0..hd {
-                    out[l] += w * vj[l];
-                }
-            }
-        }
+        let mut scores = vec![0.0f32; nh * (pos + 1)];
+        attend_cached(cache, bi, pos + 1, d, nh, hd, &q, scale, &mut scores, &mut attn);
         let mut proj = vec![0.0f32; d];
         lin.apply(bi, 3, &attn, &mut proj);
         for (xi, pi) in x.iter_mut().zip(&proj) {
@@ -657,7 +628,7 @@ pub fn decode_step_with(
             *xi += oi + bi2;
         }
     }
-    cache.len += 1;
+    cache.advance();
     let mut h = vec![0.0f32; d];
     layernorm_rows(&x, 1, d, &model.lnf_g, &model.lnf_b, &mut h);
     let v = model.cfg.vocab;
@@ -695,7 +666,7 @@ pub fn decode_step_batch(
 
     let mut x = vec![0.0f32; bsz * d];
     for (b, (&tok, cache)) in tokens.iter().zip(caches.iter()).enumerate() {
-        let pos = cache.len;
+        let pos = cache.len();
         assert!(pos < model.cfg.max_seq, "context overflow (seq {b})");
         let e = &model.embed[(tok as usize) * d..(tok as usize + 1) * d];
         let p = &model.pos[pos * d..(pos + 1) * d];
@@ -703,6 +674,15 @@ pub fn decode_step_batch(
         for j in 0..d {
             row[j] = e[j] + p[j];
         }
+    }
+    // Reserve every sequence's write slot up front (allocation / COW for
+    // paged caches). The serving scheduler pre-reserves via step_batch
+    // and stalls sequences the pool cannot cover, so this panic is the
+    // "caller skipped admission control" backstop, not a serving path.
+    for (b, cache) in caches.iter_mut().enumerate() {
+        cache
+            .ensure_append()
+            .unwrap_or_else(|e| panic!("kv pool exhausted (seq {b}): {e}"));
     }
 
     let mut ln = vec![0.0f32; bsz * d];
@@ -714,8 +694,8 @@ pub fn decode_step_batch(
     let mut hmid = vec![0.0f32; bsz * dff];
     let mut mlp = vec![0.0f32; bsz * d];
     // One scores buffer sized for the longest sequence in the batch.
-    let max_pos = caches.iter().map(|c| c.len).max().unwrap_or(0);
-    let mut scores = vec![0.0f32; max_pos + 1];
+    let max_pos = caches.iter().map(|c| c.len()).max().unwrap_or(0);
+    let mut scores = vec![0.0f32; nh * (max_pos + 1)];
     for (bi, blk) in model.blocks.iter().enumerate() {
         layernorm_rows(&x, bsz, d, &blk.ln1_g, &blk.ln1_b, &mut ln);
         lin.apply_batch(bi, 0, &ln, bsz, &mut q);
@@ -723,41 +703,24 @@ pub fn decode_step_batch(
         lin.apply_batch(bi, 2, &ln, bsz, &mut vbuf);
         // Scatter K/V rows into each sequence's cache at its own position.
         for (b, cache) in caches.iter_mut().enumerate() {
-            let pos = cache.len;
-            let bc = &mut cache.blocks[bi];
-            bc.k[pos * d..(pos + 1) * d].copy_from_slice(&kbuf[b * d..(b + 1) * d]);
-            bc.v[pos * d..(pos + 1) * d].copy_from_slice(&vbuf[b * d..(b + 1) * d]);
+            cache.write_kv(bi, &kbuf[b * d..(b + 1) * d], &vbuf[b * d..(b + 1) * d]);
         }
         // Attention per sequence (spans differ across the batch).
-        attn.fill(0.0);
         let scale = 1.0 / (hd as f32).sqrt();
         for (b, cache) in caches.iter().enumerate() {
-            let pos = cache.len;
-            let bc = &cache.blocks[bi];
-            for h in 0..nh {
-                let off = h * hd;
-                let qh = &q[b * d + off..b * d + off + hd];
-                let mut maxs = f32::NEG_INFINITY;
-                for j in 0..=pos {
-                    let s = sdot(qh, &bc.k[j * d + off..j * d + off + hd]) * scale;
-                    scores[j] = s;
-                    maxs = maxs.max(s);
-                }
-                let mut denom = 0.0f32;
-                for s in scores[..=pos].iter_mut() {
-                    *s = (*s - maxs).exp();
-                    denom += *s;
-                }
-                let inv = 1.0 / denom;
-                let out = &mut attn[b * d + off..b * d + off + hd];
-                for j in 0..=pos {
-                    let w = scores[j] * inv;
-                    let vj = &bc.v[j * d + off..j * d + off + hd];
-                    for l in 0..hd {
-                        out[l] += w * vj[l];
-                    }
-                }
-            }
+            let n = cache.len() + 1;
+            attend_cached(
+                cache,
+                bi,
+                n,
+                d,
+                nh,
+                hd,
+                &q[b * d..(b + 1) * d],
+                scale,
+                &mut scores[..nh * n],
+                &mut attn[b * d..(b + 1) * d],
+            );
         }
         lin.apply_batch(bi, 3, &attn, bsz, &mut proj);
         for (xi, pi) in x.iter_mut().zip(&proj) {
@@ -781,7 +744,7 @@ pub fn decode_step_batch(
         }
     }
     for cache in caches.iter_mut() {
-        cache.len += 1;
+        cache.advance();
     }
     let mut h = vec![0.0f32; bsz * d];
     layernorm_rows(&x, bsz, d, &model.lnf_g, &model.lnf_b, &mut h);
@@ -796,6 +759,7 @@ mod tests {
     use super::*;
     use crate::linalg::Mat;
     use crate::model::config::ModelConfig;
+    use crate::model::kvpool::KvPool;
     use crate::model::weights::Checkpoint;
     use crate::quant::{quantize_layer, Method, Processing, QuantConfig};
     use crate::util::testkit::random_hessian;
@@ -1035,8 +999,89 @@ mod tests {
         }
         // Cache positions advanced identically.
         for (c1, c2) in single.iter().zip(&batched) {
-            assert_eq!(c1.len, c2.len);
+            assert_eq!(c1.len(), c2.len());
         }
+    }
+
+    #[test]
+    fn paged_batch_decode_is_logit_identical_to_contig() {
+        // Exact-equality pin: the block-table indirection must not change
+        // the float schedule at all. Both arms prefill with identical
+        // batch-1 steps, then take one batched step at batch 1 and at
+        // batch 17 with ragged positions spanning page boundaries.
+        let m = tiny();
+        let lin = FpLinears { model: &m };
+        for bsz in [1usize, 17] {
+            let pool = KvPool::shared(m.cfg.n_layers, m.cfg.d_model, 256, 4);
+            let mut contig: Vec<KvCache> = Vec::new();
+            let mut paged: Vec<KvCache> = Vec::new();
+            for b in 0..bsz {
+                let mut c1 = m.new_cache();
+                let mut c2 = m.new_paged_cache(&pool);
+                for j in 0..=(b % 17) {
+                    let t = ((b * 31 + j * 7) % 256) as u32;
+                    let a = decode_step_with(&m, &lin, &mut c1, t);
+                    let p = decode_step_with(&m, &lin, &mut c2, t);
+                    assert_eq!(a, p, "prefill seq {b} step {j}");
+                }
+                contig.push(c1);
+                paged.push(c2);
+            }
+            let next: Vec<u32> = (0..bsz).map(|b| ((b * 13 + 5) % 256) as u32).collect();
+            let mut r1: Vec<&mut KvCache> = contig.iter_mut().collect();
+            let a = decode_step_batch(&m, &lin, &mut r1, &next);
+            let mut r2: Vec<&mut KvCache> = paged.iter_mut().collect();
+            let p = decode_step_batch(&m, &lin, &mut r2, &next);
+            assert_eq!(a, p, "batched step at bsz {bsz}");
+        }
+    }
+
+    #[test]
+    fn paged_prefix_sharing_and_cow_are_logit_identical() {
+        // Two sequences share a 10-token prompt through the prefix
+        // registry (rows 0..9 shared, last token recomputed), then
+        // diverge; each must stay bit-identical to a contiguous replay.
+        let m = tiny();
+        let lin = FpLinears { model: &m };
+        let prompt: Vec<u32> = (0..10u32).map(|j| j * 11 + 3).collect();
+
+        let pool = KvPool::shared(m.cfg.n_layers, m.cfg.d_model, 64, 16);
+        // Sequence A populates the pool and registers the prompt prefix.
+        let ta = pool.lock().unwrap().try_admit(&prompt, 8).unwrap();
+        let mut ca = KvCache::paged(&pool, ta);
+        let mut last_a = Vec::new();
+        for &t in &prompt {
+            last_a = decode_step_with(&m, &lin, &mut ca, t);
+        }
+
+        // Sequence B admits the same prompt: shares rows 0..9 and COWs
+        // the shared tail page on its first write.
+        let tb = pool.lock().unwrap().try_admit(&prompt, 8).unwrap();
+        let shared = tb.len();
+        assert_eq!(shared, prompt.len() - 1, "max share leaves the last token");
+        let mut cb = KvCache::paged(&pool, tb);
+        let mut last_b = Vec::new();
+        for &t in &prompt[shared..] {
+            last_b = decode_step_with(&m, &lin, &mut cb, t);
+        }
+        assert_eq!(last_a, last_b, "shared-prefix decode of last prompt token");
+
+        // Diverge, and pin each arm to its own contiguous replay.
+        let a1 = decode_step_with(&m, &lin, &mut ca, 100);
+        let b1 = decode_step_with(&m, &lin, &mut cb, 200);
+        let mut ref_a = m.new_cache();
+        let mut ref_b = m.new_cache();
+        for &t in &prompt {
+            decode_step_with(&m, &lin, &mut ref_a, t);
+            decode_step_with(&m, &lin, &mut ref_b, t);
+        }
+        assert_eq!(decode_step_with(&m, &lin, &mut ref_a, 100), a1);
+        assert_eq!(decode_step_with(&m, &lin, &mut ref_b, 200), b1);
+
+        let g = pool.lock().unwrap();
+        assert!(g.stats.prefix_hits >= 1, "B's admit must hit the registry");
+        assert!(g.stats.cow_copies >= 1, "B must COW the shared tail page");
+        assert_eq!(g.stats.prefix_tokens_shared, (prompt.len() - 1) as u64);
     }
 
     #[test]

@@ -25,12 +25,18 @@
 //! plus the `codebook` sweep: scalar-LDLQ vs the E8-style vector
 //! codebook (`vq`) at equal bitrate — proxy loss, bits/weight and decode
 //! ms/token through quantize → save v3 `.qz` → load → decode
-//! (EXPERIMENTS.md §Quality).
+//! (EXPERIMENTS.md §Quality),
 //!
-//! `quip sweep <rho|calib|greedy|batch|transform|quant|codebook>
-//! [--model s0] [--bits 2]`. `batch`, `transform`, `quant` and
-//! `codebook` are artifact-free (synthetic inputs) so they run anywhere,
-//! including CI (`--fast`).
+//! plus the `serve` sweep: contiguous vs paged KV caches through the
+//! continuous-batching loop — KV bytes per active token, tokens/s, the
+//! prefix-sharing hit numbers, and the shed rate of a real server under
+//! synthetic overload of a deliberately tiny pool (EXPERIMENTS.md
+//! §Perf 6).
+//!
+//! `quip sweep <rho|calib|greedy|batch|transform|quant|codebook|serve>
+//! [--model s0] [--bits 2]`. `batch`, `transform`, `quant`, `codebook`
+//! and `serve` are artifact-free (synthetic inputs) so they run
+//! anywhere, including CI (`--fast`).
 
 use super::env::{f2, write_result, Env, TablePrinter};
 use crate::coordinator::pipeline::{quantize_model, PipelineConfig};
@@ -48,9 +54,11 @@ pub fn run_sweep(which: &str, args: &Args) -> crate::Result<()> {
         "transform" => sweep_transform(args),
         "quant" => sweep_quant(args),
         "codebook" => sweep_codebook(args),
+        "serve" => sweep_serve(args),
         other => {
             anyhow::bail!(
-                "unknown sweep '{other}' (rho, calib, greedy, batch, transform, quant, codebook)"
+                "unknown sweep '{other}' (rho, calib, greedy, batch, transform, quant, codebook, \
+                 serve)"
             )
         }
     }
@@ -746,6 +754,210 @@ fn sweep_codebook(args: &Args) -> crate::Result<()> {
         out.set("vq_beats_scalar_at_2", Json::Num((vq <= sc) as u8 as f64));
     }
     write_result("sweep_codebook", &out)?;
+    Ok(())
+}
+
+/// Serving-memory sweep: contiguous vs paged KV caches through the
+/// continuous-batching loop, on fp32 linears (the weight kernel is
+/// irrelevant here — this sweep measures the memory system around it).
+///
+/// Phase 1: requests sharing a one-page "system prompt" prefix, run to
+/// completion in both cache modes — KV bytes per active token (contig
+/// allocates `max_seq` rows per sequence up front; the pool allocates
+/// 16-token pages on demand and shares prefix pages), tokens/s, the
+/// prefix-registry hit numbers, and a greedy-equality self-check (the
+/// paged path must reproduce the contiguous tokens exactly).
+///
+/// Phase 2: a real `Server` over a deliberately tiny pool under
+/// concurrent overload (some requests can never fit) — completed vs
+/// shed counts, clean "overloaded" responses, server alive after.
+/// Artifact-free; `--fast` shrinks request count and token budget.
+fn sweep_serve(args: &Args) -> crate::Result<()> {
+    use crate::coordinator::generate::{step_batch, ActiveSeq, GenParams};
+    use crate::coordinator::server::{Client, EngineKind, Server, ServerConfig};
+    use crate::engine::native::FpLinears;
+    use crate::model::weights::Checkpoint;
+    use crate::model::{KvCache, KvPool, ModelConfig};
+    use std::time::{Duration, Instant};
+
+    let fast = args.flag("fast");
+    let cfg = ModelConfig::by_name(&args.opt_or("model", "s0"))
+        .unwrap_or_else(|_| ModelConfig::sized("s0", 64, 2, 4, 256));
+    let ck = Checkpoint::random(&cfg, 7);
+    let model = Transformer::from_checkpoint(&ck)?;
+    let lin = FpLinears { model: &model };
+    let page_tokens = 16usize;
+    let nseq = if fast { 8 } else { 16 };
+    let max_tokens = if fast { 8 } else { 24 };
+    // One full page of shared "system prompt" so the prefix registry has
+    // a page-boundary key to hit, plus a unique 2-token user tail.
+    let shared_len = page_tokens + 4;
+    let prompts: Vec<Vec<u32>> = (0..nseq)
+        .map(|c| {
+            let mut p: Vec<u32> = (0..shared_len)
+                .map(|i| ((i * 7) % (cfg.vocab - 1) + 1) as u32)
+                .collect();
+            p.push(((c * 31) % (cfg.vocab - 1) + 1) as u32);
+            p.push(((c * 17 + 3) % (cfg.vocab - 1) + 1) as u32);
+            p
+        })
+        .collect();
+    anyhow::ensure!(
+        prompts[0].len() + max_tokens <= cfg.max_seq,
+        "sweep shape exceeds model context"
+    );
+    println!(
+        "serve sweep — {} (d={} L={}), {} requests × {} new tokens, {}-token shared prefix, \
+         page size {page_tokens}\n",
+        cfg.name, cfg.d_model, cfg.n_layers, nseq, max_tokens, shared_len
+    );
+
+    let params = GenParams {
+        max_tokens,
+        ..Default::default()
+    };
+    let row_bytes = cfg.n_layers * 2 * cfg.d_model * 4; // K+V, f32, all layers
+    let mut tp = TablePrinter::new(&[
+        "kv cache", "tok/s", "KV bytes/active tok", "prefix hits", "tokens shared",
+    ]);
+    let mut out = Json::obj();
+    let mut tokens_by_mode: Vec<Vec<Vec<u32>>> = Vec::new();
+    for paged in [false, true] {
+        let pool = KvPool::shared(
+            cfg.n_layers,
+            cfg.d_model,
+            nseq * cfg.max_seq.div_ceil(page_tokens),
+            page_tokens,
+        );
+        let mk = |prompt: &[u32]| -> crate::Result<ActiveSeq> {
+            if paged {
+                let table = pool
+                    .lock()
+                    .unwrap()
+                    .try_admit(prompt, max_tokens)
+                    .ok_or_else(|| anyhow::anyhow!("sweep pool sized to never shed"))?;
+                Ok(ActiveSeq::with_cache(
+                    &model,
+                    prompt,
+                    params.clone(),
+                    KvCache::paged(&pool, table),
+                ))
+            } else {
+                Ok(ActiveSeq::new(&model, prompt, params.clone()))
+            }
+        };
+        let t0 = Instant::now();
+        // First request runs alone — in paged mode its prefill registers
+        // the shared prefix pages the rest then reuse.
+        let mut seqs = vec![mk(&prompts[0])?];
+        while step_batch(&model, &lin, &mut seqs).stepped > 0 {}
+        for p in &prompts[1..] {
+            seqs.push(mk(p)?);
+        }
+        while step_batch(&model, &lin, &mut seqs).stepped > 0 {}
+        let secs = t0.elapsed().as_secs_f64();
+        let toks: usize = seqs.iter().map(|s| s.tokens.len()).sum();
+        let active_rows: usize = seqs.iter().map(|s| s.cache.len()).sum();
+        let tps = toks as f64 / secs.max(1e-9);
+        let snap = pool.lock().unwrap().snapshot();
+        // Contig allocates max_seq rows per live sequence up front; the
+        // pool's footprint is its peak page count.
+        let kv_bytes = if paged {
+            snap.peak_pages * page_tokens * row_bytes
+        } else {
+            nseq * cfg.max_seq * row_bytes
+        };
+        let bytes_per_tok = kv_bytes as f64 / active_rows.max(1) as f64;
+        tp.row(vec![
+            if paged { "paged" } else { "contig" }.to_string(),
+            f2(tps),
+            format!("{bytes_per_tok:.0}"),
+            snap.prefix_hits.to_string(),
+            snap.prefix_tokens_shared.to_string(),
+        ]);
+        let mut o = Json::obj();
+        o.set("tokens_per_s", Json::Num(tps));
+        o.set("kv_bytes_per_active_token", Json::Num(bytes_per_tok));
+        o.set("prefix_hits", Json::Num(snap.prefix_hits as f64));
+        o.set(
+            "prefix_tokens_shared",
+            Json::Num(snap.prefix_tokens_shared as f64),
+        );
+        o.set("peak_pages", Json::Num(snap.peak_pages as f64));
+        out.set(if paged { "paged" } else { "contig" }, o);
+        if paged {
+            anyhow::ensure!(
+                snap.prefix_hits as usize == nseq - 1,
+                "every follow-up request should hit the shared prefix"
+            );
+        }
+        tokens_by_mode.push(seqs.iter().map(|s| s.tokens.clone()).collect());
+    }
+    tp.print();
+    anyhow::ensure!(
+        tokens_by_mode[0] == tokens_by_mode[1],
+        "paged decode diverged from contiguous (greedy tokens differ)"
+    );
+    println!("\ngreedy self-check: paged tokens == contiguous tokens for all requests");
+
+    // Phase 2: synthetic overload against a real server. Half the
+    // requests can never fit the 8-page pool (prompt 28 + reserve 16 >
+    // 32 rows) and must be shed with a clean "overloaded" error; small
+    // requests keep being served throughout.
+    let server_model = std::sync::Arc::new(Transformer::from_checkpoint(&ck)?);
+    let scfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        kv_pages: 8,
+        page_tokens: 4,
+        reserve_tokens: 16,
+        admit_timeout: Duration::from_millis(30),
+        ..Default::default()
+    };
+    let mut server = Server::start(server_model, EngineKind::auto(None), scfg)?;
+    let addr = server.addr;
+    let n_over = if fast { 4 } else { 8 };
+    let handles: Vec<_> = (0..2 * n_over)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let len = if i % 2 == 0 { 4 } else { 28 };
+                let prompt: Vec<u32> = (0..len).map(|j| (j % 30 + 1) as u32).collect();
+                let mut c = Client::connect(&addr)?;
+                c.request(&prompt, 8).map(|(t, _)| t.len())
+            })
+        })
+        .collect();
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for h in handles {
+        match h.join().expect("client thread") {
+            Ok(_) => ok += 1,
+            Err(e) if e.to_string().contains("overloaded") => shed += 1,
+            Err(e) => anyhow::bail!("unexpected serve error under overload: {e}"),
+        }
+    }
+    let shed_rate = shed as f64 / (ok + shed) as f64;
+    let m = server.metrics.summary();
+    println!(
+        "overload: {ok} served, {shed} shed ({:.0}% shed rate), server metrics shed={} \
+         evicted={}",
+        shed_rate * 1e2,
+        m.req_f64("shed")?,
+        m.req_f64("evicted")?
+    );
+    anyhow::ensure!(shed >= 1, "overload phase produced no shed responses");
+    // The server survived the overload and still answers.
+    let mut c = Client::connect(&addr)?;
+    let (t, _) = c.request(&[1, 2], 2)?;
+    anyhow::ensure!(t.len() == 2, "server unhealthy after overload");
+    server.shutdown();
+    let mut o = Json::obj();
+    o.set("served", Json::Num(ok as f64));
+    o.set("shed", Json::Num(shed as f64));
+    o.set("shed_rate", Json::Num(shed_rate));
+    out.set("overload", o);
+
+    write_result("sweep_serve", &out)?;
     Ok(())
 }
 

@@ -182,7 +182,7 @@ pub fn table4(args: &Args) -> crate::Result<()> {
         let mut tok = 1u32;
         let mut n = 0usize;
         while n < tokens {
-            if cache.len >= m.cfg.max_seq {
+            if cache.len() >= m.cfg.max_seq {
                 cache.reset();
             }
             let logits = decode_step_with(&m, lin, &mut cache, tok);

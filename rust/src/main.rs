@@ -6,17 +6,23 @@
 //! quip eval     --model s1 [--qz path.qz]
 //! quip gen      --model s1 [--qz path.qz] --prompt "3,17,9" --max-tokens 32
 //! quip serve    --model s1 [--qz path.qz] [--addr 127.0.0.1:7077]
+//!               [--max-batch 8] [--contig] [--kv-pages N] [--page-tokens 16]
+//!               [--reserve-tokens 32] [--admit-timeout-ms 2000]
+//!               # paged KV pool with prefix sharing + admission control
+//!               # (default); --contig = contiguous per-sequence caches
 //! quip pjrt     --model s0 [--bits 2]          # AOT artifact smoke-run
 //! quip inspect  <file.qz>                      # artifact introspection
 //! quip table    <1|2|3|4|5|6|14|15|16|optq|all> [--fast]
 //! quip figure   <1|2|3|4|5|all> [--fast]
-//! quip sweep    <rho|calib|greedy|batch|transform|quant|codebook> [--fast]
+//! quip sweep    <rho|calib|greedy|batch|transform|quant|codebook|serve> [--fast]
 //!               # batch = serving tokens/sec vs batch size;
 //!               # transform = kron vs hadamard incoherence backends;
 //!               # quant = quantize-throughput stages, scalar vs blocked
 //!               #         (accumulate / factorize / round);
 //!               # codebook = scalar-LDLQ vs E8-style vq at equal bitrate;
-//!               # batch, transform, quant and codebook are artifact-free
+//!               # serve = contig vs paged KV (bytes/token, tok/s,
+//!               #         prefix sharing, shed rate under overload);
+//!               # batch, transform, quant, codebook, serve are artifact-free
 //! quip info
 //! ```
 //!
@@ -203,10 +209,21 @@ fn cmd_serve(args: &Args) -> quip::Result<()> {
     let env = Env::load(args)?;
     let (m, qm) = load_model_pair(args, &env)?;
     let engine = EngineKind::auto(qm);
+    let defaults = ServerConfig::default();
     let cfg = ServerConfig {
         addr: args.opt_or("addr", "127.0.0.1:7077"),
         max_batch: args.opt_usize("max-batch", 8),
-        ..Default::default()
+        // Paged KV pool (default); --contig restores per-sequence
+        // max_seq-sized caches. --kv-pages 0 auto-sizes the pool so an
+        // admitted sequence can never stall mid-flight.
+        paged: !args.flag("contig"),
+        kv_pages: args.opt_usize("kv-pages", 0),
+        page_tokens: args.opt_usize("page-tokens", defaults.page_tokens),
+        reserve_tokens: args.opt_usize("reserve-tokens", defaults.reserve_tokens),
+        admit_timeout: std::time::Duration::from_millis(
+            args.opt_u64("admit-timeout-ms", defaults.admit_timeout.as_millis() as u64),
+        ),
+        ..defaults
     };
     let server = Server::start(Arc::new(m), engine, cfg)?;
     println!("serving on {} — newline-JSON protocol; Ctrl-C to stop", server.addr);

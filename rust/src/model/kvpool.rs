@@ -1,0 +1,678 @@
+//! Paged KV-cache pool: fixed-size pages, per-sequence block tables,
+//! ref-counted copy-on-write prefix sharing, and explicit exhaustion.
+//!
+//! The contiguous [`super::transformer::KvCacheContig`] allocates
+//! `max_seq × d_model` floats per layer per sequence up front, so serving
+//! memory is O(max_seq × sequences) even when most positions are empty.
+//! The pool instead slices one backing allocation into fixed-size pages
+//! of [`DEFAULT_PAGE_TOKENS`] token rows each; a sequence holds a
+//! [`BlockTable`] mapping logical position `j` to page `j / page_tokens`,
+//! slot `j % page_tokens`, and pages are handed out only as tokens are
+//! actually written — KV memory is O(active tokens).
+//!
+//! # Layout
+//!
+//! Per transformer layer the pool owns one flat `pages × page_tokens × d`
+//! K buffer and one V buffer; token row `j` of a sequence whose table
+//! maps `j` to page `p` lives at `(p · page_tokens + j % page_tokens) · d`.
+//! A page therefore spans the *same* page index in every layer — pages
+//! are allocated and freed for all layers at once, which keeps the block
+//! table per sequence rather than per (sequence, layer).
+//!
+//! # Sharing and copy-on-write
+//!
+//! Pages are ref-counted. A prefix registry maps a chain hash of the
+//! first `p` prompt tokens to the page holding rows `⌊(p−1)/P⌋·P ..= p−1`;
+//! admission ([`KvPool::try_admit`]) walks the registry to find the
+//! longest registered prefix of a new prompt and builds a table that
+//! references those pages directly (refcount bump, zero copies). Shared
+//! pages are marked not-owned in the table; the first append into a
+//! not-owned partial page copies the rows below the write slot into a
+//! fresh page first (copy-on-write), so divergence never disturbs other
+//! sequences. Full shared pages are never written again and are shared
+//! for the sequence's whole lifetime.
+//!
+//! The registry itself holds one reference per registered page, so prompt
+//! pages survive their owner sequence and act as a prefix cache. When an
+//! allocation would fail, registry-only pages (refcount 1, keys present)
+//! are evicted first; if none remain the pool reports exhaustion as an
+//! explicit `Err` — never an OOM or a panic on the serving path (the
+//! scheduler stalls or sheds the sequence instead).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Default token rows per page. 16 balances internal fragmentation
+/// (≤ 15 wasted rows per sequence tail) against table/COW overhead.
+pub const DEFAULT_PAGE_TOKENS: usize = 16;
+
+/// Shared handle to a pool: the scheduler, every paged cache, and the
+/// metrics snapshotter all hold one. Operations lock per call (the lock
+/// guards table/refcount bookkeeping measured in nanoseconds; the matvec
+/// work between calls dwarfs it).
+pub type SharedKvPool = Arc<Mutex<KvPool>>;
+
+/// Counters describing pool behavior since construction. Read under the
+/// pool lock; [`KvPool::snapshot`] copies them out for the metrics layer.
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    /// Copy-on-write page copies triggered by diverging writes.
+    pub cow_copies: u64,
+    /// Admission attempts that consulted the prefix registry.
+    pub prefix_lookups: u64,
+    /// Admissions that shared at least one token of registered prefix.
+    pub prefix_hits: u64,
+    /// Total prompt tokens served from shared pages instead of recompute.
+    pub prefix_tokens_shared: u64,
+    /// Registry-only pages reclaimed under allocation pressure.
+    pub evictions: u64,
+    /// High-water mark of pages in use.
+    pub peak_pages: usize,
+}
+
+/// Point-in-time copy of pool occupancy + stats for metrics export.
+#[derive(Clone, Debug, Default)]
+pub struct PoolSnapshot {
+    pub pages_used: usize,
+    pub pages_total: usize,
+    pub peak_pages: usize,
+    pub cow_copies: u64,
+    pub prefix_lookups: u64,
+    pub prefix_hits: u64,
+    pub prefix_tokens_shared: u64,
+    pub evictions: u64,
+}
+
+/// One sequence's mapping from logical token positions to pool pages.
+/// `len` counts written rows; position `j < len` lives in
+/// `pages[j / page_tokens]`. `owned[i]` is false while page `i` is a
+/// shared prefix page this sequence must copy before writing into.
+#[derive(Debug, Default)]
+pub struct BlockTable {
+    pages: Vec<u32>,
+    owned: Vec<bool>,
+    len: usize,
+    /// Prefix registrations to fire as prefill crosses each length:
+    /// `(at_len, chain_hash)`, ascending. Computed at admission (the
+    /// prompt is known); fired by [`KvPool::advance`].
+    pending: Vec<(usize, u64)>,
+}
+
+impl BlockTable {
+    /// An empty table (no shared prefix, no pending registrations).
+    pub fn new() -> BlockTable {
+        BlockTable::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Pages currently referenced by this table.
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+/// FNV-1a chain over tokens: `hashes[p]` identifies the prefix
+/// `tokens[..p]` (position-dependent via chaining). 64-bit; collisions
+/// are astronomically unlikely at serving scale and at worst share a
+/// wrong prefix whose logits diverge — acceptable for a cache key.
+pub fn prefix_hashes(tokens: &[u32]) -> Vec<u64> {
+    let mut hs = Vec::with_capacity(tokens.len() + 1);
+    let mut h = 0xcbf29ce484222325u64;
+    hs.push(h);
+    for &t in tokens {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100000001b3);
+        hs.push(h);
+    }
+    hs
+}
+
+struct LayerStore {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// The fixed-size page pool backing every paged KV cache of one server.
+pub struct KvPool {
+    n_layers: usize,
+    d: usize,
+    page_tokens: usize,
+    n_pages: usize,
+    layers: Vec<LayerStore>,
+    refcnt: Vec<u32>,
+    free: Vec<u32>,
+    /// chain hash of a prompt prefix → page holding its tail rows.
+    registry: HashMap<u64, u32>,
+    /// page → registry keys pointing at it (registry holds one refcount
+    /// per page with ≥1 key; eviction removes a page's keys together).
+    page_keys: Vec<Vec<u64>>,
+    pub stats: PoolStats,
+}
+
+impl KvPool {
+    pub fn new(n_layers: usize, d: usize, n_pages: usize, page_tokens: usize) -> KvPool {
+        let (n_pages, page_tokens) = (n_pages.max(1), page_tokens.max(1));
+        KvPool {
+            n_layers,
+            d,
+            page_tokens,
+            n_pages,
+            layers: (0..n_layers)
+                .map(|_| LayerStore {
+                    k: vec![0.0; n_pages * page_tokens * d],
+                    v: vec![0.0; n_pages * page_tokens * d],
+                })
+                .collect(),
+            refcnt: vec![0; n_pages],
+            free: (0..n_pages as u32).rev().collect(),
+            registry: HashMap::new(),
+            page_keys: vec![Vec::new(); n_pages],
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn shared(n_layers: usize, d: usize, n_pages: usize, page_tokens: usize) -> SharedKvPool {
+        Arc::new(Mutex::new(KvPool::new(n_layers, d, n_pages, page_tokens)))
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.n_pages
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.n_pages - self.free.len()
+    }
+
+    /// Bytes of K+V storage one page spans across all layers.
+    pub fn page_bytes(&self) -> usize {
+        self.n_layers * 2 * self.page_tokens * self.d * std::mem::size_of::<f32>()
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.pages_in_use() * self.page_bytes()
+    }
+
+    pub fn snapshot(&self) -> PoolSnapshot {
+        PoolSnapshot {
+            pages_used: self.pages_in_use(),
+            pages_total: self.n_pages,
+            peak_pages: self.stats.peak_pages,
+            cow_copies: self.stats.cow_copies,
+            prefix_lookups: self.stats.prefix_lookups,
+            prefix_hits: self.stats.prefix_hits,
+            prefix_tokens_shared: self.stats.prefix_tokens_shared,
+            evictions: self.stats.evictions,
+        }
+    }
+
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Pages whose only reference is the prefix registry (reclaimable).
+    fn evictable_pages(&self) -> usize {
+        (0..self.n_pages)
+            .filter(|&p| self.refcnt[p] == 1 && !self.page_keys[p].is_empty())
+            .count()
+    }
+
+    fn evict_registry(&mut self) -> usize {
+        let mut freed = 0;
+        for p in 0..self.n_pages {
+            if self.refcnt[p] == 1 && !self.page_keys[p].is_empty() {
+                for key in self.page_keys[p].drain(..) {
+                    self.registry.remove(&key);
+                }
+                self.refcnt[p] = 0;
+                self.free.push(p as u32);
+                freed += 1;
+            }
+        }
+        self.stats.evictions += freed as u64;
+        freed
+    }
+
+    fn alloc_page(&mut self) -> crate::Result<u32> {
+        if self.free.is_empty() {
+            self.evict_registry();
+        }
+        match self.free.pop() {
+            Some(p) => {
+                self.refcnt[p as usize] = 1;
+                self.stats.peak_pages = self.stats.peak_pages.max(self.pages_in_use());
+                Ok(p)
+            }
+            None => anyhow::bail!(
+                "kv pool exhausted: all {} pages ({} tokens) in use",
+                self.n_pages,
+                self.n_pages * self.page_tokens
+            ),
+        }
+    }
+
+    /// Walk the prefix registry for the longest registered prefix of
+    /// `prompt` that leaves at least the final token to recompute (the
+    /// admitted sequence needs fresh logits to sample from). Returns the
+    /// shared length and the pages covering it, without mutating anything.
+    fn lookup_prefix(&self, prompt: &[u32]) -> (usize, Vec<u32>) {
+        let pt = self.page_tokens;
+        let max_share = prompt.len().saturating_sub(1);
+        let hs = prefix_hashes(&prompt[..max_share]);
+        let mut pages = Vec::new();
+        let mut shared = 0usize;
+        // Full pages first: each has its own boundary key.
+        let mut k = 1usize;
+        while k * pt <= max_share {
+            match self.registry.get(&hs[k * pt]) {
+                Some(&pg) => {
+                    pages.push(pg);
+                    shared = k * pt;
+                    k += 1;
+                }
+                None => break,
+            }
+        }
+        // Then the longest registered tail into the next page.
+        let hi = max_share.min(shared + pt - 1);
+        let mut p = hi;
+        while p > shared {
+            if let Some(&pg) = self.registry.get(&hs[p]) {
+                pages.push(pg);
+                shared = p;
+                break;
+            }
+            p -= 1;
+        }
+        (shared, pages)
+    }
+
+    /// Admission control: build a block table for `prompt` if the pool
+    /// can cover the prompt plus `reserve` generated tokens (counting
+    /// reclaimable registry pages), sharing the longest registered
+    /// prefix. Returns `None` — with **no** state mutated — when the
+    /// reservation does not fit; the caller queues or sheds the request.
+    pub fn try_admit(&mut self, prompt: &[u32], reserve: usize) -> Option<BlockTable> {
+        let pt = self.page_tokens;
+        let (shared, pages) = self.lookup_prefix(prompt);
+        // New pages this sequence may need: its full footprint, minus the
+        // shared pages, plus one page of slack for the COW of a partially
+        // shared tail page.
+        let total = self.pages_for(prompt.len() + reserve);
+        let cow_slack = usize::from(shared % pt != 0);
+        let needed = (total - pages.len()) + cow_slack;
+        if self.free.len() + self.evictable_pages() < needed {
+            return None;
+        }
+        for &pg in &pages {
+            self.refcnt[pg as usize] += 1;
+        }
+        self.stats.prefix_lookups += 1;
+        if shared > 0 {
+            self.stats.prefix_hits += 1;
+            self.stats.prefix_tokens_shared += shared as u64;
+        }
+        // Register the prefixes this sequence will itself materialize:
+        // every page boundary past the shared prefix, plus the final
+        // partial-page tail — fired by `advance` as prefill crosses them.
+        let max_share = prompt.len().saturating_sub(1);
+        let hs = prefix_hashes(&prompt[..max_share]);
+        let mut pending = Vec::new();
+        let mut b = shared / pt + 1;
+        while b * pt <= max_share {
+            if b * pt > shared {
+                pending.push((b * pt, hs[b * pt]));
+            }
+            b += 1;
+        }
+        if max_share > shared && max_share % pt != 0 {
+            pending.push((max_share, hs[max_share]));
+        }
+        let owned = vec![false; pages.len()];
+        Some(BlockTable {
+            pages,
+            owned,
+            len: shared,
+            pending,
+        })
+    }
+
+    /// Make position `t.len()` writable: allocate the next page at a page
+    /// boundary, or copy-on-write a shared partial page. Errors (pool
+    /// exhausted, even after evicting registry-only pages) leave the
+    /// table untouched so the sequence can retry next step. Idempotent
+    /// until [`advance`](Self::advance): the scheduler pre-reserves
+    /// before building a batch and the decode kernel reserves again.
+    pub fn ensure_append(&mut self, t: &mut BlockTable) -> crate::Result<()> {
+        let pt = self.page_tokens;
+        let slot = t.len % pt;
+        if slot == 0 {
+            if t.pages.len() == t.len / pt + 1 {
+                return Ok(()); // already reserved for this position
+            }
+            debug_assert_eq!(t.pages.len(), t.len / pt, "table/page invariant");
+            let pg = self.alloc_page()?;
+            t.pages.push(pg);
+            t.owned.push(true);
+            return Ok(());
+        }
+        let idx = t.len / pt;
+        let pg = t.pages[idx] as usize;
+        if t.owned[idx] {
+            return Ok(());
+        }
+        if self.refcnt[pg] == 1 {
+            // Sole user and unregistered (registry keys hold a count):
+            // adopt in place, no copy needed.
+            debug_assert!(self.page_keys[pg].is_empty());
+            t.owned[idx] = true;
+            return Ok(());
+        }
+        let fresh = self.alloc_page()?;
+        let d = self.d;
+        for ls in &mut self.layers {
+            let src = pg * pt * d;
+            let dst = fresh as usize * pt * d;
+            let n = slot * d;
+            ls.k.copy_within(src..src + n, dst);
+            ls.v.copy_within(src..src + n, dst);
+        }
+        self.refcnt[pg] -= 1;
+        t.pages[idx] = fresh;
+        t.owned[idx] = true;
+        self.stats.cow_copies += 1;
+        Ok(())
+    }
+
+    /// Write the K/V row of layer `bi` at position `t.len()`. The slot
+    /// must exist ([`ensure_append`](Self::ensure_append) first).
+    pub fn write_kv(&mut self, t: &BlockTable, bi: usize, krow: &[f32], vrow: &[f32]) {
+        let pt = self.page_tokens;
+        let idx = t.len / pt;
+        let slot = t.len % pt;
+        let pg = *t
+            .pages
+            .get(idx)
+            .expect("kv page missing: ensure_append before write_kv") as usize;
+        debug_assert!(t.owned[idx], "write into a shared page (missed COW)");
+        let d = self.d;
+        let off = (pg * pt + slot) * d;
+        let ls = &mut self.layers[bi];
+        ls.k[off..off + d].copy_from_slice(krow);
+        ls.v[off..off + d].copy_from_slice(vrow);
+    }
+
+    /// Commit the row written at `t.len()` (all layers done): advance the
+    /// table and fire any prefix registrations the new length crosses.
+    pub fn advance(&mut self, t: &mut BlockTable) {
+        t.len += 1;
+        while let Some(&(at, key)) = t.pending.first() {
+            if at > t.len {
+                break;
+            }
+            t.pending.remove(0);
+            let idx = (at - 1) / self.page_tokens;
+            let pg = t.pages[idx];
+            if !t.owned[idx] || self.registry.contains_key(&key) {
+                continue;
+            }
+            if self.page_keys[pg as usize].is_empty() {
+                self.refcnt[pg as usize] += 1;
+            }
+            self.registry.insert(key, pg);
+            self.page_keys[pg as usize].push(key);
+        }
+    }
+
+    /// Visit the contiguous K/V runs of layer `bi` covering positions
+    /// `[0, n)` in ascending order: `f(j0, k_slab, v_slab)` where the
+    /// slabs hold `cnt × d` floats for positions `j0 .. j0+cnt`. `n` may
+    /// exceed `t.len()` by one to include a row written but not yet
+    /// advanced past (the decode step attends to the row it just wrote).
+    pub fn for_each_run<F: FnMut(usize, &[f32], &[f32])>(
+        &self,
+        t: &BlockTable,
+        bi: usize,
+        n: usize,
+        mut f: F,
+    ) {
+        let pt = self.page_tokens;
+        let d = self.d;
+        let ls = &self.layers[bi];
+        let mut j0 = 0usize;
+        for &pg in &t.pages {
+            if j0 >= n {
+                break;
+            }
+            let cnt = pt.min(n - j0);
+            let off = pg as usize * pt * d;
+            f(j0, &ls.k[off..off + cnt * d], &ls.v[off..off + cnt * d]);
+            j0 += cnt;
+        }
+        debug_assert!(j0 >= n, "block table covers {j0} < {n} positions");
+    }
+
+    /// Drop every page reference the table holds and reset it. Pages kept
+    /// alive by the prefix registry stay resident (prefix cache) until
+    /// evicted under pressure.
+    pub fn release(&mut self, t: &mut BlockTable) {
+        for &pg in &t.pages {
+            let p = pg as usize;
+            debug_assert!(self.refcnt[p] > 0, "double release of page {p}");
+            self.refcnt[p] -= 1;
+            if self.refcnt[p] == 0 {
+                debug_assert!(self.page_keys[p].is_empty());
+                self.free.push(pg);
+            }
+        }
+        t.pages.clear();
+        t.owned.clear();
+        t.pending.clear();
+        t.len = 0;
+    }
+
+    #[cfg(test)]
+    fn refcount(&self, pg: u32) -> u32 {
+        self.refcnt[pg as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: usize = 4;
+    const L: usize = 2;
+    const PT: usize = 4;
+
+    fn pool(pages: usize) -> KvPool {
+        KvPool::new(L, D, pages, PT)
+    }
+
+    /// Append one synthetic token row (value `val` everywhere) across all
+    /// layers, mirroring a decode step's ensure → write × layers → advance.
+    fn append(p: &mut KvPool, t: &mut BlockTable, val: f32) -> crate::Result<()> {
+        p.ensure_append(t)?;
+        let row = vec![val; D];
+        for bi in 0..L {
+            p.write_kv(t, bi, &row, &row);
+        }
+        p.advance(t);
+        Ok(())
+    }
+
+    fn read_row(p: &KvPool, t: &BlockTable, bi: usize, j: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        p.for_each_run(t, bi, t.len(), |j0, k, _v| {
+            if j >= j0 && (j - j0) * D < k.len() {
+                out = k[(j - j0) * D..(j - j0 + 1) * D].to_vec();
+            }
+        });
+        out
+    }
+
+    #[test]
+    fn pages_allocate_lazily_and_release() {
+        let mut p = pool(8);
+        let mut t = BlockTable::new();
+        assert_eq!(p.pages_in_use(), 0);
+        for i in 0..6 {
+            append(&mut p, &mut t, i as f32).unwrap();
+        }
+        // 6 tokens at 4/page → 2 pages, not a max_seq-sized slab.
+        assert_eq!(p.pages_in_use(), 2);
+        assert_eq!(t.n_pages(), 2);
+        assert_eq!(p.bytes_in_use(), 2 * p.page_bytes());
+        p.release(&mut t);
+        assert_eq!(p.pages_in_use(), 0);
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn memory_scales_with_active_tokens_not_capacity() {
+        // 4 sequences of 6 tokens in a 64-page pool use 8 pages — the
+        // O(active tokens) guarantee, independent of pool capacity.
+        let mut p = pool(64);
+        let mut tables: Vec<BlockTable> = (0..4).map(|_| BlockTable::new()).collect();
+        for t in tables.iter_mut() {
+            for i in 0..6 {
+                append(&mut p, t, i as f32).unwrap();
+            }
+        }
+        assert_eq!(p.pages_in_use(), 4 * 2);
+        assert_eq!(p.stats.peak_pages, 8);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_panic() {
+        let mut p = pool(2);
+        let mut t = BlockTable::new();
+        for i in 0..(2 * PT) {
+            append(&mut p, &mut t, i as f32).unwrap();
+        }
+        let err = p.ensure_append(&mut t).unwrap_err();
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        // The failed append left the table coherent; release still works.
+        p.release(&mut t);
+        assert_eq!(p.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn prefix_sharing_bumps_refcounts_and_stats() {
+        let mut p = pool(16);
+        // Owner prefills a 7-token prompt: registrable prefix is 6 tokens
+        // (the final token is always recomputed) → keys at 4 and 6.
+        let prompt: Vec<u32> = (10..17).collect();
+        let mut a = p.try_admit(&prompt, 0).unwrap();
+        assert_eq!(a.len(), 0, "empty registry: nothing shared");
+        for (i, _) in prompt.iter().enumerate() {
+            append(&mut p, &mut a, i as f32).unwrap();
+        }
+        // Second admission of the same prompt shares 6 of 7 tokens.
+        let b = p.try_admit(&prompt, 0).unwrap();
+        assert_eq!(b.len(), 6);
+        assert_eq!(b.n_pages(), 2);
+        // Page 0 (full) and page 1 (tail): owner + registry + sharer.
+        assert_eq!(p.refcount(b.pages[0]), 3);
+        assert_eq!(p.refcount(b.pages[1]), 3);
+        assert_eq!(p.stats.prefix_hits, 1);
+        assert_eq!(p.stats.prefix_lookups, 2);
+        assert_eq!(p.stats.prefix_tokens_shared, 6);
+    }
+
+    #[test]
+    fn cow_copies_shared_tail_and_diverges() {
+        let mut p = pool(16);
+        let prompt: Vec<u32> = (10..17).collect();
+        let mut a = p.try_admit(&prompt, 0).unwrap();
+        for (i, _) in prompt.iter().enumerate() {
+            append(&mut p, &mut a, i as f32).unwrap();
+        }
+        let mut b = p.try_admit(&prompt, 0).unwrap();
+        let shared_tail = b.pages[1];
+        // B writes its 7th token (slot 2 of the shared tail page): COW.
+        append(&mut p, &mut b, 99.0).unwrap();
+        assert_eq!(p.stats.cow_copies, 1);
+        assert_ne!(b.pages[1], shared_tail, "tail page was copied");
+        assert_eq!(p.refcount(shared_tail), 2, "owner + registry remain");
+        assert_eq!(p.refcount(b.pages[1]), 1);
+        // Rows below the divergence point were carried over …
+        assert_eq!(read_row(&p, &b, 0, 4), vec![4.0; D]);
+        assert_eq!(read_row(&p, &b, 1, 5), vec![5.0; D]);
+        // … the diverged row is B's own, and A is undisturbed.
+        assert_eq!(read_row(&p, &b, 0, 6), vec![99.0; D]);
+        assert_eq!(read_row(&p, &a, 0, 6), vec![6.0; D]);
+    }
+
+    #[test]
+    fn full_shared_pages_are_never_copied() {
+        let mut p = pool(16);
+        // 9-token prompt: max_share 8 = two full pages, both registered.
+        let prompt: Vec<u32> = (0..9).collect();
+        let mut a = p.try_admit(&prompt, 0).unwrap();
+        for (i, _) in prompt.iter().enumerate() {
+            append(&mut p, &mut a, i as f32).unwrap();
+        }
+        let mut b = p.try_admit(&prompt, 0).unwrap();
+        assert_eq!(b.len(), 8);
+        append(&mut p, &mut b, 50.0).unwrap(); // slot 0 of a new page
+        assert_eq!(p.stats.cow_copies, 0);
+        assert_eq!(b.n_pages(), 3);
+    }
+
+    #[test]
+    fn registry_pages_survive_release_and_evict_under_pressure() {
+        let mut p = pool(4);
+        let prompt: Vec<u32> = (0..9).collect();
+        let mut a = p.try_admit(&prompt, 0).unwrap();
+        for (i, _) in prompt.iter().enumerate() {
+            append(&mut p, &mut a, i as f32).unwrap();
+        }
+        p.release(&mut a);
+        // The two registered prompt pages stay resident as prefix cache.
+        assert_eq!(p.pages_in_use(), 2);
+        // A different prompt needs the whole pool: registry pages evict.
+        let other: Vec<u32> = (100..109).collect();
+        let mut b = p.try_admit(&other, 6).expect("evictable pages count as free");
+        for (i, _) in other.iter().enumerate() {
+            append(&mut p, &mut b, i as f32).unwrap();
+        }
+        assert!(p.stats.evictions >= 1);
+        // The evicted prefix no longer matches.
+        let c = p.try_admit(&prompt, 0);
+        assert!(c.is_none() || c.as_ref().unwrap().len() == 0);
+    }
+
+    #[test]
+    fn try_admit_refuses_without_mutating() {
+        let mut p = pool(2);
+        let prompt: Vec<u32> = (0..12).collect(); // needs 3 pages
+        assert!(p.try_admit(&prompt, 0).is_none());
+        assert_eq!(p.pages_in_use(), 0);
+        assert_eq!(p.stats.prefix_lookups, 0);
+        // Reservation margin counts too: 8 prompt tokens fit in 2 pages,
+        // but asking to reserve another page's worth does not.
+        let short: Vec<u32> = (0..8).collect();
+        assert!(p.try_admit(&short, PT).is_none());
+        assert!(p.try_admit(&short, 0).is_some());
+    }
+
+    #[test]
+    fn prefix_hash_is_position_dependent() {
+        let a = prefix_hashes(&[1, 2, 3]);
+        let b = prefix_hashes(&[2, 1, 3]);
+        assert_eq!(a[0], b[0]);
+        assert_ne!(a[2], b[2]);
+        assert_ne!(a[3], b[3]);
+    }
+}

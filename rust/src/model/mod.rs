@@ -7,9 +7,11 @@
 pub mod config;
 pub mod weights;
 pub mod transformer;
+pub mod kvpool;
 pub mod quantized;
 pub mod lm;
 
 pub use config::{LinearSpec, ModelConfig};
-pub use transformer::{KvCache, Transformer};
+pub use kvpool::{BlockTable, KvPool, SharedKvPool, DEFAULT_PAGE_TOKENS};
+pub use transformer::{KvCache, KvCacheContig, Transformer};
 pub use weights::Checkpoint;

@@ -11,8 +11,18 @@
 //!   activation capture (feeds Hessian collection);
 //! * [`Transformer::decode_step`] — single-token step against a
 //!   [`KvCache`] (the serving hot path of the native engine).
+//!
+//! [`KvCache`] comes in two layouts behind one enum: the contiguous
+//! [`KvCacheContig`] (one `max_seq × d` slab per layer) and the paged
+//! [`KvCachePaged`] (block table over a shared pool — see
+//! [`super::kvpool`]). Every decode path reads and writes K/V through
+//! the cache API ([`KvCache::write_kv`] / [`KvCache::for_each_run`]) and
+//! runs attention through one shared helper ([`attend_cached`]), so the
+//! two layouts are logit-identical by construction — pinned by tests
+//! here and in `engine::native`.
 
 use super::config::ModelConfig;
+use super::kvpool::{BlockTable, SharedKvPool};
 use super::weights::Checkpoint;
 use crate::linalg::gemm::{sgemm_bt, sdot};
 
@@ -252,12 +262,16 @@ impl Transformer {
     }
 
     /// Next-token logits for a single appended token, using cached K/V.
+    /// Panics on pool exhaustion for paged caches — the batched serving
+    /// path ([`crate::coordinator::generate::step_batch`]) pre-reserves
+    /// the slot and stalls the sequence instead.
     pub fn decode_step(&self, cache: &mut KvCache, token: u32) -> Vec<f32> {
         let d = self.cfg.d_model;
         let nh = self.cfg.n_heads;
         let hd = self.cfg.head_dim();
-        let pos = cache.len;
+        let pos = cache.len();
         assert!(pos < self.cfg.max_seq, "context overflow");
+        cache.ensure_append().expect("kv pool exhausted");
 
         let mut x = vec![0.0f32; d];
         {
@@ -269,51 +283,20 @@ impl Transformer {
         }
         let mut ln = vec![0.0f32; d];
         let mut q = vec![0.0f32; d];
+        let mut krow = vec![0.0f32; d];
+        let mut vrow = vec![0.0f32; d];
         for (bi, blk) in self.blocks.iter().enumerate() {
             layernorm_rows(&x, 1, d, &blk.ln1_g, &blk.ln1_b, &mut ln);
             // q/k/v for this position
             matvec_bt(&blk.wq, &ln, &mut q, d, d);
-            let blk_cache = &mut cache.blocks[bi];
-            let kcache = &mut blk_cache.k;
-            let vcache = &mut blk_cache.v;
-            let koff = pos * d;
-            {
-                let krow = &mut kcache[koff..koff + d];
-                matvec_bt_into(&blk.wk, &ln, krow, d, d);
-            }
-            {
-                let vrow = &mut vcache[koff..koff + d];
-                matvec_bt_into(&blk.wv, &ln, vrow, d, d);
-            }
-            // attention against cache
+            matvec_bt(&blk.wk, &ln, &mut krow, d, d);
+            matvec_bt(&blk.wv, &ln, &mut vrow, d, d);
+            cache.write_kv(bi, &krow, &vrow);
+            // attention against cache (including the row just written)
             let scale = 1.0 / (hd as f32).sqrt();
             let mut attn = vec![0.0f32; d];
-            let mut scores = vec![0.0f32; pos + 1];
-            for h in 0..nh {
-                let off = h * hd;
-                let qh = &q[off..off + hd];
-                let mut maxs = f32::NEG_INFINITY;
-                for j in 0..=pos {
-                    let kj = &kcache[j * d + off..j * d + off + hd];
-                    let s = sdot(qh, kj) * scale;
-                    scores[j] = s;
-                    maxs = maxs.max(s);
-                }
-                let mut denom = 0.0f32;
-                for s in scores[..=pos].iter_mut() {
-                    *s = (*s - maxs).exp();
-                    denom += *s;
-                }
-                let inv = 1.0 / denom;
-                let out = &mut attn[off..off + hd];
-                for j in 0..=pos {
-                    let w = scores[j] * inv;
-                    let vj = &vcache[j * d + off..j * d + off + hd];
-                    for l in 0..hd {
-                        out[l] += w * vj[l];
-                    }
-                }
-            }
+            let mut scores = vec![0.0f32; nh * (pos + 1)];
+            attend_cached(cache, bi, pos + 1, d, nh, hd, &q, scale, &mut scores, &mut attn);
             let mut proj = vec![0.0f32; d];
             matvec_bt(&blk.wo, &attn, &mut proj, d, d);
             for (xi, pi) in x.iter_mut().zip(&proj) {
@@ -333,7 +316,7 @@ impl Transformer {
                 *xi += oi + bi2;
             }
         }
-        cache.len += 1;
+        cache.advance();
         let mut h = vec![0.0f32; d];
         layernorm_rows(&x, 1, d, &self.lnf_g, &self.lnf_b, &mut h);
         let v = self.cfg.vocab;
@@ -344,14 +327,33 @@ impl Transformer {
         logits
     }
 
+    /// A contiguous (max_seq-preallocated) cache — the default layout.
     pub fn new_cache(&self) -> KvCache {
         KvCache::new(&self.cfg)
     }
+
+    /// A paged cache over `pool` with no shared prefix. Prefix-sharing
+    /// admission goes through [`super::kvpool::KvPool::try_admit`] +
+    /// [`KvCache::paged`] instead.
+    pub fn new_paged_cache(&self, pool: &SharedKvPool) -> KvCache {
+        KvCache::paged(pool, BlockTable::new())
+    }
 }
 
-/// Per-block K/V cache for incremental decoding.
-pub struct KvCache {
+/// Per-block K/V cache for incremental decoding: one of two layouts
+/// behind a single enum so the decode paths stay layout-agnostic and the
+/// two can be pinned logit-identical against each other.
+pub enum KvCache {
+    Contig(KvCacheContig),
+    Paged(KvCachePaged),
+}
+
+/// The contiguous layout: one `max_seq × d` K slab and V slab per layer,
+/// allocated up front. Simple and indirection-free; memory is
+/// O(max_seq) per sequence regardless of occupancy.
+pub struct KvCacheContig {
     pub len: usize,
+    pub d: usize,
     pub blocks: Vec<KvBlock>,
 }
 
@@ -360,22 +362,194 @@ pub struct KvBlock {
     pub v: Vec<f32>,
 }
 
+/// The paged layout: a block table of fixed-size pages borrowed from a
+/// shared [`super::kvpool::KvPool`]. Memory is O(written tokens); pages
+/// may be shared copy-on-write with other sequences (common prompt
+/// prefixes). Dropping the cache releases its page references.
+pub struct KvCachePaged {
+    pool: SharedKvPool,
+    table: BlockTable,
+}
+
+impl KvCachePaged {
+    /// Pool occupancy attributable to this sequence (pages → bytes is
+    /// `pool.page_bytes()`).
+    pub fn n_pages(&self) -> usize {
+        self.table.n_pages()
+    }
+}
+
+impl Drop for KvCachePaged {
+    fn drop(&mut self) {
+        self.pool.lock().unwrap().release(&mut self.table);
+    }
+}
+
 impl KvCache {
     pub fn new(cfg: &ModelConfig) -> KvCache {
-        KvCache {
+        KvCache::Contig(KvCacheContig {
             len: 0,
+            d: cfg.d_model,
             blocks: (0..cfg.n_layers)
                 .map(|_| KvBlock {
                     k: vec![0.0; cfg.max_seq * cfg.d_model],
                     v: vec![0.0; cfg.max_seq * cfg.d_model],
                 })
                 .collect(),
+        })
+    }
+
+    /// Wrap a block table (fresh, or from `KvPool::try_admit` with a
+    /// shared prefix already counted in `table.len()`).
+    pub fn paged(pool: &SharedKvPool, table: BlockTable) -> KvCache {
+        KvCache::Paged(KvCachePaged {
+            pool: std::sync::Arc::clone(pool),
+            table,
+        })
+    }
+
+    /// Tokens whose K/V rows are committed (the next write position).
+    pub fn len(&self) -> usize {
+        match self {
+            KvCache::Contig(c) => c.len,
+            KvCache::Paged(p) => p.table.len(),
         }
     }
 
-    pub fn reset(&mut self) {
-        self.len = 0;
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
+
+    /// Forget all cached rows. Paged caches return their pages to the
+    /// pool; the handle stays usable for a fresh sequence.
+    pub fn reset(&mut self) {
+        match self {
+            KvCache::Contig(c) => c.len = 0,
+            KvCache::Paged(p) => p.pool.lock().unwrap().release(&mut p.table),
+        }
+    }
+
+    /// Reserve the write slot for position `len()`. Contiguous caches
+    /// always succeed (capacity is preallocated; overflow is the
+    /// caller's `max_seq` assert). Paged caches allocate or
+    /// copy-on-write a page and surface pool exhaustion as `Err` —
+    /// callers either stall the sequence (serving) or propagate.
+    pub fn ensure_append(&mut self) -> crate::Result<()> {
+        match self {
+            KvCache::Contig(_) => Ok(()),
+            KvCache::Paged(p) => p.pool.lock().unwrap().ensure_append(&mut p.table),
+        }
+    }
+
+    /// Write the K/V row of layer `bi` at position `len()` (reserved by
+    /// [`ensure_append`](Self::ensure_append)).
+    pub fn write_kv(&mut self, bi: usize, krow: &[f32], vrow: &[f32]) {
+        match self {
+            KvCache::Contig(c) => {
+                let off = c.len * c.d;
+                let blk = &mut c.blocks[bi];
+                blk.k[off..off + krow.len()].copy_from_slice(krow);
+                blk.v[off..off + vrow.len()].copy_from_slice(vrow);
+            }
+            KvCache::Paged(p) => p.pool.lock().unwrap().write_kv(&p.table, bi, krow, vrow),
+        }
+    }
+
+    /// Commit the row at `len()` once every layer has written it.
+    pub fn advance(&mut self) {
+        match self {
+            KvCache::Contig(c) => c.len += 1,
+            KvCache::Paged(p) => p.pool.lock().unwrap().advance(&mut p.table),
+        }
+    }
+
+    /// Visit the contiguous K/V runs of layer `bi` covering positions
+    /// `[0, n)` in ascending order — one run for the contiguous layout,
+    /// one per page for the paged layout. `n` may exceed `len()` by one
+    /// (the row written this step). Attention iterates positions in the
+    /// same order either way, so results are bit-identical.
+    pub fn for_each_run<F: FnMut(usize, &[f32], &[f32])>(&self, bi: usize, n: usize, mut f: F) {
+        match self {
+            KvCache::Contig(c) => {
+                let blk = &c.blocks[bi];
+                f(0, &blk.k[..n * c.d], &blk.v[..n * c.d]);
+            }
+            KvCache::Paged(p) => {
+                let pool = p.pool.lock().unwrap();
+                pool.for_each_run(&p.table, bi, n, &mut f);
+            }
+        }
+    }
+}
+
+/// Causal attention of one query token against cached K/V rows
+/// `[0, n)` of layer `bi` — the single implementation every decode path
+/// (built-in, generic-linears, batched) and both cache layouts share.
+/// Per head: scores in ascending position order, max-subtracted softmax,
+/// then the weighted V sum in the same order; identical arithmetic
+/// regardless of how the rows are laid out, which is what makes the
+/// paged path logit-identical to the contiguous one.
+///
+/// `q` holds the full d-dim query row; `scores` is `nh × n` scratch;
+/// `attn` (d floats) is zeroed and filled here.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_cached(
+    cache: &KvCache,
+    bi: usize,
+    n: usize,
+    d: usize,
+    nh: usize,
+    hd: usize,
+    q: &[f32],
+    scale: f32,
+    scores: &mut [f32],
+    attn: &mut [f32],
+) {
+    debug_assert!(scores.len() >= nh * n);
+    attn[..d].fill(0.0);
+    cache.for_each_run(bi, n, |j0, kslab, _v| {
+        let rows = kslab.len() / d;
+        for h in 0..nh {
+            let off = h * hd;
+            let qh = &q[off..off + hd];
+            let srow = &mut scores[h * n..(h + 1) * n];
+            for jj in 0..rows {
+                let kj = &kslab[jj * d + off..jj * d + off + hd];
+                srow[j0 + jj] = sdot(qh, kj) * scale;
+            }
+        }
+    });
+    for h in 0..nh {
+        let srow = &mut scores[h * n..(h + 1) * n];
+        let mut maxs = f32::NEG_INFINITY;
+        for &s in srow.iter() {
+            maxs = maxs.max(s);
+        }
+        let mut denom = 0.0f32;
+        for s in srow.iter_mut() {
+            *s = (*s - maxs).exp();
+            denom += *s;
+        }
+        let inv = 1.0 / denom;
+        for s in srow.iter_mut() {
+            *s *= inv;
+        }
+    }
+    cache.for_each_run(bi, n, |j0, _k, vslab| {
+        let rows = vslab.len() / d;
+        for h in 0..nh {
+            let off = h * hd;
+            let srow = &scores[h * n..(h + 1) * n];
+            let out = &mut attn[off..off + hd];
+            for jj in 0..rows {
+                let w = srow[j0 + jj];
+                let vj = &vslab[jj * d + off..jj * d + off + hd];
+                for l in 0..hd {
+                    out[l] += w * vj[l];
+                }
+            }
+        }
+    });
 }
 
 /// y = W x for W stored (out, in) row-major.
@@ -384,10 +558,6 @@ fn matvec_bt(w: &[f32], x: &[f32], y: &mut [f32], out_dim: usize, in_dim: usize)
     for o in 0..out_dim {
         y[o] = sdot(x, &w[o * in_dim..(o + 1) * in_dim]);
     }
-}
-
-fn matvec_bt_into(w: &[f32], x: &[f32], y: &mut [f32], out_dim: usize, in_dim: usize) {
-    matvec_bt(w, x, y, out_dim, in_dim)
 }
 
 /// LayerNorm over the last dim of a (rows × d) buffer.
@@ -464,6 +634,44 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn paged_decode_step_is_logit_identical_to_contig() {
+        // Same tokens through a contiguous cache and a paged cache with a
+        // page size that forces several pages and a partial tail: every
+        // step's logits must be bit-identical, not merely close.
+        let m = tiny();
+        let pool = crate::model::kvpool::KvPool::shared(m.cfg.n_layers, m.cfg.d_model, 32, 4);
+        let mut contig = m.new_cache();
+        let mut paged = m.new_paged_cache(&pool);
+        let tokens = [1u32, 17, 42, 3, 99, 12, 7, 30, 2];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let a = m.decode_step(&mut contig, tok);
+            let b = m.decode_step(&mut paged, tok);
+            assert_eq!(a, b, "step {i}: paged logits diverged");
+            assert_eq!(contig.len(), paged.len());
+        }
+        // 9 tokens at 4 per page → 3 pages, not a max_seq slab.
+        let g = pool.lock().unwrap();
+        assert_eq!(g.pages_in_use(), 3);
+    }
+
+    #[test]
+    fn paged_cache_reset_and_drop_release_pages() {
+        let m = tiny();
+        let pool = crate::model::kvpool::KvPool::shared(m.cfg.n_layers, m.cfg.d_model, 8, 4);
+        {
+            let mut c = m.new_paged_cache(&pool);
+            m.decode_step(&mut c, 5);
+            assert_eq!(pool.lock().unwrap().pages_in_use(), 1);
+            c.reset();
+            assert_eq!(pool.lock().unwrap().pages_in_use(), 0);
+            assert_eq!(c.len(), 0);
+            m.decode_step(&mut c, 6);
+            assert_eq!(pool.lock().unwrap().pages_in_use(), 1);
+        } // drop
+        assert_eq!(pool.lock().unwrap().pages_in_use(), 0);
     }
 
     #[test]
