@@ -1,0 +1,191 @@
+"""Tests for tools/preflight — the toolchain-independent static analyzer.
+
+Each check has at least one firing fixture tree (bad_*) and the shared
+`clean` tree that passes every check; the torture file pins the lexer's
+handling of raw strings, lifetimes-vs-chars, and comments. The analyzer
+is exercised both in-process (fast fixture matrix) and through the CLI
+shim (exit codes, --json) exactly as CI invokes it.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+TOOLS = os.path.join(REPO_ROOT, "tools")
+FIXTURES = os.path.join(TOOLS, "preflight", "fixtures")
+SHIM = os.path.join(TOOLS, "preflight.py")
+
+sys.path.insert(0, TOOLS)
+
+from preflight.checks import ALL_CHECKS, by_name  # noqa: E402
+from preflight.context import Context  # noqa: E402
+from preflight.lexer import lex  # noqa: E402
+
+
+def run_checks(root):
+    """All findings for a fixture tree, in-process."""
+    ctx = Context(root)
+    findings = []
+    for check in ALL_CHECKS:
+        findings.extend(check.run(ctx))
+    return findings
+
+
+def fixture(name):
+    return os.path.join(FIXTURES, name)
+
+
+# --- fixture matrix: every check fires on its bad tree -----------------
+
+BAD_TREES = {
+    # tree -> (check name, expected finding count, substring of a message)
+    "bad_delimiters": ("delimiters", 1, "mismatched delimiter"),
+    "bad_modgraph": ("modgraph", 2, "orphan file"),
+    "bad_items": ("use-resolution", 2, "unresolved import `a::Nope`"),
+    "bad_traits": ("trait-impl", 3, "missing required method `round`"),
+    "bad_structlit": ("struct-lit", 1, "has no field `betta`"),
+    "bad_fmtargs": ("format-args", 1, "2 positional argument(s) but 1"),
+    "bad_determinism": ("determinism", 2, "iterates a hash collection"),
+    "bad_panicpolicy": ("panic-policy", 2, "serving-layer non-test code"),
+    "bad_clippydrift": ("clippy-drift", 1, "clippy::unused_self"),
+}
+
+
+@pytest.mark.parametrize("tree", sorted(BAD_TREES))
+def test_bad_fixture_fires_only_its_check(tree):
+    check_name, count, needle = BAD_TREES[tree]
+    findings = run_checks(fixture(tree))
+    assert findings, f"{tree}: expected findings, got none"
+    names = {f.check for f in findings}
+    assert names == {check_name}, f"{tree}: unexpected checks fired: {names}"
+    assert len(findings) == count
+    assert any(needle in f.message for f in findings), [
+        f.message for f in findings
+    ]
+
+
+def test_every_check_has_a_firing_fixture():
+    covered = {BAD_TREES[t][0] for t in BAD_TREES}
+    assert covered == set(by_name().keys())
+
+
+def test_clean_fixture_passes_every_check():
+    findings = run_checks(fixture("clean"))
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_annotations_suppress_inside_clean_tree():
+    """The clean tree contains a hash-map reduction and an expect() that
+    are only clean because of their allow() annotations — deleting the
+    annotations must make both checks fire."""
+    import shutil
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        shutil.copytree(fixture("clean"), tmp, dirs_exist_ok=True)
+        for rel in ("rust/src/quant/mod.rs", "rust/src/coordinator/mod.rs"):
+            path = os.path.join(tmp, rel)
+            with open(path) as fh:
+                text = fh.read()
+            text = "\n".join(
+                ln for ln in text.splitlines() if "preflight: allow" not in ln
+            )
+            with open(path, "w") as fh:
+                fh.write(text)
+        names = {f.check for f in run_checks(tmp)}
+        assert "determinism" in names
+        assert "panic-policy" in names
+
+
+# --- lexer torture ------------------------------------------------------
+
+
+def torture_lexed():
+    path = os.path.join(FIXTURES, "torture.rs")
+    with open(path, encoding="utf-8") as fh:
+        return lex(fh.read(), path)
+
+
+def test_torture_has_no_lex_errors():
+    assert torture_lexed().errors == []
+
+
+def test_torture_delimiters_balance():
+    toks = torture_lexed().tokens
+    opens = sum(1 for t in toks if t.kind == "punct" and t.value in "([{")
+    closes = sum(1 for t in toks if t.kind == "punct" and t.value in ")]}")
+    assert opens == closes
+
+
+def test_torture_comments_swallow_raw_strings():
+    # the r#"…"# inside a line comment must not become a string token
+    strs = [t.value for t in torture_lexed().tokens if t.kind == "str"]
+    assert not any("inside a line comment" in s for s in strs)
+    # while real raw strings survive intact, fences and all
+    assert any(s.startswith('r##"') and s.endswith('"##') for s in strs)
+
+
+def test_torture_char_vs_lifetime():
+    toks = torture_lexed().tokens
+    chars = {t.value for t in toks if t.kind == "char"}
+    lifetimes = {t.value for t in toks if t.kind == "lifetime"}
+    assert "'a'" in chars  # quoted: char literal
+    assert "'a" in lifetimes  # unquoted: lifetime
+    assert r"'\u{1F600}'" in chars
+    assert r"'\''" in chars
+    assert "b'x'" in chars
+
+
+def test_torture_allow_annotation_collected():
+    lexed = torture_lexed()
+    allows = [a for lst in lexed.allows.values() for a in lst]
+    assert ("panic", "torture annotation collected from comments") in allows
+
+
+# --- CLI shim (what CI runs) -------------------------------------------
+
+
+def run_cli(*argv):
+    return subprocess.run(
+        [sys.executable, SHIM, *argv],
+        capture_output=True,
+        text=True,
+        cwd=REPO_ROOT,
+    )
+
+
+def test_cli_clean_tree_exits_zero():
+    proc = run_cli("--root", fixture("clean"))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_bad_tree_exits_one_with_json():
+    proc = run_cli("--root", fixture("bad_structlit"), "--json")
+    assert proc.returncode == 1
+    findings = json.loads(proc.stdout)
+    assert findings and findings[0]["check"] == "struct-lit"
+    assert findings[0]["path"] == "rust/src/lib.rs"
+
+
+def test_cli_only_filters_checks():
+    # bad_structlit is clean under every check except struct-lit
+    proc = run_cli("--root", fixture("bad_structlit"), "--only", "delimiters")
+    assert proc.returncode == 0
+
+
+def test_cli_unknown_check_is_usage_error():
+    proc = run_cli("--only", "no-such-check")
+    assert proc.returncode == 2
+
+
+def test_repo_tree_is_preflight_clean():
+    """The real tree must stay at zero findings — the same gate CI runs."""
+    proc = run_cli("--json")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert json.loads(proc.stdout) == []

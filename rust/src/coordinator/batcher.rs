@@ -5,6 +5,7 @@
 //! scheduler parks on `next_batch` while idle and tops up its running
 //! batch with the non-blocking `poll` at token boundaries.
 
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -45,7 +46,7 @@ impl<T> Batcher<T> {
 
     /// Enqueue a request; `Err` = queue full (backpressure) or closed.
     pub fn push(&self, id: u64, payload: T) -> Result<(), T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         if g.closed || g.queue.len() >= self.capacity {
             return Err(payload);
         }
@@ -66,7 +67,7 @@ impl<T> Batcher<T> {
     /// `max_batch` — no request waits unboundedly for a full batch — and
     /// `close` flushes whatever is queued immediately.
     pub fn next_batch(&self) -> Option<Vec<Pending<T>>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         loop {
             // Closing flushes the partial batch at once: shutdown must not
             // sit out the remainder of `max_wait`.
@@ -87,14 +88,9 @@ impl<T> Batcher<T> {
                     return Some(drain(&mut g.queue, n));
                 }
                 let remaining = self.max_wait - waited;
-                let (g2, _timeout) = self.cv.wait_timeout(g, remaining).unwrap();
-                g = g2;
+                g = wait_timeout_unpoisoned(&self.cv, g, remaining);
             } else {
-                let (g2, _t) = self
-                    .cv
-                    .wait_timeout(g, Duration::from_millis(50))
-                    .unwrap();
-                g = g2;
+                g = wait_timeout_unpoisoned(&self.cv, g, Duration::from_millis(50));
             }
         }
     }
@@ -104,18 +100,18 @@ impl<T> Batcher<T> {
     /// running decode loop tops up its batch at every token boundary
     /// without ever parking on the queue.
     pub fn poll(&self, max_n: usize) -> Vec<Pending<T>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         let n = g.queue.len().min(max_n);
         drain(&mut g.queue, n)
     }
 
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_unpoisoned(&self.inner).closed = true;
         self.cv.notify_all();
     }
 
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        lock_unpoisoned(&self.inner).queue.len()
     }
 }
 

@@ -227,6 +227,11 @@ pub fn step_batch(model: &Transformer, lin: &dyn LinearOps, seqs: &mut [ActiveSe
             continue;
         }
         s.stalled = false;
+        // Batching invariant: a sequence is only live (!done) while it has
+        // a pending feed token — step_batch refills `feed` with the sampled
+        // token before the next round. A miss here is a scheduler bug, not
+        // a load condition, so it must not be shed silently.
+        // preflight: allow(panic, "batching invariant: live sequences always hold a feed token")
         let t = s.feed.pop_front().expect("live sequence has a token to feed");
         ids.push(i);
         toks.push(t);
@@ -293,7 +298,7 @@ pub fn sample(logits: &[f32], temperature: f64, rng: &mut Rng) -> u32 {
         return logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as u32)
             .unwrap_or(0);
     }

@@ -385,14 +385,14 @@ impl<'a> QuantSession<'a> {
         let weights: Vec<Mat> = block_specs
             .iter()
             .map(|s| {
-                let wdata = self.model.get_weight(&s.name).unwrap();
-                Mat {
+                let wdata = self.model.get_weight(&s.name)?;
+                Ok(Mat {
                     rows: s.out_dim,
                     cols: s.in_dim,
                     data: wdata.iter().map(|&x| x as f64).collect(),
-                }
+                })
             })
-            .collect();
+            .collect::<crate::Result<_>>()?;
         let hessians: Vec<Mat> = block_specs
             .iter()
             .map(|s| hset.finish(&s.hkey))

@@ -31,6 +31,7 @@ use crate::model::quantized::QuantizedModel;
 use crate::model::transformer::KvCache;
 use crate::model::{KvPool, SharedKvPool, Transformer, DEFAULT_PAGE_TOKENS};
 use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -236,7 +237,7 @@ impl Server {
                     // overtaking) until pages free up or its admission
                     // timeout sheds it.
                     while !stopping && active.len() < max_batch && !waiting.is_empty() {
-                        let p = waiting.pop_front().expect("non-empty queue");
+                        let Some(p) = waiting.pop_front() else { break };
                         match admit(&model, pool.as_ref(), reserve_tokens, p) {
                             Admit::Taken(seq, slot) => {
                                 active.push(seq);
@@ -279,7 +280,7 @@ impl Server {
                         metrics.record_token_latency(t0.elapsed().as_secs_f64());
                     }
                     if let Some(pool) = &pool {
-                        metrics.record_pool(&pool.lock().unwrap().snapshot());
+                        metrics.record_pool(&lock_unpoisoned(pool).snapshot());
                     }
                     if report.stepped == 0 && report.stalled > 0 {
                         // Every live sequence is stalled on the exhausted
@@ -389,7 +390,7 @@ fn handle_connection(
         let id = next_id.fetch_add(1, Ordering::Relaxed);
         if let Err(job) = batcher.push(id, job) {
             metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            if let Some(s) = job.resp.lock().unwrap().take() {
+            if let Some(s) = lock_unpoisoned(&job.resp).take() {
                 let _ = respond_err(&s, req_id, "overloaded");
             }
         }
@@ -450,7 +451,7 @@ fn admit(
     p: Pending<Job>,
 ) -> Admit {
     if p.payload.prompt.len() > model.cfg.max_seq {
-        if let Some(s) = p.payload.resp.lock().unwrap().take() {
+        if let Some(s) = lock_unpoisoned(&p.payload.resp).take() {
             let _ = respond_err(&s, p.id, "prompt exceeds context");
         }
         return Admit::Answered;
@@ -459,11 +460,7 @@ fn admit(
         None => model.new_cache(),
         Some(pool) => {
             let reserve = p.payload.params.max_tokens.min(reserve_tokens);
-            match pool
-                .lock()
-                .unwrap()
-                .try_admit(&p.payload.prompt, reserve)
-            {
+            match lock_unpoisoned(pool).try_admit(&p.payload.prompt, reserve) {
                 Some(table) => KvCache::paged(pool, table),
                 None => return Admit::Blocked(p),
             }
@@ -486,7 +483,7 @@ fn admit(
 /// Refuse a queued request with a protocol-level error.
 fn shed(p: Pending<Job>, metrics: &Metrics, msg: &str) {
     metrics.shed.fetch_add(1, Ordering::Relaxed);
-    if let Some(s) = p.payload.resp.lock().unwrap().take() {
+    if let Some(s) = lock_unpoisoned(&p.payload.resp).take() {
         let _ = respond_err(&s, p.id, msg);
     }
 }
@@ -514,7 +511,7 @@ fn drop_youngest_stalled(active: &mut Vec<ActiveSeq>, slots: &mut Vec<Slot>, met
     let slot = slots.swap_remove(i);
     metrics.shed.fetch_add(1, Ordering::Relaxed);
     metrics.evicted.fetch_add(1, Ordering::Relaxed);
-    if let Some(s) = slot.resp.lock().unwrap().take() {
+    if let Some(s) = lock_unpoisoned(&slot.resp).take() {
         let _ = respond_err(&s, slot.id, "overloaded: kv pool exhausted");
     }
 }
@@ -525,7 +522,7 @@ fn flush_stream(slot: &mut Slot, seq: &ActiveSeq, metrics: &Metrics) {
         return;
     }
     let dead = {
-        let guard = slot.resp.lock().unwrap();
+        let guard = lock_unpoisoned(&slot.resp);
         let Some(s) = guard.as_ref() else { return };
         let mut dead = false;
         while slot.sent < seq.tokens.len() {
@@ -543,7 +540,7 @@ fn flush_stream(slot: &mut Slot, seq: &ActiveSeq, metrics: &Metrics) {
         dead
     };
     if dead {
-        *slot.resp.lock().unwrap() = None;
+        *lock_unpoisoned(&slot.resp) = None;
     }
 }
 
@@ -556,7 +553,7 @@ fn finish_job(slot: Slot, seq: ActiveSeq, metrics: &Metrics) {
         .fetch_add(seq.tokens.len() as u64, Ordering::Relaxed);
     metrics.record_latency(latency);
     let reason = seq.finish.unwrap_or(FinishReason::Length);
-    if let Some(s) = slot.resp.lock().unwrap().take() {
+    if let Some(s) = lock_unpoisoned(&slot.resp).take() {
         let mut o = Json::obj();
         o.set("id", Json::Num(slot.id as f64));
         if slot.stream {

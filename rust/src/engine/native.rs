@@ -31,6 +31,7 @@ use crate::model::quantized::QuantizedModel;
 use crate::model::transformer::{attend_cached, gelu, layernorm_rows, KvCache, Transformer};
 use crate::quant::grid::{Codebook, GridMap, VqLut, VQ_GROUP};
 use crate::quant::packed::{CodeLayout, QuantizedLayer};
+use crate::util::sync::lock_unpoisoned;
 use std::sync::Arc;
 
 /// Linear-layer slots within a block, forward order.
@@ -167,9 +168,16 @@ impl QuantLinear {
         let vq = match layer.layout {
             CodeLayout::Scalar => None,
             CodeLayout::Vq { cb_seed } => {
+                // Both expects are re-validation of artifact-load checks:
+                // QuantModel::deserialize rejects vq layers whose bits are
+                // outside E8's supported range, and every E8 codebook is
+                // built with a LUT. Reaching either panic means the
+                // artifact was mutated after validation.
                 let cb = Codebook::e8(layer.bits, cb_seed)
+                    // preflight: allow(panic, "bits re-validated; checked at artifact load")
                     .expect("vq layer bits validated at construction/deserialize");
                 Some(VqState {
+                    // preflight: allow(panic, "e8 codebooks are always built with a LUT")
                     lut: cb.lut_f32().expect("e8 codebooks always have a LUT"),
                     groups_per_row: layer.n.div_ceil(VQ_GROUP),
                     bytes_per_group: layer.bits as usize,
@@ -559,7 +567,7 @@ impl QuantLinears {
 impl LinearOps for QuantLinears {
     fn apply(&self, blk: usize, slot: usize, x: &[f32], y: &mut [f32]) {
         let lin = &self.linears[blk * 6 + slot];
-        lin.apply(x, y, &mut self.scratch.lock().unwrap());
+        lin.apply(x, y, &mut lock_unpoisoned(&self.scratch));
     }
 
     fn name(&self) -> &'static str {
@@ -568,7 +576,7 @@ impl LinearOps for QuantLinears {
 
     fn apply_batch(&self, blk: usize, slot: usize, xs: &[f32], batch: usize, ys: &mut [f32]) {
         let lin = &self.linears[blk * 6 + slot];
-        lin.apply_batch(xs, batch, ys, &mut self.batch_scratch.lock().unwrap());
+        lin.apply_batch(xs, batch, ys, &mut lock_unpoisoned(&self.batch_scratch));
     }
 }
 
@@ -586,6 +594,10 @@ pub fn decode_step_with(
     let hd = model.cfg.head_dim();
     let pos = cache.len();
     assert!(pos < model.cfg.max_seq, "context overflow");
+    // Single-sequence decode has no admission control to shed to; the
+    // batch path (decode_step_batch) is the one servers drive, and its
+    // callers pre-reserve via step_batch.
+    // preflight: allow(panic, "pool-exhaustion backstop; serving path pre-reserves")
     cache.ensure_append().expect("kv pool exhausted");
 
     let mut x = vec![0.0f32; d];
@@ -680,9 +692,8 @@ pub fn decode_step_batch(
     // and stalls sequences the pool cannot cover, so this panic is the
     // "caller skipped admission control" backstop, not a serving path.
     for (b, cache) in caches.iter_mut().enumerate() {
-        cache
-            .ensure_append()
-            .unwrap_or_else(|e| panic!("kv pool exhausted (seq {b}): {e}"));
+        // preflight: allow(panic, "admission-control backstop; step_batch pre-reserves")
+        cache.ensure_append().unwrap_or_else(|e| panic!("kv pool exhausted (seq {b}): {e}"));
     }
 
     let mut ln = vec![0.0f32; bsz * d];

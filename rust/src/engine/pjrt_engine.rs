@@ -173,26 +173,27 @@ fn qparam_input(qm: &QuantizedModel, ispec: &crate::runtime::InputSpec) -> crate
                 layer.post.transform
             );
             if ispec.field.starts_with('v') {
-                kron_input(layer.post.v_seed, n, layer.post.permute, &ispec.field)
+                kron_input(layer.post.v_seed, n, layer.post.permute, &ispec.field)?
             } else {
-                kron_input(layer.post.u_seed, m, layer.post.permute, &ispec.field)
+                kron_input(layer.post.u_seed, m, layer.post.permute, &ispec.field)?
             }
         }
         other => anyhow::bail!("unknown qparam field '{other}'"),
     })
 }
 
-fn kron_input(seed: u64, dim: usize, permute: bool, field: &str) -> Input {
+fn kron_input(seed: u64, dim: usize, permute: bool, field: &str) -> crate::Result<Input> {
     let k = KronOrtho::from_seed_with(seed, dim, permute);
-    match field.chars().last().unwrap() {
-        'L' => Input::F32(
+    Ok(match field.chars().last() {
+        Some('L') => Input::F32(
             k.left.data.iter().map(|&x| x as f32).collect(),
             vec![k.p, k.p],
         ),
-        'R' => Input::F32(
+        Some('R') => Input::F32(
             k.right.data.iter().map(|&x| x as f32).collect(),
             vec![k.q, k.q],
         ),
-        _ => Input::I32(k.perm.iter().map(|&p| p as i32).collect(), vec![dim]),
-    }
+        Some('m') => Input::I32(k.perm.iter().map(|&p| p as i32).collect(), vec![dim]),
+        _ => anyhow::bail!("unknown kron artifact field '{field}'"),
+    })
 }

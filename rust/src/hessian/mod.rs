@@ -14,7 +14,7 @@
 
 use crate::linalg::gemm::{mirror_upper, syrk_acc_upper};
 use crate::linalg::Mat;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Rows per rank-k flush. Fixed (not tunable) so that flush boundaries —
@@ -153,14 +153,19 @@ pub fn accumulate_reference(rows: &[f32], n: usize) -> Mat {
 }
 
 /// A set of accumulators keyed by the model's Hessian-sharing keys.
+///
+/// A `BTreeMap` (not `HashMap`) so any future iteration over the set is
+/// in deterministic key order — the quantization pipeline's outputs must
+/// not depend on hash-seed ordering (see `tools/preflight.py`'s
+/// determinism check). Today the map is keyed-lookup only.
 pub struct HessianSet {
-    pub accums: HashMap<String, HessianAccum>,
+    pub accums: BTreeMap<String, HessianAccum>,
 }
 
 impl HessianSet {
     /// One accumulator per distinct hkey of the model's linear specs.
     pub fn for_model(cfg: &crate::model::ModelConfig) -> HessianSet {
-        let mut accums = HashMap::new();
+        let mut accums = BTreeMap::new();
         for spec in cfg.linear_specs() {
             accums
                 .entry(spec.hkey.clone())

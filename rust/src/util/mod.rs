@@ -5,6 +5,7 @@
 pub mod bytes;
 pub mod crc32;
 pub mod rng;
+pub mod sync;
 pub mod json;
 pub mod cli;
 pub mod threadpool;

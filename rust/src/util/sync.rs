@@ -1,0 +1,60 @@
+//! Poison-tolerant synchronization helpers for the serving path.
+//!
+//! Every mutex in the coordinator/engine layer protects state that stays
+//! structurally valid across a panic (bounded queues, scratch buffers,
+//! response handles, pool tables): a panicking holder never leaves a
+//! half-written invariant behind, it only abandons work. Recovering the
+//! guard and continuing is therefore strictly better for availability
+//! than cascading the poison into every worker thread as a second panic.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// [`Condvar::wait_timeout`] with the same poison recovery as
+/// [`lock_unpoisoned`]. The timeout result is dropped: callers here
+/// re-check their predicate under the lock regardless of why they woke.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, _timeout)) => g,
+        Err(e) => e.into_inner().0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 9;
+        assert_eq!(*lock_unpoisoned(&m), 9);
+    }
+
+    #[test]
+    fn wait_timeout_passes_guard_through() {
+        let m = Mutex::new(1u32);
+        let cv = Condvar::new();
+        let g = lock_unpoisoned(&m);
+        let g = wait_timeout_unpoisoned(&cv, g, Duration::from_millis(1));
+        assert_eq!(*g, 1);
+    }
+}

@@ -1,0 +1,16 @@
+#!/usr/bin/env python3
+"""Entry shim: `python3 tools/preflight.py [--json] [--only …]`.
+
+The analyzer lives in tools/preflight/ (a package); this shim makes the
+documented invocation work from the repo root with no installation.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from preflight.main import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,5 @@
+"""Toolchain-independent preflight static analyzer for the quip Rust tree.
+
+Run via `python3 tools/preflight.py`. See DESIGN.md §8 for the check
+inventory and the annotation grammar.
+"""

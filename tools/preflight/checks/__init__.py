@@ -1,0 +1,34 @@
+"""Check registry. Each check module exports NAME, DESCRIPTION, run(ctx).
+
+`run` returns a list of Finding. Adding a lint = adding a module here and
+listing it in ALL_CHECKS (keep the order stable — output is sorted anyway,
+but --only parsing and docs follow this list).
+"""
+
+from . import (
+    clippydrift,
+    delimiters,
+    determinism,
+    fmtargs,
+    items,
+    modgraph,
+    panicpolicy,
+    structlit,
+    traits,
+)
+
+ALL_CHECKS = [
+    delimiters,
+    modgraph,
+    items,
+    traits,
+    structlit,
+    fmtargs,
+    determinism,
+    panicpolicy,
+    clippydrift,
+]
+
+
+def by_name():
+    return {c.NAME: c for c in ALL_CHECKS}

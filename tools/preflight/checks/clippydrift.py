@@ -1,0 +1,54 @@
+"""`#[allow(clippy::…)]` in source must appear in ci.yml's `-A clippy::…`
+allow-list — one source of truth for style exemptions."""
+
+from ..findings import Finding
+
+NAME = "clippy-drift"
+DESCRIPTION = "in-source #[allow(clippy::…)] must match the ci.yml allow-list"
+
+
+def run(ctx):
+    allowed = ctx.ci_clippy_allows()
+    if allowed is None:
+        return []  # no CI config (e.g. fixture trees) — nothing to drift from
+    findings = []
+    for _crate, rel, lexed in ctx.lexed_files():
+        toks = lexed.tokens
+        for i, t in enumerate(toks):
+            if t.kind != "ident" or t.value != "clippy":
+                continue
+            if not (
+                i + 2 < len(toks)
+                and toks[i + 1].kind == "punct"
+                and toks[i + 1].value == "::"
+                and toks[i + 2].kind == "ident"
+            ):
+                continue
+            # confirm we're inside an allow(...) attribute
+            if i < 2 or toks[i - 1].value != "(" or toks[i - 2].value != "allow":
+                # also handle `clippy::a, clippy::b` lists: scan back over
+                # `name , clippy :: name` repetitions
+                j = i
+                ok = False
+                while j >= 2:
+                    if toks[j - 1].value == "(" and toks[j - 2].value == "allow":
+                        ok = True
+                        break
+                    if toks[j - 1].value == "," and j >= 4 and toks[j - 2].kind == "ident":
+                        j -= 4  # skip back over `clippy :: name ,`
+                        continue
+                    break
+                if not ok:
+                    continue
+            lint = toks[i + 2].value
+            if lint not in allowed:
+                findings.append(
+                    Finding(
+                        NAME,
+                        rel,
+                        t.line,
+                        f"#[allow(clippy::{lint})] is not in the ci.yml clippy "
+                        "allow-list — add it there or drop the attribute",
+                    )
+                )
+    return findings

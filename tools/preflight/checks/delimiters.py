@@ -1,0 +1,45 @@
+"""Per-file delimiter balance ((), [], {}) plus lexer-level errors
+(unterminated strings / block comments)."""
+
+from ..crate import CLOSE, OPEN
+from ..findings import Finding
+
+NAME = "delimiters"
+DESCRIPTION = "per-file (), [], {} balance and unterminated literals"
+
+
+def run(ctx):
+    findings = []
+    for _crate, rel, lexed in ctx.lexed_files(include_vendor=True):
+        for line, msg in lexed.errors:
+            findings.append(Finding(NAME, rel, line, msg))
+        stack = []
+        for tok in lexed.tokens:
+            if tok.kind != "punct":
+                continue
+            if tok.value in OPEN:
+                stack.append(tok)
+            elif tok.value in CLOSE:
+                if not stack:
+                    findings.append(
+                        Finding(NAME, rel, tok.line, f"unmatched closing `{tok.value}`")
+                    )
+                    break
+                top = stack.pop()
+                if OPEN[top.value] != tok.value:
+                    findings.append(
+                        Finding(
+                            NAME,
+                            rel,
+                            tok.line,
+                            f"mismatched delimiter: `{top.value}` opened on "
+                            f"line {top.line} closed by `{tok.value}`",
+                        )
+                    )
+                    break
+        else:
+            for top in stack:
+                findings.append(
+                    Finding(NAME, rel, top.line, f"unclosed `{top.value}`")
+                )
+    return findings

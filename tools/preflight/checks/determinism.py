@@ -1,0 +1,146 @@
+"""Determinism lint: no HashMap/HashSet *iteration* in bit-deterministic
+kernel directories (linalg/, hessian/, quant/).
+
+QuIP's LDLQ proxy objective and the seeded codebook/Hadamard layers are
+only reproducible when reduction and traversal order are fixed; iterating
+a std HashMap visits entries in RandomState order. Keyed lookups are fine.
+Use BTreeMap/BTreeSet (or sort the keys first) — or annotate a deliberate
+order-insensitive traversal with
+`// preflight: allow(nondeterministic-iteration, "why order can't leak")`.
+"""
+
+from ..findings import Finding
+from ..spans import in_spans, test_spans
+from ..context import DETERMINISM_DIRS
+
+NAME = "determinism"
+DESCRIPTION = "no HashMap/HashSet iteration inside bit-deterministic kernel dirs"
+
+HASH_TYPES = ("HashMap", "HashSet")
+ITER_METHODS = {
+    "iter", "iter_mut", "keys", "values", "values_mut", "drain",
+    "into_iter", "into_keys", "into_values", "retain",
+}
+
+
+def run(ctx):
+    findings = []
+    for _crate, rel, lexed in ctx.lexed_files():
+        if not rel.startswith(DETERMINISM_DIRS):
+            continue
+        findings.extend(_scan_file(rel, lexed))
+    return findings
+
+
+def _scan_file(rel, lexed):
+    toks = lexed.tokens
+    n = len(toks)
+    hash_names = set(HASH_TYPES)
+    tracked = set()
+
+    # pass 1: aliases (`use …::HashMap as Lookup`) and hash-typed bindings
+    for i, t in enumerate(toks):
+        if t.kind != "ident":
+            continue
+        if t.value in HASH_TYPES:
+            # `use std::collections::HashMap as H;`
+            if i + 2 < n and toks[i + 1].kind == "ident" and toks[i + 1].value == "as":
+                if toks[i + 2].kind == "ident":
+                    hash_names.add(toks[i + 2].value)
+    for i, t in enumerate(toks):
+        if t.kind != "ident" or t.value not in hash_names:
+            continue
+        # `name : HashMap<…>` — struct field, let-annotation, or fn param
+        if i >= 2 and toks[i - 1].kind == "punct" and toks[i - 1].value == ":":
+            if toks[i - 2].kind == "ident":
+                tracked.add(toks[i - 2].value)
+        # `let [mut] name = HashMap::new()` / `HashMap::with_capacity` / `HashMap::from`
+        if (
+            i + 2 < n
+            and toks[i + 1].kind == "punct"
+            and toks[i + 1].value == "::"
+            and i >= 2
+            and toks[i - 1].kind == "punct"
+            and toks[i - 1].value == "="
+            and toks[i - 2].kind == "ident"
+        ):
+            tracked.add(toks[i - 2].value)
+
+    findings = []
+    spans = test_spans(toks)
+
+    def flag(line, what):
+        if in_spans(spans, line):
+            return
+        if lexed.allowed("nondeterministic-iteration", line):
+            return
+        findings.append(
+            Finding(
+                NAME,
+                rel,
+                line,
+                f"{what} iterates a hash collection in a bit-deterministic "
+                "kernel dir — use BTreeMap/BTreeSet or sorted keys "
+                "(or annotate: // preflight: allow(nondeterministic-iteration, \"…\"))",
+            )
+        )
+
+    for i, t in enumerate(toks):
+        if t.kind != "ident":
+            continue
+        # `x.iter()` / `self.field.keys()` on a tracked binding
+        if (
+            t.value in ITER_METHODS
+            and i >= 2
+            and toks[i - 1].kind == "punct"
+            and toks[i - 1].value == "."
+            and toks[i - 2].kind == "ident"
+            and toks[i - 2].value in tracked
+            and i + 1 < n
+            and toks[i + 1].kind == "punct"
+            and toks[i + 1].value == "("
+        ):
+            flag(t.line, f"`{toks[i - 2].value}.{t.value}()`")
+            continue
+        # `for pat in [&[mut]] x {` / `for (k, v) in &map {`
+        if t.value == "for":
+            j = i + 1
+            hops = 0
+            while j < n and hops < 24:
+                tj = toks[j]
+                if tj.kind == "punct" and tj.value == "{":
+                    break
+                if tj.kind == "ident" and tj.value == "in":
+                    k = j + 1
+                    while k < n and (
+                        (toks[k].kind == "punct" and toks[k].value == "&")
+                        or (toks[k].kind == "ident" and toks[k].value == "mut")
+                    ):
+                        k += 1
+                    # direct loop over the binding itself (`for x in map {`)
+                    if (
+                        k < n
+                        and toks[k].kind == "ident"
+                        and toks[k].value in tracked
+                        and k + 1 < n
+                        and toks[k + 1].kind == "punct"
+                        and toks[k + 1].value == "{"
+                    ):
+                        flag(toks[k].line, f"`for … in {toks[k].value}`")
+                    # loop over `self.field` (`for x in &self.accums {`)
+                    elif (
+                        k + 3 < n
+                        and toks[k].kind == "ident"
+                        and toks[k].value == "self"
+                        and toks[k + 1].kind == "punct"
+                        and toks[k + 1].value == "."
+                        and toks[k + 2].kind == "ident"
+                        and toks[k + 2].value in tracked
+                        and toks[k + 3].kind == "punct"
+                        and toks[k + 3].value == "{"
+                    ):
+                        flag(toks[k].line, f"`for … in self.{toks[k + 2].value}`")
+                    break
+                j += 1
+                hops += 1
+    return findings

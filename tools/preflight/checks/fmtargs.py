@@ -1,0 +1,208 @@
+"""Format-macro placeholder/argument arity.
+
+Counts `{}` placeholders in the literal format string of `format!`-family
+macros and compares against the supplied arguments. Skips anything it
+cannot be certain about: non-literal format strings, `$`-parameterised
+macro bodies, and width/precision `$` references.
+"""
+
+from ..crate import OPEN
+from ..findings import Finding
+
+NAME = "format-args"
+DESCRIPTION = "format!-family placeholder count vs argument count"
+
+# macro name -> index of the format-string argument
+MACROS = {
+    "format": 0,
+    "format_args": 0,
+    "print": 0,
+    "println": 0,
+    "eprint": 0,
+    "eprintln": 0,
+    "panic": 0,
+    "unreachable": 0,
+    "todo": 0,
+    "unimplemented": 0,
+    "anyhow": 0,
+    "bail": 0,
+    "write": 1,
+    "writeln": 1,
+    "assert": 1,
+    "debug_assert": 1,
+    "ensure": 1,
+    "assert_eq": 2,
+    "assert_ne": 2,
+    "debug_assert_eq": 2,
+    "debug_assert_ne": 2,
+}
+
+# macros whose message (and thus format string) is optional
+OPTIONAL_FMT = {
+    "panic", "unreachable", "todo", "unimplemented", "assert", "debug_assert",
+    "ensure", "assert_eq", "assert_ne", "debug_assert_eq", "debug_assert_ne",
+    "write", "writeln", "print", "println", "eprint", "eprintln", "anyhow",
+    "bail", "format", "format_args",
+}
+
+
+def run(ctx):
+    findings = []
+    for _crate, rel, lexed in ctx.lexed_files():
+        findings.extend(_scan_file(rel, lexed))
+    return findings
+
+
+def _scan_file(rel, lexed):
+    findings = []
+    toks = lexed.tokens
+    n = len(toks)
+    i = 0
+    while i < n:
+        t = toks[i]
+        if (
+            t.kind == "ident"
+            and t.value in MACROS
+            and i + 2 < n
+            and toks[i + 1].kind == "punct"
+            and toks[i + 1].value == "!"
+            and toks[i + 2].kind == "punct"
+            and toks[i + 2].value in ("(", "[")
+        ):
+            # not our macro if it's a path tail like `std::panic!` — still
+            # the same macro semantics, so no exclusion needed
+            args, end = _split_args(toks, i + 2)
+            msg = _check_call(t.value, args)
+            if msg is not None:
+                findings.append(Finding(NAME, rel, t.line, msg))
+            i = end
+            continue
+        i += 1
+    return findings
+
+
+def _split_args(toks, i):
+    """toks[i] is the opening delimiter. Split top-level comma-separated
+    argument token lists. Returns (args, index_after_close)."""
+    open_v = toks[i].value
+    close_v = OPEN[open_v]
+    n = len(toks)
+    depth = {"(": 0, "[": 0, "{": 0}
+    args = [[]]
+    j = i + 1
+    while j < n:
+        t = toks[j]
+        if t.kind == "punct":
+            v = t.value
+            if v in OPEN:
+                depth[v] += 1
+            elif v in (")", "]", "}"):
+                inner = {")": "(", "]": "[", "}": "{"}[v]
+                if depth[inner] == 0 and v == close_v:
+                    break
+                depth[inner] -= 1
+            elif v == "," and not any(depth.values()):
+                args.append([])
+                j += 1
+                continue
+        args[-1].append(t)
+        j += 1
+    if args and not args[-1]:
+        args.pop()  # trailing comma
+    return args, j + 1
+
+
+def _is_named_arg(arg):
+    return (
+        len(arg) >= 3
+        and arg[0].kind == "ident"
+        and arg[1].kind == "punct"
+        and arg[1].value == "="
+        and not (arg[2].kind == "punct" and arg[2].value in ("=",))
+    )
+
+
+def _check_call(name, args):
+    fmt_idx = MACROS[name]
+    if len(args) <= fmt_idx:
+        return None  # no message — fine for the optional-fmt macros
+    fmt = args[fmt_idx]
+    if len(fmt) != 1 or fmt[0].kind != "str":
+        return None  # not a plain literal — can't reason about it
+    for arg in args[fmt_idx + 1 :]:
+        if any(t.kind == "punct" and t.value == "$" for t in arg):
+            return None  # macro-definition body
+    parsed = _parse_placeholders(_literal_text(fmt[0].value))
+    if parsed is None:
+        return None
+    implicit, positions, named = parsed
+    required = implicit
+    if positions:
+        required = max(required, max(positions) + 1)
+    rest = args[fmt_idx + 1 :]
+    provided_pos = [a for a in rest if not _is_named_arg(a)]
+    provided_named = {a[0].value for a in rest if _is_named_arg(a)}
+    if len(provided_pos) != required:
+        return (
+            f"{name}! format string consumes {required} positional argument(s) "
+            f"but {len(provided_pos)} provided"
+        )
+    unused = provided_named - named
+    if unused:
+        return (
+            f"{name}! named argument(s) never used by the format string: "
+            f"{', '.join(sorted(unused))}"
+        )
+    return None
+
+
+def _literal_text(raw):
+    """Strip the quotes/prefix off a string-literal token's raw text."""
+    body = raw
+    if body.startswith(("r", "b")):
+        first = body.find('"')
+        # fence length = chars between prefix letters and the quote
+        hashes = body[:first].count("#")
+        return body[first + 1 : len(body) - 1 - hashes]
+    return body[1:-1]
+
+
+def _parse_placeholders(text):
+    """Return (implicit_count, positional_indices, named_set) or None when
+    the string uses constructs we don't model ($ width/precision refs,
+    malformed braces)."""
+    implicit = 0
+    positions = []
+    named = set()
+    i = 0
+    n = len(text)
+    while i < n:
+        c = text[i]
+        if c == "{":
+            if i + 1 < n and text[i + 1] == "{":
+                i += 2
+                continue
+            close = text.find("}", i + 1)
+            if close == -1:
+                return None
+            spec = text[i + 1 : close]
+            arg, _, fmtspec = spec.partition(":")
+            if "$" in fmtspec or "*" in fmtspec:
+                return None  # width/precision taken from the arg list
+            if arg == "":
+                implicit += 1
+            elif arg.isdigit():
+                positions.append(int(arg))
+            elif arg.replace("_", "a").isalnum() and not arg[0].isdigit():
+                named.add(arg)
+            else:
+                return None  # something exotic
+            i = close + 1
+            continue
+        if c == "}":
+            if i + 1 < n and text[i + 1] == "}":
+                i += 2
+                continue
+            return None  # stray closing brace — malformed
+        i += 1
+    return implicit, positions, named

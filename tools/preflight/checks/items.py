@@ -1,0 +1,37 @@
+"""Crate-wide item index checks: resolve every `use crate::…` / `use quip::…`
+path (and `pub use` re-exports) against the indexed item tree; flag
+duplicate definitions in one module."""
+
+from ..findings import Finding
+
+NAME = "use-resolution"
+DESCRIPTION = "use-path / pub-use resolution against the crate item index and duplicate defs"
+
+
+def run(ctx):
+    findings = []
+    for crate in ctx.checked_crates():
+        for module in crate.modules:
+            for name, kind, first, dup in module.duplicates:
+                findings.append(
+                    Finding(
+                        NAME,
+                        module.file,
+                        dup,
+                        f"duplicate definition of `{name}` ({kind}) — first "
+                        f"defined on line {first}",
+                    )
+                )
+            for use in module.uses:
+                res = ctx.resolver.resolve_use(crate, module, use.segments, use.is_glob)
+                if res[0] == "err":
+                    path_str = "::".join(use.segments) + ("::*" if use.is_glob else "")
+                    findings.append(
+                        Finding(
+                            NAME,
+                            module.file,
+                            use.line,
+                            f"unresolved import `{path_str}`: {res[1]}",
+                        )
+                    )
+    return findings

@@ -1,0 +1,24 @@
+"""Module-graph resolution: `mod foo;` must have a matching file, and every
+file under rust/src must be reachable from a crate root (orphan detection)."""
+
+from ..findings import Finding
+
+NAME = "modgraph"
+DESCRIPTION = "mod decl <-> file mapping and orphan-file detection"
+
+
+def run(ctx):
+    findings = []
+    for crate in list(ctx.crates.values()) + ctx.aux_crates:
+        for path, line, msg in crate.graph_findings:
+            findings.append(Finding(NAME, path, line, msg))
+    for rel in ctx.orphans:
+        findings.append(
+            Finding(
+                NAME,
+                rel,
+                1,
+                "orphan file: not reachable from any crate root via `mod` declarations",
+            )
+        )
+    return findings

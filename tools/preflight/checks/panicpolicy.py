@@ -1,0 +1,79 @@
+"""Panic policy for the serving layers (coordinator/, engine/).
+
+A stray `unwrap()` on a request path is an availability bug: one poisoned
+lock or malformed frame takes down the whole continuous-batching server.
+Non-test code in these directories must not call the panic family —
+convert to `anyhow` errors (the crate-wide `quip::Result`) or shed the
+request. Deliberate backstops (e.g. pool-exhaustion after admission
+control already guaranteed capacity) are annotated in place:
+
+    // preflight: allow(panic, "admission control guarantees capacity")
+
+Indexing (`[idx]`) deliberately gets a free pass — the numeric kernels are
+index-heavy by design (see the ci.yml clippy allow rationale).
+"""
+
+from ..findings import Finding
+from ..spans import in_spans, test_spans
+from ..context import PANIC_DIRS
+
+NAME = "panic-policy"
+DESCRIPTION = "no unannotated unwrap/expect/panic family in coordinator/ and engine/ non-test code"
+
+METHOD_CALLS = {"unwrap", "expect"}
+PANIC_MACROS = {"panic", "todo", "unimplemented", "unreachable"}
+
+
+def run(ctx):
+    findings = []
+    for _crate, rel, lexed in ctx.lexed_files():
+        if not rel.startswith(PANIC_DIRS):
+            continue
+        findings.extend(_scan_file(rel, lexed))
+    return findings
+
+
+def _scan_file(rel, lexed):
+    findings = []
+    toks = lexed.tokens
+    n = len(toks)
+    spans = test_spans(toks)
+
+    def flag(line, what):
+        if in_spans(spans, line):
+            return
+        if lexed.allowed("panic", line):
+            return
+        findings.append(
+            Finding(
+                NAME,
+                rel,
+                line,
+                f"{what} in serving-layer non-test code — return an error / "
+                "shed instead, or annotate a deliberate backstop: "
+                '// preflight: allow(panic, "reason")',
+            )
+        )
+
+    for i, t in enumerate(toks):
+        if t.kind != "ident":
+            continue
+        if (
+            t.value in METHOD_CALLS
+            and i >= 1
+            and toks[i - 1].kind == "punct"
+            and toks[i - 1].value == "."
+            and i + 1 < n
+            and toks[i + 1].kind == "punct"
+            and toks[i + 1].value == "("
+        ):
+            flag(t.line, f"`.{t.value}()`")
+            continue
+        if (
+            t.value in PANIC_MACROS
+            and i + 1 < n
+            and toks[i + 1].kind == "punct"
+            and toks[i + 1].value == "!"
+        ):
+            flag(t.line, f"`{t.value}!`")
+    return findings

@@ -1,0 +1,211 @@
+"""Struct-literal / struct-pattern field names vs in-crate struct defs.
+
+Scans expression positions for `Path { field: …, .. }` where `Path`
+resolves to an in-crate struct (or enum variant) with named fields, and
+flags listed field names the definition doesn't have. Conservative by
+construction: unresolvable paths, tuple/unit types, and macro-definition
+bodies (anything containing `$`) are skipped, so a finding is near-certain
+to be a real compile error at first toolchain contact.
+"""
+
+from ..crate import OPEN
+from ..findings import Finding
+
+NAME = "struct-lit"
+DESCRIPTION = "struct literal / pattern field names match in-crate struct definitions"
+
+# a path followed by `{` in these contexts is a type position or block
+# header, not a literal
+_BAD_PREV = {
+    "impl", "for", "dyn", "as", "where", "trait", "struct", "enum", "union",
+    "mod", "fn", "use", "type",
+}
+_BAD_PREV_PUNCT = {"->", "<", "&", "#"}
+
+
+def run(ctx):
+    findings = []
+    for crate, rel, lexed in ctx.lexed_files():
+        module = ctx.primary_module(crate, rel)
+        if module is None:
+            continue
+        findings.extend(_scan_file(ctx, crate, module, rel, lexed))
+    return findings
+
+
+def _scan_file(ctx, crate, module, rel, lexed):
+    findings = []
+    toks = lexed.tokens
+    n = len(toks)
+    i = 0
+    while i < n:
+        t = toks[i]
+        prev = toks[i - 1] if i > 0 else None
+        # only consider path *heads*: not a path tail (`::x`) or method (`  .x`)
+        if t.kind != "ident" or (
+            prev is not None and prev.kind == "punct" and prev.value in ("::", ".")
+        ):
+            i += 1
+            continue
+        segs, j = _read_path(toks, i)
+        if (
+            segs
+            and segs[-1][:1].isupper()
+            and segs[-1] != "Self"
+            and j < n
+            and toks[j].kind == "punct"
+            and toks[j].value == "{"
+            and not _type_position(prev)
+        ):
+            target = _resolve_fields(ctx, crate, module, segs)
+            if target is not None:
+                fields, type_name = target
+                listed, clean, _j_end = _literal_fields(toks, j)
+                if clean:
+                    for fname, fline in listed:
+                        if fname not in fields:
+                            findings.append(
+                                Finding(
+                                    NAME,
+                                    rel,
+                                    fline,
+                                    f"`{type_name}` has no field `{fname}` "
+                                    f"(fields: {', '.join(fields)})",
+                                )
+                            )
+                i = j + 1  # rescan inside the body for nested literals
+                continue
+        i = j if j > i else i + 1
+    return findings
+
+
+def _type_position(prev):
+    if prev is None:
+        return False
+    if prev.kind == "ident" and prev.value in _BAD_PREV:
+        return True
+    if prev.kind == "punct" and prev.value in _BAD_PREV_PUNCT:
+        return True
+    return False
+
+
+def _read_path(toks, i):
+    """Read `A::b::C` starting at ident toks[i]; skip one turbofish.
+    Returns (segments, index_after_path)."""
+    n = len(toks)
+    segs = [toks[i].value]
+    j = i + 1
+    while j + 1 < n and toks[j].kind == "punct" and toks[j].value == "::":
+        nxt = toks[j + 1]
+        if nxt.kind == "ident":
+            segs.append(nxt.value)
+            j += 2
+        elif nxt.kind == "punct" and nxt.value == "<":
+            # turbofish: skip to matching `>`
+            depth = 1
+            k = j + 2
+            while k < n and depth:
+                if toks[k].kind == "punct":
+                    if toks[k].value == "<":
+                        depth += 1
+                    elif toks[k].value == ">":
+                        depth -= 1
+                k += 1
+            j = k
+            break
+        else:
+            break
+    return segs, j
+
+
+def _resolve_fields(ctx, crate, module, segs):
+    """Return (field_list, display_name) if segs names an in-crate struct
+    or enum variant with named fields; else None."""
+    res = ctx.resolver.resolve_path(crate, module, segs)
+    if res is None or res[0] != "ok":
+        return None
+    if res[1] == "struct" and res[2] is not None and res[2].fields is not None:
+        return res[2].fields, res[2].name
+    if res[1] == "variant":
+        edef, vname = res[2]
+        vfields = edef.variants.get(vname)
+        if vfields is not None:
+            return vfields, f"{edef.name}::{vname}"
+    return None
+
+
+def _literal_fields(toks, j):
+    """Parse the literal body starting at `{` toks[j].
+
+    Returns (fields [(name, line)], clean, index_of_closing_brace).
+    `clean` is False when the body contains macro fragments (`$`) or a
+    rest-pattern/update (`..`) — we still return fields seen before the
+    point of uncertainty ... except for `$`, which aborts entirely.
+    """
+    n = len(toks)
+    fields = []
+    k = j + 1
+    while k < n:
+        t = toks[k]
+        if t.kind == "punct" and t.value == "}":
+            return fields, True, k
+        if t.kind == "punct" and t.value == "$":
+            return [], False, k
+        if t.kind == "punct" and t.value in ("..", "..="):
+            # `..base` / rest pattern: everything after is an expression;
+            # skip to the closing brace at this depth
+            depth = 0
+            while k < n:
+                t2 = toks[k]
+                if t2.kind == "punct":
+                    if t2.value in OPEN:
+                        depth += 1
+                    elif t2.value in ("}", ")", "]"):
+                        if t2.value == "}" and depth == 0:
+                            return fields, True, k
+                        depth -= 1
+                k += 1
+            return fields, True, k
+        if t.kind == "ident":
+            # `ref`/`mut` prefixes appear in patterns
+            if t.value in ("ref", "mut"):
+                k += 1
+                continue
+            name = t.value
+            line = t.line
+            k += 1
+            if k < n and toks[k].kind == "punct" and toks[k].value == ":":
+                fields.append((name, line))
+                # skip the value expression to `,` or `}` at depth 0
+                k += 1
+                depth = 0
+                while k < n:
+                    t2 = toks[k]
+                    if t2.kind == "punct":
+                        if t2.value in OPEN:
+                            depth += 1
+                        elif t2.value in (")", "]"):
+                            depth -= 1
+                        elif t2.value == "}":
+                            if depth == 0:
+                                return fields, True, k
+                            depth -= 1
+                        elif t2.value == "," and depth == 0:
+                            k += 1
+                            break
+                        elif t2.value == "$":
+                            return [], False, k
+                    k += 1
+                continue
+            if k < n and toks[k].kind == "punct" and toks[k].value in (",", "}"):
+                # shorthand `Foo { x }` / pattern binding
+                fields.append((name, line))
+                if toks[k].value == "}":
+                    return fields, True, k
+                k += 1
+                continue
+            # something else (e.g. a path expression misread) — bail
+            return [], False, k
+        # unexpected token at field position
+        return [], False, k
+    return fields, False, n - 1

@@ -1,0 +1,116 @@
+"""In-crate trait-impl conformance: for `impl Trait for X` where Trait is
+defined in this repo, method names and arities must match the trait
+declaration, required (default-less) items must be present, and the impl
+must not invent methods the trait doesn't declare."""
+
+from ..findings import Finding
+
+NAME = "trait-impl"
+DESCRIPTION = "impl blocks match in-crate trait declarations (names, arity, required items)"
+
+
+def run(ctx):
+    findings = []
+    for crate in ctx.checked_crates():
+        for module in crate.modules:
+            for imp in module.impls:
+                if imp.trait_path is None:
+                    continue
+                tdef = _resolve_trait(ctx, crate, module, imp)
+                if tdef is None:
+                    continue
+                findings.extend(_check_impl(module, imp, tdef))
+    return findings
+
+
+def _resolve_trait(ctx, crate, module, imp):
+    segs = [s for s in imp.trait_path if s]
+    if not segs:
+        return None
+    # a trait path whose head is one of the impl's generic params
+    # (`impl<R: Rounder> …`) can't be resolved lexically — skip
+    if segs[0] in imp.generics:
+        return None
+    res = ctx.resolver.resolve_path(crate, module, segs)
+    if res is None or res[0] != "ok" or res[1] != "trait" or res[2] is None:
+        return None
+    return res[2]
+
+
+def _check_impl(module, imp, tdef):
+    findings = []
+    where = f"impl {tdef.name} for {'::'.join(imp.self_path)}"
+    for name, (arity, line) in sorted(imp.methods.items()):
+        if name not in tdef.methods:
+            findings.append(
+                Finding(
+                    NAME,
+                    module.file,
+                    line,
+                    f"{where}: method `{name}` is not a member of trait "
+                    f"`{tdef.name}` (declared: {', '.join(sorted(tdef.methods)) or 'none'})",
+                )
+            )
+            continue
+        want_arity = tdef.methods[name][0]
+        if arity != want_arity:
+            findings.append(
+                Finding(
+                    NAME,
+                    module.file,
+                    line,
+                    f"{where}: method `{name}` takes {arity} parameter(s) but "
+                    f"the trait declares {want_arity}",
+                )
+            )
+    for name, (arity, has_default, _line) in sorted(tdef.methods.items()):
+        if not has_default and name not in imp.methods:
+            findings.append(
+                Finding(
+                    NAME,
+                    module.file,
+                    imp.line,
+                    f"{where}: missing required method `{name}`",
+                )
+            )
+    for name, has_default in sorted(tdef.assoc_types.items()):
+        if not has_default and name not in imp.assoc_types:
+            findings.append(
+                Finding(
+                    NAME,
+                    module.file,
+                    imp.line,
+                    f"{where}: missing required associated type `{name}`",
+                )
+            )
+    for name in sorted(imp.assoc_types):
+        if name not in tdef.assoc_types:
+            findings.append(
+                Finding(
+                    NAME,
+                    module.file,
+                    imp.line,
+                    f"{where}: associated type `{name}` is not declared by the trait",
+                )
+            )
+    for name, has_default in sorted(tdef.assoc_consts.items()):
+        if not has_default and name not in imp.assoc_consts:
+            findings.append(
+                Finding(
+                    NAME,
+                    module.file,
+                    imp.line,
+                    f"{where}: missing required associated const `{name}`",
+                )
+            )
+    for name in sorted(imp.assoc_consts):
+        if name not in tdef.assoc_consts:
+            findings.append(
+                Finding(
+                    NAME,
+                    module.file,
+                    imp.line,
+                    f"{where}: associated const `{name}` is not declared by the trait",
+                )
+            )
+    return findings

@@ -1,0 +1,132 @@
+"""Analysis context: discovers crate roots, loads them, exposes shared state."""
+
+import glob
+import os
+import re
+
+from .crate import Resolver, load_crate
+
+# Directories whose kernels must stay bit-deterministic (ROADMAP / DESIGN:
+# seeded Hessian accumulation, blocked factorization, codebook rounding).
+DETERMINISM_DIRS = ("rust/src/linalg/", "rust/src/hessian/", "rust/src/quant/")
+# Serving/decode layers where a stray panic is an availability bug.
+PANIC_DIRS = ("rust/src/coordinator/", "rust/src/engine/")
+
+CI_YML = ".github/workflows/ci.yml"
+
+
+def _crate_name_from_manifest(repo_root, manifest_rel, default):
+    path = os.path.join(repo_root, manifest_rel)
+    try:
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+    except OSError:
+        return default
+    m = re.search(r'^\s*name\s*=\s*"([^"]+)"', text, re.M)
+    return m.group(1).replace("-", "_") if m else default
+
+
+class Context:
+    """Everything a check needs: loaded crates, resolver, policy config."""
+
+    def __init__(self, repo_root):
+        self.repo_root = os.path.abspath(repo_root)
+        self.crates = {}  # extern-name -> Crate (lib + vendored)
+        self.lib_crate = None
+        self.aux_crates = []  # bin / bench / test / example Crates
+        self.resolver = None
+        self.orphans = []  # .rs files under rust/src reachable from no root
+        self._load()
+
+    # -- loading -----------------------------------------------------------
+
+    def _exists(self, rel):
+        return os.path.isfile(os.path.join(self.repo_root, rel))
+
+    def _load(self):
+        lib_name = _crate_name_from_manifest(self.repo_root, "rust/Cargo.toml", "quip")
+        if self._exists("rust/src/lib.rs"):
+            self.lib_crate = load_crate(self.repo_root, "rust/src/lib.rs", lib_name)
+            self.crates[lib_name] = self.lib_crate
+        for vendor_lib in sorted(
+            glob.glob(os.path.join(self.repo_root, "vendor", "*", "src", "lib.rs"))
+        ):
+            rel = os.path.relpath(vendor_lib, self.repo_root).replace(os.sep, "/")
+            name = rel.split("/")[1].replace("-", "_")
+            self.crates[name] = load_crate(self.repo_root, rel, name)
+
+        aux_roots = []
+        if self._exists("rust/src/main.rs"):
+            aux_roots.append(("rust/src/main.rs", lib_name + "_bin"))
+        for pattern in ("rust/benches/*.rs", "rust/tests/*.rs", "examples/*.rs"):
+            for path in sorted(glob.glob(os.path.join(self.repo_root, pattern))):
+                rel = os.path.relpath(path, self.repo_root).replace(os.sep, "/")
+                stem = os.path.splitext(os.path.basename(rel))[0]
+                aux_roots.append((rel, stem))
+        for root_file, name in aux_roots:
+            self.aux_crates.append(load_crate(self.repo_root, root_file, name))
+
+        self.resolver = Resolver(self.crates)
+
+        # orphan detection: every .rs under rust/src must be reachable from
+        # the lib or bin root
+        reachable = set()
+        for crate in list(self.crates.values()) + self.aux_crates:
+            reachable.update(crate.files)
+        for path in sorted(
+            glob.glob(os.path.join(self.repo_root, "rust", "src", "**", "*.rs"), recursive=True)
+        ):
+            rel = os.path.relpath(path, self.repo_root).replace(os.sep, "/")
+            if rel not in reachable:
+                self.orphans.append(rel)
+
+    # -- iteration helpers -------------------------------------------------
+
+    def checked_crates(self):
+        """Crates whose source we lint (vendored stand-ins are exempt)."""
+        out = []
+        if self.lib_crate is not None:
+            out.append(self.lib_crate)
+        out.extend(self.aux_crates)
+        return out
+
+    def lexed_files(self, include_vendor=False):
+        """Yield (crate, rel_path, LexedFile), deduped across crates."""
+        seen = set()
+        crates = list(self.crates.values()) + self.aux_crates
+        for crate in crates:
+            if not include_vendor and crate.root_file.startswith("vendor/"):
+                continue
+            for rel, lexed in sorted(crate.files.items()):
+                if rel in seen:
+                    continue
+                seen.add(rel)
+                yield crate, rel, lexed
+
+    def primary_module(self, crate, rel_path):
+        """The out-of-line module whose body is `rel_path` (shortest path
+        wins when inline mods share the file)."""
+        best = None
+        for mod in crate.modules:
+            if mod.file == rel_path:
+                if best is None or len(mod.path) < len(best.path):
+                    best = mod
+        return best
+
+    def module_of(self, crate, path_tuple):
+        node = crate.root
+        for seg in path_tuple:
+            node = node.submods.get(seg)
+            if node is None:
+                return None
+        return node
+
+    def ci_clippy_allows(self):
+        """Parse the clippy allow-list out of ci.yml; None if absent."""
+        path = os.path.join(self.repo_root, CI_YML)
+        try:
+            with open(path, encoding="utf-8") as fh:
+                text = fh.read()
+        except OSError:
+            return None
+        return set(re.findall(r"-A\s+clippy::([A-Za-z0-9_]+)", text))

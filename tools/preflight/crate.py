@@ -1,0 +1,1037 @@
+"""Crate model: item scanner, module graph, and path resolution.
+
+Builds, per crate root (lib, bin, each bench/test/example, vendored
+crates), a tree of :class:`Module` objects holding the item index that
+Family-A checks resolve against. The scanner is token-driven and
+deliberately shallow: it recognises item heads (``fn``/``struct``/…) at
+module-body depth, records names/signatures, and skips bodies. It never
+needs to understand expressions.
+"""
+
+import os
+
+from .lexer import lex
+
+EXTERNAL_CRATES = {"std", "core", "alloc", "proc_macro"}
+
+
+class StructDef:
+    def __init__(self, name, fields, line):
+        self.name = name
+        # list of field-name strings for named-field structs; None for
+        # tuple/unit structs.
+        self.fields = fields
+        self.line = line
+
+
+class EnumDef:
+    def __init__(self, name, line):
+        self.name = name
+        self.variants = {}  # name -> list[str] | None (named fields or not)
+        self.line = line
+
+
+class TraitDef:
+    def __init__(self, name, line):
+        self.name = name
+        self.methods = {}  # name -> (arity, has_default, line)
+        self.assoc_types = {}  # name -> has_default
+        self.assoc_consts = {}  # name -> has_default
+        self.line = line
+
+
+class ImplBlock:
+    def __init__(self, module, trait_path, self_path, line):
+        self.module = module  # tuple module path
+        self.trait_path = trait_path  # list[str] | None for inherent impls
+        self.self_path = self_path  # list[str]
+        self.generics = set()  # generic parameter names, e.g. {"T"}
+        self.methods = {}  # name -> (arity, line)
+        self.assoc_types = set()
+        self.assoc_consts = set()
+        self.line = line
+
+
+class UseEntry:
+    def __init__(self, segments, alias, is_glob, is_pub, line):
+        self.segments = segments  # list[str]
+        self.alias = alias  # binding name (last segment unless `as`)
+        self.is_glob = is_glob
+        self.is_pub = is_pub
+        self.line = line
+
+
+class ModDecl:
+    """`mod name;` — an out-of-line module declaration awaiting a file."""
+
+    def __init__(self, name, line, path_attr, cfg_test):
+        self.name = name
+        self.line = line
+        self.path_attr = path_attr  # value of #[path = "…"] if present
+        self.cfg_test = cfg_test
+
+
+class Module:
+    def __init__(self, path, file, cfg_test=False):
+        self.path = path  # tuple of segment strings; () is the crate root
+        self.file = file  # repo-relative file this module's body lives in
+        self.cfg_test = cfg_test
+        self.types = {}  # name -> (kind, line); kind: struct/enum/trait/type/union
+        self.values = {}  # name -> (kind, line); kind: fn/const/static
+        self.macros = {}  # name -> line
+        self.submods = {}  # name -> Module
+        self.mod_decls = []  # ModDecl list (out-of-line)
+        self.uses = []  # UseEntry list
+        self.structs = {}
+        self.enums = {}
+        self.traits = {}
+        self.impls = []
+        self.duplicates = []  # (name, kind, first_line, dup_line)
+
+    def record_type(self, name, kind, line):
+        if name in self.types:
+            self.duplicates.append((name, kind, self.types[name][1], line))
+        else:
+            self.types[name] = (kind, line)
+
+    def record_value(self, name, kind, line):
+        if name in self.values:
+            self.duplicates.append((name, kind, self.values[name][1], line))
+        else:
+            self.values[name] = (kind, line)
+
+
+class Crate:
+    def __init__(self, name, root_file):
+        self.name = name
+        self.root_file = root_file  # repo-relative path
+        self.root = None  # Module
+        self.modules = []  # flat list of all Modules
+        self.files = {}  # repo-relative path -> LexedFile
+        self.graph_findings = []  # (path, line, message) from mod resolution
+
+
+# ---------------------------------------------------------------------------
+# token cursor
+# ---------------------------------------------------------------------------
+
+OPEN = {"(": ")", "[": "]", "{": "}"}
+CLOSE = {")": "(", "]": "[", "}": "{"}
+
+
+class Cursor:
+    def __init__(self, tokens):
+        self.toks = tokens
+        self.i = 0
+
+    def at_end(self):
+        return self.i >= len(self.toks)
+
+    def peek(self, k=0):
+        j = self.i + k
+        return self.toks[j] if 0 <= j < len(self.toks) else None
+
+    def advance(self):
+        t = self.peek()
+        self.i += 1
+        return t
+
+    def eat_punct(self, value):
+        t = self.peek()
+        if t and t.kind == "punct" and t.value == value:
+            self.i += 1
+            return True
+        return False
+
+    def eat_ident(self, value=None):
+        t = self.peek()
+        if t and t.kind == "ident" and (value is None or t.value == value):
+            self.i += 1
+            return t
+        return None
+
+    def is_punct(self, value, k=0):
+        t = self.peek(k)
+        return t is not None and t.kind == "punct" and t.value == value
+
+    def is_ident(self, value=None, k=0):
+        t = self.peek(k)
+        return (
+            t is not None
+            and t.kind == "ident"
+            and (value is None or t.value == value)
+        )
+
+    def skip_balanced(self):
+        """Current token must be an opener; skip to just past its match.
+
+        Counts only the one delimiter kind — all three kinds nest properly
+        in lexed Rust, so a flat per-kind count is sufficient.
+        """
+        opener = self.advance()
+        want_close = OPEN[opener.value]
+        depth = 1
+        while not self.at_end() and depth:
+            t = self.advance()
+            if t.kind == "punct":
+                if t.value == opener.value:
+                    depth += 1
+                elif t.value == want_close:
+                    depth -= 1
+
+    def skip_generics(self):
+        """Skip a `<…>` group if present (type/def position only)."""
+        if not self.is_punct("<"):
+            return
+        self.advance()
+        depth = 1
+        while not self.at_end() and depth:
+            t = self.peek()
+            if t.kind == "punct":
+                if t.value == "<":
+                    depth += 1
+                elif t.value == ">":
+                    depth -= 1
+                elif t.value in OPEN:
+                    self.skip_balanced()
+                    continue
+            self.advance()
+
+    def skip_to_semi_or_body(self):
+        """Skip until `;` (consumed) or `{` (NOT consumed) at delim depth 0.
+
+        Used to pass over return types, where clauses, supertrait bounds.
+        Returns "semi", "body", or "eof".
+        """
+        while not self.at_end():
+            t = self.peek()
+            if t.kind == "punct":
+                if t.value == ";":
+                    self.advance()
+                    return "semi"
+                if t.value == "{":
+                    return "body"
+                if t.value in ("(", "["):
+                    self.skip_balanced()
+                    continue
+                if t.value == "<":
+                    self.skip_generics()
+                    continue
+            self.advance()
+        return "eof"
+
+
+def parse_path(cur):
+    """Parse `a::b::c`, return list of segments.
+
+    Stops before any token that is not part of a plain path. Turbofish
+    (`::<…>`) is skipped. `crate`/`self`/`super`/`Self` count as segments.
+    """
+    segs = []
+    cur.eat_punct("::")
+    while True:
+        t = cur.peek()
+        if t is None or t.kind != "ident":
+            break
+        segs.append(t.value)
+        cur.advance()
+        if not cur.is_punct("::"):
+            break
+        if cur.is_punct("<", 1):
+            cur.advance()  # ::
+            cur.skip_generics()
+            if not cur.is_punct("::"):
+                break
+            cur.advance()
+        elif cur.is_ident(None, 1):
+            cur.advance()
+        else:
+            break
+    return segs
+
+
+def count_params(cur):
+    """Current token must be `(`. Count comma-separated params; consume
+    through the closing `)`. Nested delimiters and generics don't split."""
+    cur.advance()  # (
+    depth_paren = 1
+    depth_other = 0
+    count = 0
+    saw_any = False
+    while not cur.at_end() and depth_paren:
+        t = cur.advance()
+        if t.kind != "punct":
+            saw_any = True
+            continue
+        v = t.value
+        if v == "(":
+            depth_paren += 1
+        elif v == ")":
+            depth_paren -= 1
+        elif v in "[{":
+            depth_other += 1
+        elif v in "]}":
+            depth_other -= 1
+        elif v == "<":
+            depth_other += 1
+        elif v == ">":
+            depth_other = max(0, depth_other - 1)
+        elif v == "," and depth_paren == 1 and depth_other == 0:
+            count += 1
+        else:
+            saw_any = True
+    if saw_any:
+        count += 1  # final param had no trailing comma
+    return count
+
+
+# ---------------------------------------------------------------------------
+# item scanner
+# ---------------------------------------------------------------------------
+
+MODIFIERS = {"pub", "unsafe", "async", "default", "extern"}
+
+
+class _Scanner:
+    def __init__(self, crate, lexed):
+        self.crate = crate
+        self.lexed = lexed
+        # set when a `pub` modifier was consumed before the current item —
+        # `pub use` re-exports participate in cross-module resolution
+        self._pending_pub = False
+
+    def scan(self, module, cur, stop_at_close):
+        """Scan one module body. If stop_at_close, return after consuming
+        the matching `}`."""
+        while not cur.at_end():
+            t = cur.peek()
+            if t.kind == "punct" and t.value == "}" and stop_at_close:
+                cur.advance()
+                return
+            attrs = self._collect_attrs(cur)
+            t = cur.peek()
+            if t is None:
+                return
+            if t.kind != "ident":
+                if t.kind == "punct" and t.value == "}" and stop_at_close:
+                    cur.advance()
+                    return
+                if t.kind == "punct" and t.value in OPEN:
+                    cur.skip_balanced()
+                else:
+                    cur.advance()
+                continue
+
+            kw = t.value
+            if kw in MODIFIERS:
+                cur.advance()
+                if kw == "pub":
+                    self._pending_pub = True
+                    if cur.is_punct("("):
+                        cur.skip_balanced()
+                if kw == "extern":
+                    if cur.peek() and cur.peek().kind == "str":
+                        cur.advance()
+                    if cur.is_ident("crate"):
+                        cur.advance()
+                        cur.eat_ident()
+                        if cur.is_ident("as"):
+                            cur.advance()
+                            cur.eat_ident()
+                        cur.eat_punct(";")
+                continue
+
+            if kw == "const" and (cur.is_ident("fn", 1) or cur.is_ident("unsafe", 1)):
+                cur.advance()  # `const fn` — next loop handles `fn`
+                continue
+
+            handler = getattr(self, "_item_" + kw, None)
+            if handler is not None:
+                cur.advance()
+                handler(module, cur, attrs, t.line)
+                self._pending_pub = False
+                continue
+
+            if cur.is_punct("!", 1):
+                # macro invocation at item position: `name! { … }` etc.
+                cur.advance()
+                cur.advance()
+                if cur.peek() and cur.peek().kind == "punct" and cur.peek().value in OPEN:
+                    cur.skip_balanced()
+                cur.eat_punct(";")
+                continue
+
+            cur.advance()
+
+    # -- attribute helpers -------------------------------------------------
+
+    def _collect_attrs(self, cur):
+        attrs = []
+        while cur.is_punct("#"):
+            j = cur.i
+            cur.advance()
+            cur.eat_punct("!")
+            if not cur.is_punct("["):
+                cur.i = j
+                break
+            start = cur.i
+            cur.skip_balanced()
+            attrs.append(cur.toks[start + 1 : cur.i - 1])
+        return attrs
+
+    @staticmethod
+    def _attr_text(attr):
+        return " ".join(t.value for t in attr)
+
+    def _attrs_have(self, attrs, needle):
+        return any(needle in self._attr_text(a) for a in attrs)
+
+    def _path_attr(self, attrs):
+        for a in attrs:
+            if a and a[0].kind == "ident" and a[0].value == "path":
+                for t in a:
+                    if t.kind == "str":
+                        return t.value.strip('"')
+        return None
+
+    # -- item handlers -----------------------------------------------------
+
+    def _item_fn(self, module, cur, attrs, line):
+        name_t = cur.eat_ident()
+        if name_t is None:
+            return
+        module.record_value(name_t.value, "fn", line)
+        cur.skip_generics()
+        if cur.is_punct("("):
+            cur.skip_balanced()
+        if cur.skip_to_semi_or_body() == "body":
+            cur.skip_balanced()
+
+    def _item_struct(self, module, cur, attrs, line):
+        name_t = cur.eat_ident()
+        if name_t is None:
+            return
+        name = name_t.value
+        module.record_type(name, "struct", line)
+        cur.skip_generics()
+        if cur.is_punct("("):  # tuple struct
+            cur.skip_balanced()
+            cur.skip_to_semi_or_body()
+            module.structs[name] = StructDef(name, None, line)
+            return
+        if cur.eat_punct(";"):  # unit struct
+            module.structs[name] = StructDef(name, None, line)
+            return
+        if cur.skip_to_semi_or_body() != "body":
+            module.structs[name] = StructDef(name, None, line)
+            return
+        fields = self._parse_named_fields(cur)
+        module.structs[name] = StructDef(name, fields, line)
+
+    def _parse_named_fields(self, cur):
+        """Current token is `{`. Parse `[pub] name: Type,`* through `}`."""
+        cur.advance()
+        fields = []
+        while not cur.at_end():
+            self._collect_attrs(cur)
+            if cur.eat_punct("}"):
+                break
+            if cur.is_ident("pub"):
+                cur.advance()
+                if cur.is_punct("("):
+                    cur.skip_balanced()
+            name_t = cur.eat_ident()
+            if name_t is None:
+                if cur.eat_punct("}"):
+                    break
+                cur.advance()
+                continue
+            fields.append(name_t.value)
+            if cur.eat_punct(":"):
+                self._skip_type_until(cur, (",", "}"))
+            if cur.eat_punct(","):
+                continue
+            if cur.eat_punct("}"):
+                break
+        return fields
+
+    @staticmethod
+    def _skip_type_until(cur, stops):
+        depth = 0
+        while not cur.at_end():
+            t = cur.peek()
+            if t.kind == "punct":
+                if depth == 0 and t.value in stops:
+                    return
+                if t.value in OPEN:
+                    cur.skip_balanced()
+                    continue
+                if t.value == "<":
+                    depth += 1
+                elif t.value == ">":
+                    depth = max(0, depth - 1)
+            cur.advance()
+
+    def _item_enum(self, module, cur, attrs, line):
+        name_t = cur.eat_ident()
+        if name_t is None:
+            return
+        name = name_t.value
+        module.record_type(name, "enum", line)
+        cur.skip_generics()
+        if cur.skip_to_semi_or_body() != "body":
+            return
+        cur.advance()  # {
+        edef = EnumDef(name, line)
+        while not cur.at_end():
+            self._collect_attrs(cur)
+            if cur.eat_punct("}"):
+                break
+            var_t = cur.eat_ident()
+            if var_t is None:
+                if cur.eat_punct("}"):
+                    break
+                cur.advance()
+                continue
+            vfields = None
+            if cur.is_punct("("):
+                cur.skip_balanced()
+            elif cur.is_punct("{"):
+                vfields = self._parse_named_fields(cur)
+            if cur.eat_punct("="):
+                self._skip_type_until(cur, (",", "}"))  # discriminant
+            edef.variants[var_t.value] = vfields
+            if cur.eat_punct(","):
+                continue
+            if cur.eat_punct("}"):
+                break
+        module.enums[name] = edef
+
+    def _item_trait(self, module, cur, attrs, line):
+        name_t = cur.eat_ident()
+        if name_t is None:
+            return
+        name = name_t.value
+        module.record_type(name, "trait", line)
+        cur.skip_generics()
+        if cur.skip_to_semi_or_body() != "body":
+            return
+        cur.advance()  # {
+        tdef = TraitDef(name, line)
+        self._scan_assoc_items(cur, tdef=tdef)
+        module.traits[name] = tdef
+
+    def _item_impl(self, module, cur, attrs, line):
+        generics = set()
+        if cur.is_punct("<"):
+            generics = self._generic_param_names(cur)
+        cur.eat_punct("!")  # negative impl
+        first = parse_path(cur)
+        cur.skip_generics()
+        trait_path, self_path = None, first
+        if cur.is_ident("for"):
+            cur.advance()
+            trait_path = first
+            while cur.is_punct("&") or cur.is_ident("mut") or cur.is_ident("dyn"):
+                cur.advance()
+                if cur.peek() and cur.peek().kind == "lifetime":
+                    cur.advance()
+            self_path = parse_path(cur)
+            cur.skip_generics()
+        if cur.skip_to_semi_or_body() != "body":
+            return
+        cur.advance()  # {
+        imp = ImplBlock(module.path, trait_path, self_path, line)
+        imp.generics = generics
+        self._scan_assoc_items(cur, imp=imp)
+        module.impls.append(imp)
+
+    def _generic_param_names(self, cur):
+        """Current token is `<`. Collect top-level generic parameter names."""
+        names = set()
+        cur.advance()
+        depth = 1
+        expect_name = True
+        while not cur.at_end() and depth:
+            t = cur.peek()
+            if t.kind == "punct":
+                if t.value == "<":
+                    depth += 1
+                elif t.value == ">":
+                    depth -= 1
+                elif t.value == "," and depth == 1:
+                    expect_name = True
+                elif t.value == ":" and depth == 1:
+                    expect_name = False
+                elif t.value in OPEN:
+                    cur.skip_balanced()
+                    continue
+            elif t.kind == "ident" and depth == 1 and expect_name and t.value != "const":
+                names.add(t.value)
+                expect_name = False
+            cur.advance()
+        return names
+
+    def _scan_assoc_items(self, cur, tdef=None, imp=None):
+        """Scan a trait or impl body (position just past `{`)."""
+        while not cur.at_end():
+            self._collect_attrs(cur)
+            if cur.eat_punct("}"):
+                return
+            t = cur.peek()
+            if t is None:
+                return
+            if t.kind != "ident":
+                if t.kind == "punct" and t.value in OPEN:
+                    cur.skip_balanced()
+                else:
+                    cur.advance()
+                continue
+            kw = t.value
+            if kw in MODIFIERS:
+                cur.advance()
+                if kw == "pub" and cur.is_punct("("):
+                    cur.skip_balanced()
+                if kw == "extern" and cur.peek() and cur.peek().kind == "str":
+                    cur.advance()
+                continue
+            if kw == "const" and (cur.is_ident("fn", 1) or cur.is_ident("unsafe", 1)):
+                cur.advance()
+                continue
+            if kw == "fn":
+                cur.advance()
+                name_t = cur.eat_ident()
+                if name_t is None:
+                    continue
+                cur.skip_generics()
+                arity = count_params(cur) if cur.is_punct("(") else 0
+                has_default = cur.skip_to_semi_or_body() == "body"
+                if has_default:
+                    cur.skip_balanced()
+                if tdef is not None:
+                    tdef.methods[name_t.value] = (arity, has_default, name_t.line)
+                if imp is not None:
+                    imp.methods[name_t.value] = (arity, name_t.line)
+                continue
+            if kw == "type":
+                cur.advance()
+                name_t = cur.eat_ident()
+                saw_eq = self._skip_assoc_tail(cur)
+                if name_t is not None:
+                    if tdef is not None:
+                        tdef.assoc_types[name_t.value] = saw_eq
+                    if imp is not None:
+                        imp.assoc_types.add(name_t.value)
+                continue
+            if kw == "const":
+                cur.advance()
+                name_t = cur.eat_ident()
+                saw_eq = self._skip_assoc_tail(cur)
+                if name_t is not None:
+                    if tdef is not None:
+                        tdef.assoc_consts[name_t.value] = saw_eq
+                    if imp is not None:
+                        imp.assoc_consts.add(name_t.value)
+                continue
+            if cur.is_punct("!", 1):
+                cur.advance()
+                cur.advance()
+                if cur.peek() and cur.peek().kind == "punct" and cur.peek().value in OPEN:
+                    cur.skip_balanced()
+                cur.eat_punct(";")
+                continue
+            cur.advance()
+
+    @staticmethod
+    def _skip_assoc_tail(cur):
+        """Skip to `;` at depth 0, reporting whether an `=` was seen
+        (i.e. the item has a default/definition)."""
+        saw_eq = False
+        while not cur.at_end():
+            t = cur.peek()
+            if t.kind == "punct":
+                if t.value == ";":
+                    cur.advance()
+                    return saw_eq
+                if t.value == "=":
+                    saw_eq = True
+                if t.value in OPEN:
+                    cur.skip_balanced()
+                    continue
+                if t.value == "<":
+                    cur.skip_generics()
+                    continue
+            cur.advance()
+        return saw_eq
+
+    def _item_const(self, module, cur, attrs, line):
+        name_t = cur.eat_ident()
+        if name_t is not None and name_t.value != "_":
+            module.record_value(name_t.value, "const", line)
+        self._skip_const_tail(cur)
+
+    def _item_static(self, module, cur, attrs, line):
+        cur.eat_ident("mut")
+        name_t = cur.eat_ident()
+        if name_t is not None:
+            module.record_value(name_t.value, "static", line)
+        self._skip_const_tail(cur)
+
+    @staticmethod
+    def _skip_const_tail(cur):
+        while not cur.at_end():
+            t = cur.peek()
+            if t.kind == "punct":
+                if t.value == ";":
+                    cur.advance()
+                    return
+                if t.value in OPEN:
+                    cur.skip_balanced()
+                    continue
+            cur.advance()
+
+    def _item_type(self, module, cur, attrs, line):
+        name_t = cur.eat_ident()
+        if name_t is not None:
+            module.record_type(name_t.value, "type", line)
+        self._skip_const_tail(cur)
+
+    def _item_union(self, module, cur, attrs, line):
+        # treat like a named-field struct; rare enough that the distinction
+        # doesn't matter for resolution
+        self._item_struct(module, cur, attrs, line)
+
+    def _item_mod(self, module, cur, attrs, line):
+        name_t = cur.eat_ident()
+        if name_t is None:
+            return
+        name = name_t.value
+        cfg_test = self._attrs_have(attrs, "cfg ( test )")
+        if cur.eat_punct(";"):
+            module.mod_decls.append(ModDecl(name, line, self._path_attr(attrs), cfg_test))
+            return
+        if cur.is_punct("{"):
+            cur.advance()
+            sub = Module(
+                module.path + (name,), self.lexed.path, cfg_test or module.cfg_test
+            )
+            module.submods[name] = sub
+            self.crate.modules.append(sub)
+            self.scan(sub, cur, stop_at_close=True)
+
+    def _item_use(self, module, cur, attrs, line):
+        self._parse_use(module, cur, is_pub=self._pending_pub, line=line)
+
+    def _parse_use(self, module, cur, is_pub, line=0):
+        entries = []
+        self._parse_use_tree(cur, [], entries)
+        cur.eat_punct(";")
+        for segs, alias, is_glob in entries:
+            module.uses.append(UseEntry(segs, alias, is_glob, is_pub, line))
+
+    def _parse_use_tree(self, cur, prefix, out):
+        while True:
+            if cur.is_punct("{"):
+                cur.advance()
+                while not cur.at_end() and not cur.is_punct("}"):
+                    self._parse_use_tree(cur, list(prefix), out)
+                    if not cur.eat_punct(","):
+                        break
+                cur.eat_punct("}")
+                return
+            if cur.is_punct("*"):
+                cur.advance()
+                out.append((list(prefix), None, True))
+                return
+            t = cur.peek()
+            if t is None or t.kind != "ident":
+                return
+            seg = t.value
+            cur.advance()
+            if seg == "self" and prefix:
+                out.append((list(prefix), prefix[-1], False))  # binds `b` in a::b::{self}
+                return
+            prefix = prefix + [seg]
+            if cur.eat_punct("::"):
+                continue
+            alias = seg
+            if cur.is_ident("as"):
+                cur.advance()
+                alias_t = cur.eat_ident()
+                if alias_t is not None:
+                    alias = alias_t.value
+            out.append((prefix, alias, False))
+            return
+
+    def _item_macro_rules(self, module, cur, attrs, line):
+        """Cursor sits just past `macro_rules` (dispatched like any item)."""
+        if not cur.eat_punct("!"):
+            return
+        name_t = cur.eat_ident()
+        if name_t is not None:
+            module.macros[name_t.value] = line
+            # #[macro_export] hoists the macro to the crate root path
+            if self._attrs_have(attrs, "macro_export"):
+                self.crate.root.macros.setdefault(name_t.value, line)
+        if cur.peek() and cur.peek().kind == "punct" and cur.peek().value in OPEN:
+            cur.skip_balanced()
+
+
+# ---------------------------------------------------------------------------
+# crate loading
+# ---------------------------------------------------------------------------
+
+
+def load_crate(repo_root, root_file, name):
+    """Load a crate from its root file; follows `mod x;` declarations."""
+    crate = Crate(name, root_file)
+    root = Module((), root_file)
+    crate.root = root
+    crate.modules.append(root)
+    _load_module_file(crate, repo_root, root_file, root)
+    return crate
+
+
+def _load_module_file(crate, repo_root, rel_path, module):
+    abs_path = os.path.join(repo_root, rel_path)
+    try:
+        with open(abs_path, encoding="utf-8") as fh:
+            text = fh.read()
+    except OSError as exc:
+        crate.graph_findings.append((rel_path, 0, f"cannot read module file: {exc}"))
+        return
+    lexed = lex(text, rel_path)
+    crate.files[rel_path] = lexed
+    module.file = rel_path
+    scanner = _Scanner(crate, lexed)
+    scanner.scan(module, Cursor(lexed.tokens), stop_at_close=False)
+
+    base_dir = os.path.dirname(rel_path)
+    fname = os.path.basename(rel_path)
+    is_root_like = fname in ("lib.rs", "main.rs", "mod.rs") or not module.path
+    if not is_root_like:
+        base_dir = os.path.join(base_dir, os.path.splitext(fname)[0])
+    for decl in module.mod_decls:
+        if decl.path_attr is not None:
+            candidates = [os.path.join(os.path.dirname(rel_path), decl.path_attr)]
+        else:
+            candidates = [
+                os.path.join(base_dir, decl.name + ".rs"),
+                os.path.join(base_dir, decl.name, "mod.rs"),
+            ]
+        chosen = None
+        for cand in candidates:
+            if os.path.isfile(os.path.join(repo_root, cand)):
+                chosen = cand
+                break
+        if chosen is None:
+            crate.graph_findings.append(
+                (
+                    rel_path,
+                    decl.line,
+                    f"`mod {decl.name};` has no matching file "
+                    f"({' or '.join(os.path.normpath(c) for c in candidates)})",
+                )
+            )
+            continue
+        chosen = os.path.normpath(chosen).replace(os.sep, "/")
+        sub = Module(module.path + (decl.name,), chosen, decl.cfg_test or module.cfg_test)
+        module.submods[decl.name] = sub
+        crate.modules.append(sub)
+        _load_module_file(crate, repo_root, chosen, sub)
+
+
+# ---------------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------------
+
+
+class Resolver:
+    """Resolves paths against the loaded crate graph.
+
+    ``crates`` maps extern-crate names (e.g. "quip", "anyhow", "xla") to
+    their Crate objects. Unknown first segments (std, …) resolve as
+    ("external",).
+    """
+
+    def __init__(self, crates):
+        self.crates = crates
+
+    def resolve_use(self, crate, module, segments, is_glob):
+        """Resolve a use-declaration path. Returns one of:
+        ("ok", kind, obj) | ("external",) | ("err", message)
+        """
+        return self._resolve(crate, module, segments, is_glob, set())
+
+    def resolve_name(self, crate, module, name):
+        """Resolve a bare name in module scope (items, then use-aliases,
+        then glob imports). Returns ("ok", kind, obj) | ("external",) | None.
+        """
+        hit = self._lookup_in_module(crate, module, name, set())
+        if hit is not None:
+            return hit
+        for use in module.uses:
+            if not use.is_glob and use.alias == name:
+                res = self._resolve(crate, module, use.segments, False, set())
+                return res if res[0] == "ok" else ("external",)
+        for use in module.uses:
+            if not use.is_glob:
+                continue
+            res = self._resolve(crate, module, use.segments, True, set())
+            if res[0] == "ok" and res[1] == "mod":
+                tcrate, tmod = res[2]
+                hit = self._lookup_in_module(tcrate, tmod, name, set())
+                if hit is not None:
+                    return hit
+        return None
+
+    def resolve_path(self, crate, module, segments):
+        """Resolve a multi-segment expression-position path (e.g. a struct
+        literal's `a::B`). The first segment may be a use-alias."""
+        if not segments:
+            return None
+        if len(segments) == 1:
+            return self.resolve_name(crate, module, segments[0])
+        head = segments[0]
+        if head in ("crate", "self", "super") or head in self.crates:
+            res = self._resolve(crate, module, segments, False, set())
+            return res if res[0] != "err" else None
+        base = self.resolve_name(crate, module, head)
+        if base is None:
+            return None
+        if base[0] == "external":
+            return ("external",)
+        kind, obj = base[1], base[2]
+        if kind == "mod":
+            tcrate, tmod = obj
+            res = self._resolve(tcrate, tmod, ["self"] + segments[1:], False, set())
+            return res if res[0] != "err" else None
+        if kind == "enum" and len(segments) == 2:
+            if segments[1] in obj.variants:
+                return ("ok", "variant", (obj, segments[1]))
+            return None
+        return None
+
+    # -- internals ---------------------------------------------------------
+
+    def _resolve(self, crate, module, segments, is_glob, seen):
+        segs = list(segments)
+        if not segs:
+            return ("err", "empty path")
+        head = segs[0]
+        if head == "crate":
+            cur_crate, cur_mod = crate, crate.root
+            segs = segs[1:]
+        elif head == "self":
+            cur_crate, cur_mod = crate, module
+            segs = segs[1:]
+        elif head == "super":
+            cur_crate = crate
+            cur_mod = self._parent_of(crate, module)
+            segs = segs[1:]
+            while segs and segs[0] == "super" and cur_mod is not None:
+                cur_mod = self._parent_of(crate, cur_mod)
+                segs = segs[1:]
+            if cur_mod is None:
+                return ("err", "`super` escapes the crate root")
+        elif head in self.crates:
+            target = self.crates[head]
+            cur_crate, cur_mod = target, target.root
+            segs = segs[1:]
+        elif head in EXTERNAL_CRATES:
+            return ("external",)
+        elif head in module.submods:
+            cur_crate, cur_mod = crate, module
+        else:
+            # 2018 idiom: a bare head can also be a use-alias for a module
+            # (e.g. `use std::fmt;` then `fmt::Display`)
+            for use in module.uses:
+                if not use.is_glob and use.alias == head:
+                    res = self._resolve(crate, module, use.segments, False, seen)
+                    if res[0] == "ok" and res[1] == "mod" and len(segs) > 1:
+                        tcrate, tmod = res[2]
+                        return self._resolve(
+                            tcrate, tmod, ["self"] + segs[1:], is_glob, seen
+                        )
+                    return ("external",)
+            return ("external",)
+
+        for idx, seg in enumerate(segs):
+            last = idx == len(segs) - 1
+            hit = self._lookup_in_module(cur_crate, cur_mod, seg, seen)
+            if hit is None:
+                return (
+                    "err",
+                    f"`{seg}` not found in `{self._mod_name(cur_crate, cur_mod)}`",
+                )
+            if hit[0] == "external":
+                return ("external",)
+            kind, obj = hit[1], hit[2]
+            if last:
+                if is_glob and kind not in ("mod", "enum"):
+                    return ("err", f"glob import target `{seg}` is not a module")
+                return hit
+            if kind == "mod":
+                cur_crate, cur_mod = obj
+                continue
+            if kind == "enum" and idx == len(segs) - 2:
+                variant = segs[idx + 1]
+                if variant in obj.variants:
+                    return ("ok", "variant", (obj, variant))
+                return ("err", f"enum `{seg}` has no variant `{variant}`")
+            return ("err", f"`{seg}` is a {kind}, not a module")
+        return ("ok", "mod", (cur_crate, cur_mod))
+
+    def _parent_of(self, crate, module):
+        if not module.path:
+            return None
+        node = crate.root
+        for seg in module.path[:-1]:
+            node = node.submods.get(seg)
+            if node is None:
+                return None
+        return node
+
+    @staticmethod
+    def _mod_name(crate, module):
+        return crate.name + ("::" + "::".join(module.path) if module.path else "")
+
+    def _lookup_in_module(self, crate, module, name, seen):
+        if name in module.submods:
+            return ("ok", "mod", (crate, module.submods[name]))
+        if name in module.structs:
+            return ("ok", "struct", module.structs[name])
+        if name in module.enums:
+            return ("ok", "enum", module.enums[name])
+        if name in module.traits:
+            return ("ok", "trait", module.traits[name])
+        if name in module.types:
+            return ("ok", module.types[name][0], None)
+        if name in module.values:
+            return ("ok", module.values[name][0], None)
+        if name in module.macros:
+            return ("ok", "macro", None)
+        key = (id(module), name)
+        if key in seen:
+            return None
+        seen.add(key)
+        for use in module.uses:
+            if use.is_pub and not use.is_glob and use.alias == name:
+                res = self._resolve(crate, module, use.segments, False, seen)
+                if res[0] == "err":
+                    return None
+                if res[0] == "external":
+                    return ("external",)
+                return res
+        for use in module.uses:
+            if not (use.is_pub and use.is_glob):
+                continue
+            res = self._resolve(crate, module, use.segments, True, seen)
+            if res[0] == "ok" and res[1] == "mod":
+                tcrate, tmod = res[2]
+                hit = self._lookup_in_module(tcrate, tmod, name, seen)
+                if hit is not None:
+                    return hit
+            elif res[0] == "external":
+                return ("external",)
+        return None

@@ -1,0 +1,27 @@
+"""Finding record shared by all preflight checks."""
+
+
+class Finding:
+    __slots__ = ("check", "path", "line", "message", "severity")
+
+    def __init__(self, check, path, line, message, severity="error"):
+        self.check = check
+        self.path = path  # repo-relative string
+        self.line = line
+        self.message = message
+        self.severity = severity  # error | warning
+
+    def key(self):
+        return (self.path, self.line, self.check, self.message)
+
+    def to_dict(self):
+        return {
+            "check": self.check,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+            "severity": self.severity,
+        }
+
+    def render(self):
+        return f"{self.path}:{self.line}: [{self.check}] {self.message}"

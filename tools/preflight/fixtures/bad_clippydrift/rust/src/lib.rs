@@ -1,0 +1,2 @@
+#[allow(clippy::unused_self)]
+pub fn noop() {}

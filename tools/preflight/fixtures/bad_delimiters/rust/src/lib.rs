@@ -1,0 +1,3 @@
+pub fn broken() {
+    let _v = vec![1, 2;
+}

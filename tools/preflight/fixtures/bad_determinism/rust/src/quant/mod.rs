@@ -1,0 +1,14 @@
+use std::collections::HashMap;
+
+pub fn spread() -> f64 {
+    let mut m = HashMap::new();
+    m.insert(1u32, 0.5f64);
+    let mut s = 0.0;
+    for v in m.values() {
+        s += v;
+    }
+    for (_k, v) in &m {
+        s += v;
+    }
+    s
+}

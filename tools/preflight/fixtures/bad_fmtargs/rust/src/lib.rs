@@ -1,0 +1,3 @@
+pub fn log(x: u32) {
+    println!("{} and {}", x);
+}

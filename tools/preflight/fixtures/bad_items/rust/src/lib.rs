@@ -1,0 +1,9 @@
+pub mod a;
+
+pub use a::Nope;
+
+pub fn thing() {}
+
+pub fn thing(x: u32) -> u32 {
+    x
+}

@@ -1,0 +1,1 @@
+pub fn unreachable_from_any_root() {}

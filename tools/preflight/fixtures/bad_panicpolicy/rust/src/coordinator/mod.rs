@@ -1,0 +1,7 @@
+pub fn last(xs: &[u32]) -> u32 {
+    *xs.last().unwrap()
+}
+
+pub fn never() {
+    panic!("boom");
+}

@@ -1,0 +1,11 @@
+pub struct Config {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+pub fn make() -> Config {
+    Config {
+        alpha: 1.0,
+        betta: 2.0,
+    }
+}

@@ -1,0 +1,26 @@
+pub trait Rounder {
+    fn round(&self, x: f64) -> f64;
+    fn label(&self) -> &'static str {
+        "r"
+    }
+}
+
+pub struct Nearest;
+
+impl Rounder for Nearest {
+    fn round(&self, x: f64, y: f64) -> f64 {
+        x + y
+    }
+
+    fn quantize(&self) -> f64 {
+        0.0
+    }
+}
+
+pub struct Floor;
+
+impl Rounder for Floor {
+    fn label(&self) -> &'static str {
+        "floor"
+    }
+}

@@ -1,0 +1,14 @@
+/// Annotated deliberate backstop: allowed by the panic policy.
+pub fn head(xs: &[u32]) -> u32 {
+    // preflight: allow(panic, "caller guarantees non-empty input")
+    *xs.first().expect("non-empty")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_test_code_is_exempt() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

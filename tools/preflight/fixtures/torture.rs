@@ -1,0 +1,18 @@
+//! Lexer torture: constructs that break naive regex scanners.
+// r#"this raw string is inside a line comment"# and must not lex
+/* nested /* block */ comments */
+// preflight: allow(panic, "torture annotation collected from comments")
+pub fn torture<'a>(x: &'a str) -> usize {
+    let _c: char = 'a';
+    let _nl = '\n';
+    let _uni = '\u{1F600}';
+    let _quote = '\'';
+    let _byte = b'x';
+    let _raw = r#"outer "quoted {" inner"#;
+    let _fenced = r##"keeps r#"inner"# intact"##;
+    let _braw = br"raw bytes \ no escape";
+    let _esc = "escaped \" quote and {brace}";
+    let _lt: &'a str = x;
+    let _range = 0..x.len();
+    x.len()
+}

@@ -1,0 +1,308 @@
+r"""Comment/string/raw-string/char/lifetime-aware Rust lexer.
+
+Produces a flat token stream good enough for structural analysis — not a
+full grammar. Handles the constructs that break naive regex scanners:
+
+* nested block comments (``/* /* */ */`` — Rust block comments nest)
+* raw strings with arbitrary hash fences (``r#"…"#``, ``br##"…"##``)
+* raw identifiers (``r#type``)
+* char literals vs lifetimes (``'a'`` vs ``'a``, ``'\u{41}'``, ``'\''``)
+* byte strings / byte chars (``b"…"``, ``b'x'``)
+
+Line comments are not emitted as tokens, but ``// preflight: allow(...)``
+annotations inside them are collected into ``LexedFile.allows`` so policy
+checks can honour suppressions.
+"""
+
+import re
+
+IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+IDENT_CONT = IDENT_START | set("0123456789")
+
+# // preflight: allow(lint-name, "reason")  — reason optional.
+ALLOW_RE = re.compile(
+    r"preflight:\s*allow\(\s*([A-Za-z0-9_-]+)\s*(?:,\s*\"([^\"]*)\")?\s*\)"
+)
+
+KEYWORDS = frozenset(
+    """as async await break const continue crate dyn else enum extern false fn
+    for if impl in let loop match mod move mut pub ref return self Self static
+    struct super trait true type union unsafe use where while""".split()
+)
+
+
+class Token:
+    __slots__ = ("kind", "value", "line", "col")
+
+    def __init__(self, kind, value, line, col):
+        self.kind = kind  # ident | lifetime | char | str | num | punct
+        self.value = value
+        self.line = line
+        self.col = col
+
+    def __repr__(self):
+        return f"Token({self.kind!r}, {self.value!r}, L{self.line})"
+
+
+class LexedFile:
+    """Token stream plus side tables for one source file."""
+
+    def __init__(self, path, tokens, allows, errors):
+        self.path = path
+        self.tokens = tokens
+        # line -> [(lint, reason)]: preflight allow() annotations by line.
+        self.allows = allows
+        self.errors = errors  # [(line, message)] — unterminated constructs
+
+    def allowed(self, lint, line):
+        """True if `lint` is suppressed on `line` or the line above it."""
+        for ln in (line, line - 1):
+            for name, _reason in self.allows.get(ln, ()):
+                if name == lint:
+                    return True
+        return False
+
+
+# Multi-char puncts worth keeping whole; longest match first.
+_COMPOUND = ("::", "->", "=>", "..=", "...", "..")
+
+
+def lex(text, path="<memory>"):
+    toks = []
+    allows = {}
+    errors = []
+    i, n = 0, len(text)
+    line = 1
+
+    def bump_lines(segment):
+        nonlocal line
+        line += segment.count("\n")
+
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+
+        # ---- comments -------------------------------------------------
+        if c == "/" and i + 1 < n:
+            nxt = text[i + 1]
+            if nxt == "/":
+                end = text.find("\n", i)
+                if end == -1:
+                    end = n
+                body = text[i:end]
+                m = ALLOW_RE.search(body)
+                if m:
+                    allows.setdefault(line, []).append((m.group(1), m.group(2) or ""))
+                i = end
+                continue
+            if nxt == "*":
+                depth = 1
+                j = i + 2
+                while j < n and depth:
+                    if text.startswith("/*", j):
+                        depth += 1
+                        j += 2
+                    elif text.startswith("*/", j):
+                        depth -= 1
+                        j += 2
+                    else:
+                        j += 1
+                if depth:
+                    errors.append((line, "unterminated block comment"))
+                bump_lines(text[i:j])
+                i = j
+                continue
+
+        # ---- raw strings / raw idents / byte literals -----------------
+        if c in "rb":
+            m = _match_raw_or_byte(text, i)
+            if m is not None:
+                kind, j, err = m
+                if err:
+                    errors.append((line, err))
+                start_line = line
+                bump_lines(text[i:j])
+                toks.append(Token(kind, text[i:j], start_line, 0))
+                i = j
+                continue
+
+        # ---- identifiers ----------------------------------------------
+        if c in IDENT_START:
+            j = i + 1
+            while j < n and text[j] in IDENT_CONT:
+                j += 1
+            toks.append(Token("ident", text[i:j], line, i))
+            i = j
+            continue
+
+        # ---- numbers --------------------------------------------------
+        if c.isdigit():
+            j = _scan_number(text, i)
+            toks.append(Token("num", text[i:j], line, i))
+            i = j
+            continue
+
+        # ---- strings --------------------------------------------------
+        if c == '"':
+            j, err = _scan_string(text, i + 1)
+            if err:
+                errors.append((line, err))
+            start_line = line
+            bump_lines(text[i:j])
+            toks.append(Token("str", text[i:j], start_line, 0))
+            i = j
+            continue
+
+        # ---- char literal vs lifetime ---------------------------------
+        if c == "'":
+            tok, j, err = _scan_quote(text, i, line)
+            if err:
+                errors.append((line, err))
+            if tok is not None:
+                toks.append(tok)
+            bump_lines(text[i:j])
+            i = j
+            continue
+
+        # ---- punctuation ----------------------------------------------
+        for comp in _COMPOUND:
+            if text.startswith(comp, i):
+                toks.append(Token("punct", comp, line, i))
+                i += len(comp)
+                break
+        else:
+            toks.append(Token("punct", c, line, i))
+            i += 1
+
+    return LexedFile(path, toks, allows, errors)
+
+
+def _match_raw_or_byte(text, i):
+    """Match r"…", r#"…"#, br…, b"…", b'…', r#ident at position i.
+
+    Returns (kind, end_index, error | None) or None if this is a plain
+    identifier starting with r/b.
+    """
+    n = len(text)
+    j = i
+    if text[j] == "b":
+        j += 1
+        if j < n and text[j] == "r":
+            j += 1
+        elif j < n and text[j] == '"':
+            end, err = _scan_string(text, j + 1)
+            return ("str", end, err)
+        elif j < n and text[j] == "'":
+            # byte char b'x' / b'\n'
+            tok, end, err = _scan_quote(text, j, 0)
+            if tok is not None and tok.kind == "char":
+                return ("char", end, err)
+            return None
+        else:
+            return None
+    else:  # 'r'
+        j += 1
+
+    hashes = 0
+    while j < n and text[j] == "#":
+        hashes += 1
+        j += 1
+    if j < n and text[j] == '"':
+        fence = '"' + "#" * hashes
+        end = text.find(fence, j + 1)
+        if end == -1:
+            return ("str", n, "unterminated raw string")
+        return ("str", end + len(fence), None)
+    if hashes == 1 and j < n and text[j] in IDENT_START:
+        # raw identifier r#type
+        k = j
+        while k < n and text[k] in IDENT_CONT:
+            k += 1
+        return ("ident", k, None)
+    return None
+
+
+def _scan_number(text, i):
+    n = len(text)
+    j = i
+    if text.startswith(("0x", "0o", "0b"), i):
+        j = i + 2
+        while j < n and (text[j] in IDENT_CONT):
+            j += 1
+        return j
+    while j < n and (text[j].isdigit() or text[j] == "_"):
+        j += 1
+    # fractional part — but not the start of a `..` range
+    if j + 1 < n and text[j] == "." and text[j + 1].isdigit():
+        j += 1
+        while j < n and (text[j].isdigit() or text[j] == "_"):
+            j += 1
+    # exponent
+    if j < n and text[j] in "eE" and j + 1 < n and (text[j + 1].isdigit() or text[j + 1] in "+-"):
+        j += 2
+        while j < n and text[j].isdigit():
+            j += 1
+    # type suffix (f32, u64, usize, …)
+    while j < n and text[j] in IDENT_CONT:
+        j += 1
+    return j
+
+
+def _scan_string(text, j):
+    """Scan a double-quoted string body starting after the opening quote."""
+    n = len(text)
+    while j < n:
+        c = text[j]
+        if c == "\\":
+            j += 2
+            continue
+        if c == '"':
+            return j + 1, None
+        j += 1
+    return n, "unterminated string literal"
+
+
+def _scan_quote(text, i, line):
+    """Disambiguate char literal from lifetime at a `'`.
+
+    Returns (token | None, end_index, error | None).
+    """
+    n = len(text)
+    j = i + 1
+    if j >= n:
+        return None, n, "dangling quote"
+    c = text[j]
+    if c == "\\":
+        # escape: '\n', '\'', '\u{1F600}', '\x7f'
+        k = j + 1
+        if k < n and text[k] == "u":
+            close = text.find("}", k)
+            k = close + 1 if close != -1 else k + 1
+        else:
+            k += 1
+        if k < n and text[k] == "'":
+            return Token("char", text[i : k + 1], line, i), k + 1, None
+        return None, k, "malformed char escape"
+    if c in IDENT_START:
+        k = j
+        while k < n and text[k] in IDENT_CONT:
+            k += 1
+        if k < n and text[k] == "'":
+            # '<ident>' closed by a quote is a char literal ('a'); anything
+            # longer would be invalid Rust — still consume it as char-ish so
+            # the stream stays aligned.
+            return Token("char", text[i : k + 1], line, i), k + 1, None
+        return Token("lifetime", text[i:k], line, i), k, None
+    # punctuation char literal: '(' , ' ' , unicode
+    k = j + 1
+    if k < n and text[k] == "'":
+        return Token("char", text[i : k + 1], line, i), k + 1, None
+    # a lone quote we can't make sense of — emit as punct so balance checks
+    # don't silently desync
+    return Token("punct", "'", line, i), j, None

@@ -1,0 +1,75 @@
+"""CLI driver: load the repo, run all (or selected) checks, report.
+
+Exit status: 0 when clean, 1 when findings, 2 on usage errors. `--json`
+emits machine-readable findings for CI annotation.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+from .checks import ALL_CHECKS, by_name
+from .context import Context
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(
+        prog="preflight",
+        description="Toolchain-independent static analysis for the quip Rust tree.",
+    )
+    parser.add_argument(
+        "--root",
+        default=None,
+        help="repo root (default: auto-detected from this script's location)",
+    )
+    parser.add_argument("--json", action="store_true", help="emit findings as JSON")
+    parser.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated check names to run (default: all)",
+    )
+    parser.add_argument(
+        "--list", action="store_true", help="list available checks and exit"
+    )
+    args = parser.parse_args(argv)
+
+    checks = ALL_CHECKS
+    if args.list:
+        for c in checks:
+            print(f"{c.NAME:16s} {c.DESCRIPTION}")
+        return 0
+    if args.only:
+        table = by_name()
+        try:
+            checks = [table[name.strip()] for name in args.only.split(",") if name.strip()]
+        except KeyError as exc:
+            print(f"unknown check {exc}; --list shows the inventory", file=sys.stderr)
+            return 2
+
+    root = args.root
+    if root is None:
+        # tools/preflight/main.py -> repo root is two levels up from tools/
+        root = os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        )
+
+    ctx = Context(root)
+    findings = []
+    for check in checks:
+        findings.extend(check.run(ctx))
+    findings.sort(key=lambda f: f.key())
+
+    if args.json:
+        print(json.dumps([f.to_dict() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        ran = ", ".join(c.NAME for c in checks)
+        n_files = sum(1 for _ in ctx.lexed_files(include_vendor=True))
+        print(
+            f"preflight: {len(findings)} finding(s) across {n_files} file(s) "
+            f"[checks: {ran}]",
+            file=sys.stderr,
+        )
+    return 1 if findings else 0

@@ -1,0 +1,102 @@
+"""Locate `#[cfg(test)]` modules and `#[test]` functions in a token stream.
+
+Policy lints (panic-policy, determinism) exempt test code; this module
+computes the exempt line ranges once per file.
+"""
+
+MODIFIER_IDENTS = {"pub", "unsafe", "async", "const", "extern", "default"}
+
+
+def _skip_attr(tokens, i):
+    """tokens[i] is `#`. Return (attr_token_list, next_index) or (None, i)."""
+    n = len(tokens)
+    j = i + 1
+    if j < n and tokens[j].kind == "punct" and tokens[j].value == "!":
+        j += 1
+    if not (j < n and tokens[j].kind == "punct" and tokens[j].value == "["):
+        return None, i
+    depth = 1
+    j += 1
+    body = []
+    while j < n and depth:
+        t = tokens[j]
+        if t.kind == "punct":
+            if t.value == "[":
+                depth += 1
+            elif t.value == "]":
+                depth -= 1
+        if depth:
+            body.append(t)
+        j += 1
+    return body, j
+
+
+def _is_test_attr(body):
+    text = " ".join(t.value for t in body)
+    if text == "test" or text == "bench":
+        return True
+    if text.startswith("cfg") and "test" in text.split():
+        return True
+    return False
+
+
+def test_spans(tokens):
+    """Return [(start_line, end_line)] spans of test-only items."""
+    spans = []
+    n = len(tokens)
+    i = 0
+    while i < n:
+        t = tokens[i]
+        if not (t.kind == "punct" and t.value == "#"):
+            i += 1
+            continue
+        body, j = _skip_attr(tokens, i)
+        if body is None:
+            i += 1
+            continue
+        if not _is_test_attr(body):
+            i = j
+            continue
+        start_line = t.line
+        # skip any further attributes
+        while j < n and tokens[j].kind == "punct" and tokens[j].value == "#":
+            more, j2 = _skip_attr(tokens, j)
+            if more is None:
+                break
+            j = j2
+        # skip modifiers (pub(crate), unsafe, …)
+        while j < n and tokens[j].kind == "ident" and tokens[j].value in MODIFIER_IDENTS:
+            j += 1
+            if j < n and tokens[j].kind == "punct" and tokens[j].value == "(":
+                depth = 1
+                j += 1
+                while j < n and depth:
+                    if tokens[j].kind == "punct":
+                        if tokens[j].value == "(":
+                            depth += 1
+                        elif tokens[j].value == ")":
+                            depth -= 1
+                    j += 1
+        if j < n and tokens[j].kind == "ident" and tokens[j].value in ("mod", "fn"):
+            # find the body `{` then its matching `}` — signatures can
+            # contain (), <> and [] but not stray braces
+            while j < n and not (tokens[j].kind == "punct" and tokens[j].value in ("{", ";")):
+                j += 1
+            if j < n and tokens[j].value == "{":
+                depth = 1
+                j += 1
+                while j < n and depth:
+                    if tokens[j].kind == "punct":
+                        if tokens[j].value == "{":
+                            depth += 1
+                        elif tokens[j].value == "}":
+                            depth -= 1
+                    j += 1
+                end_line = tokens[j - 1].line if j - 1 < n else tokens[-1].line
+                spans.append((start_line, end_line))
+        i = j
+    return spans
+
+
+def in_spans(spans, line):
+    return any(a <= line <= b for a, b in spans)
