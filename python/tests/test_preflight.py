@@ -54,6 +54,7 @@ BAD_TREES = {
     "bad_determinism": ("determinism", 2, "iterates a hash collection"),
     "bad_panicpolicy": ("panic-policy", 2, "serving-layer non-test code"),
     "bad_clippydrift": ("clippy-drift", 1, "clippy::unused_self"),
+    "bad_metricnames": ("metric-names", 2, "metric name"),
 }
 
 
@@ -68,6 +69,16 @@ def test_bad_fixture_fires_only_its_check(tree):
     assert any(needle in f.message for f in findings), [
         f.message for f in findings
     ]
+
+
+def test_metricnames_flags_both_invalid_and_duplicate():
+    """The two findings are distinct failure modes: a non-snake_case name
+    and a re-registration of an already-seen name (even via a different
+    metric kind)."""
+    findings = run_checks(fixture("bad_metricnames"))
+    msgs = [f.message for f in findings]
+    assert any("not snake_case" in m for m in msgs), msgs
+    assert any("already registered" in m for m in msgs), msgs
 
 
 def test_every_check_has_a_firing_fixture():

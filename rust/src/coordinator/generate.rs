@@ -179,6 +179,19 @@ impl ActiveSeq {
         self.cache.len() + self.feed.len() <= self.prompt_len
     }
 
+    /// Prompt length this sequence was admitted with (span/report
+    /// attribution; the KV cache may hold fewer rows under prefix
+    /// sharing).
+    pub fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    /// Seconds from admission to the end of prefill (0.0 until the first
+    /// token is sampled).
+    pub fn prefill_seconds(&self) -> f64 {
+        self.prefill_seconds
+    }
+
     fn finish(&mut self, reason: FinishReason) {
         self.done = true;
         self.finish = Some(reason);

@@ -1,108 +1,148 @@
-//! Serving metrics: counters + streaming latency histograms (log-spaced
-//! buckets), all lock-free on the record path. Request latency and
-//! per-token (inter-step) latency get separate histograms; KV-pool
-//! gauges are copied in from [`crate::model::kvpool::PoolSnapshot`]
-//! after each scheduler step.
+//! Serving metrics: counters + streaming latency histograms, all
+//! lock-free on the record path, now registered in a central
+//! [`MetricRegistry`] (DESIGN.md §9) so the same state renders both as
+//! the legacy JSON `summary()` (key order preserved) and as Prometheus
+//! text exposition (the server's `metrics` protocol command). Request
+//! latency and per-token (inter-step) latency get separate histograms;
+//! KV-pool gauges are copied in from
+//! [`crate::model::kvpool::PoolSnapshot`] after each scheduler step.
+//!
+//! Histogram buckets are log-spaced (see [`crate::obs::registry`]):
+//! bucket 0 covers `[0, BASE)` seconds, bucket i (1 ≤ i < BUCKETS−1)
+//! covers `[BASE·GROWTH^(i−1), BASE·GROWTH^i)`, and the last bucket is
+//! the `+Inf` overflow; quantiles report the matched bucket's *upper*
+//! edge.
 
 use crate::model::kvpool::PoolSnapshot;
-use std::sync::atomic::{AtomicU64, Ordering};
-
-const BUCKETS: usize = 40;
-/// Bucket i covers [BASE·GROWTH^i, BASE·GROWTH^{i+1}) seconds.
-const BASE: f64 = 1e-5;
-const GROWTH: f64 = 1.45;
-
-fn bucket_index(seconds: f64) -> usize {
-    let mut idx = 0usize;
-    let mut bound = BASE;
-    while idx < BUCKETS - 1 && seconds >= bound {
-        bound *= GROWTH;
-        idx += 1;
-    }
-    idx
-}
-
-fn quantile_from(counts: &[u64], q: f64) -> f64 {
-    let total: u64 = counts.iter().sum();
-    if total == 0 {
-        return 0.0;
-    }
-    let target = (q * total as f64).ceil() as u64;
-    let mut acc = 0u64;
-    let mut bound = BASE;
-    for &c in counts.iter() {
-        acc += c;
-        if acc >= target {
-            return bound;
-        }
-        bound *= GROWTH;
-    }
-    bound
-}
+use crate::obs::registry::{Counter, Gauge, Histogram, MetricRegistry};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 pub struct Metrics {
-    pub requests: AtomicU64,
-    pub rejected: AtomicU64,
-    pub completed: AtomicU64,
-    pub tokens_out: AtomicU64,
+    registry: Arc<MetricRegistry>,
+    pub requests: Counter,
+    pub rejected: Counter,
+    pub completed: Counter,
+    pub tokens_out: Counter,
     /// Requests refused or dropped by admission control ("overloaded"):
     /// pool could not cover the prompt + reservation, or the wait in the
     /// admission queue timed out, or a stalled sequence was dropped.
-    pub shed: AtomicU64,
+    pub shed: Counter,
     /// Admitted-then-dropped sequences (stalled on an exhausted pool with
     /// no step progressing); a subset of `shed`.
-    pub evicted: AtomicU64,
+    pub evicted: Counter,
     /// Tokens pushed to clients as incremental stream frames.
-    pub streamed_tokens: AtomicU64,
+    pub streamed_tokens: Counter,
     /// Batched decode steps executed by the continuous-batching loop.
-    pub batched_steps: AtomicU64,
+    pub batched_steps: Counter,
     /// Sum of batch sizes over those steps (occupancy numerator).
-    pub batch_occupancy_sum: AtomicU64,
+    pub batch_occupancy_sum: Counter,
     /// Largest batch seen in a single step.
-    pub max_batch_seen: AtomicU64,
+    pub max_batch_seen: Gauge,
     // KV-pool gauges/counters, refreshed from the pool snapshot.
-    pub kv_pages_used: AtomicU64,
-    pub kv_pages_total: AtomicU64,
-    pub kv_pages_peak: AtomicU64,
-    pub cow_copies: AtomicU64,
-    pub prefix_lookups: AtomicU64,
-    pub prefix_hits: AtomicU64,
-    pub prefix_tokens_shared: AtomicU64,
-    pub pool_evictions: AtomicU64,
-    latency: [AtomicU64; BUCKETS],
-    latency_sum_us: AtomicU64,
-    tok_latency: [AtomicU64; BUCKETS],
-    tok_latency_sum_us: AtomicU64,
-    tok_latency_count: AtomicU64,
+    pub kv_pages_used: Gauge,
+    pub kv_pages_total: Gauge,
+    pub kv_pages_peak: Gauge,
+    pub cow_copies: Gauge,
+    pub prefix_lookups: Gauge,
+    pub prefix_hits: Gauge,
+    pub prefix_tokens_shared: Gauge,
+    pub pool_evictions: Gauge,
+    latency: Histogram,
+    tok_latency: Histogram,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
+        Metrics::with_registry(MetricRegistry::shared())
+    }
+
+    /// Register every serving metric in `registry`. All handles share
+    /// the registry's catalog, so `registry.render_prometheus()` covers
+    /// exactly the state `summary()` reports.
+    pub fn with_registry(registry: Arc<MetricRegistry>) -> Metrics {
+        let r = &registry;
         Metrics {
-            requests: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
-            tokens_out: AtomicU64::new(0),
-            shed: AtomicU64::new(0),
-            evicted: AtomicU64::new(0),
-            streamed_tokens: AtomicU64::new(0),
-            batched_steps: AtomicU64::new(0),
-            batch_occupancy_sum: AtomicU64::new(0),
-            max_batch_seen: AtomicU64::new(0),
-            kv_pages_used: AtomicU64::new(0),
-            kv_pages_total: AtomicU64::new(0),
-            kv_pages_peak: AtomicU64::new(0),
-            cow_copies: AtomicU64::new(0),
-            prefix_lookups: AtomicU64::new(0),
-            prefix_hits: AtomicU64::new(0),
-            prefix_tokens_shared: AtomicU64::new(0),
-            pool_evictions: AtomicU64::new(0),
-            latency: std::array::from_fn(|_| AtomicU64::new(0)),
-            latency_sum_us: AtomicU64::new(0),
-            tok_latency: std::array::from_fn(|_| AtomicU64::new(0)),
-            tok_latency_sum_us: AtomicU64::new(0),
-            tok_latency_count: AtomicU64::new(0),
+            requests: r.counter(
+                "quip_requests_total",
+                "Generation request lines received (control commands excluded).",
+            ),
+            rejected: r.counter(
+                "quip_rejected_total",
+                "Requests refused at intake (bounded queue overflow).",
+            ),
+            completed: r.counter(
+                "quip_completed_total",
+                "Requests answered with a full token list.",
+            ),
+            tokens_out: r.counter("quip_tokens_out_total", "Tokens generated across requests."),
+            shed: r.counter(
+                "quip_shed_total",
+                "Requests shed by admission control or mid-flight eviction.",
+            ),
+            evicted: r.counter(
+                "quip_evicted_total",
+                "Admitted sequences dropped while stalled on an exhausted pool.",
+            ),
+            streamed_tokens: r.counter(
+                "quip_streamed_tokens_total",
+                "Tokens pushed to clients as incremental stream frames.",
+            ),
+            batched_steps: r.counter(
+                "quip_batched_steps_total",
+                "Decode steps executed by the continuous-batching loop.",
+            ),
+            batch_occupancy_sum: r.counter(
+                "quip_batch_occupancy_sum",
+                "Sum of batch sizes over all decode steps.",
+            ),
+            max_batch_seen: r.gauge(
+                "quip_max_batch_seen",
+                "Largest batch advanced in a single decode step.",
+            ),
+            kv_pages_used: r.gauge("quip_kv_pages_used", "KV-pool pages currently allocated."),
+            kv_pages_total: r.gauge("quip_kv_pages_total", "KV-pool size in pages."),
+            kv_pages_peak: r.gauge("quip_kv_pages_peak", "High-water mark of allocated pages."),
+            cow_copies: r.gauge(
+                "quip_cow_copies",
+                "Copy-on-write page splits from shared prefixes.",
+            ),
+            prefix_lookups: r.gauge(
+                "quip_prefix_lookups",
+                "Admission-time prompt-prefix registry lookups.",
+            ),
+            prefix_hits: r.gauge(
+                "quip_prefix_hits",
+                "Prefix lookups that found shareable pages.",
+            ),
+            prefix_tokens_shared: r.gauge(
+                "quip_prefix_tokens_shared",
+                "Prompt tokens served from shared prefix pages.",
+            ),
+            pool_evictions: r.gauge(
+                "quip_pool_evictions",
+                "Page evictions performed by the pool itself.",
+            ),
+            latency: r.histogram(
+                "quip_request_latency_seconds",
+                "End-to-end request latency (admission to final frame).",
+            ),
+            tok_latency: r.histogram(
+                "quip_token_latency_seconds",
+                "Inter-token interval per batched decode step.",
+            ),
+            registry: Arc::clone(&registry),
         }
+    }
+
+    /// The registry these metrics are registered in (for exposition).
+    pub fn registry(&self) -> &Arc<MetricRegistry> {
+        &self.registry
+    }
+
+    /// Prometheus text exposition of every registered metric.
+    pub fn render_prometheus(&self) -> String {
+        self.registry.render_prometheus()
     }
 
     /// Record one continuous-batching step that advanced `size` sequences.
@@ -126,54 +166,34 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, seconds: f64) {
-        self.latency[bucket_index(seconds)].fetch_add(1, Ordering::Relaxed);
-        self.latency_sum_us
-            .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.latency.record(seconds);
     }
 
     /// Record one inter-token interval (one scheduler step's duration,
     /// from the perspective of every sequence it advanced).
     pub fn record_token_latency(&self, seconds: f64) {
-        self.tok_latency[bucket_index(seconds)].fetch_add(1, Ordering::Relaxed);
-        self.tok_latency_sum_us
-            .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
-        self.tok_latency_count.fetch_add(1, Ordering::Relaxed);
+        self.tok_latency.record(seconds);
     }
 
     /// Approximate request-latency quantile from the histogram.
     pub fn latency_quantile(&self, q: f64) -> f64 {
-        let counts: Vec<u64> = self
-            .latency
-            .iter()
-            .map(|c| c.load(Ordering::Relaxed))
-            .collect();
-        quantile_from(&counts, q)
+        self.latency.quantile(q)
     }
 
     /// Approximate per-token latency quantile from the histogram.
     pub fn token_latency_quantile(&self, q: f64) -> f64 {
-        let counts: Vec<u64> = self
-            .tok_latency
-            .iter()
-            .map(|c| c.load(Ordering::Relaxed))
-            .collect();
-        quantile_from(&counts, q)
+        self.tok_latency.quantile(q)
     }
 
+    /// Mean request latency over *recorded latency samples* (the
+    /// histogram's own count — not the `completed` counter, so a latency
+    /// recorded for a shed/errored request can never skew the mean).
     pub fn mean_latency(&self) -> f64 {
-        let n = self.completed.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        self.latency.mean_seconds()
     }
 
     pub fn mean_token_latency(&self) -> f64 {
-        let n = self.tok_latency_count.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.tok_latency_sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        self.tok_latency.mean_seconds()
     }
 
     /// Fraction of admission lookups that found a shared prompt prefix.
@@ -201,22 +221,23 @@ impl Metrics {
 
     pub fn summary(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        let g = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        let c = |a: &Counter| Json::Num(a.load(Ordering::Relaxed) as f64);
+        let g = |a: &Gauge| Json::Num(a.load(Ordering::Relaxed) as f64);
         let mut j = Json::obj();
-        j.set("requests", g(&self.requests));
-        j.set("rejected", g(&self.rejected));
-        j.set("completed", g(&self.completed));
-        j.set("tokens_out", g(&self.tokens_out));
-        j.set("shed", g(&self.shed));
-        j.set("evicted", g(&self.evicted));
-        j.set("streamed_tokens", g(&self.streamed_tokens));
+        j.set("requests", c(&self.requests));
+        j.set("rejected", c(&self.rejected));
+        j.set("completed", c(&self.completed));
+        j.set("tokens_out", c(&self.tokens_out));
+        j.set("shed", c(&self.shed));
+        j.set("evicted", c(&self.evicted));
+        j.set("streamed_tokens", c(&self.streamed_tokens));
         j.set("mean_latency_s", Json::Num(self.mean_latency()));
         j.set("p50_s", Json::Num(self.latency_quantile(0.5)));
         j.set("p95_s", Json::Num(self.latency_quantile(0.95)));
         j.set("mean_tok_latency_s", Json::Num(self.mean_token_latency()));
         j.set("p50_tok_s", Json::Num(self.token_latency_quantile(0.5)));
         j.set("p95_tok_s", Json::Num(self.token_latency_quantile(0.95)));
-        j.set("batched_steps", g(&self.batched_steps));
+        j.set("batched_steps", c(&self.batched_steps));
         j.set("mean_batch", Json::Num(self.mean_batch_size()));
         j.set("max_batch", g(&self.max_batch_seen));
         j.set("kv_pages_used", g(&self.kv_pages_used));
@@ -262,6 +283,21 @@ mod tests {
             m.record_latency(0.01);
         }
         assert!((m.mean_latency() - 0.01).abs() < 1e-3);
+    }
+
+    #[test]
+    fn mean_latency_independent_of_completed_counter() {
+        // A latency recorded for a shed/errored request (no `completed`
+        // increment) must not skew the mean: the denominator is the
+        // histogram's own sample count.
+        let m = Metrics::new();
+        m.record_latency(0.02);
+        m.record_latency(0.04);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 0);
+        assert!((m.mean_latency() - 0.03).abs() < 1e-6);
+        // And extra completions without latency samples don't dilute it.
+        m.completed.fetch_add(100, Ordering::Relaxed);
+        assert!((m.mean_latency() - 0.03).abs() < 1e-6);
     }
 
     #[test]
@@ -323,5 +359,43 @@ mod tests {
         assert_eq!(j.req_f64("kv_pages_total").unwrap(), 64.0);
         assert_eq!(j.req_f64("cow_copies").unwrap(), 3.0);
         assert_eq!(j.req_f64("pool_evictions").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn prometheus_exposition_covers_every_summary_metric() {
+        use crate::obs::registry::validate_prometheus_text;
+        let m = Metrics::new();
+        m.requests.fetch_add(2, Ordering::Relaxed);
+        m.record_latency(0.01);
+        m.record_token_latency(1e-3);
+        m.record_batch(4);
+        let text = m.render_prometheus();
+        validate_prometheus_text(&text).unwrap();
+        for name in [
+            "quip_requests_total",
+            "quip_rejected_total",
+            "quip_completed_total",
+            "quip_tokens_out_total",
+            "quip_shed_total",
+            "quip_evicted_total",
+            "quip_streamed_tokens_total",
+            "quip_batched_steps_total",
+            "quip_batch_occupancy_sum",
+            "quip_max_batch_seen",
+            "quip_kv_pages_used",
+            "quip_kv_pages_total",
+            "quip_kv_pages_peak",
+            "quip_cow_copies",
+            "quip_prefix_lookups",
+            "quip_prefix_hits",
+            "quip_prefix_tokens_shared",
+            "quip_pool_evictions",
+            "quip_request_latency_seconds",
+            "quip_token_latency_seconds",
+        ] {
+            assert!(text.contains(&format!("# TYPE {name} ")), "missing {name}");
+        }
+        assert!(text.contains("quip_requests_total 2"));
+        assert!(text.contains("quip_request_latency_seconds_count 1"));
     }
 }

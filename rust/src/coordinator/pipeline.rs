@@ -19,6 +19,7 @@ use crate::linalg::Mat;
 use crate::model::quantized::QuantizedModel;
 use crate::model::weights::Checkpoint;
 use crate::model::{LinearSpec, Transformer};
+use crate::obs::trace::TraceSink;
 use crate::quant::packed::QuantizedLayer;
 use crate::quant::{quantize_layer_with, QuantConfig, Rounder};
 use crate::util::json::Json;
@@ -281,6 +282,7 @@ pub struct QuantSession<'a> {
     cancelled: bool,
     t0: Instant,
     observer: Option<Box<dyn FnMut(&PipelineEvent) -> PipelineControl + 'a>>,
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl<'a> QuantSession<'a> {
@@ -295,6 +297,7 @@ impl<'a> QuantSession<'a> {
             cancelled: false,
             t0: Instant::now(),
             observer: None,
+            trace: None,
             ck,
             cfg,
         })
@@ -315,6 +318,16 @@ impl<'a> QuantSession<'a> {
     /// the registry). Defaults to `cfg.quant.method`'s rounder.
     pub fn with_rounder(mut self, rounder: Arc<dyn Rounder>) -> Self {
         self.rounder = rounder;
+        self
+    }
+
+    /// Attach an observability trace sink (DESIGN.md §9). Each layer's
+    /// stage breakdown is bridged onto Chrome-trace spans — one
+    /// `tid` lane per block, cat `"quantize"` — and non-PD damping
+    /// escalations become instant markers, so a shared sink gives the
+    /// pipeline and the serve path one timeline.
+    pub fn with_trace(mut self, sink: Arc<TraceSink>) -> Self {
+        self.trace = Some(sink);
         self
     }
 
@@ -475,6 +488,17 @@ impl<'a> QuantSession<'a> {
                     "layer {}: Hessian not PD at configured damping; escalated to α = {alpha}",
                     spec.name
                 );
+                if let Some(trace) = &self.trace {
+                    trace.instant(
+                        block as u64,
+                        "hessian_damped",
+                        "quantize",
+                        vec![
+                            ("layer".to_string(), Json::Str(spec.name.clone())),
+                            ("alpha".to_string(), Json::Num(alpha)),
+                        ],
+                    );
+                }
                 let c = self.emit(PipelineEvent::HessianDamped {
                     block,
                     name: spec.name.clone(),
@@ -483,6 +507,29 @@ impl<'a> QuantSession<'a> {
                 if c == PipelineControl::Stop {
                     control = PipelineControl::Stop;
                 }
+            }
+            if let Some(trace) = &self.trace {
+                // Bridge the stage breakdown onto the shared timeline as
+                // synthetic back-to-back spans ending "now" (the work
+                // already happened on pool threads; only the durations
+                // are meaningful, exactly as in LayerStageTimings). One
+                // tid lane per block keeps concurrent layers readable.
+                let end = trace.now_us();
+                let us = |s: f64| (s.max(0.0) * 1e6) as u64;
+                let (acc, fac, rnd) = (
+                    us(accumulate_seconds),
+                    us(lq.stages.factorize_seconds),
+                    us(lq.stages.round_seconds),
+                );
+                let name_arg =
+                    |n: &str| vec![("layer".to_string(), Json::Str(n.to_string()))];
+                let tid = block as u64;
+                let round_start = end.saturating_sub(rnd);
+                let fac_start = round_start.saturating_sub(fac);
+                let acc_start = fac_start.saturating_sub(acc);
+                trace.complete(tid, "accumulate", "quantize", acc_start, acc, name_arg(&spec.name));
+                trace.complete(tid, "factorize", "quantize", fac_start, fac, name_arg(&spec.name));
+                trace.complete(tid, "round", "quantize", round_start, rnd, name_arg(&spec.name));
             }
             let c = self.emit(PipelineEvent::LayerStageTimings {
                 block,
@@ -950,6 +997,47 @@ mod tests {
             .position(|e| matches!(e, PipelineEvent::LayerDone { .. }))
             .unwrap();
         assert!(damped_at < done_at, "warning precedes LayerDone");
+    }
+
+    #[test]
+    fn quantize_spans_land_in_shared_trace_sink() {
+        // The pipeline bridges its stage timings onto the same span API
+        // the serving path uses: a shared TraceSink collects per-layer
+        // accumulate/factorize/round spans in cat "quantize", one tid
+        // lane per block, and exports well-formed Chrome trace JSON.
+        let (ck, calib, pcfg) = tiny_setup();
+        let sink = TraceSink::shared(4096);
+        let (qm, _report) = QuantSession::new(&ck, pcfg)
+            .unwrap()
+            .with_trace(Arc::clone(&sink))
+            .run(&calib)
+            .unwrap();
+        let json = Json::parse(&sink.to_chrome_json().to_string()).unwrap();
+        let events = match json.get("traceEvents").unwrap() {
+            Json::Arr(a) => a,
+            other => panic!("traceEvents not an array: {other:?}"),
+        };
+        // Three spans per quantized layer, every one in cat "quantize"
+        // with a layer arg, and block tids cover every block.
+        let spans: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("cat").and_then(|c| c.as_str()) == Some("quantize"))
+            .collect();
+        assert_eq!(spans.len(), 3 * qm.layers.len());
+        let mut tids: Vec<f64> = Vec::new();
+        for s in &spans {
+            let name = s.get("name").and_then(|n| n.as_str()).unwrap();
+            assert!(
+                matches!(name, "accumulate" | "factorize" | "round"),
+                "unexpected span {name}"
+            );
+            assert!(s.get("args").unwrap().get("layer").is_some());
+            let tid = s.get("tid").and_then(|t| t.as_f64()).unwrap();
+            if !tids.contains(&tid) {
+                tids.push(tid);
+            }
+        }
+        assert_eq!(tids.len(), ck.config.n_layers, "one tid lane per block");
     }
 
     #[test]

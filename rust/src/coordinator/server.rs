@@ -22,6 +22,16 @@
 //! under overload requests queue briefly and are then shed with a clean
 //! "overloaded" error instead of the pool OOMing. The batched linears
 //! parallelize internally across the `util::threadpool` substrate.
+//!
+//! Observability (DESIGN.md §9): besides request lines, a connection may
+//! send three bare control commands — `metrics` (Prometheus text
+//! exposition, terminated by a `# EOF` line), `stats` (the JSON metrics
+//! summary as one line) and `healthz` (one JSON line, `{"ok": true, …}`).
+//! Every request gets a trace id at admission and the scheduler records
+//! spans (admission-wait, prefill, per-step decode, stream flush,
+//! request) plus shed/eviction instants into the server's
+//! [`TraceSink`]; `ServerConfig::trace_out` flushes them as Chrome
+//! trace-event JSON on shutdown.
 
 use super::batcher::{Batcher, Pending};
 use super::generate::{step_batch, ActiveSeq, FinishReason, GenParams};
@@ -30,6 +40,7 @@ use crate::engine::native::{FpLinears, LinearOps, QuantLinears};
 use crate::model::quantized::QuantizedModel;
 use crate::model::transformer::KvCache;
 use crate::model::{KvPool, SharedKvPool, Transformer, DEFAULT_PAGE_TOKENS};
+use crate::obs::trace::{take_stage, TraceSink, DEFAULT_TRACE_CAPACITY};
 use crate::util::json::Json;
 use crate::util::sync::lock_unpoisoned;
 use std::collections::VecDeque;
@@ -65,6 +76,13 @@ pub struct ServerConfig {
     /// How long a request may sit in the admission queue waiting for
     /// pool pages before it is shed with "overloaded".
     pub admit_timeout: Duration,
+    /// Span sink to trace into. `None` gives the server its own
+    /// (default-capacity) sink; pass a shared one to merge serve spans
+    /// with e.g. quantize-pipeline spans on a single timeline.
+    pub trace: Option<Arc<TraceSink>>,
+    /// Write the Chrome trace-event JSON here on shutdown (`quip serve
+    /// --trace-out`). `None` disables the flush.
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -79,6 +97,8 @@ impl Default for ServerConfig {
             page_tokens: DEFAULT_PAGE_TOKENS,
             reserve_tokens: 32,
             admit_timeout: Duration::from_secs(2),
+            trace: None,
+            trace_out: None,
         }
     }
 }
@@ -116,6 +136,10 @@ struct Job {
 pub struct Server {
     pub addr: std::net::SocketAddr,
     pub metrics: Arc<Metrics>,
+    /// Span sink the scheduler traces into (shared with the config's
+    /// sink when one was provided).
+    pub trace: Arc<TraceSink>,
+    trace_out: Option<String>,
     stop: Arc<AtomicBool>,
     batcher: Arc<Batcher<Job>>,
     threads: Vec<std::thread::JoinHandle<()>>,
@@ -132,6 +156,11 @@ impl Server {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let metrics = Arc::new(Metrics::new());
+        let trace = cfg
+            .trace
+            .clone()
+            .unwrap_or_else(|| TraceSink::shared(DEFAULT_TRACE_CAPACITY));
+        let started = Instant::now();
         let stop = Arc::new(AtomicBool::new(false));
         let batcher = Arc::new(Batcher::<Job>::new(
             cfg.max_batch,
@@ -161,7 +190,9 @@ impl Server {
                             let next_id = Arc::clone(&next_id);
                             let stop = Arc::clone(&stop);
                             std::thread::spawn(move || {
-                                handle_connection(stream, &batcher, &metrics, &next_id, &stop);
+                                handle_connection(
+                                    stream, &batcher, &metrics, &next_id, &stop, started,
+                                );
                             });
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -179,6 +210,7 @@ impl Server {
             let stop = Arc::clone(&stop);
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
+            let trace = Arc::clone(&trace);
             let max_batch = cfg.max_batch.max(1);
             let page_tokens = cfg.page_tokens.max(1);
             let pool: Option<SharedKvPool> = if cfg.paged {
@@ -210,7 +242,7 @@ impl Server {
                     let stopping = stop.load(Ordering::SeqCst);
                     if stopping {
                         for p in waiting.drain(..) {
-                            shed(p, &metrics, "overloaded: shutting down");
+                            shed(p, &metrics, &trace, "overloaded: shutting down");
                         }
                         if active.is_empty() {
                             break;
@@ -238,7 +270,7 @@ impl Server {
                     // timeout sheds it.
                     while !stopping && active.len() < max_batch && !waiting.is_empty() {
                         let Some(p) = waiting.pop_front() else { break };
-                        match admit(&model, pool.as_ref(), reserve_tokens, p) {
+                        match admit(&model, pool.as_ref(), reserve_tokens, p, &trace) {
                             Admit::Taken(seq, slot) => {
                                 active.push(seq);
                                 slots.push(slot);
@@ -246,7 +278,7 @@ impl Server {
                             Admit::Answered => {}
                             Admit::Blocked(p) => {
                                 if p.enqueued.elapsed() >= admit_timeout {
-                                    shed(p, &metrics, "overloaded");
+                                    shed(p, &metrics, &trace, "overloaded");
                                 } else {
                                     waiting.push_front(p);
                                 }
@@ -277,7 +309,23 @@ impl Server {
                     if report.stepped > 0 {
                         // One step = one inter-token interval for every
                         // sequence it advanced.
-                        metrics.record_token_latency(t0.elapsed().as_secs_f64());
+                        let step_s = t0.elapsed().as_secs_f64();
+                        metrics.record_token_latency(step_s);
+                        // The batched kernels credited their GEMM time to
+                        // the stage ledger on this (calling) thread; the
+                        // step span carries the linear-vs-rest split.
+                        let linear_s = take_stage("decode_linear");
+                        trace.complete(
+                            0,
+                            "decode_step",
+                            "serve",
+                            trace.ts_of(t0),
+                            (step_s * 1e6) as u64,
+                            vec![
+                                ("batch".into(), Json::Num(report.stepped as f64)),
+                                ("linear_s".into(), Json::Num(linear_s)),
+                            ],
+                        );
                     }
                     if let Some(pool) = &pool {
                         metrics.record_pool(&lock_unpoisoned(pool).snapshot());
@@ -287,15 +335,45 @@ impl Server {
                         // pool: no step will ever free pages. Shed the
                         // youngest stalled sequence (least work lost) so
                         // the rest can make progress.
-                        drop_youngest_stalled(&mut active, &mut slots, &metrics);
+                        drop_youngest_stalled(&mut active, &mut slots, &metrics, &trace);
                     }
                     let mut i = 0;
                     while i < active.len() {
+                        if !slots[i].prefill_traced && !active[i].prefilling() {
+                            slots[i].prefill_traced = true;
+                            let now = trace.now_us();
+                            trace.complete(
+                                slots[i].trace_id,
+                                "prefill",
+                                "serve",
+                                slots[i].admitted_us,
+                                now.saturating_sub(slots[i].admitted_us),
+                                vec![(
+                                    "prompt_tokens".into(),
+                                    Json::Num(active[i].prompt_len() as f64),
+                                )],
+                            );
+                        }
+                        let sent_before = slots[i].sent;
+                        let flush_t0 = trace.now_us();
                         flush_stream(&mut slots[i], &active[i], &metrics);
+                        if slots[i].sent > sent_before {
+                            trace.complete(
+                                slots[i].trace_id,
+                                "stream_flush",
+                                "serve",
+                                flush_t0,
+                                trace.now_us().saturating_sub(flush_t0),
+                                vec![(
+                                    "frames".into(),
+                                    Json::Num((slots[i].sent - sent_before) as f64),
+                                )],
+                            );
+                        }
                         if active[i].done {
                             let seq = active.swap_remove(i);
                             let slot = slots.swap_remove(i);
-                            finish_job(slot, seq, &metrics);
+                            finish_job(slot, seq, &metrics, &trace);
                         } else {
                             i += 1;
                         }
@@ -307,6 +385,8 @@ impl Server {
         Ok(Server {
             addr,
             metrics,
+            trace,
+            trace_out: cfg.trace_out,
             stop,
             batcher,
             threads,
@@ -318,6 +398,12 @@ impl Server {
         self.batcher.close();
         for t in self.threads.drain(..) {
             let _ = t.join();
+        }
+        // Flush the trace once, after the scheduler stopped recording.
+        if let Some(path) = self.trace_out.take() {
+            if let Err(e) = self.trace.write_chrome_trace(&path) {
+                crate::log_warn!("trace flush to {path} failed: {e}");
+            }
         }
     }
 }
@@ -334,6 +420,7 @@ fn handle_connection(
     metrics: &Metrics,
     next_id: &AtomicU64,
     stop: &AtomicBool,
+    started: Instant,
 ) {
     let _ = stream.set_nonblocking(false);
     // Idle read timeout so handler threads drain on shutdown even if a
@@ -367,6 +454,14 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
+        // Bare control commands bypass request accounting entirely.
+        if let Some(resp) = control_response(line.trim(), metrics, started) {
+            let mut out: &TcpStream = &stream;
+            if out.write_all(resp.as_bytes()).is_err() {
+                return;
+            }
+            continue;
+        }
         metrics.requests.fetch_add(1, Ordering::Relaxed);
         let parsed = parse_request(&line);
         let (prompt, params, req_id, stream_resp) = match parsed {
@@ -394,6 +489,31 @@ fn handle_connection(
                 let _ = respond_err(&s, req_id, "overloaded");
             }
         }
+    }
+}
+
+/// Observability protocol commands: a bare `metrics`, `stats` or
+/// `healthz` line gets an immediate response instead of being parsed as
+/// a generation request. `metrics` answers with the full Prometheus
+/// exposition (multi-line, terminated by `# EOF`); the other two answer
+/// with one JSON line.
+fn control_response(cmd: &str, metrics: &Metrics, started: Instant) -> Option<String> {
+    match cmd {
+        "metrics" => Some(metrics.render_prometheus()),
+        "stats" => {
+            let mut s = metrics.summary().to_string();
+            s.push('\n');
+            Some(s)
+        }
+        "healthz" => {
+            let mut o = Json::obj();
+            o.set("ok", Json::Bool(true));
+            o.set("uptime_s", Json::Num(started.elapsed().as_secs_f64()));
+            let mut s = o.to_string();
+            s.push('\n');
+            Some(s)
+        }
+        _ => None,
     }
 }
 
@@ -428,6 +548,12 @@ struct Slot {
     stream: bool,
     /// Generated tokens already pushed as stream frames.
     sent: usize,
+    /// Trace id minted at admission (the Chrome `tid` lane).
+    trace_id: u64,
+    /// Admission timestamp on the sink's timeline (prefill span start).
+    admitted_us: u64,
+    /// The prefill span has been recorded.
+    prefill_traced: bool,
 }
 
 /// Outcome of trying to admit the waiting-queue head.
@@ -449,6 +575,7 @@ fn admit(
     pool: Option<&SharedKvPool>,
     reserve_tokens: usize,
     p: Pending<Job>,
+    trace: &TraceSink,
 ) -> Admit {
     if p.payload.prompt.len() > model.cfg.max_seq {
         if let Some(s) = lock_unpoisoned(&p.payload.resp).take() {
@@ -467,6 +594,22 @@ fn admit(
         }
     };
     let job = p.payload;
+    // Trace id minted exactly at admission; the admission-wait span
+    // covers receipt → here (queueing + blocked-head time).
+    let trace_id = trace.mint_trace();
+    let admitted_us = trace.now_us();
+    let received_us = trace.ts_of(job.received);
+    trace.complete(
+        trace_id,
+        "admission_wait",
+        "serve",
+        received_us,
+        admitted_us.saturating_sub(received_us),
+        vec![
+            ("id".into(), Json::Num(p.id as f64)),
+            ("prompt_tokens".into(), Json::Num(job.prompt.len() as f64)),
+        ],
+    );
     let seq = ActiveSeq::with_cache(model, &job.prompt, job.params, cache);
     Admit::Taken(
         seq,
@@ -476,13 +619,23 @@ fn admit(
             received: job.received,
             stream: job.stream,
             sent: 0,
+            trace_id,
+            admitted_us,
+            prefill_traced: false,
         },
     )
 }
 
 /// Refuse a queued request with a protocol-level error.
-fn shed(p: Pending<Job>, metrics: &Metrics, msg: &str) {
+fn shed(p: Pending<Job>, metrics: &Metrics, trace: &TraceSink, msg: &str) {
     metrics.shed.fetch_add(1, Ordering::Relaxed);
+    // Never admitted, so no trace id: shed instants land on lane 0.
+    trace.instant(
+        0,
+        "shed",
+        "serve",
+        vec![("id".into(), Json::Num(p.id as f64))],
+    );
     if let Some(s) = lock_unpoisoned(&p.payload.resp).take() {
         let _ = respond_err(&s, p.id, msg);
     }
@@ -492,7 +645,12 @@ fn shed(p: Pending<Job>, metrics: &Metrics, msg: &str) {
 /// pool. Drop the youngest stalled sequence (least decode work lost,
 /// FIFO fairness for the old ones) and answer it "overloaded"; its
 /// released pages unblock the rest next step.
-fn drop_youngest_stalled(active: &mut Vec<ActiveSeq>, slots: &mut Vec<Slot>, metrics: &Metrics) {
+fn drop_youngest_stalled(
+    active: &mut Vec<ActiveSeq>,
+    slots: &mut Vec<Slot>,
+    metrics: &Metrics,
+    trace: &TraceSink,
+) {
     let mut victim: Option<usize> = None;
     for (i, s) in active.iter().enumerate() {
         if s.done || !s.stalled {
@@ -511,6 +669,12 @@ fn drop_youngest_stalled(active: &mut Vec<ActiveSeq>, slots: &mut Vec<Slot>, met
     let slot = slots.swap_remove(i);
     metrics.shed.fetch_add(1, Ordering::Relaxed);
     metrics.evicted.fetch_add(1, Ordering::Relaxed);
+    trace.instant(
+        slot.trace_id,
+        "evicted",
+        "serve",
+        vec![("id".into(), Json::Num(slot.id as f64))],
+    );
     if let Some(s) = lock_unpoisoned(&slot.resp).take() {
         let _ = respond_err(&s, slot.id, "overloaded: kv pool exhausted");
     }
@@ -545,7 +709,7 @@ fn flush_stream(slot: &mut Slot, seq: &ActiveSeq, metrics: &Metrics) {
 }
 
 /// Respond to a finished sequence and record its serving metrics.
-fn finish_job(slot: Slot, seq: ActiveSeq, metrics: &Metrics) {
+fn finish_job(slot: Slot, seq: ActiveSeq, metrics: &Metrics, trace: &TraceSink) {
     let latency = slot.received.elapsed().as_secs_f64();
     metrics.completed.fetch_add(1, Ordering::Relaxed);
     metrics
@@ -553,6 +717,21 @@ fn finish_job(slot: Slot, seq: ActiveSeq, metrics: &Metrics) {
         .fetch_add(seq.tokens.len() as u64, Ordering::Relaxed);
     metrics.record_latency(latency);
     let reason = seq.finish.unwrap_or(FinishReason::Length);
+    trace.complete(
+        slot.trace_id,
+        "request",
+        "serve",
+        trace.ts_of(slot.received),
+        (latency * 1e6) as u64,
+        vec![
+            ("id".into(), Json::Num(slot.id as f64)),
+            ("tokens".into(), Json::Num(seq.tokens.len() as f64)),
+            (
+                "finish_reason".into(),
+                Json::Str(reason.as_str().to_string()),
+            ),
+        ],
+    );
     if let Some(s) = lock_unpoisoned(&slot.resp).take() {
         let mut o = Json::obj();
         o.set("id", Json::Num(slot.id as f64));
@@ -673,6 +852,45 @@ impl Client {
             anyhow::ensure!(idx == streamed.len(), "stream frame out of order");
             streamed.push(tok);
         }
+    }
+
+    /// Scrape the server's Prometheus exposition (`metrics` command);
+    /// reads until the terminating `# EOF` line (included).
+    pub fn scrape_metrics(&mut self) -> crate::Result<String> {
+        self.stream.write_all(b"metrics\n")?;
+        let mut text = String::new();
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line)?;
+            anyhow::ensure!(n > 0, "connection closed mid-scrape");
+            let done = line.trim_end() == "# EOF";
+            text.push_str(&line);
+            if done {
+                return Ok(text);
+            }
+        }
+    }
+
+    /// Fetch the JSON metrics summary (`stats` command).
+    pub fn stats(&mut self) -> crate::Result<Json> {
+        self.stream.write_all(b"stats\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line)
+    }
+
+    /// Liveness probe (`healthz` command): Ok(uptime seconds) when the
+    /// server answers `{"ok": true, …}`.
+    pub fn healthz(&mut self) -> crate::Result<f64> {
+        self.stream.write_all(b"healthz\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let j = Json::parse(&line)?;
+        anyhow::ensure!(
+            j.get("ok").and_then(|x| x.as_bool()).unwrap_or(false),
+            "healthz not ok: {line}"
+        );
+        j.req_f64("uptime_s")
     }
 }
 
@@ -865,6 +1083,78 @@ mod tests {
         let (tokens, _) = client.request(&[1, 2], 2).unwrap();
         assert_eq!(tokens.len(), 2);
         server.shutdown();
+    }
+
+    #[test]
+    fn metrics_stats_healthz_commands() {
+        use crate::obs::registry::validate_prometheus_text;
+        let model = tiny_model();
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, EngineKind::auto(None), cfg).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let (tokens, _) = client.request(&[1, 2, 3], 4).unwrap();
+        assert_eq!(tokens.len(), 4);
+        // healthz: one JSON line, ok + uptime.
+        assert!(client.healthz().unwrap() >= 0.0);
+        // stats: the JSON summary, same content as server.metrics.summary().
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.req_f64("completed").unwrap(), 1.0);
+        assert!(stats.req_f64("tokens_out").unwrap() >= 4.0);
+        // metrics: valid Prometheus exposition covering the summary state.
+        let text = client.scrape_metrics().unwrap();
+        validate_prometheus_text(&text).unwrap();
+        assert!(text.contains("quip_completed_total 1"));
+        assert!(text.contains("# TYPE quip_request_latency_seconds histogram"));
+        assert!(text.contains("quip_request_latency_seconds_count 1"));
+        // Control commands are not generation requests.
+        assert_eq!(server.metrics.requests.load(Ordering::Relaxed), 1);
+        // The connection still serves generation afterwards.
+        let (t2, _) = client.request(&[4, 5], 2).unwrap();
+        assert_eq!(t2.len(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn trace_out_writes_chrome_trace_on_shutdown() {
+        let model = tiny_model();
+        let path = std::env::temp_dir().join(format!(
+            "quip_serve_trace_{}.json",
+            std::process::id()
+        ));
+        let path_s = path.to_string_lossy().to_string();
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            trace_out: Some(path_s.clone()),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, EngineKind::auto(None), cfg).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let (tokens, _) = client.request(&[1, 2, 3], 5).unwrap();
+        assert_eq!(tokens.len(), 5);
+        server.shutdown();
+        let text = std::fs::read_to_string(&path_s).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let events = j.req("traceEvents").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = events
+            .iter()
+            .map(|e| e.req_str("name").unwrap())
+            .collect();
+        for expected in ["admission_wait", "prefill", "decode_step", "request"] {
+            assert!(names.contains(&expected), "missing {expected} in {names:?}");
+        }
+        // The per-request spans share one tid lane ≥ 1; decode steps
+        // ride the scheduler lane 0.
+        let req = events
+            .iter()
+            .find(|e| e.req_str("name").unwrap() == "request")
+            .unwrap();
+        assert!(req.req_f64("tid").unwrap() >= 1.0);
+        assert!(req.req_f64("dur").unwrap() > 0.0);
+        let _ = std::fs::remove_file(&path_s);
+        server.shutdown(); // idempotent: trace_out flushed once
     }
 
     #[test]

@@ -707,11 +707,17 @@ pub fn decode_step_batch(
     // One scores buffer sized for the longest sequence in the batch.
     let max_pos = caches.iter().map(|c| c.len()).max().unwrap_or(0);
     let mut scores = vec![0.0f32; nh * (max_pos + 1)];
+    // Wall-clock spent in the batched linears (the fused GEMM / LUT
+    // decode path), credited to the caller's obs stage ledger so the
+    // scheduler's per-step span can attribute GEMM vs attention time.
+    let mut linear_s = 0.0f64;
     for (bi, blk) in model.blocks.iter().enumerate() {
         layernorm_rows(&x, bsz, d, &blk.ln1_g, &blk.ln1_b, &mut ln);
+        let tl = std::time::Instant::now();
         lin.apply_batch(bi, 0, &ln, bsz, &mut q);
         lin.apply_batch(bi, 1, &ln, bsz, &mut kbuf);
         lin.apply_batch(bi, 2, &ln, bsz, &mut vbuf);
+        linear_s += tl.elapsed().as_secs_f64();
         // Scatter K/V rows into each sequence's cache at its own position.
         for (b, cache) in caches.iter_mut().enumerate() {
             cache.write_kv(bi, &kbuf[b * d..(b + 1) * d], &vbuf[b * d..(b + 1) * d]);
@@ -733,19 +739,25 @@ pub fn decode_step_batch(
                 &mut attn[b * d..(b + 1) * d],
             );
         }
+        let tl = std::time::Instant::now();
         lin.apply_batch(bi, 3, &attn, bsz, &mut proj);
+        linear_s += tl.elapsed().as_secs_f64();
         for (xi, pi) in x.iter_mut().zip(&proj) {
             *xi += pi;
         }
         layernorm_rows(&x, bsz, d, &blk.ln2_g, &blk.ln2_b, &mut ln);
+        let tl = std::time::Instant::now();
         lin.apply_batch(bi, 4, &ln, bsz, &mut hmid);
+        linear_s += tl.elapsed().as_secs_f64();
         for b in 0..bsz {
             let row = &mut hmid[b * dff..(b + 1) * dff];
             for (xj, bj) in row.iter_mut().zip(&blk.b1) {
                 *xj = gelu(*xj + bj);
             }
         }
+        let tl = std::time::Instant::now();
         lin.apply_batch(bi, 5, &hmid, bsz, &mut mlp);
+        linear_s += tl.elapsed().as_secs_f64();
         for b in 0..bsz {
             let orow = &mlp[b * d..(b + 1) * d];
             let xrow = &mut x[b * d..(b + 1) * d];
@@ -757,6 +769,7 @@ pub fn decode_step_batch(
     for cache in caches.iter_mut() {
         cache.advance();
     }
+    crate::obs::trace::credit_stage("decode_linear", linear_s);
     let mut h = vec![0.0f32; bsz * d];
     layernorm_rows(&x, bsz, d, &model.lnf_g, &model.lnf_b, &mut h);
     let v = model.cfg.vocab;

@@ -950,6 +950,16 @@ fn sweep_serve(args: &Args) -> crate::Result<()> {
     let mut c = Client::connect(&addr)?;
     let (t, _) = c.request(&[1, 2], 2)?;
     anyhow::ensure!(t.len() == 2, "server unhealthy after overload");
+    // Scrape the Prometheus exposition once and fail the sweep on a
+    // malformed scrape — the observability contract (DESIGN.md §9) is
+    // exercised under real load, not just in unit tests.
+    let scrape = Client::connect(&addr)?.scrape_metrics()?;
+    crate::obs::registry::validate_prometheus_text(&scrape)?;
+    anyhow::ensure!(
+        scrape.contains("quip_completed_total") && scrape.contains("quip_shed_total"),
+        "metrics scrape is missing serve counters"
+    );
+    println!("metrics scrape: {} lines, exposition valid", scrape.lines().count());
     server.shutdown();
     let mut o = Json::obj();
     o.set("served", Json::Num(ok as f64));

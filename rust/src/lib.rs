@@ -77,11 +77,19 @@
 //! per-layer code layout; v1 loads as `kron`, v1/v2 load as scalar) and
 //! the native engine pick them up through [`linalg::make_transform`].
 //!
+//! Observability is first-class: every serving counter/gauge/histogram
+//! lives in a central [`obs::registry::MetricRegistry`] with Prometheus
+//! text exposition (the server's `metrics` protocol command), and both
+//! the request path and the quantize pipeline record spans into an
+//! [`obs::trace::TraceSink`] exported as Chrome trace-event JSON
+//! (`quip serve --trace-out`); DESIGN.md §9.
+//!
 //! Repo-level documentation: README.md (build/CLI/repo map), DESIGN.md
 //! (substrate substitutions, numerics, paper → substrate mapping),
 //! EXPERIMENTS.md (measured results), PAPER.md (the source abstract).
 
 pub mod util;
+pub mod obs;
 pub mod linalg;
 pub mod quant;
 pub mod hessian;

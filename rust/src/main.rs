@@ -8,8 +8,15 @@
 //! quip serve    --model s1 [--qz path.qz] [--addr 127.0.0.1:7077]
 //!               [--max-batch 8] [--contig] [--kv-pages N] [--page-tokens 16]
 //!               [--reserve-tokens 32] [--admit-timeout-ms 2000]
+//!               [--trace-out trace.json]
 //!               # paged KV pool with prefix sharing + admission control
-//!               # (default); --contig = contiguous per-sequence caches
+//!               # (default); --contig = contiguous per-sequence caches.
+//!               # The TCP protocol also answers the control commands
+//!               # `metrics` (Prometheus text exposition, `# EOF`
+//!               # terminated), `stats` (one-line JSON summary) and
+//!               # `healthz`; --trace-out writes Chrome trace-event JSON
+//!               # (chrome://tracing / Perfetto) on shutdown and
+//!               # periodically while serving
 //! quip pjrt     --model s0 [--bits 2]          # AOT artifact smoke-run
 //! quip inspect  <file.qz>                      # artifact introspection
 //! quip table    <1|2|3|4|5|6|14|15|16|optq|all> [--fast]
@@ -223,13 +230,23 @@ fn cmd_serve(args: &Args) -> quip::Result<()> {
         admit_timeout: std::time::Duration::from_millis(
             args.opt_u64("admit-timeout-ms", defaults.admit_timeout.as_millis() as u64),
         ),
+        trace_out: args.opt("trace-out").map(str::to_string),
         ..defaults
     };
+    let trace_out = cfg.trace_out.clone();
     let server = Server::start(Arc::new(m), engine, cfg)?;
     println!("serving on {} — newline-JSON protocol; Ctrl-C to stop", server.addr);
+    println!("control commands: metrics (Prometheus), stats (JSON), healthz");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
         println!("metrics: {}", server.metrics.summary());
+        // Periodic flush so a killed process still leaves a usable trace;
+        // shutdown() writes the final version of the same file.
+        if let Some(path) = &trace_out {
+            if let Err(e) = server.trace.write_chrome_trace(path) {
+                eprintln!("warning: trace flush to {path} failed: {e:#}");
+            }
+        }
     }
 }
 

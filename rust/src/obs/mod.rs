@@ -1,0 +1,25 @@
+//! Crate-wide observability: a central metric registry with Prometheus
+//! text exposition ([`registry`]) and lightweight span tracing with
+//! Chrome trace-event export ([`trace`]).
+//!
+//! Design constraints (DESIGN.md §9):
+//!
+//! * **Lock-free record path.** Handles ([`registry::Counter`],
+//!   [`registry::Gauge`], [`registry::Histogram`]) are `Arc`-shared
+//!   atomics; recording never takes the catalog lock. Only registration
+//!   and rendering lock, and both are off the request path.
+//! * **Deterministic rendering.** The catalog is BTreeMap-keyed and
+//!   exposition iterates names in sorted order, per the repo-wide
+//!   determinism policy — two scrapes of the same state are
+//!   byte-identical.
+//! * **Bounded tracing.** Spans land in a fixed-capacity ring buffer
+//!   ([`trace::TraceSink`]); under pressure the oldest events are
+//!   dropped and counted, never the newest, and the serve path never
+//!   blocks on a full buffer.
+//!
+//! The serving metrics façade (`coordinator::metrics::Metrics`) is built
+//! on these handles; `quip serve` exposes the registry through the
+//! `metrics` protocol command and the sink through `--trace-out`.
+
+pub mod registry;
+pub mod trace;

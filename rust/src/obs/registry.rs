@@ -1,0 +1,574 @@
+//! Central metric registry: named counter/gauge/histogram handles with a
+//! lock-free record path and deterministic Prometheus text exposition.
+//!
+//! Handles are cheap `Arc`-shared atomics handed out once at
+//! registration; recording (`fetch_add`/`store`/`record`) touches only
+//! the atomics. The catalog itself is a BTreeMap keyed by metric name so
+//! [`MetricRegistry::render_prometheus`] iterates in sorted order —
+//! exposition is a pure function of the recorded state.
+//!
+//! Metric names are validated *statically* by the
+//! `tools/preflight/checks/metricnames.py` lint: every name registered
+//! in non-test code must be unique, `snake_case`, and match the
+//! Prometheus grammar `[a-z_][a-z0-9_]*`. The registry itself is
+//! therefore free to treat re-registration of an existing name as a
+//! lookup (it returns the existing handle).
+
+use crate::util::sync::lock_unpoisoned;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of log-spaced histogram buckets (the last is the overflow).
+pub const BUCKETS: usize = 40;
+/// Lower edge of the histogram's log-spaced region, in seconds: bucket 0
+/// covers `[0, BASE)`, bucket i (for 1 ≤ i < BUCKETS−1) covers
+/// `[BASE·GROWTH^(i−1), BASE·GROWTH^i)`, and the final bucket is the
+/// `+Inf` overflow. (The upper edge of bucket i is `BASE·GROWTH^i`.)
+pub const BASE: f64 = 1e-5;
+/// Geometric growth factor between consecutive bucket edges.
+pub const GROWTH: f64 = 1.45;
+
+/// Map a sample to its bucket under the scheme documented on [`BASE`]:
+/// `[0, BASE)` → 0, `[BASE·GROWTH^(i−1), BASE·GROWTH^i)` → i, overflow
+/// → `BUCKETS − 1`.
+pub fn bucket_index(seconds: f64) -> usize {
+    let mut idx = 0usize;
+    let mut bound = BASE;
+    while idx < BUCKETS - 1 && seconds >= bound {
+        bound *= GROWTH;
+        idx += 1;
+    }
+    idx
+}
+
+/// Approximate quantile from per-bucket counts. Returns the *upper edge*
+/// (`BASE·GROWTH^i` for bucket i) of the first bucket at which the
+/// cumulative count reaches `⌈q·total⌉`, or 0.0 when empty. Because the
+/// edge returned is the upper one, the estimate biases high by at most
+/// one bucket factor (×[`GROWTH`]).
+pub fn quantile_from(counts: &[u64], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = (q * total as f64).ceil() as u64;
+    let mut acc = 0u64;
+    let mut bound = BASE;
+    for &c in counts.iter() {
+        acc += c;
+        if acc >= target {
+            return bound;
+        }
+        bound *= GROWTH;
+    }
+    bound
+}
+
+/// Monotonically increasing metric. The API mirrors `AtomicU64` so call
+/// sites written against raw atomics keep working unchanged.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    fn new() -> Counter {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn fetch_add(&self, v: u64, order: Ordering) -> u64 {
+        self.0.fetch_add(v, order)
+    }
+
+    pub fn load(&self, order: Ordering) -> u64 {
+        self.0.load(order)
+    }
+
+    /// Convenience for the common `fetch_add(1, Relaxed)`.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Set-to-current-value metric (pool occupancy, high-water marks). Same
+/// `AtomicU64`-shaped API as [`Counter`], plus `store`/`fetch_max`.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn store(&self, v: u64, order: Ordering) {
+        self.0.store(v, order);
+    }
+
+    pub fn load(&self, order: Ordering) -> u64 {
+        self.0.load(order)
+    }
+
+    pub fn fetch_add(&self, v: u64, order: Ordering) -> u64 {
+        self.0.fetch_add(v, order)
+    }
+
+    pub fn fetch_max(&self, v: u64, order: Ordering) -> u64 {
+        self.0.fetch_max(v, order)
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistogramCore {
+    counts: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Log-spaced latency histogram (seconds). Sample sums are kept in
+/// integer microseconds so the record path stays a pair of relaxed
+/// atomic adds.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram(Arc::new(HistogramCore {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn record(&self, seconds: f64) {
+        self.0.counts[bucket_index(seconds)].fetch_add(1, Ordering::Relaxed);
+        self.0
+            .sum_us
+            .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Per-bucket counts (not cumulative), oldest-to-largest edge.
+    pub fn counts(&self) -> Vec<u64> {
+        self.0
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_seconds(&self) -> f64 {
+        self.0.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Mean over *recorded samples* (the histogram's own count, never an
+    /// external counter — see `Metrics::mean_latency`).
+    pub fn mean_seconds(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_seconds() / n as f64
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile_from(&self.counts(), q)
+    }
+}
+
+/// Central catalog of named metrics. Registration and rendering lock;
+/// recording through the returned handles never does.
+pub struct MetricRegistry {
+    counters: Mutex<BTreeMap<String, (String, Counter)>>,
+    gauges: Mutex<BTreeMap<String, (String, Gauge)>>,
+    histograms: Mutex<BTreeMap<String, (String, Histogram)>>,
+}
+
+impl MetricRegistry {
+    pub fn new() -> MetricRegistry {
+        MetricRegistry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn shared() -> Arc<MetricRegistry> {
+        Arc::new(MetricRegistry::new())
+    }
+
+    /// Register (or look up) a counter. Names must satisfy the
+    /// metric-name policy checked by preflight; re-registering a name
+    /// returns the existing handle.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        let mut map = lock_unpoisoned(&self.counters);
+        map.entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), Counter::new()))
+            .1
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        let mut map = lock_unpoisoned(&self.gauges);
+        map.entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), Gauge::new()))
+            .1
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str, help: &str) -> Histogram {
+        let mut map = lock_unpoisoned(&self.histograms);
+        map.entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), Histogram::new()))
+            .1
+            .clone()
+    }
+
+    /// Render the whole catalog in Prometheus text exposition format:
+    /// one `# HELP`/`# TYPE` header pair per family, families in sorted
+    /// name order (counters, gauges and histograms interleaved), and
+    /// cumulative `_bucket`/`_sum`/`_count` series for histograms. Ends
+    /// with an OpenMetrics-style `# EOF` line so line-oriented clients
+    /// know where the scrape stops.
+    pub fn render_prometheus(&self) -> String {
+        // Snapshot each family under its lock, then render lock-free.
+        let counters: Vec<(String, String, u64)> = lock_unpoisoned(&self.counters)
+            .iter()
+            .map(|(n, (h, c))| (n.clone(), h.clone(), c.get()))
+            .collect();
+        let gauges: Vec<(String, String, u64)> = lock_unpoisoned(&self.gauges)
+            .iter()
+            .map(|(n, (h, g))| (n.clone(), h.clone(), g.get()))
+            .collect();
+        let hists: Vec<(String, String, Histogram)> = lock_unpoisoned(&self.histograms)
+            .iter()
+            .map(|(n, (h, hist))| (n.clone(), h.clone(), hist.clone()))
+            .collect();
+
+        let mut blocks: Vec<(String, String)> = Vec::new();
+        for (name, help, v) in &counters {
+            blocks.push((
+                name.clone(),
+                format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"),
+            ));
+        }
+        for (name, help, v) in &gauges {
+            blocks.push((
+                name.clone(),
+                format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"),
+            ));
+        }
+        for (name, help, hist) in &hists {
+            let counts = hist.counts();
+            let mut s = format!("# HELP {name} {help}\n# TYPE {name} histogram\n");
+            let mut acc = 0u64;
+            let mut bound = BASE;
+            for (i, &c) in counts.iter().enumerate() {
+                acc += c;
+                if i + 1 == counts.len() {
+                    s.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {acc}\n"));
+                } else {
+                    s.push_str(&format!("{name}_bucket{{le=\"{bound}\"}} {acc}\n"));
+                    bound *= GROWTH;
+                }
+            }
+            s.push_str(&format!("{name}_sum {}\n", hist.sum_seconds()));
+            s.push_str(&format!("{name}_count {}\n", hist.count()));
+            blocks.push((name.clone(), s));
+        }
+        blocks.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut out = String::new();
+        for (_, block) in blocks {
+            out.push_str(&block);
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+}
+
+impl Default for MetricRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Structural validation of a Prometheus text exposition, used by the
+/// serve sweep's scrape self-check and the golden tests. Verifies that
+/// every sample line parses as `name[{labels}] value`, every sample
+/// belongs to a `# TYPE`-declared family, histogram buckets are
+/// cumulative (non-decreasing) and end at `+Inf` equal to `_count`, and
+/// every histogram carries `_sum`/`_count`.
+pub fn validate_prometheus_text(text: &str) -> crate::Result<()> {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    // histogram name -> (last cumulative value, saw +Inf, inf value)
+    let mut hist_state: BTreeMap<String, (u64, bool, u64)> = BTreeMap::new();
+    let mut hist_sum: BTreeMap<String, bool> = BTreeMap::new();
+    let mut hist_count: BTreeMap<String, u64> = BTreeMap::new();
+
+    fn valid_name(name: &str) -> bool {
+        !name.is_empty()
+            && name
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_ascii_lowercase() || c == '_')
+            && name
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+    }
+
+    for (lineno, line) in text.lines().enumerate() {
+        let n = lineno + 1;
+        if line.is_empty() || line == "# EOF" {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.splitn(2, ' ');
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("");
+            anyhow::ensure!(valid_name(name), "line {n}: bad family name `{name}`");
+            anyhow::ensure!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "line {n}: unknown metric type `{kind}`"
+            );
+            anyhow::ensure!(
+                types.insert(name.to_string(), kind.to_string()).is_none(),
+                "line {n}: duplicate # TYPE for `{name}`"
+            );
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or other comment
+        }
+        // Sample: name[{labels}] value
+        let (name_part, value_part) = match line.rsplit_once(' ') {
+            Some(pair) => pair,
+            None => anyhow::bail!("line {n}: sample has no value: `{line}`"),
+        };
+        let value: f64 = value_part
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {n}: unparseable value `{value_part}`"))?;
+        let (name, labels) = match name_part.split_once('{') {
+            Some((name, rest)) => {
+                anyhow::ensure!(rest.ends_with('}'), "line {n}: unclosed label set");
+                (name, Some(&rest[..rest.len() - 1]))
+            }
+            None => (name_part, None),
+        };
+        // Resolve the sample to its family (histograms suffix the name).
+        let family = if let Some(base) = name.strip_suffix("_bucket") {
+            anyhow::ensure!(
+                types.get(base).map(String::as_str) == Some("histogram"),
+                "line {n}: `_bucket` sample for non-histogram `{base}`"
+            );
+            let le = labels
+                .and_then(|l| l.strip_prefix("le=\""))
+                .and_then(|l| l.strip_suffix('"'))
+                .ok_or_else(|| anyhow::anyhow!("line {n}: bucket without le label"))?;
+            let cum = value as u64;
+            let st = hist_state.entry(base.to_string()).or_insert((0, false, 0));
+            anyhow::ensure!(
+                cum >= st.0,
+                "line {n}: bucket series for `{base}` not cumulative ({cum} < {})",
+                st.0
+            );
+            st.0 = cum;
+            if le == "+Inf" {
+                st.1 = true;
+                st.2 = cum;
+            } else {
+                anyhow::ensure!(!st.1, "line {n}: bucket after +Inf for `{base}`");
+                anyhow::ensure!(
+                    le.parse::<f64>().is_ok(),
+                    "line {n}: unparseable le bound `{le}`"
+                );
+            }
+            base
+        } else if let Some(base) = name.strip_suffix("_sum") {
+            if types.get(base).map(String::as_str) == Some("histogram") {
+                hist_sum.insert(base.to_string(), true);
+                base
+            } else {
+                name // a plain metric that merely ends in _sum
+            }
+        } else if let Some(base) = name.strip_suffix("_count") {
+            if types.get(base).map(String::as_str) == Some("histogram") {
+                hist_count.insert(base.to_string(), value as u64);
+                base
+            } else {
+                name
+            }
+        } else {
+            name
+        };
+        anyhow::ensure!(valid_name(family), "line {n}: bad metric name `{family}`");
+        anyhow::ensure!(
+            types.contains_key(family),
+            "line {n}: sample `{name}` has no # TYPE declaration"
+        );
+        anyhow::ensure!(value.is_finite(), "line {n}: non-finite value");
+    }
+    for (name, kind) in &types {
+        if kind != "histogram" {
+            continue;
+        }
+        let st = hist_state
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("histogram `{name}` has no buckets"))?;
+        anyhow::ensure!(st.1, "histogram `{name}` missing +Inf bucket");
+        anyhow::ensure!(
+            hist_sum.contains_key(name),
+            "histogram `{name}` missing _sum"
+        );
+        let count = hist_count
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("histogram `{name}` missing _count"))?;
+        anyhow::ensure!(
+            *count == st.2,
+            "histogram `{name}`: +Inf bucket {} != _count {count}",
+            st.2
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_record_lock_free_and_render() {
+        let reg = MetricRegistry::new();
+        let c = reg.counter("reqs_total", "Requests seen.");
+        let g = reg.gauge("pool_pages", "Pages in use.");
+        c.inc();
+        c.fetch_add(2, Ordering::Relaxed);
+        g.set(7);
+        assert_eq!(c.get(), 3);
+        assert_eq!(g.get(), 7);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE reqs_total counter"));
+        assert!(text.contains("reqs_total 3"));
+        assert!(text.contains("# TYPE pool_pages gauge"));
+        assert!(text.contains("pool_pages 7"));
+        assert!(text.ends_with("# EOF\n"));
+        validate_prometheus_text(&text).unwrap();
+    }
+
+    #[test]
+    fn reregistration_returns_the_same_handle() {
+        let reg = MetricRegistry::new();
+        let a = reg.counter("shared_total", "x");
+        let b = reg.counter("shared_total", "x");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "both handles view one atom");
+    }
+
+    #[test]
+    fn render_golden_output_is_sorted_and_exact() {
+        // Registration order is deliberately unsorted; exposition must
+        // come out in name order with exact header/sample shape.
+        let reg = MetricRegistry::new();
+        let z = reg.counter("zz_total", "Last alphabetically.");
+        let a = reg.gauge("aa_level", "First alphabetically.");
+        z.fetch_add(5, Ordering::Relaxed);
+        a.set(2);
+        let expect = "# HELP aa_level First alphabetically.\n\
+                      # TYPE aa_level gauge\n\
+                      aa_level 2\n\
+                      # HELP zz_total Last alphabetically.\n\
+                      # TYPE zz_total counter\n\
+                      zz_total 5\n\
+                      # EOF\n";
+        assert_eq!(reg.render_prometheus(), expect);
+    }
+
+    #[test]
+    fn histogram_exposition_is_cumulative_and_consistent() {
+        let reg = MetricRegistry::new();
+        let h = reg.histogram("lat_seconds", "Latency.");
+        for &s in &[1e-6, 5e-5, 5e-5, 1e-3, 2.0, 100.0] {
+            h.record(s);
+        }
+        let text = reg.render_prometheus();
+        validate_prometheus_text(&text).unwrap();
+        // Cumulative buckets: non-decreasing, ending at +Inf == count.
+        let cum: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("lat_seconds_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(cum.len(), BUCKETS);
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*cum.last().unwrap(), 6);
+        assert!(text.contains("lat_seconds_count 6"));
+        // First bucket [0, 1e-5) holds exactly the 1e-6 sample.
+        assert_eq!(cum[0], 1);
+        // _sum is the microsecond-truncated sample total.
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("lat_seconds_sum"))
+            .unwrap();
+        let sum: f64 = sum_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!((sum - 102.001101).abs() < 1e-5, "sum={sum}");
+    }
+
+    #[test]
+    fn histogram_mean_uses_its_own_count() {
+        let h = MetricRegistry::new().histogram("m_seconds", "x");
+        for _ in 0..10 {
+            h.record(0.01);
+        }
+        assert!((h.mean_seconds() - 0.01).abs() < 1e-3);
+        assert_eq!(h.count(), 10);
+    }
+
+    #[test]
+    fn bucket_index_matches_documented_edges() {
+        // Bucket 0 is [0, BASE); bucket i is [BASE·G^(i-1), BASE·G^i).
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(BASE * 0.999), 0);
+        assert_eq!(bucket_index(BASE), 1);
+        assert_eq!(bucket_index(BASE * GROWTH * 0.999), 1);
+        assert_eq!(bucket_index(BASE * GROWTH), 2);
+        assert_eq!(bucket_index(1e9), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantile_returns_upper_edge() {
+        let mut counts = vec![0u64; BUCKETS];
+        counts[0] = 4; // all mass in [0, BASE)
+        assert_eq!(quantile_from(&counts, 0.5), BASE);
+        counts[2] = 96; // p95 lands in bucket 2 → upper edge BASE·G²
+        let p95 = quantile_from(&counts, 0.95);
+        assert!((p95 - BASE * GROWTH * GROWTH).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_exposition() {
+        assert!(validate_prometheus_text("no_type_decl 1\n").is_err());
+        assert!(validate_prometheus_text("# TYPE x widget\n").is_err());
+        let non_cumulative = "# TYPE h histogram\n\
+                              h_bucket{le=\"0.1\"} 5\n\
+                              h_bucket{le=\"+Inf\"} 3\n\
+                              h_sum 1\nh_count 3\n";
+        assert!(validate_prometheus_text(non_cumulative).is_err());
+        let inf_vs_count = "# TYPE h histogram\n\
+                            h_bucket{le=\"+Inf\"} 3\n\
+                            h_sum 1\nh_count 4\n";
+        assert!(validate_prometheus_text(inf_vs_count).is_err());
+    }
+}

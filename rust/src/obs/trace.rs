@@ -1,0 +1,424 @@
+//! Lightweight span tracing with Chrome trace-event export.
+//!
+//! A [`TraceSink`] owns one monotonic epoch and a bounded ring buffer of
+//! events. Producers record *complete* spans (`ph:"X"`, a start + a
+//! duration) or *instant* events (`ph:"i"`) tagged with a `tid` lane —
+//! the per-request trace id minted at admission for serve spans, or the
+//! block index for quantize spans. Everything shares the sink's single
+//! timeline, so a serve run and a quantize run traced into the same sink
+//! line up in one Chrome (`chrome://tracing` / Perfetto) view.
+//!
+//! The ring is bounded: when full, the *oldest* events are dropped and
+//! counted (`dropped_events` in the export), never the newest — a
+//! long-running server keeps the recent window. Recording takes one
+//! short mutex hold; nothing on the serve path ever blocks on a full
+//! buffer or on export.
+//!
+//! The module also hosts the thread-local *stage ledger*
+//! ([`credit_stage`]/[`take_stage`]): a named wall-clock accumulator
+//! that lets leaf kernels (factorization, the batched decode linears)
+//! credit time to the span their caller is about to record without
+//! widening any trait signatures. `util::stagetimer` is a façade over
+//! this ledger.
+
+use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default ring capacity (events). At ~6 events per request this is tens
+/// of thousands of requests of history.
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Phase {
+    /// Complete span: `ts` + `dur`.
+    Complete,
+    /// Instant event at `ts`.
+    Instant,
+}
+
+struct TraceEvent {
+    name: String,
+    cat: &'static str,
+    phase: Phase,
+    ts_us: u64,
+    dur_us: u64,
+    tid: u64,
+    args: Vec<(String, Json)>,
+}
+
+struct Ring {
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// Bounded collector of trace events on one shared monotonic timeline.
+pub struct TraceSink {
+    epoch: Instant,
+    capacity: usize,
+    next_trace: AtomicU64,
+    ring: Mutex<Ring>,
+}
+
+impl TraceSink {
+    pub fn new(capacity: usize) -> TraceSink {
+        TraceSink {
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            next_trace: AtomicU64::new(1),
+            ring: Mutex::new(Ring {
+                events: VecDeque::new(),
+                dropped: 0,
+            }),
+        }
+    }
+
+    pub fn shared(capacity: usize) -> Arc<TraceSink> {
+        Arc::new(TraceSink::new(capacity))
+    }
+
+    /// Microseconds since this sink's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Convert an externally captured [`Instant`] onto this timeline
+    /// (clamped to 0 for instants predating the sink).
+    pub fn ts_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Mint a fresh per-request trace id (used as the Chrome `tid` lane).
+    pub fn mint_trace(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut ring = lock_unpoisoned(&self.ring);
+        if ring.events.len() >= self.capacity {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        ring.events.push_back(ev);
+    }
+
+    /// Record a complete span from explicit timestamps (µs on this
+    /// sink's timeline). Use [`TraceSink::span`] when the span brackets
+    /// live code instead.
+    pub fn complete(
+        &self,
+        tid: u64,
+        name: &str,
+        cat: &'static str,
+        start_us: u64,
+        dur_us: u64,
+        args: Vec<(String, Json)>,
+    ) {
+        self.push(TraceEvent {
+            name: name.to_string(),
+            cat,
+            phase: Phase::Complete,
+            ts_us: start_us,
+            dur_us,
+            tid,
+            args,
+        });
+    }
+
+    /// Record an instant event (shed, eviction, damping escalation).
+    pub fn instant(&self, tid: u64, name: &str, cat: &'static str, args: Vec<(String, Json)>) {
+        self.push(TraceEvent {
+            name: name.to_string(),
+            cat,
+            phase: Phase::Instant,
+            ts_us: self.now_us(),
+            dur_us: 0,
+            tid,
+            args,
+        });
+    }
+
+    /// Open a live span; the returned guard records a complete event
+    /// spanning its own lifetime when dropped.
+    pub fn span(&self, tid: u64, name: &str, cat: &'static str) -> SpanGuard<'_> {
+        SpanGuard {
+            sink: self,
+            name: name.to_string(),
+            cat,
+            tid,
+            start_us: self.now_us(),
+            args: Vec::new(),
+        }
+    }
+
+    /// Events currently buffered (post-drop).
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.ring).events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted from the ring so far.
+    pub fn dropped(&self) -> u64 {
+        lock_unpoisoned(&self.ring).dropped
+    }
+
+    /// Export the buffered events as Chrome trace-event JSON (the
+    /// object form: `{"traceEvents": [...]}`), loadable in
+    /// `chrome://tracing` or Perfetto. Buffered order is preserved.
+    pub fn to_chrome_json(&self) -> Json {
+        let ring = lock_unpoisoned(&self.ring);
+        let events: Vec<Json> = ring
+            .events
+            .iter()
+            .map(|ev| {
+                let mut o = Json::obj();
+                o.set("name", Json::Str(ev.name.clone()));
+                o.set("cat", Json::Str(ev.cat.to_string()));
+                o.set(
+                    "ph",
+                    Json::Str(
+                        match ev.phase {
+                            Phase::Complete => "X",
+                            Phase::Instant => "i",
+                        }
+                        .to_string(),
+                    ),
+                );
+                o.set("ts", Json::Num(ev.ts_us as f64));
+                if ev.phase == Phase::Complete {
+                    o.set("dur", Json::Num(ev.dur_us as f64));
+                } else {
+                    o.set("s", Json::Str("t".to_string()));
+                }
+                o.set("pid", Json::Num(1.0));
+                o.set("tid", Json::Num(ev.tid as f64));
+                if !ev.args.is_empty() {
+                    let mut a = Json::obj();
+                    for (k, v) in &ev.args {
+                        a.set(k, v.clone());
+                    }
+                    o.set("args", a);
+                }
+                o
+            })
+            .collect();
+        let mut out = Json::obj();
+        out.set("traceEvents", Json::Arr(events));
+        out.set("displayTimeUnit", Json::Str("ms".to_string()));
+        out.set("dropped_events", Json::Num(ring.dropped as f64));
+        out
+    }
+
+    /// Write the Chrome trace JSON to `path` (overwrites).
+    pub fn write_chrome_trace(&self, path: &str) -> crate::Result<()> {
+        std::fs::write(path, self.to_chrome_json().to_string())?;
+        Ok(())
+    }
+}
+
+/// Live span: records one complete event over its lifetime on drop.
+pub struct SpanGuard<'a> {
+    sink: &'a TraceSink,
+    name: String,
+    cat: &'static str,
+    tid: u64,
+    start_us: u64,
+    args: Vec<(String, Json)>,
+}
+
+impl SpanGuard<'_> {
+    /// Attach an argument shown in the trace viewer's detail pane.
+    pub fn arg(&mut self, key: &str, value: Json) {
+        self.args.push((key.to_string(), value));
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let end = self.sink.now_us();
+        self.sink.complete(
+            self.tid,
+            &self.name,
+            self.cat,
+            self.start_us,
+            end.saturating_sub(self.start_us),
+            std::mem::take(&mut self.args),
+        );
+    }
+}
+
+// --- thread-local stage ledger -----------------------------------------
+//
+// Leaf kernels credit named wall-clock here; the caller that owns the
+// enclosing span drains the ledger and attaches the split as span args.
+// A small Vec (not a map) keeps it allocation-light and deterministic;
+// the stage set is tiny ("factorize", "decode_linear", …).
+
+thread_local! {
+    static STAGE_LEDGER: RefCell<Vec<(&'static str, f64)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Credit `seconds` of work to `stage` on the current thread's ledger.
+pub fn credit_stage(stage: &'static str, seconds: f64) {
+    STAGE_LEDGER.with(|l| {
+        let mut ledger = l.borrow_mut();
+        for (name, total) in ledger.iter_mut() {
+            if *name == stage {
+                *total += seconds;
+                return;
+            }
+        }
+        ledger.push((stage, seconds));
+    });
+}
+
+/// Drain `stage` from the current thread's ledger, returning the total
+/// credited since the last drain (0.0 when nothing was credited).
+pub fn take_stage(stage: &str) -> f64 {
+    STAGE_LEDGER.with(|l| {
+        let mut ledger = l.borrow_mut();
+        for (name, total) in ledger.iter_mut() {
+            if *name == stage {
+                return std::mem::take(total);
+            }
+        }
+        0.0
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_export_is_wellformed_json() {
+        let sink = TraceSink::new(64);
+        let tid = sink.mint_trace();
+        {
+            let mut s = sink.span(tid, "prefill", "serve");
+            s.arg("tokens", Json::Num(12.0));
+        }
+        sink.instant(0, "shed", "serve", vec![("id".into(), Json::Num(3.0))]);
+        let text = sink.to_chrome_json().to_string();
+        let j = Json::parse(&text).unwrap();
+        let events = j.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let span = &events[0];
+        assert_eq!(span.req_str("ph").unwrap(), "X");
+        assert_eq!(span.req_str("name").unwrap(), "prefill");
+        assert!(span.req_f64("dur").unwrap() >= 0.0);
+        assert_eq!(
+            span.req("args").unwrap().req_f64("tokens").unwrap(),
+            12.0
+        );
+        let inst = &events[1];
+        assert_eq!(inst.req_str("ph").unwrap(), "i");
+        assert!(inst.get("dur").is_none());
+        assert_eq!(j.req_f64("dropped_events").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn span_nesting_roundtrips_through_export() {
+        // An inner span opened and closed inside an outer one must come
+        // back from the JSON with its interval contained in the outer's.
+        let sink = TraceSink::new(64);
+        let tid = sink.mint_trace();
+        {
+            let _outer = sink.span(tid, "outer", "test");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _inner = sink.span(tid, "inner", "test");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let j = Json::parse(&sink.to_chrome_json().to_string()).unwrap();
+        let events = j.req("traceEvents").unwrap().as_arr().unwrap();
+        // Inner drops first, so it is buffered before outer.
+        let find = |name: &str| -> (f64, f64) {
+            let e = events
+                .iter()
+                .find(|e| e.req_str("name").unwrap() == name)
+                .unwrap();
+            let ts = e.req_f64("ts").unwrap();
+            (ts, ts + e.req_f64("dur").unwrap())
+        };
+        let (i0, i1) = find("inner");
+        let (o0, o1) = find("outer");
+        assert!(o0 <= i0 && i1 <= o1, "inner [{i0},{i1}] ⊄ outer [{o0},{o1}]");
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let sink = TraceSink::new(4);
+        for i in 0..10u64 {
+            sink.instant(0, &format!("e{i}"), "test", Vec::new());
+        }
+        assert_eq!(sink.len(), 4);
+        assert_eq!(sink.dropped(), 6);
+        let j = sink.to_chrome_json();
+        let events = j.req("traceEvents").unwrap().as_arr().unwrap();
+        // The newest four survive.
+        assert_eq!(events[0].req_str("name").unwrap(), "e6");
+        assert_eq!(events[3].req_str("name").unwrap(), "e9");
+        assert_eq!(j.req_f64("dropped_events").unwrap(), 6.0);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_timeline_monotonic() {
+        let sink = TraceSink::new(16);
+        let a = sink.mint_trace();
+        let b = sink.mint_trace();
+        assert_ne!(a, b);
+        let t0 = sink.now_us();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        assert!(sink.now_us() > t0);
+        // Instants predating the sink clamp to 0 instead of panicking.
+        let early = Instant::now()
+            .checked_sub(std::time::Duration::from_secs(3600))
+            .unwrap_or_else(Instant::now);
+        let _ = sink.ts_of(early);
+    }
+
+    #[test]
+    fn stage_ledger_accumulates_and_drains_per_stage() {
+        let _ = take_stage("alpha");
+        let _ = take_stage("beta");
+        credit_stage("alpha", 0.25);
+        credit_stage("beta", 1.0);
+        credit_stage("alpha", 0.5);
+        assert!((take_stage("alpha") - 0.75).abs() < 1e-12);
+        assert_eq!(take_stage("alpha"), 0.0);
+        assert!((take_stage("beta") - 1.0).abs() < 1e-12);
+        let other = std::thread::spawn(|| take_stage("alpha")).join().unwrap();
+        assert_eq!(other, 0.0, "ledger is per-thread");
+    }
+
+    #[test]
+    fn write_chrome_trace_to_file() {
+        let sink = TraceSink::new(16);
+        {
+            let _s = sink.span(sink.mint_trace(), "work", "test");
+        }
+        let path = std::env::temp_dir().join(format!(
+            "quip_trace_test_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_string_lossy().to_string();
+        sink.write_chrome_trace(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(
+            j.req("traceEvents").unwrap().as_arr().unwrap().len(),
+            1
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,4 +1,4 @@
-//! Thread-local stage-timing ledger for the quantization hot path.
+//! Thread-local stage-timing façade for the quantization hot path.
 //!
 //! The factorization entry points (`linalg::ldl::ldl_lower`,
 //! `linalg::chol::cholesky`) credit their wall-clock here, and
@@ -9,22 +9,25 @@
 //! factorization itself always runs on the thread that called `round` —
 //! only the per-row rounding fans out. See EXPERIMENTS.md §Perf 4 for the
 //! stage breakdown this feeds.
+//!
+//! Since the observability layer landed (DESIGN.md §9) the storage lives
+//! in [`crate::obs::trace`]'s named stage ledger — the same mechanism
+//! the batched decode kernels use to credit GEMM time to serve spans —
+//! and this module keeps its original public API as a thin façade over
+//! the `"factorize"` stage.
 
-use std::cell::Cell;
-
-thread_local! {
-    static FACTORIZE: Cell<f64> = const { Cell::new(0.0) };
-}
+/// Ledger key for factorization wall-clock in the obs stage ledger.
+pub const FACTORIZE_STAGE: &str = "factorize";
 
 /// Credit `seconds` of factorization work to the current thread's ledger.
 pub fn credit_factorize(seconds: f64) {
-    FACTORIZE.with(|c| c.set(c.get() + seconds));
+    crate::obs::trace::credit_stage(FACTORIZE_STAGE, seconds);
 }
 
 /// Drain the current thread's factorization ledger, returning the total
 /// credited since the last drain (0.0 when nothing was credited).
 pub fn take_factorize() -> f64 {
-    FACTORIZE.with(|c| c.replace(0.0))
+    crate::obs::trace::take_stage(FACTORIZE_STAGE)
 }
 
 #[cfg(test)]
@@ -47,5 +50,12 @@ mod tests {
         let other = std::thread::spawn(take_factorize).join().unwrap();
         assert_eq!(other, 0.0, "fresh thread starts at zero");
         assert!((take_factorize() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn facade_shares_the_obs_stage_ledger() {
+        let _ = take_factorize();
+        crate::obs::trace::credit_stage(FACTORIZE_STAGE, 0.125);
+        assert!((take_factorize() - 0.125).abs() < 1e-12);
     }
 }

@@ -11,6 +11,7 @@ from . import (
     determinism,
     fmtargs,
     items,
+    metricnames,
     modgraph,
     panicpolicy,
     structlit,
@@ -27,6 +28,7 @@ ALL_CHECKS = [
     determinism,
     panicpolicy,
     clippydrift,
+    metricnames,
 ]
 
 

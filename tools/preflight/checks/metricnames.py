@@ -1,0 +1,88 @@
+"""Metric-name lint: registry registrations use valid, unique names.
+
+The observability layer (DESIGN.md §9) renders every registered metric
+into Prometheus text exposition, whose grammar only admits
+`[a-z_][a-z0-9_]*` for the names we emit (we deliberately forbid the
+uppercase/colon forms Prometheus tolerates — one casing style keeps
+dashboards greppable). A duplicate registration is almost always a
+copy-paste slip: the registry hands back the existing handle, so both
+call sites silently share one counter and the second help string is
+dropped. This check scans non-test registration call sites —
+`.counter("name", …)` / `.gauge(…)` / `.histogram(…)` — and flags
+malformed names, `__` (reserved by Prometheus for internal names), and
+repeat registrations anywhere in the crate. A deliberate re-registration
+(two subsystems sharing one handle by name) can be annotated with
+`// preflight: allow(metric-name, "why the share is intended")`.
+"""
+
+import re
+
+from ..findings import Finding
+from ..spans import in_spans, test_spans
+
+NAME = "metric-names"
+DESCRIPTION = "registered metric names are snake_case, Prometheus-safe, and unique"
+
+REGISTER_METHODS = ("counter", "gauge", "histogram")
+NAME_RE = re.compile(r"^[a-z_][a-z0-9_]*$")
+
+
+def run(ctx):
+    findings = []
+    # name -> (rel, line) of the first registration, across the whole crate
+    seen = {}
+    for _crate, rel, lexed in ctx.lexed_files():
+        findings.extend(_scan_file(rel, lexed, seen))
+    return findings
+
+
+def _scan_file(rel, lexed, seen):
+    toks = lexed.tokens
+    n = len(toks)
+    spans = test_spans(toks)
+    findings = []
+
+    def flag(line, msg):
+        if in_spans(spans, line):
+            return
+        if lexed.allowed("metric-name", line):
+            return
+        findings.append(Finding(NAME, rel, line, msg))
+
+    for i, t in enumerate(toks):
+        # `<recv>.counter("name", …)` — method call with a literal name.
+        if (
+            t.kind != "ident"
+            or t.value not in REGISTER_METHODS
+            or i == 0
+            or toks[i - 1].kind != "punct"
+            or toks[i - 1].value != "."
+            or i + 2 >= n
+            or toks[i + 1].kind != "punct"
+            or toks[i + 1].value != "("
+            or toks[i + 2].kind != "str"
+        ):
+            continue
+        if in_spans(spans, t.line) or lexed.allowed("metric-name", t.line):
+            continue
+        raw = toks[i + 2].value
+        name = raw[1:-1] if raw.startswith('"') and raw.endswith('"') else raw
+        if not NAME_RE.fullmatch(name) or "__" in name:
+            flag(
+                t.line,
+                f'metric name "{name}" is not snake_case — exposition names '
+                "must match [a-z_][a-z0-9_]* with no '__'",
+            )
+            continue
+        if name in seen:
+            first_rel, first_line = seen[name]
+            flag(
+                t.line,
+                f'metric name "{name}" already registered at '
+                f"{first_rel}:{first_line} — duplicates silently share one "
+                "handle (or annotate: "
+                '// preflight: allow(metric-name, "…"))',
+            )
+        else:
+            seen[name] = (rel, t.line)
+    return findings

@@ -1,0 +1,21 @@
+//! Fixture: metric registrations with a non-snake_case name and a
+//! duplicate. Fires metric-names twice; clean under every other check.
+
+pub struct Registry;
+
+impl Registry {
+    pub fn counter(&self, name: &str, help: &str) -> usize {
+        name.len() + help.len()
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> usize {
+        name.len() + help.len()
+    }
+}
+
+pub fn register(r: &Registry) -> usize {
+    let a = r.counter("requests_total", "requests observed");
+    let b = r.counter("BadCamel", "name is not snake_case");
+    let c = r.gauge("requests_total", "re-registers the counter's name");
+    a + b + c
+}
