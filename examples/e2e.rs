@@ -176,8 +176,10 @@ fn main() -> quip::Result<()> {
     record.set("serving", serve);
     server.shutdown();
 
-    std::fs::create_dir_all("results").ok();
-    std::fs::write("results/e2e.json", record.pretty())?;
+    quip::util::fsx::atomic_write(
+        std::path::Path::new("results/e2e.json"),
+        record.pretty().as_bytes(),
+    )?;
     println!("\nall stages green → results/e2e.json");
     let _ = SPLITS; // (quiet unused import on --fast paths)
     Ok(())

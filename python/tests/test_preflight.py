@@ -55,6 +55,7 @@ BAD_TREES = {
     "bad_panicpolicy": ("panic-policy", 2, "serving-layer non-test code"),
     "bad_clippydrift": ("clippy-drift", 1, "clippy::unused_self"),
     "bad_metricnames": ("metric-names", 2, "metric name"),
+    "bad_atomicwrites": ("atomic-writes", 2, "torn file"),
 }
 
 
@@ -79,6 +80,15 @@ def test_metricnames_flags_both_invalid_and_duplicate():
     msgs = [f.message for f in findings]
     assert any("not snake_case" in m for m in msgs), msgs
     assert any("already registered" in m for m in msgs), msgs
+
+
+def test_atomicwrites_exempts_annotated_and_test_writes():
+    """Only the two bare production writes fire; the allow()-annotated
+    call and the write inside #[cfg(test)] are deliberate exemptions."""
+    findings = run_checks(fixture("bad_atomicwrites"))
+    assert sorted(f.line for f in findings) == [9, 13], [
+        f.render() for f in findings
+    ]
 
 
 def test_every_check_has_a_firing_fixture():

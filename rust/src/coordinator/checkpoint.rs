@@ -1,0 +1,623 @@
+//! Crash-safe quantization sessions: the `.qzp` block journal + config
+//! fingerprint manifest (DESIGN.md §10).
+//!
+//! A checkpointed [`QuantSession`](super::pipeline::QuantSession) appends
+//! one journal record per finished block, so a run killed at block 37 of
+//! 48 resumes from block 37 instead of zero. Two files live in the
+//! checkpoint directory:
+//!
+//! * `manifest.json` — the config *fingerprint* (bits, rounder, transform,
+//!   seeds, calibration shape, model shape hash). Resume refuses when any
+//!   field differs: replaying blocks quantized under a different config
+//!   would silently splice incompatible layers into one artifact.
+//! * `journal.qzp` — append-only, length-prefixed records:
+//!
+//! ```text
+//! record  := len u32 | crc u32 | payload (len bytes)     (crc = crc32(payload))
+//! payload := block u32 | status u8 |
+//!            ok(0):     n_layers u32 | { layer (.qz v3) | 5×f64 report } …
+//!            failed(1): error string
+//! ```
+//!
+//! The length prefix makes torn tails *detectable* and the CRC makes
+//! corruption *distinguishable* from tearing: a record whose header or
+//! payload runs past EOF can only be an interrupted append (truncation
+//! cannot alter the already-written length), so it is dropped and the
+//! file truncated back to the last whole record; a full-length record
+//! with a bad CRC means bit rot, and resume refuses rather than rebuild
+//! on damaged layers. Records are strictly sequential from block 0 — the
+//! §6 quantized-prefix invariant means a gap is unrecoverable.
+
+use crate::quant::packed::{QuantizedLayer, FORMAT_V3};
+use crate::util::bytes::{Reader, Writer};
+use crate::util::crc32::crc32;
+use crate::util::fault::{FaultInjector, FaultMode};
+use crate::util::json::Json;
+use std::io::{Read, Seek, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const MANIFEST: &str = "manifest.json";
+const JOURNAL: &str = "journal.qzp";
+
+/// The config fingerprint stored in `manifest.json`. Every field that
+/// changes what bytes a block quantizes to is included; two sessions with
+/// equal fingerprints produce bit-identical journals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fingerprint {
+    pub bits: u32,
+    pub rounder: String,
+    pub transform: String,
+    pub incoherent: bool,
+    pub stochastic: bool,
+    pub greedy_passes: usize,
+    pub alg5_c: f64,
+    /// Pipeline seed, serialized as a hex string (JSON numbers are f64
+    /// and cannot represent every u64 exactly).
+    pub seed: u64,
+    pub calib_seqs: usize,
+    pub calib_seq_len: usize,
+    pub model: String,
+    /// CRC-32 of the model config JSON — catches shape mismatches even
+    /// when two configs share a name.
+    pub shape_hash: u32,
+}
+
+impl Fingerprint {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("bits", Json::Num(self.bits as f64));
+        j.set("rounder", Json::Str(self.rounder.clone()));
+        j.set("transform", Json::Str(self.transform.clone()));
+        j.set("incoherent", Json::Bool(self.incoherent));
+        j.set("stochastic", Json::Bool(self.stochastic));
+        j.set("greedy_passes", Json::Num(self.greedy_passes as f64));
+        j.set("alg5_c", Json::Num(self.alg5_c));
+        j.set("seed", Json::Str(format!("{:016x}", self.seed)));
+        j.set("calib_seqs", Json::Num(self.calib_seqs as f64));
+        j.set("calib_seq_len", Json::Num(self.calib_seq_len as f64));
+        j.set("model", Json::Str(self.model.clone()));
+        j.set("shape_hash", Json::Str(format!("{:08x}", self.shape_hash)));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Fingerprint> {
+        let hex_u64 = |key: &str| -> crate::Result<u64> {
+            u64::from_str_radix(j.req_str(key)?, 16)
+                .map_err(|e| anyhow::anyhow!("manifest field '{key}': {e}"))
+        };
+        let bool_of = |key: &str| -> crate::Result<bool> {
+            j.req(key)?
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("manifest field '{key}' is not a bool"))
+        };
+        Ok(Fingerprint {
+            bits: j.req_f64("bits")? as u32,
+            rounder: j.req_str("rounder")?.to_string(),
+            transform: j.req_str("transform")?.to_string(),
+            incoherent: bool_of("incoherent")?,
+            stochastic: bool_of("stochastic")?,
+            greedy_passes: j.req_usize("greedy_passes")?,
+            alg5_c: j.req_f64("alg5_c")?,
+            seed: hex_u64("seed")?,
+            calib_seqs: j.req_usize("calib_seqs")?,
+            calib_seq_len: j.req_usize("calib_seq_len")?,
+            model: j.req_str("model")?.to_string(),
+            shape_hash: hex_u64("shape_hash")? as u32,
+        })
+    }
+
+    /// Names of the fields where `self` (the session) differs from
+    /// `stored` (the manifest). Empty means resumable.
+    pub fn diff(&self, stored: &Fingerprint) -> Vec<&'static str> {
+        let mut d = Vec::new();
+        if self.bits != stored.bits {
+            d.push("bits");
+        }
+        if self.rounder != stored.rounder {
+            d.push("rounder");
+        }
+        if self.transform != stored.transform {
+            d.push("transform");
+        }
+        if self.incoherent != stored.incoherent {
+            d.push("incoherent");
+        }
+        if self.stochastic != stored.stochastic {
+            d.push("stochastic");
+        }
+        if self.greedy_passes != stored.greedy_passes {
+            d.push("greedy_passes");
+        }
+        if self.alg5_c != stored.alg5_c {
+            d.push("alg5_c");
+        }
+        if self.seed != stored.seed {
+            d.push("seed");
+        }
+        if self.calib_seqs != stored.calib_seqs {
+            d.push("calib_seqs");
+        }
+        if self.calib_seq_len != stored.calib_seq_len {
+            d.push("calib_seq_len");
+        }
+        if self.model != stored.model {
+            d.push("model");
+        }
+        if self.shape_hash != stored.shape_hash {
+            d.push("shape_hash");
+        }
+        d
+    }
+}
+
+/// One layer inside a completed-block record: the artifact layer plus the
+/// numbers its [`LayerReport`](super::pipeline::LayerReport) carries, so a
+/// resumed session's final report covers replayed blocks too.
+#[derive(Clone)]
+pub struct LayerRecord {
+    pub layer: QuantizedLayer,
+    pub proxy_loss: f64,
+    pub seconds: f64,
+    pub accumulate_seconds: f64,
+    pub factorize_seconds: f64,
+    pub round_seconds: f64,
+}
+
+/// One journal record: block `b` either completed with its quantized
+/// layers, or failed (worker panic / unusable Hessians after the retry)
+/// and was skipped by the degrading session.
+#[derive(Clone)]
+pub enum BlockRecord {
+    Completed {
+        block: usize,
+        layers: Vec<LayerRecord>,
+    },
+    Failed {
+        block: usize,
+        error: String,
+    },
+}
+
+impl BlockRecord {
+    pub fn block(&self) -> usize {
+        match self {
+            BlockRecord::Completed { block, .. } | BlockRecord::Failed { block, .. } => *block,
+        }
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            BlockRecord::Completed { block, layers } => {
+                w.u32(*block as u32);
+                w.u8(0);
+                w.u32(layers.len() as u32);
+                for l in layers {
+                    l.layer.serialize(&mut w);
+                    w.f64(l.proxy_loss);
+                    w.f64(l.seconds);
+                    w.f64(l.accumulate_seconds);
+                    w.f64(l.factorize_seconds);
+                    w.f64(l.round_seconds);
+                }
+            }
+            BlockRecord::Failed { block, error } => {
+                w.u32(*block as u32);
+                w.u8(1);
+                w.string(error);
+            }
+        }
+        w.buf
+    }
+
+    fn decode(payload: &[u8]) -> crate::Result<BlockRecord> {
+        let mut r = Reader::new(payload);
+        let block = r.u32()? as usize;
+        let rec = match r.u8()? {
+            0 => {
+                let n = r.u32()? as usize;
+                let mut layers = Vec::with_capacity(n);
+                for i in 0..n {
+                    let layer = QuantizedLayer::deserialize(&mut r, FORMAT_V3)
+                        .map_err(|e| anyhow::anyhow!("journal block {block} layer {i}: {e}"))?;
+                    layers.push(LayerRecord {
+                        layer,
+                        proxy_loss: r.f64()?,
+                        seconds: r.f64()?,
+                        accumulate_seconds: r.f64()?,
+                        factorize_seconds: r.f64()?,
+                        round_seconds: r.f64()?,
+                    });
+                }
+                BlockRecord::Completed { block, layers }
+            }
+            1 => BlockRecord::Failed {
+                block,
+                error: r.string()?,
+            },
+            other => anyhow::bail!("journal block {block}: unknown status byte {other}"),
+        };
+        anyhow::ensure!(
+            r.remaining() == 0,
+            "journal block {block}: {} trailing bytes",
+            r.remaining()
+        );
+        Ok(rec)
+    }
+}
+
+/// Append handle on a checkpoint directory's `journal.qzp` + the manifest
+/// beside it. Created fresh by
+/// [`QuantSession::with_checkpoint_dir`](super::pipeline::QuantSession::with_checkpoint_dir),
+/// reopened (with replay) by
+/// [`QuantSession::resume`](super::pipeline::QuantSession::resume).
+pub struct CheckpointJournal {
+    dir: PathBuf,
+    file: std::fs::File,
+    faults: Option<Arc<FaultInjector>>,
+}
+
+impl CheckpointJournal {
+    /// Start a fresh journal: write the manifest (atomically) and
+    /// truncate any prior journal — a new session owns the directory.
+    pub fn create(
+        dir: &Path,
+        fp: &Fingerprint,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> crate::Result<CheckpointJournal> {
+        std::fs::create_dir_all(dir)?;
+        crate::util::fsx::atomic_write(&dir.join(MANIFEST), fp.to_json().pretty().as_bytes())?;
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(dir.join(JOURNAL))?;
+        Ok(CheckpointJournal {
+            dir: dir.to_path_buf(),
+            file,
+            faults,
+        })
+    }
+
+    /// Reopen an existing checkpoint directory: verify the fingerprint,
+    /// replay every whole record, drop a torn tail (truncating the file
+    /// back to the last whole record so the next append starts clean),
+    /// and refuse on CRC failure or a non-sequential block order.
+    pub fn open(
+        dir: &Path,
+        expected: &Fingerprint,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> crate::Result<(CheckpointJournal, Vec<BlockRecord>)> {
+        let manifest_path = dir.join(MANIFEST);
+        let raw = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| anyhow::anyhow!("no resumable session at {dir:?}: {e}"))?;
+        let stored = Fingerprint::from_json(&Json::parse(&raw)?)
+            .map_err(|e| anyhow::anyhow!("manifest {manifest_path:?}: {e}"))?;
+        let diff = expected.diff(&stored);
+        anyhow::ensure!(
+            diff.is_empty(),
+            "refusing to resume {dir:?}: config fingerprint differs on {} \
+             (session vs manifest); blocks quantized under the stored config \
+             cannot be spliced into this session's artifact",
+            diff.join(", ")
+        );
+
+        let journal_path = dir.join(JOURNAL);
+        let mut file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&journal_path)
+            .map_err(|e| anyhow::anyhow!("opening journal {journal_path:?}: {e}"))?;
+        let mut buf = Vec::new();
+        file.read_to_end(&mut buf)?;
+
+        let mut records = Vec::new();
+        let mut pos = 0usize;
+        while pos < buf.len() {
+            // An incomplete header or payload can only be a torn append
+            // (the length prefix was written before the bytes it counts);
+            // drop the tail and stop. A whole record with a CRC mismatch
+            // is corruption, not tearing — refuse.
+            if buf.len() - pos < 8 {
+                break;
+            }
+            let len =
+                u32::from_le_bytes([buf[pos], buf[pos + 1], buf[pos + 2], buf[pos + 3]]) as usize;
+            let stored_crc =
+                u32::from_le_bytes([buf[pos + 4], buf[pos + 5], buf[pos + 6], buf[pos + 7]]);
+            if buf.len() - pos - 8 < len {
+                break;
+            }
+            let payload = &buf[pos + 8..pos + 8 + len];
+            let actual = crc32(payload);
+            anyhow::ensure!(
+                stored_crc == actual,
+                "corrupt journal {journal_path:?}: record {} CRC mismatch \
+                 (stored {stored_crc:08x}, computed {actual:08x}) — refusing to resume \
+                 on damaged layers",
+                records.len()
+            );
+            let rec = BlockRecord::decode(payload)?;
+            anyhow::ensure!(
+                rec.block() == records.len(),
+                "journal {journal_path:?}: record {} covers block {} — blocks must be \
+                 sequential from 0",
+                records.len(),
+                rec.block()
+            );
+            records.push(rec);
+            pos += 8 + len;
+        }
+        if pos < buf.len() {
+            crate::log_warn!(
+                "journal {journal_path:?}: dropping {} torn trailing bytes \
+                 (interrupted append)",
+                buf.len() - pos
+            );
+            file.set_len(pos as u64)?;
+            file.sync_all()?;
+        }
+        file.seek(std::io::SeekFrom::Start(pos as u64))?;
+        Ok((
+            CheckpointJournal {
+                dir: dir.to_path_buf(),
+                file,
+                faults,
+            },
+            records,
+        ))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Append one block record and fsync it durable. The
+    /// `checkpoint.append` fault point fires here: `torn` persists only a
+    /// seeded prefix of the record before dying, reproducing a power cut
+    /// mid-append.
+    pub fn append(&mut self, rec: &BlockRecord) -> crate::Result<()> {
+        let payload = rec.encode();
+        let mut bytes = Vec::with_capacity(8 + payload.len());
+        bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&crc32(&payload).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        if let Some(f) = &self.faults {
+            match f.check("checkpoint.append") {
+                Some(FaultMode::Torn) => {
+                    let keep = f.torn_len("checkpoint.append", bytes.len());
+                    self.file.write_all(&bytes[..keep])?;
+                    self.file.sync_data()?;
+                    return f.die("checkpoint.append", FaultMode::Torn);
+                }
+                // preflight: allow(panic, "the panic fault mode exists to panic on purpose")
+                Some(FaultMode::Panic) => panic!("fault injected: checkpoint.append (panic)"),
+                Some(mode) => return f.die("checkpoint.append", mode),
+                None => {}
+            }
+        }
+        self.file.write_all(&bytes)?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::quant::{incoherence, Processing};
+
+    fn test_fp() -> Fingerprint {
+        Fingerprint {
+            bits: 2,
+            rounder: "ldlq".into(),
+            transform: "kron".into(),
+            incoherent: true,
+            stochastic: false,
+            greedy_passes: 2,
+            alg5_c: 0.3,
+            seed: 0xDEAD_BEEF_0BAD_F00D,
+            calib_seqs: 4,
+            calib_seq_len: 24,
+            model: "t".into(),
+            shape_hash: 0x1234_ABCD,
+        }
+    }
+
+    fn test_layer(seed: u64) -> QuantizedLayer {
+        // A real preprocess → round → postprocess cycle so PostState
+        // carries honest transform seeds/scales.
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let w = crate::util::testkit::random_mat(&mut rng, 6, 8).scale(0.2);
+        let h = crate::util::testkit::random_hessian(&mut rng, 8, 4, 1e-2);
+        let pre = incoherence::preprocess(&w, &h, 2, &Processing::incoherent(), seed);
+        let codes = Mat::from_fn(6, 8, |i, j| ((i * 8 + j + seed as usize) % 4) as f64);
+        QuantizedLayer::from_codes(&format!("blk0.l{seed}"), &codes, 2, pre.post)
+    }
+
+    fn completed(block: usize, n: usize) -> BlockRecord {
+        BlockRecord::Completed {
+            block,
+            layers: (0..n)
+                .map(|i| LayerRecord {
+                    layer: test_layer((block * 10 + i) as u64),
+                    proxy_loss: 0.25 + i as f64,
+                    seconds: 0.5,
+                    accumulate_seconds: 0.1,
+                    factorize_seconds: 0.2,
+                    round_seconds: 0.3,
+                })
+                .collect(),
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("quip_qzp_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn fingerprint_roundtrips_and_diffs() {
+        let fp = test_fp();
+        let back = Fingerprint::from_json(&Json::parse(&fp.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(fp, back);
+        assert!(fp.diff(&back).is_empty());
+        let mut other = fp.clone();
+        other.bits = 4;
+        other.seed ^= 1;
+        assert_eq!(fp.diff(&other), vec!["bits", "seed"]);
+    }
+
+    #[test]
+    fn append_and_replay_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let fp = test_fp();
+        let mut j = CheckpointJournal::create(&dir, &fp, None).unwrap();
+        j.append(&completed(0, 2)).unwrap();
+        j.append(&BlockRecord::Failed {
+            block: 1,
+            error: "worker panic: boom".into(),
+        })
+        .unwrap();
+        j.append(&completed(2, 1)).unwrap();
+        drop(j);
+        let (_, records) = CheckpointJournal::open(&dir, &fp, None).unwrap();
+        assert_eq!(records.len(), 3);
+        match &records[0] {
+            BlockRecord::Completed { block: 0, layers } => {
+                assert_eq!(layers.len(), 2);
+                assert_eq!(layers[0].layer.name, "blk0.l0");
+                assert_eq!(layers[0].proxy_loss, 0.25);
+                assert_eq!(layers[1].round_seconds, 0.3);
+                // Dequantization is bit-identical through the journal.
+                let orig = match completed(0, 2) {
+                    BlockRecord::Completed { layers, .. } => layers,
+                    _ => unreachable!(),
+                };
+                assert_eq!(
+                    layers[0].layer.dequantize().data,
+                    orig[0].layer.dequantize().data
+                );
+            }
+            _ => panic!("record 0 is not Completed(block 0)"),
+        }
+        match &records[1] {
+            BlockRecord::Failed { block: 1, error } => {
+                assert!(error.contains("boom"));
+            }
+            _ => panic!("record 1 is not Failed(block 1)"),
+        }
+    }
+
+    #[test]
+    fn torn_tail_dropped_at_every_byte() {
+        // Truncating the journal anywhere inside the *last* record — any
+        // header byte, any payload byte — must replay the first record
+        // and drop the tail, never error. This is the on-disk state a
+        // power cut leaves at every possible instant of an append.
+        let dir = tmpdir("torn");
+        let fp = test_fp();
+        let mut j = CheckpointJournal::create(&dir, &fp, None).unwrap();
+        j.append(&completed(0, 1)).unwrap();
+        let whole_first = std::fs::metadata(dir.join(JOURNAL)).unwrap().len() as usize;
+        j.append(&completed(1, 1)).unwrap();
+        drop(j);
+        let full = std::fs::read(dir.join(JOURNAL)).unwrap();
+        for cut in whole_first..full.len() {
+            let d2 = tmpdir("torn_cut");
+            crate::util::fsx::atomic_write(&d2.join(MANIFEST), fp.to_json().pretty().as_bytes())
+                .unwrap();
+            std::fs::write(d2.join(JOURNAL), &full[..cut]).unwrap();
+            let (_, records) = CheckpointJournal::open(&d2, &fp, None)
+                .unwrap_or_else(|e| panic!("cut at {cut}/{}: {e}", full.len()));
+            assert_eq!(records.len(), 1, "cut at {cut}: tail must drop");
+            // The torn tail is physically gone: the next append resumes
+            // from a whole-record boundary.
+            assert_eq!(
+                std::fs::metadata(d2.join(JOURNAL)).unwrap().len() as usize,
+                whole_first
+            );
+        }
+    }
+
+    #[test]
+    fn crc_corruption_refuses_resume() {
+        let dir = tmpdir("crc");
+        let fp = test_fp();
+        let mut j = CheckpointJournal::create(&dir, &fp, None).unwrap();
+        j.append(&completed(0, 1)).unwrap();
+        drop(j);
+        let mut bytes = std::fs::read(dir.join(JOURNAL)).unwrap();
+        let mid = 8 + (bytes.len() - 8) / 2;
+        bytes[mid] ^= 0x20;
+        std::fs::write(dir.join(JOURNAL), &bytes).unwrap();
+        let err = CheckpointJournal::open(&dir, &fp, None).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_mismatch_names_fields() {
+        let dir = tmpdir("fpmismatch");
+        let fp = test_fp();
+        drop(CheckpointJournal::create(&dir, &fp, None).unwrap());
+        let mut other = fp.clone();
+        other.rounder = "vq".into();
+        let err = CheckpointJournal::open(&dir, &other, None).unwrap_err().to_string();
+        assert!(err.contains("rounder"), "{err}");
+        assert!(err.contains("refusing to resume"), "{err}");
+    }
+
+    #[test]
+    fn non_sequential_journal_refused() {
+        let dir = tmpdir("gap");
+        let fp = test_fp();
+        let mut j = CheckpointJournal::create(&dir, &fp, None).unwrap();
+        j.append(&completed(1, 1)).unwrap(); // starts at 1, not 0
+        drop(j);
+        let err = CheckpointJournal::open(&dir, &fp, None).unwrap_err().to_string();
+        assert!(err.contains("sequential"), "{err}");
+    }
+
+    #[test]
+    fn create_truncates_stale_journal() {
+        let dir = tmpdir("truncate");
+        let fp = test_fp();
+        let mut j = CheckpointJournal::create(&dir, &fp, None).unwrap();
+        j.append(&completed(0, 1)).unwrap();
+        drop(j);
+        drop(CheckpointJournal::create(&dir, &fp, None).unwrap());
+        let (_, records) = CheckpointJournal::open(&dir, &fp, None).unwrap();
+        assert!(records.is_empty(), "fresh create must own the directory");
+    }
+
+    #[test]
+    fn torn_fault_point_tears_the_append() {
+        use crate::util::fault::FaultSpec;
+        let dir = tmpdir("fault_torn");
+        let fp = test_fp();
+        let faults = Arc::new(FaultInjector::new(
+            vec![FaultSpec::parse("checkpoint.append@2:torn").unwrap()],
+            true,
+            99,
+        ));
+        let mut j = CheckpointJournal::create(&dir, &fp, Some(Arc::clone(&faults))).unwrap();
+        j.append(&completed(0, 1)).unwrap();
+        let whole_first = std::fs::metadata(dir.join(JOURNAL)).unwrap().len();
+        let err = j.append(&completed(1, 1)).unwrap_err().to_string();
+        assert!(err.contains("fault injected"), "{err}");
+        drop(j);
+        let torn_len = std::fs::metadata(dir.join(JOURNAL)).unwrap().len();
+        assert!(torn_len >= whole_first, "first record untouched");
+        // The torn directory resumes cleanly with exactly block 0.
+        let (_, records) = CheckpointJournal::open(&dir, &fp, None).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(
+            std::fs::metadata(dir.join(JOURNAL)).unwrap().len(),
+            whole_first
+        );
+    }
+}

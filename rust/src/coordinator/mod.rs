@@ -1,11 +1,13 @@
 //! Layer-3 coordination: the quantization pipeline (a staged
 //! [`QuantSession`] — block-by-block Hessian collection through the
 //! already-quantized prefix, per-layer jobs on the thread pool, typed
-//! [`PipelineEvent`] progress — the paper's §6 setup), and the serving
-//! side (TCP server, request router, dynamic batcher, generation loop,
-//! metrics).
+//! [`PipelineEvent`] progress — the paper's §6 setup), its crash-safety
+//! layer (the `.qzp` block journal + config-fingerprint manifest behind
+//! checkpoint/resume, DESIGN.md §10), and the serving side (TCP server,
+//! request router, dynamic batcher, generation loop, metrics).
 
 pub mod pipeline;
+pub mod checkpoint;
 pub mod generate;
 pub mod batcher;
 pub mod metrics;

@@ -11,9 +11,17 @@
 //! [`swap_weights`](QuantSession::swap_weights) — emitting typed
 //! [`PipelineEvent`]s through an observer callback. That gives callers
 //! progress streaming, per-block cancellation (return
-//! [`PipelineControl::Stop`] from the observer) and a seam for future
-//! resumability/sharding. [`quantize_model`] is the one-shot wrapper.
+//! [`PipelineControl::Stop`] from the observer) and crash safety:
+//! [`QuantSession::with_checkpoint_dir`] journals each completed block to
+//! a `.qzp` file (see [`super::checkpoint`]) and
+//! [`QuantSession::resume`] replays it, so a killed multi-hour run
+//! restarts from its last durable block with a byte-identical final
+//! artifact (pinned by test). A worker panic or unusable Hessian poisons
+//! only its block: the block is retried once with escalated damping, then
+//! reported via [`PipelineEvent::BlockFailed`] while the session degrades
+//! gracefully. [`quantize_model`] is the one-shot wrapper.
 
+use super::checkpoint::{BlockRecord, CheckpointJournal, Fingerprint, LayerRecord};
 use crate::hessian::HessianSet;
 use crate::linalg::Mat;
 use crate::model::quantized::QuantizedModel;
@@ -34,6 +42,9 @@ pub struct PipelineConfig {
     pub calib_seqs: usize,
     pub calib_seq_len: usize,
     pub seed: u64,
+    /// Armed fault points (`--inject-fault point@n[:mode]`) for
+    /// crash-safety testing; `None` in production runs.
+    pub faults: Option<Arc<crate::util::fault::FaultInjector>>,
 }
 
 impl Default for PipelineConfig {
@@ -43,6 +54,7 @@ impl Default for PipelineConfig {
             calib_seqs: 32,
             calib_seq_len: 128,
             seed: 0x5155_4950,
+            faults: None,
         }
     }
 }
@@ -97,6 +109,16 @@ pub enum PipelineEvent {
         block: usize,
         seconds: f64,
     },
+    /// The block failed even after one retry with escalated damping
+    /// (worker panic, unusable Hessians, injected fault). Emitted instead
+    /// of `BlockDone`; the session skips the block — its weights stay
+    /// fp32 in the running model — and continues with the next one, so a
+    /// single poisoned block degrades the artifact instead of aborting
+    /// the run. [`PipelineReport::failed_blocks`] lists the failed set.
+    BlockFailed {
+        block: usize,
+        error: String,
+    },
 }
 
 /// Observer verdict: keep going, or cancel after the current stage. A
@@ -123,12 +145,29 @@ pub struct LayerReport {
 pub struct PipelineReport {
     pub layers: Vec<LayerReport>,
     pub total_seconds: f64,
+    /// Blocks that failed their retry and were skipped (block index +
+    /// error). Empty on a fully healthy run.
+    pub failed_blocks: Vec<(usize, String)>,
 }
 
 impl PipelineReport {
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("total_seconds", Json::Num(self.total_seconds));
+        j.set(
+            "failed_blocks",
+            Json::Arr(
+                self.failed_blocks
+                    .iter()
+                    .map(|(b, e)| {
+                        let mut o = Json::obj();
+                        o.set("block", Json::Num(*b as f64));
+                        o.set("error", Json::Str(e.clone()));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
         j.set(
             "layers",
             Json::Arr(
@@ -243,6 +282,15 @@ pub fn quantize_layer_robust(
     )
 }
 
+/// Best-effort text of a caught panic payload (`panic!` with a string or
+/// format args; anything else reports as opaque).
+fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(|s| s.as_str()))
+        .unwrap_or("<non-string panic payload>")
+}
+
 /// A block-by-block quantization session over one checkpoint.
 ///
 /// The session owns a running copy of the model; after block b is
@@ -283,6 +331,8 @@ pub struct QuantSession<'a> {
     t0: Instant,
     observer: Option<Box<dyn FnMut(&PipelineEvent) -> PipelineControl + 'a>>,
     trace: Option<Arc<TraceSink>>,
+    journal: Option<CheckpointJournal>,
+    failed: Vec<(usize, String)>,
 }
 
 impl<'a> QuantSession<'a> {
@@ -298,9 +348,102 @@ impl<'a> QuantSession<'a> {
             t0: Instant::now(),
             observer: None,
             trace: None,
+            journal: None,
+            failed: Vec::new(),
             ck,
             cfg,
         })
+    }
+
+    /// The config fingerprint this session would stamp on a checkpoint
+    /// manifest (see [`Fingerprint`]). Captures every knob that changes
+    /// quantized bytes, so resume can refuse incompatible sessions.
+    pub fn fingerprint(&self) -> Fingerprint {
+        Fingerprint {
+            bits: self.cfg.quant.bits,
+            rounder: self.rounder.name().to_string(),
+            transform: self.cfg.quant.processing.transform.to_string(),
+            incoherent: self.cfg.quant.processing.incoherent,
+            stochastic: self.cfg.quant.force_stochastic,
+            greedy_passes: self.cfg.quant.greedy_passes,
+            alg5_c: self.cfg.quant.alg5_c,
+            seed: self.cfg.seed,
+            calib_seqs: self.cfg.calib_seqs,
+            calib_seq_len: self.cfg.calib_seq_len,
+            model: self.ck.config.name.clone(),
+            shape_hash: crate::util::crc32::crc32(
+                self.ck.config.to_json().to_string().as_bytes(),
+            ),
+        }
+    }
+
+    /// Checkpoint this session into `dir`: write the fingerprint manifest
+    /// and start a fresh `.qzp` journal that
+    /// [`swap_weights`](Self::swap_weights) appends each completed block
+    /// to. Apply any
+    /// [`with_rounder`](Self::with_rounder) override *before* this call
+    /// so the fingerprint names the rounder actually used.
+    pub fn with_checkpoint_dir(mut self, dir: &std::path::Path) -> crate::Result<Self> {
+        let fp = self.fingerprint();
+        self.journal = Some(CheckpointJournal::create(
+            dir,
+            &fp,
+            self.cfg.faults.clone(),
+        )?);
+        Ok(self)
+    }
+
+    /// Resume a checkpointed session from `dir`: verify the fingerprint
+    /// matches `cfg` (refusing on any difference, or on journal CRC
+    /// damage), replay every journaled block into the running model —
+    /// dequantizing the stored codes reproduces the exact f32 weights the
+    /// original `swap_weights` installed, so downstream Hessians and the
+    /// final artifact are byte-identical to an uninterrupted run — and
+    /// position the session at the first unjournaled block. A torn tail
+    /// record (interrupted append) is dropped; that block re-quantizes.
+    pub fn resume(
+        ck: &'a Checkpoint,
+        cfg: PipelineConfig,
+        dir: &std::path::Path,
+    ) -> crate::Result<QuantSession<'a>> {
+        let mut session = QuantSession::new(ck, cfg)?;
+        let fp = session.fingerprint();
+        let (journal, records) =
+            CheckpointJournal::open(dir, &fp, session.cfg.faults.clone())?;
+        for rec in records {
+            match rec {
+                BlockRecord::Completed { layers, .. } => {
+                    for lr in layers {
+                        let wd = lr.layer.dequantize();
+                        let data: Vec<f32> = wd.data.iter().map(|&x| x as f32).collect();
+                        session.model.set_weight(&lr.layer.name, data)?;
+                        session.reports.push(LayerReport {
+                            name: lr.layer.name.clone(),
+                            proxy_loss: lr.proxy_loss,
+                            seconds: lr.seconds,
+                            accumulate_seconds: lr.accumulate_seconds,
+                            factorize_seconds: lr.factorize_seconds,
+                            round_seconds: lr.round_seconds,
+                        });
+                        session.layers.push(lr.layer);
+                    }
+                }
+                BlockRecord::Failed { block, error } => {
+                    session.failed.push((block, error));
+                }
+            }
+            session.next_block += 1;
+        }
+        if session.next_block > 0 {
+            crate::log_info!(
+                "resumed quantization at block {}/{} ({} journaled layers)",
+                session.next_block,
+                session.n_blocks(),
+                session.layers.len()
+            );
+        }
+        session.journal = Some(journal);
+        Ok(session)
     }
 
     /// Install the event observer. Called synchronously on the driving
@@ -383,10 +526,26 @@ impl<'a> QuantSession<'a> {
     /// Stage 2: quantize the block's linear layers in parallel on the
     /// thread pool. Pure compute — the running model is untouched until
     /// [`swap_weights`](Self::swap_weights).
+    ///
+    /// Failure isolation: each layer job runs under `catch_unwind`, so a
+    /// panicking worker (a bug, or the `pipeline.layer_round` fault
+    /// point) poisons only this block's result — the pool threads for
+    /// sibling layers finish normally and the panic surfaces as this
+    /// block's `Err`, which [`step`](Self::step) retries once with
+    /// escalated damping before declaring [`PipelineEvent::BlockFailed`].
     pub fn quantize_block(
         &mut self,
         block: usize,
         hset: &HessianSet,
+    ) -> crate::Result<BlockOutput> {
+        self.quantize_block_with(block, hset, self.cfg.quant.clone())
+    }
+
+    fn quantize_block_with(
+        &mut self,
+        block: usize,
+        hset: &HessianSet,
+        qcfg: QuantConfig,
     ) -> crate::Result<BlockOutput> {
         let prefix = Self::block_prefix(block);
         let block_specs: Vec<LinearSpec> = self
@@ -411,21 +570,30 @@ impl<'a> QuantSession<'a> {
             .map(|s| hset.finish(&s.hkey))
             .collect::<crate::Result<_>>()?;
 
-        let qcfg = self.cfg.quant.clone();
         let seed = self.cfg.seed;
+        let faults = self.cfg.faults.clone();
         let rounder = Arc::clone(&self.rounder);
         let results = parallel_map(block_specs.len(), default_threads(), |i| {
             let t = Instant::now();
             let layer_seed = seed
                 .wrapping_mul(0x100000001B3)
                 .wrapping_add((block * 16 + i) as u64);
-            let out = quantize_layer_robust(
-                rounder.as_ref(),
-                &weights[i],
-                &hessians[i],
-                &qcfg,
-                layer_seed,
-            );
+            // catch_unwind here, inside the pool closure: parallel_map's
+            // thread::scope would otherwise propagate a worker panic and
+            // take the whole session down with it.
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if let Some(f) = &faults {
+                    f.hit("pipeline.layer_round")?;
+                }
+                quantize_layer_robust(
+                    rounder.as_ref(),
+                    &weights[i],
+                    &hessians[i],
+                    &qcfg,
+                    layer_seed,
+                )
+            }))
+            .unwrap_or_else(|p| Err(anyhow::anyhow!("worker panic: {}", panic_text(&p))));
             (out, t.elapsed().as_secs_f64())
         });
         let results = results
@@ -475,6 +643,7 @@ impl<'a> QuantSession<'a> {
             results,
         } = out;
         let mut control = PipelineControl::Continue;
+        let first_layer = self.layers.len();
         for (spec, res) in specs.iter().zip(results) {
             let LayerResult {
                 lq,
@@ -566,6 +735,31 @@ impl<'a> QuantSession<'a> {
                 control = PipelineControl::Stop;
             }
         }
+        // Make the block durable *before* advancing the cursor: a kill
+        // at the `pipeline.block_done` fault point (immediately after the
+        // append) leaves a journal whose replay reproduces exactly this
+        // session state, so resume is byte-identical from every block
+        // boundary.
+        if self.journal.is_some() {
+            let layers = self.layers[first_layer..]
+                .iter()
+                .zip(&self.reports[first_layer..])
+                .map(|(layer, rep)| LayerRecord {
+                    layer: layer.clone(),
+                    proxy_loss: rep.proxy_loss,
+                    seconds: rep.seconds,
+                    accumulate_seconds: rep.accumulate_seconds,
+                    factorize_seconds: rep.factorize_seconds,
+                    round_seconds: rep.round_seconds,
+                })
+                .collect();
+            if let Some(journal) = &mut self.journal {
+                journal.append(&BlockRecord::Completed { block, layers })?;
+            }
+        }
+        if let Some(f) = &self.cfg.faults {
+            f.hit("pipeline.block_done")?;
+        }
         self.next_block += 1;
         Ok(control)
     }
@@ -593,17 +787,60 @@ impl<'a> QuantSession<'a> {
         }
         let t_block = Instant::now();
         let hset = self.collect_hessians(block, calib)?;
-        let out = self.quantize_block(block, &hset)?;
-        let mut control = self.swap_weights(out)?;
-        crate::log_info!(
-            "block {block}: quantized {n_layers} layers ({:.1}s elapsed)",
-            self.t0.elapsed().as_secs_f64()
-        );
-        let c = self.emit(PipelineEvent::BlockDone {
-            block,
-            seconds: t_block.elapsed().as_secs_f64(),
-        });
-        if c == PipelineControl::Stop {
+        let out = match self.quantize_block(block, &hset) {
+            Ok(out) => Ok(out),
+            Err(first) => {
+                // Failure isolation: retry the poisoned block once with
+                // escalated damping (10× the configured α baseline, on
+                // top of quantize_layer_robust's own per-layer α → 10α →
+                // 100α ladder) before giving up on it.
+                crate::log_warn!(
+                    "block {block} failed ({first}); retrying once with escalated damping"
+                );
+                let mut qcfg = self.cfg.quant.clone();
+                qcfg.processing.alpha = qcfg.processing.alpha.max(1e-3) * 10.0;
+                self.quantize_block_with(block, &hset, qcfg)
+            }
+        };
+        let mut control = match out {
+            Ok(out) => {
+                let control = self.swap_weights(out)?;
+                crate::log_info!(
+                    "block {block}: quantized {n_layers} layers ({:.1}s elapsed)",
+                    self.t0.elapsed().as_secs_f64()
+                );
+                let c = self.emit(PipelineEvent::BlockDone {
+                    block,
+                    seconds: t_block.elapsed().as_secs_f64(),
+                });
+                if c == PipelineControl::Stop {
+                    PipelineControl::Stop
+                } else {
+                    control
+                }
+            }
+            Err(retry_err) => {
+                // The retry failed too: skip the block (its weights stay
+                // fp32 in the running model, so later blocks still see a
+                // consistent prefix), journal the failure for resume, and
+                // degrade gracefully instead of aborting the session.
+                let error = retry_err.to_string();
+                crate::log_warn!("block {block} failed after retry, skipping: {error}");
+                if let Some(journal) = &mut self.journal {
+                    journal.append(&BlockRecord::Failed {
+                        block,
+                        error: error.clone(),
+                    })?;
+                }
+                if let Some(f) = &self.cfg.faults {
+                    f.hit("pipeline.block_done")?;
+                }
+                self.failed.push((block, error.clone()));
+                self.next_block += 1;
+                self.emit(PipelineEvent::BlockFailed { block, error })
+            }
+        };
+        if self.is_done() {
             control = PipelineControl::Stop;
         }
         Ok(control)
@@ -643,6 +880,7 @@ impl<'a> QuantSession<'a> {
             PipelineReport {
                 layers: self.reports,
                 total_seconds: self.t0.elapsed().as_secs_f64(),
+                failed_blocks: self.failed,
             },
         )
     }
@@ -686,6 +924,7 @@ mod tests {
             calib_seqs: 4,
             calib_seq_len: 24,
             seed: 7,
+            faults: None,
         };
         let (qm, report) = quantize_model(&ck, &calib, &pcfg).unwrap();
         (qm, report, ck)
@@ -705,6 +944,7 @@ mod tests {
             calib_seqs: 4,
             calib_seq_len: 24,
             seed: 7,
+            faults: None,
         };
         (ck, calib, pcfg)
     }
@@ -1038,6 +1278,259 @@ mod tests {
             }
         }
         assert_eq!(tids.len(), ck.config.n_layers, "one tid lane per block");
+    }
+
+    use crate::model::quantized::QZ_VERSION;
+    use crate::util::fault::{FaultInjector, FaultSpec};
+
+    fn test_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("quip_pipe_ck_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn armed(specs: &[&str]) -> Option<Arc<FaultInjector>> {
+        Some(Arc::new(FaultInjector::new(
+            specs.iter().map(|s| FaultSpec::parse(s).unwrap()).collect(),
+            true, // soft: faults surface as Err so one process can kill + resume
+            0x5EED,
+        )))
+    }
+
+    #[test]
+    fn resume_matches_uninterrupted_at_2_and_4_bits() {
+        // Acceptance pin: kill after block 0, resume, finish — the final
+        // artifact must be byte-identical to an uninterrupted run with no
+        // checkpointing at all, at both paper bit widths.
+        for bits in [2u32, 4] {
+            let (ck, calib, mut pcfg) = tiny_setup();
+            pcfg.quant.bits = bits;
+            let (cold, _) = quantize_model(&ck, &calib, &pcfg).unwrap();
+            let cold_bytes = cold.to_bytes(QZ_VERSION);
+
+            let dir = test_dir(&format!("resume{bits}"));
+            let mut kill_cfg = pcfg.clone();
+            kill_cfg.faults = armed(&["pipeline.block_done@1"]);
+            let err = QuantSession::new(&ck, kill_cfg)
+                .unwrap()
+                .with_checkpoint_dir(&dir)
+                .unwrap()
+                .run(&calib)
+                .err()
+                .expect("injected fault must abort the run");
+            assert!(err.to_string().contains("fault injected"), "{err}");
+
+            let session = QuantSession::resume(&ck, pcfg.clone(), &dir).unwrap();
+            let (qm, report) = session.run(&calib).unwrap();
+            assert_eq!(
+                qm.to_bytes(QZ_VERSION),
+                cold_bytes,
+                "resumed artifact differs at {bits} bits"
+            );
+            assert_eq!(report.layers.len(), ck.config.linear_specs().len());
+            assert!(report.failed_blocks.is_empty());
+        }
+    }
+
+    #[test]
+    fn kill_at_every_block_boundary_resumes_bit_identical() {
+        // Acceptance: the crash-resume loop — kill at block boundary n
+        // for every n, resume each wreck to completion, and require the
+        // exact uninterrupted bytes every time.
+        let (ck, calib, pcfg) = tiny_setup();
+        let (cold, _) = quantize_model(&ck, &calib, &pcfg).unwrap();
+        let cold_bytes = cold.to_bytes(QZ_VERSION);
+        let n_blocks = ck.config.n_layers;
+        assert!(n_blocks >= 2, "loop needs ≥2 boundaries");
+        for boundary in 1..=n_blocks {
+            let dir = test_dir(&format!("bound{boundary}"));
+            let mut kill_cfg = pcfg.clone();
+            kill_cfg.faults = armed(&[format!("pipeline.block_done@{boundary}").as_str()]);
+            let killed = QuantSession::new(&ck, kill_cfg)
+                .unwrap()
+                .with_checkpoint_dir(&dir)
+                .unwrap()
+                .run(&calib);
+            assert!(killed.is_err(), "boundary {boundary} must kill the run");
+
+            let session = QuantSession::resume(&ck, pcfg.clone(), &dir).unwrap();
+            assert_eq!(session.next_block, boundary, "journal covers {boundary} blocks");
+            let (qm, _) = session.run(&calib).unwrap();
+            assert_eq!(
+                qm.to_bytes(QZ_VERSION),
+                cold_bytes,
+                "kill at boundary {boundary}: resumed artifact differs"
+            );
+        }
+    }
+
+    #[test]
+    fn resume_refuses_on_fingerprint_mismatch() {
+        // Each of bits / rounder / transform / seed flipped must refuse
+        // with an error naming the differing field.
+        let (ck, calib, pcfg) = tiny_setup();
+        let dir = test_dir("fp");
+        let mut session = QuantSession::new(&ck, pcfg.clone())
+            .unwrap()
+            .with_checkpoint_dir(&dir)
+            .unwrap();
+        session.step(&calib).unwrap();
+        drop(session);
+
+        let flips: Vec<(&str, PipelineConfig)> = vec![
+            ("bits", {
+                let mut c = pcfg.clone();
+                c.quant.bits = 4;
+                c
+            }),
+            ("rounder", {
+                let mut c = pcfg.clone();
+                c.quant.method = Method::Nearest;
+                c
+            }),
+            ("transform", {
+                let mut c = pcfg.clone();
+                c.quant.processing.transform = crate::linalg::TransformKind::Hadamard;
+                c
+            }),
+            ("seed", {
+                let mut c = pcfg.clone();
+                c.seed = 8;
+                c
+            }),
+        ];
+        for (field, cfg) in flips {
+            let err = QuantSession::resume(&ck, cfg, &dir)
+                .map(|_| ())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(field), "flipping {field}: error was: {err}");
+            assert!(err.contains("refusing to resume"), "{err}");
+        }
+        // And the unflipped config still resumes.
+        assert!(QuantSession::resume(&ck, pcfg, &dir).is_ok());
+    }
+
+    #[test]
+    fn torn_journal_tail_requantizes_block_to_identical_bytes() {
+        // Kill mid-append (torn record) after block 1: resume must drop
+        // the torn tail, re-quantize block 1, and still match the
+        // uninterrupted bytes.
+        let (ck, calib, pcfg) = tiny_setup();
+        let (cold, _) = quantize_model(&ck, &calib, &pcfg).unwrap();
+        let dir = test_dir("torn");
+        let mut torn_cfg = pcfg.clone();
+        torn_cfg.faults = armed(&["checkpoint.append@2:torn"]);
+        let err = QuantSession::new(&ck, torn_cfg)
+            .unwrap()
+            .with_checkpoint_dir(&dir)
+            .unwrap()
+            .run(&calib)
+            .err()
+            .expect("torn-append fault must abort the run");
+        assert!(err.to_string().contains("fault injected"), "{err}");
+
+        let session = QuantSession::resume(&ck, pcfg.clone(), &dir).unwrap();
+        assert_eq!(session.next_block, 1, "torn block 1 record must drop");
+        let (qm, _) = session.run(&calib).unwrap();
+        assert_eq!(qm.to_bytes(QZ_VERSION), cold.to_bytes(QZ_VERSION));
+    }
+
+    #[test]
+    fn worker_panic_poisons_only_its_block() {
+        // A worker panicking in block 0 (first attempt AND the escalated
+        // retry: the block has 6 layers, so hits 1 and 7 are each
+        // attempt's first rounding call) must yield BlockFailed(0) while
+        // block 1 completes; finish() reports the failed set and the
+        // artifact carries only block 1's layers.
+        let (ck, calib, mut pcfg) = tiny_setup();
+        pcfg.faults = armed(&["pipeline.layer_round@1:panic", "pipeline.layer_round@7:panic"]);
+        let mut events: Vec<PipelineEvent> = Vec::new();
+        let (qm, report) = QuantSession::new(&ck, pcfg)
+            .unwrap()
+            .on_event(|ev| {
+                events.push(ev.clone());
+                PipelineControl::Continue
+            })
+            .run(&calib)
+            .unwrap();
+        assert_eq!(report.failed_blocks.len(), 1);
+        assert_eq!(report.failed_blocks[0].0, 0);
+        assert!(
+            report.failed_blocks[0].1.contains("worker panic"),
+            "{}",
+            report.failed_blocks[0].1
+        );
+        let failed_at = events
+            .iter()
+            .position(|e| matches!(e, PipelineEvent::BlockFailed { block: 0, .. }))
+            .expect("BlockFailed(0) emitted");
+        let block1_done = events
+            .iter()
+            .position(|e| matches!(e, PipelineEvent::BlockDone { block: 1, .. }))
+            .expect("block 1 still completes");
+        assert!(failed_at < block1_done);
+        assert!(
+            !events.iter().any(|e| matches!(e, PipelineEvent::BlockDone { block: 0, .. })),
+            "failed block must not also report BlockDone"
+        );
+        // Artifact: block 1's layers only; report layers match.
+        assert!(qm.layers.iter().all(|l| l.name.starts_with("blk1.")));
+        assert_eq!(report.layers.len(), qm.layers.len());
+        let j = report.to_json();
+        let failed = j.get("failed_blocks").and_then(|f| f.as_arr()).unwrap();
+        assert_eq!(failed.len(), 1);
+    }
+
+    #[test]
+    fn single_worker_panic_recovers_via_block_retry() {
+        // One panic on the first attempt only: the retry (escalated
+        // damping) succeeds, no BlockFailed, all layers present.
+        let (ck, calib, mut pcfg) = tiny_setup();
+        pcfg.faults = armed(&["pipeline.layer_round@1:panic"]);
+        let mut events: Vec<PipelineEvent> = Vec::new();
+        let (qm, report) = QuantSession::new(&ck, pcfg)
+            .unwrap()
+            .on_event(|ev| {
+                events.push(ev.clone());
+                PipelineControl::Continue
+            })
+            .run(&calib)
+            .unwrap();
+        assert!(report.failed_blocks.is_empty());
+        assert!(!events.iter().any(|e| matches!(e, PipelineEvent::BlockFailed { .. })));
+        assert_eq!(qm.layers.len(), ck.config.linear_specs().len());
+    }
+
+    #[test]
+    fn checkpointed_run_with_failed_block_resumes_failed_set() {
+        // A journaled failed block replays as failed on resume: the
+        // session does not retry it, and the final report carries it.
+        let (ck, calib, mut pcfg) = tiny_setup();
+        let dir = test_dir("failrec");
+        pcfg.faults = armed(&[
+            "pipeline.layer_round@1:panic",
+            "pipeline.layer_round@7:panic",
+            // block_done fires after every journaled record, including the
+            // Failed one for block 0 — hit 2 is block 1's completion.
+            "pipeline.block_done@2",
+        ]);
+        let err = QuantSession::new(&ck, pcfg.clone())
+            .unwrap()
+            .with_checkpoint_dir(&dir)
+            .unwrap()
+            .run(&calib)
+            .err()
+            .expect("block_done kill must abort the run");
+        assert!(err.to_string().contains("fault injected"), "{err}");
+
+        pcfg.faults = None;
+        let session = QuantSession::resume(&ck, pcfg, &dir).unwrap();
+        assert_eq!(session.next_block, 2, "failed block 0 + completed block 1");
+        let (qm, report) = session.run(&calib).unwrap();
+        assert_eq!(report.failed_blocks.len(), 1);
+        assert_eq!(report.failed_blocks[0].0, 0);
+        assert!(qm.layers.iter().all(|l| l.name.starts_with("blk1.")));
     }
 
     #[test]

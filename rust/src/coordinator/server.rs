@@ -24,9 +24,12 @@
 //! parallelize internally across the `util::threadpool` substrate.
 //!
 //! Observability (DESIGN.md §9): besides request lines, a connection may
-//! send three bare control commands — `metrics` (Prometheus text
+//! send four bare control commands — `metrics` (Prometheus text
 //! exposition, terminated by a `# EOF` line), `stats` (the JSON metrics
-//! summary as one line) and `healthz` (one JSON line, `{"ok": true, …}`).
+//! summary as one line), `healthz` (one JSON line, `{"ok": true, …}`)
+//! and `shutdown` (graceful drain, DESIGN.md §10: stop admission, let
+//! admitted sequences finish within [`ServerConfig::drain_timeout`],
+//! answer `{"ok": true, "draining": true}`).
 //! Every request gets a trace id at admission and the scheduler records
 //! spans (admission-wait, prefill, per-step decode, stream flush,
 //! request) plus shed/eviction instants into the server's
@@ -83,6 +86,11 @@ pub struct ServerConfig {
     /// Write the Chrome trace-event JSON here on shutdown (`quip serve
     /// --trace-out`). `None` disables the flush.
     pub trace_out: Option<String>,
+    /// Graceful-drain budget (`quip serve --drain-timeout-ms`): after a
+    /// `shutdown` control command the admitted sequences keep decoding
+    /// for at most this long; any still unfinished at the deadline are
+    /// answered "overloaded: drain timeout" so shutdown is bounded.
+    pub drain_timeout: Duration,
 }
 
 impl Default for ServerConfig {
@@ -99,6 +107,7 @@ impl Default for ServerConfig {
             admit_timeout: Duration::from_secs(2),
             trace: None,
             trace_out: None,
+            drain_timeout: Duration::from_secs(5),
         }
     }
 }
@@ -230,21 +239,48 @@ impl Server {
             };
             let reserve_tokens = cfg.reserve_tokens;
             let admit_timeout = cfg.admit_timeout;
+            let drain_timeout = cfg.drain_timeout;
             threads.push(std::thread::spawn(move || {
                 let mut active: Vec<ActiveSeq> = Vec::new();
                 let mut slots: Vec<Slot> = Vec::new();
                 let mut waiting: VecDeque<Pending<Job>> = VecDeque::new();
+                let mut drain_deadline: Option<Instant> = None;
                 loop {
-                    // On stop: admit nothing more (waiting jobs are shed
-                    // with "overloaded"), but run the already admitted
-                    // sequences to completion so every admitted request
-                    // gets its response.
+                    // On stop: admit nothing more (waiting/queued jobs are
+                    // shed with "overloaded"), but run the already admitted
+                    // sequences to completion — bounded by `drain_timeout`
+                    // — so every admitted request gets its response.
                     let stopping = stop.load(Ordering::SeqCst);
                     if stopping {
+                        let deadline = *drain_deadline
+                            .get_or_insert_with(|| Instant::now() + drain_timeout);
+                        waiting.extend(batcher.poll(usize::MAX));
                         for p in waiting.drain(..) {
                             shed(p, &metrics, &trace, "overloaded: shutting down");
                         }
                         if active.is_empty() {
+                            break;
+                        }
+                        if Instant::now() >= deadline {
+                            for (seq, slot) in
+                                active.drain(..).zip(slots.drain(..))
+                            {
+                                drop(seq); // releases its pool pages
+                                metrics.shed.fetch_add(1, Ordering::Relaxed);
+                                trace.instant(
+                                    slot.trace_id,
+                                    "drain_shed",
+                                    "serve",
+                                    vec![("id".into(), Json::Num(slot.id as f64))],
+                                );
+                                if let Some(s) = lock_unpoisoned(&slot.resp).take() {
+                                    let _ = respond_err(
+                                        &s,
+                                        slot.id,
+                                        "overloaded: drain timeout",
+                                    );
+                                }
+                            }
                             break;
                         }
                     } else if active.is_empty() && waiting.is_empty() {
@@ -393,6 +429,14 @@ impl Server {
         })
     }
 
+    /// True once shutdown has been initiated — by [`shutdown`](Self::shutdown)
+    /// or by a client's `shutdown` control command. The driving thread
+    /// (e.g. `quip serve`) polls this and calls `shutdown()` to join the
+    /// worker threads and flush the trace.
+    pub fn draining(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         self.batcher.close();
@@ -453,6 +497,23 @@ fn handle_connection(
         let line = taken;
         if line.trim().is_empty() {
             continue;
+        }
+        // Graceful drain (DESIGN.md §10): a bare `shutdown` line stops
+        // admission (new requests shed "overloaded: shutting down"),
+        // lets admitted sequences finish within the drain budget, and
+        // winds the server down. Acknowledged before stop flips so the
+        // issuing client always gets its response.
+        if line.trim() == "shutdown" {
+            let mut o = Json::obj();
+            o.set("ok", Json::Bool(true));
+            o.set("draining", Json::Bool(true));
+            let mut resp = o.to_string();
+            resp.push('\n');
+            let mut out: &TcpStream = &stream;
+            let _ = out.write_all(resp.as_bytes());
+            stop.store(true, Ordering::SeqCst);
+            batcher.close();
+            return;
         }
         // Bare control commands bypass request accounting entirely.
         if let Some(resp) = control_response(line.trim(), metrics, started) {
@@ -879,6 +940,22 @@ impl Client {
         Json::parse(&line)
     }
 
+    /// Graceful drain (`shutdown` command): Ok once the server has
+    /// acknowledged `{"ok": true, "draining": true}`. In-flight requests
+    /// still finish (within the server's drain budget); new ones are
+    /// shed.
+    pub fn shutdown(&mut self) -> crate::Result<()> {
+        self.stream.write_all(b"shutdown\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let j = Json::parse(&line)?;
+        anyhow::ensure!(
+            j.get("draining").and_then(|x| x.as_bool()).unwrap_or(false),
+            "unexpected shutdown response: {line}"
+        );
+        Ok(())
+    }
+
     /// Liveness probe (`healthz` command): Ok(uptime seconds) when the
     /// server answers `{"ok": true, …}`.
     pub fn healthz(&mut self) -> crate::Result<f64> {
@@ -1155,6 +1232,111 @@ mod tests {
         assert!(req.req_f64("dur").unwrap() > 0.0);
         let _ = std::fs::remove_file(&path_s);
         server.shutdown(); // idempotent: trace_out flushed once
+    }
+
+    /// A model big enough that decoding tens of tokens takes many
+    /// scheduler iterations — gives the shutdown command a wide window
+    /// to land while a request is mid-decode.
+    fn slow_model() -> Arc<Transformer> {
+        let cfg = ModelConfig::sized("t", 128, 4, 4, 512);
+        Arc::new(Transformer::from_checkpoint(&Checkpoint::random(&cfg, 5)).unwrap())
+    }
+
+    /// Open a streaming request and return (writer, reader) after the
+    /// first token frame arrived — i.e. once the request is provably
+    /// admitted and decoding.
+    fn admitted_stream(
+        addr: &std::net::SocketAddr,
+        max_tokens: usize,
+    ) -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let req = format!(
+            "{{\"prompt\": [1, 2, 3], \"max_tokens\": {max_tokens}, \"stream\": true}}\n"
+        );
+        w.write_all(req.as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("error").is_none(), "request not admitted: {line}");
+        assert_eq!(j.req_f64("index").unwrap(), 0.0);
+        (w, reader)
+    }
+
+    #[test]
+    fn shutdown_command_drains_in_flight_request() {
+        let model = slow_model();
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, EngineKind::auto(None), cfg).unwrap();
+        let max_tokens = 8;
+        let (_w, mut reader) = admitted_stream(&server.addr, max_tokens);
+
+        // Drain from a second connection while the first is mid-decode.
+        let mut ctl = Client::connect(&server.addr).unwrap();
+        ctl.shutdown().unwrap();
+        assert!(server.draining());
+        // The issuing connection is closed; new work on it is refused.
+        assert!(ctl.request(&[1, 2], 2).is_err());
+
+        // The in-flight request still runs to completion.
+        let mut frames = 1usize;
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(!line.is_empty(), "stream cut before done frame");
+            let j = Json::parse(&line).unwrap();
+            assert!(j.get("error").is_none(), "drained request errored: {line}");
+            if j.get("done").and_then(|x| x.as_bool()).unwrap_or(false) {
+                let tokens = j.req("tokens").unwrap().as_arr().unwrap().len();
+                assert_eq!(tokens, max_tokens);
+                break;
+            }
+            frames += 1;
+        }
+        assert_eq!(frames, max_tokens);
+        server.shutdown();
+        assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn drain_timeout_zero_sheds_active_sequences() {
+        let model = slow_model();
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            drain_timeout: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let mut server = Server::start(model, EngineKind::auto(None), cfg).unwrap();
+        // Enough decode budget that the request cannot finish before the
+        // shutdown lands (each step on the slow model is ~ms).
+        let (_w, mut reader) = admitted_stream(&server.addr, 60);
+
+        let mut ctl = Client::connect(&server.addr).unwrap();
+        ctl.shutdown().unwrap();
+
+        // With a zero drain budget the scheduler sheds the in-flight
+        // sequence at the next token boundary instead of finishing it.
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(!line.is_empty(), "stream cut without a shed response");
+            let j = Json::parse(&line).unwrap();
+            if j.get("done").and_then(|x| x.as_bool()).unwrap_or(false) {
+                panic!("sequence finished despite zero drain budget");
+            }
+            if let Some(err) = j.get("error") {
+                let msg = err.as_str().unwrap_or("?");
+                assert!(msg.contains("drain timeout"), "{msg}");
+                break;
+            }
+        }
+        server.shutdown();
+        assert!(server.metrics.shed.load(Ordering::Relaxed) >= 1);
+        assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -44,8 +44,7 @@ impl TokenStream {
         for &t in &self.tokens {
             w.bytes(&(t as u16).to_le_bytes());
         }
-        std::fs::write(path, &w.buf)?;
-        Ok(())
+        crate::util::fsx::atomic_write(path, &w.buf)
     }
 
     pub fn len(&self) -> usize {

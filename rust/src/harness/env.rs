@@ -88,6 +88,7 @@ impl Env {
             calib_seqs: self.calib_seqs,
             calib_seq_len: 128,
             seed: 0x5155_4950,
+            faults: None,
         };
         let (qm, report) = quantize_model(&ck, &calib, &pcfg)?;
         Ok((qm, report.total_proxy()))
@@ -177,9 +178,8 @@ impl EvalResult {
 /// Write a result JSON under results/.
 pub fn write_result(name: &str, j: &Json) -> crate::Result<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
-    std::fs::create_dir_all(&dir)?;
     let path = dir.join(format!("{name}.json"));
-    std::fs::write(&path, j.pretty())?;
+    crate::util::fsx::atomic_write(&path, j.pretty().as_bytes())?;
     println!("→ results/{name}.json");
     Ok(path)
 }

@@ -31,12 +31,18 @@
 //! continuous-batching loop — KV bytes per active token, tokens/s, the
 //! prefix-sharing hit numbers, and the shed rate of a real server under
 //! synthetic overload of a deliberately tiny pool (EXPERIMENTS.md
-//! §Perf 6).
+//! §Perf 6),
 //!
-//! `quip sweep <rho|calib|greedy|batch|transform|quant|codebook|serve>
-//! [--model s0] [--bits 2]`. `batch`, `transform`, `quant`, `codebook`
-//! and `serve` are artifact-free (synthetic inputs) so they run
-//! anywhere, including CI (`--fast`).
+//! plus the `session` sweep: the crash-resume drill (DESIGN.md §10) —
+//! quantize with a `.qzp` journal, kill at a seeded block boundary,
+//! resume, verify the artifact is byte-identical to an uninterrupted
+//! run, and report the crash-path cost vs a cold start (EXPERIMENTS.md
+//! §Robustness).
+//!
+//! `quip sweep <rho|calib|greedy|batch|transform|quant|codebook|serve|session>
+//! [--model s0] [--bits 2]`. `batch`, `transform`, `quant`, `codebook`,
+//! `serve` and `session` are artifact-free (synthetic inputs) so they
+//! run anywhere, including CI (`--fast`).
 
 use super::env::{f2, write_result, Env, TablePrinter};
 use crate::coordinator::pipeline::{quantize_model, PipelineConfig};
@@ -55,13 +61,149 @@ pub fn run_sweep(which: &str, args: &Args) -> crate::Result<()> {
         "quant" => sweep_quant(args),
         "codebook" => sweep_codebook(args),
         "serve" => sweep_serve(args),
+        "session" => sweep_session(args),
         other => {
             anyhow::bail!(
                 "unknown sweep '{other}' (rho, calib, greedy, batch, transform, quant, codebook, \
-                 serve)"
+                 serve, session)"
             )
         }
     }
+}
+
+/// Crash-resume drill (DESIGN.md §10): quantize a synthetic checkpoint
+/// with a `.qzp` journal, kill the session at a seeded block boundary
+/// (soft fault — the journal on disk is exactly what a process kill
+/// would leave), resume, and require the final artifact byte-identical
+/// to an uninterrupted run. Reports the crash-path cost (interrupted +
+/// resume wall-clock) against the cold run. Artifact-free; CI runs it
+/// with `--fast`.
+fn sweep_session(args: &Args) -> crate::Result<()> {
+    use crate::coordinator::QuantSession;
+    use crate::data::gen::markov_stream;
+    use crate::model::quantized::QZ_VERSION;
+    use crate::model::weights::Checkpoint;
+    use crate::model::ModelConfig;
+    use crate::util::fault::{FaultInjector, FaultSpec};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let fast = args.flag("fast");
+    let cfg = if fast {
+        ModelConfig::sized("t", 32, 2, 4, 64)
+    } else {
+        ModelConfig::sized("t", 64, 4, 4, 256)
+    };
+    let seed = args.opt_u64("seed", 0x5EED);
+    let bits = args.opt_usize("bits", 2) as u32;
+    let ck = Checkpoint::random(&cfg, 1);
+    let stream = markov_stream(cfg.vocab as u32, 4_000, 2);
+    let calib = stream.calibration(24, 4, 3);
+    let pcfg = PipelineConfig {
+        quant: QuantConfig {
+            bits,
+            greedy_passes: 2,
+            ..Default::default()
+        },
+        calib_seqs: 4,
+        calib_seq_len: 24,
+        seed: 7,
+        faults: None,
+    };
+    let n_blocks = cfg.n_layers;
+    println!(
+        "crash-resume session sweep — {} blocks @ {bits} bits: quantize, kill at a \
+         seeded block boundary, resume, verify byte-identity\n",
+        n_blocks
+    );
+
+    // Cold (uninterrupted, journal-free) reference run.
+    let t0 = Instant::now();
+    let (cold, _) = quantize_model(&ck, &calib, &pcfg)?;
+    let cold_s = t0.elapsed().as_secs_f64();
+    let cold_bytes = cold.to_bytes(QZ_VERSION);
+
+    // Kill at a seeded block boundary. Soft mode surfaces the injected
+    // kill as an Err *after* the journal append is durable, so the
+    // on-disk state is exactly what a real `kill -9` at that boundary
+    // leaves behind.
+    let kill_at = 1 + (seed as usize % n_blocks);
+    let dir = std::env::temp_dir().join(format!(
+        "quip_sweep_session_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut kill_cfg = pcfg.clone();
+    kill_cfg.faults = Some(Arc::new(FaultInjector::new(
+        vec![FaultSpec::parse(&format!("pipeline.block_done@{kill_at}"))?],
+        true,
+        seed,
+    )));
+    let t1 = Instant::now();
+    let killed = QuantSession::new(&ck, kill_cfg)?
+        .with_checkpoint_dir(&dir)?
+        .run(&calib);
+    anyhow::ensure!(
+        killed.is_err(),
+        "injected fault at block boundary {kill_at} must abort the run"
+    );
+    let interrupted_s = t1.elapsed().as_secs_f64();
+
+    // Resume the wreck and run it to completion.
+    let t2 = Instant::now();
+    let (qm, report) = QuantSession::resume(&ck, pcfg.clone(), &dir)?.run(&calib)?;
+    let resume_s = t2.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        report.failed_blocks.is_empty(),
+        "resumed session reported failed blocks: {:?}",
+        report.failed_blocks
+    );
+    let identical = qm.to_bytes(QZ_VERSION) == cold_bytes;
+    anyhow::ensure!(
+        identical,
+        "resumed artifact differs from the uninterrupted run (kill at {kill_at})"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let crash_path_x = (interrupted_s + resume_s) / cold_s.max(1e-9);
+    let mut tp = TablePrinter::new(&[
+        "blocks",
+        "kill@",
+        "cold s",
+        "interrupted s",
+        "resume s",
+        "crash-path x",
+        "identical",
+    ]);
+    tp.row(vec![
+        n_blocks.to_string(),
+        kill_at.to_string(),
+        f2(cold_s),
+        f2(interrupted_s),
+        f2(resume_s),
+        f2(crash_path_x),
+        "yes".to_string(),
+    ]);
+    tp.print();
+    println!(
+        "\nresume re-quantized {} of {n_blocks} blocks; the {kill_at} journaled \
+         blocks replay as dequantize-only. Crash path (interrupted + resume) cost \
+         {:.2}x the cold run.",
+        n_blocks - kill_at,
+        crash_path_x
+    );
+
+    let mut out = Json::obj();
+    out.set("blocks", Json::Num(n_blocks as f64));
+    out.set("bits", Json::Num(bits as f64));
+    out.set("kill_at", Json::Num(kill_at as f64));
+    out.set("cold_s", Json::Num(cold_s));
+    out.set("interrupted_s", Json::Num(interrupted_s));
+    out.set("resume_s", Json::Num(resume_s));
+    out.set("crash_path_x", Json::Num(crash_path_x));
+    out.set("byte_identical", Json::Num(1.0));
+    write_result("sweep_session", &out)?;
+    Ok(())
 }
 
 /// ρ sweep: too small clips the distribution tails hard, too large wastes
@@ -125,6 +267,7 @@ fn sweep_calib(args: &Args) -> crate::Result<()> {
             calib_seqs: segs,
             calib_seq_len: 128,
             seed: 0x5155_4950,
+            faults: None,
         };
         let (qm, _) = quantize_model(&ck, &calib, &pcfg)?;
         let mut m = Transformer::from_checkpoint(&ck)?;

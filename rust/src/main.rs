@@ -3,25 +3,35 @@
 //! ```text
 //! quip quantize --model s1 --bits 2 [--rounder ldlq] [--transform kron]
 //!               [--baseline] [--out path.qz]
+//!               [--checkpoint-dir DIR [--resume]]
+//!               [--inject-fault point@n[:kill|torn|panic]]...
+//!               # --checkpoint-dir journals each finished block (.qzp +
+//!               # manifest, DESIGN.md §10); --resume replays it and
+//!               # continues — byte-identical to an uninterrupted run.
+//!               # --inject-fault (repeatable) arms deterministic crash
+//!               # points (hard mode: the process exits 137).
 //! quip eval     --model s1 [--qz path.qz]
 //! quip gen      --model s1 [--qz path.qz] --prompt "3,17,9" --max-tokens 32
 //! quip serve    --model s1 [--qz path.qz] [--addr 127.0.0.1:7077]
 //!               [--max-batch 8] [--contig] [--kv-pages N] [--page-tokens 16]
 //!               [--reserve-tokens 32] [--admit-timeout-ms 2000]
-//!               [--trace-out trace.json]
+//!               [--trace-out trace.json] [--drain-timeout-ms 5000]
 //!               # paged KV pool with prefix sharing + admission control
 //!               # (default); --contig = contiguous per-sequence caches.
 //!               # The TCP protocol also answers the control commands
 //!               # `metrics` (Prometheus text exposition, `# EOF`
-//!               # terminated), `stats` (one-line JSON summary) and
-//!               # `healthz`; --trace-out writes Chrome trace-event JSON
-//!               # (chrome://tracing / Perfetto) on shutdown and
-//!               # periodically while serving
+//!               # terminated), `stats` (one-line JSON summary), `healthz`
+//!               # and `shutdown` (graceful drain: stop admission, finish
+//!               # in-flight requests within --drain-timeout-ms, flush
+//!               # --trace-out, exit); --trace-out writes Chrome
+//!               # trace-event JSON (chrome://tracing / Perfetto) on
+//!               # shutdown and periodically while serving
 //! quip pjrt     --model s0 [--bits 2]          # AOT artifact smoke-run
 //! quip inspect  <file.qz>                      # artifact introspection
 //! quip table    <1|2|3|4|5|6|14|15|16|optq|all> [--fast]
 //! quip figure   <1|2|3|4|5|all> [--fast]
-//! quip sweep    <rho|calib|greedy|batch|transform|quant|codebook|serve> [--fast]
+//! quip sweep    <rho|calib|greedy|batch|transform|quant|codebook|serve|session>
+//!               [--fast]
 //!               # batch = serving tokens/sec vs batch size;
 //!               # transform = kron vs hadamard incoherence backends;
 //!               # quant = quantize-throughput stages, scalar vs blocked
@@ -29,7 +39,11 @@
 //!               # codebook = scalar-LDLQ vs E8-style vq at equal bitrate;
 //!               # serve = contig vs paged KV (bytes/token, tok/s,
 //!               #         prefix sharing, shed rate under overload);
-//!               # batch, transform, quant, codebook, serve are artifact-free
+//!               # session = crash-resume drill: quantize, kill at a
+//!               #         seeded block boundary, resume, verify the
+//!               #         artifact is byte-identical + report overhead;
+//!               # batch, transform, quant, codebook, serve, session are
+//!               # artifact-free
 //! quip info
 //! ```
 //!
@@ -112,6 +126,68 @@ fn quant_config(args: &Args) -> quip::Result<QuantConfig> {
         .build()
 }
 
+/// Every `--inject-fault point@n[:mode]` occurrence on the command line
+/// (the option may repeat to arm several fault points at once).
+fn fault_specs(args: &Args) -> Vec<String> {
+    args.options
+        .iter()
+        .filter(|(k, _)| k == "inject-fault")
+        .map(|(_, v)| v.clone())
+        .collect()
+}
+
+/// The checkpoint/resume + fault-injection quantization path (DESIGN.md
+/// §10): drives a [`quip::coordinator::QuantSession`] directly so the
+/// `.qzp` journal, `--resume` replay and hard-mode fault points all
+/// compose. `--inject-fault` kills are *hard* here — the process exits
+/// 137 exactly like a real crash; rerun with `--resume` to continue.
+fn quantize_with_session(
+    args: &Args,
+    env: &Env,
+    model: &str,
+    quant: QuantConfig,
+) -> quip::Result<(QuantizedModel, f64)> {
+    use quip::coordinator::{PipelineConfig, QuantSession};
+    let ck = env.checkpoint(model)?;
+    let calib = env.calibration(ck.config.max_seq.min(128))?;
+    let specs = fault_specs(args);
+    let faults = if specs.is_empty() {
+        None
+    } else {
+        Some(Arc::new(quip::util::fault::FaultInjector::from_args(
+            &specs,
+            false, // hard: fire = process exit, like a real crash
+            args.opt_u64("fault-seed", 0x5EED),
+        )?))
+    };
+    let pcfg = PipelineConfig {
+        quant,
+        calib_seqs: env.calib_seqs,
+        calib_seq_len: 128,
+        seed: 0x5155_4950,
+        faults,
+    };
+    let session = match args.opt("checkpoint-dir") {
+        None => {
+            anyhow::ensure!(!args.flag("resume"), "--resume requires --checkpoint-dir");
+            QuantSession::new(&ck, pcfg)?
+        }
+        Some(dir) => {
+            let dir = std::path::Path::new(dir);
+            if args.flag("resume") {
+                QuantSession::resume(&ck, pcfg, dir)?
+            } else {
+                QuantSession::new(&ck, pcfg)?.with_checkpoint_dir(dir)?
+            }
+        }
+    };
+    let (qm, report) = session.run(&calib)?;
+    for (block, error) in &report.failed_blocks {
+        eprintln!("warning: block {block} failed and was skipped: {error}");
+    }
+    Ok((qm, report.total_proxy()))
+}
+
 fn cmd_quantize(args: &Args) -> quip::Result<()> {
     let env = Env::load(args)?;
     let model = args.opt_or("model", "s1");
@@ -127,7 +203,14 @@ fn cmd_quantize(args: &Args) -> quip::Result<()> {
         }
     );
     let t0 = std::time::Instant::now();
-    let (qm, proxy) = env.quantize(&model, cfg)?;
+    let (qm, proxy) = if args.opt("checkpoint-dir").is_some()
+        || args.flag("resume")
+        || !fault_specs(args).is_empty()
+    {
+        quantize_with_session(args, &env, &model, cfg)?
+    } else {
+        env.quantize(&model, cfg)?
+    };
     let out = args.opt_or(
         "out",
         &format!("results/{model}_q{bits}_{}.qz", qm.recipe),
@@ -231,23 +314,39 @@ fn cmd_serve(args: &Args) -> quip::Result<()> {
             args.opt_u64("admit-timeout-ms", defaults.admit_timeout.as_millis() as u64),
         ),
         trace_out: args.opt("trace-out").map(str::to_string),
+        drain_timeout: std::time::Duration::from_millis(
+            args.opt_u64("drain-timeout-ms", defaults.drain_timeout.as_millis() as u64),
+        ),
         ..defaults
     };
     let trace_out = cfg.trace_out.clone();
-    let server = Server::start(Arc::new(m), engine, cfg)?;
+    let mut server = Server::start(Arc::new(m), engine, cfg)?;
     println!("serving on {} — newline-JSON protocol; Ctrl-C to stop", server.addr);
-    println!("control commands: metrics (Prometheus), stats (JSON), healthz");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(5));
-        println!("metrics: {}", server.metrics.summary());
-        // Periodic flush so a killed process still leaves a usable trace;
-        // shutdown() writes the final version of the same file.
-        if let Some(path) = &trace_out {
-            if let Err(e) = server.trace.write_chrome_trace(path) {
-                eprintln!("warning: trace flush to {path} failed: {e:#}");
+    println!(
+        "control commands: metrics (Prometheus), stats (JSON), healthz, \
+         shutdown (graceful drain)"
+    );
+    let mut last_report = std::time::Instant::now();
+    while !server.draining() {
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        if last_report.elapsed() >= std::time::Duration::from_secs(5) {
+            last_report = std::time::Instant::now();
+            println!("metrics: {}", server.metrics.summary());
+            // Periodic flush so a killed process still leaves a usable
+            // trace; shutdown() writes the final version of the same file.
+            if let Some(path) = &trace_out {
+                if let Err(e) = server.trace.write_chrome_trace(path) {
+                    eprintln!("warning: trace flush to {path} failed: {e:#}");
+                }
             }
         }
     }
+    // A client sent `shutdown`: in-flight requests finish (bounded by the
+    // drain budget), then join the threads and flush the final trace.
+    println!("shutdown requested — draining in-flight requests");
+    server.shutdown();
+    println!("drained; final metrics: {}", server.metrics.summary());
+    Ok(())
 }
 
 fn cmd_pjrt(args: &Args) -> quip::Result<()> {

@@ -45,11 +45,7 @@ pub struct QuantizedModel {
 impl QuantizedModel {
     pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
         let buf = self.to_bytes(QZ_VERSION);
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        std::fs::write(path, &buf)?;
-        Ok(())
+        crate::util::fsx::atomic_write(path, &buf)
     }
 
     /// Serialize into an in-memory container of the given version (v1/v2

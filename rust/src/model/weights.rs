@@ -82,11 +82,7 @@ impl Checkpoint {
                 w.f32(x);
             }
         }
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        std::fs::write(path, &w.buf)?;
-        Ok(())
+        crate::util::fsx::atomic_write(path, &w.buf)
     }
 
     pub fn tensor(&self, name: &str) -> crate::Result<&Tensor> {

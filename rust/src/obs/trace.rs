@@ -216,10 +216,13 @@ impl TraceSink {
         out
     }
 
-    /// Write the Chrome trace JSON to `path` (overwrites).
+    /// Write the Chrome trace JSON to `path` (overwrites atomically, so
+    /// a kill mid-flush never leaves a half-written trace).
     pub fn write_chrome_trace(&self, path: &str) -> crate::Result<()> {
-        std::fs::write(path, self.to_chrome_json().to_string())?;
-        Ok(())
+        crate::util::fsx::atomic_write(
+            std::path::Path::new(path),
+            self.to_chrome_json().to_string().as_bytes(),
+        )
     }
 }
 

@@ -1,0 +1,250 @@
+//! Deterministic fault injection for crash-safety testing.
+//!
+//! Production code declares named *fault points* — `pipeline.block_done`,
+//! `checkpoint.append`, `pipeline.layer_round` — by calling
+//! [`FaultInjector::hit`] at the moment the corresponding failure could
+//! strike in the wild. A [`FaultInjector`] armed with specs like
+//! `"pipeline.block_done@2"` counts hits per point and fires the
+//! configured [`FaultMode`] on the n-th one, so a crash-resume test can
+//! kill a quantization session at *every* block boundary, tear a journal
+//! write at a seeded byte, or panic a worker mid-round — reproducibly,
+//! from the same spec string the CLI accepts (`--inject-fault
+//! point@n[:mode]`).
+//!
+//! Two delivery flavors (`soft` flag):
+//!
+//! * **hard** (CLI default): `Kill` calls `std::process::exit(137)` — a
+//!   real SIGKILL stand-in; `Torn` truncates the in-flight write and then
+//!   exits. What lands on disk is exactly what a power cut would leave.
+//! * **soft** (in-process tests and sweeps): the same on-disk state is
+//!   produced, but the fault surfaces as an `Err` so the calling test can
+//!   drop the session and resume within one process.
+//!
+//! `Panic` mode always panics — the worker-pool isolation path catches it
+//! regardless of flavor.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// What happens when an armed fault point fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Process death at the point (soft: error return; hard: exit(137)).
+    Kill,
+    /// Torn write: the caller persists only a prefix of the record it was
+    /// about to write, then dies as in `Kill`.
+    Torn,
+    /// Worker panic, for exercising pool failure isolation.
+    Panic,
+}
+
+impl FaultMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultMode::Kill => "kill",
+            FaultMode::Torn => "torn",
+            FaultMode::Panic => "panic",
+        }
+    }
+}
+
+/// One armed fault: fire `mode` on the `at`-th hit (1-indexed) of `point`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub point: String,
+    pub at: u64,
+    pub mode: FaultMode,
+}
+
+impl FaultSpec {
+    /// Parse `point@n[:kill|torn|panic]` (mode defaults to `kill`).
+    pub fn parse(s: &str) -> crate::Result<FaultSpec> {
+        let (point, rest) = s
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("fault spec '{s}': expected point@n[:mode]"))?;
+        anyhow::ensure!(!point.is_empty(), "fault spec '{s}': empty point name");
+        let (n, mode) = match rest.split_once(':') {
+            Some((n, m)) => (n, m),
+            None => (rest, "kill"),
+        };
+        let at: u64 = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fault spec '{s}': bad hit count '{n}'"))?;
+        anyhow::ensure!(at >= 1, "fault spec '{s}': hit count is 1-indexed");
+        let mode = match mode {
+            "kill" => FaultMode::Kill,
+            "torn" => FaultMode::Torn,
+            "panic" => FaultMode::Panic,
+            other => anyhow::bail!("fault spec '{s}': unknown mode '{other}' (kill|torn|panic)"),
+        };
+        Ok(FaultSpec {
+            point: point.to_string(),
+            at,
+            mode,
+        })
+    }
+}
+
+/// Seeded registry of armed fault points with per-point hit counters.
+#[derive(Debug)]
+pub struct FaultInjector {
+    specs: Vec<FaultSpec>,
+    hits: Mutex<HashMap<String, u64>>,
+    /// Soft faults return `Err` instead of exiting the process.
+    soft: bool,
+    /// Seeds the torn-write truncation length.
+    seed: u64,
+}
+
+impl FaultInjector {
+    pub fn new(specs: Vec<FaultSpec>, soft: bool, seed: u64) -> FaultInjector {
+        FaultInjector {
+            specs,
+            hits: Mutex::new(HashMap::new()),
+            soft,
+            seed,
+        }
+    }
+
+    /// Parse a comma/whitespace-free CLI list: one `--inject-fault` value
+    /// per spec, already split by the caller.
+    pub fn from_args(raw: &[String], soft: bool, seed: u64) -> crate::Result<FaultInjector> {
+        let specs = raw
+            .iter()
+            .map(|s| FaultSpec::parse(s))
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(FaultInjector::new(specs, soft, seed))
+    }
+
+    pub fn is_soft(&self) -> bool {
+        self.soft
+    }
+
+    /// Record one hit of `point`; return the armed mode if a spec fires
+    /// on exactly this hit. Counters survive retries, so `point@n` means
+    /// the n-th dynamic hit over the whole process/session lifetime.
+    pub fn check(&self, point: &str) -> Option<FaultMode> {
+        let mut hits = crate::util::sync::lock_unpoisoned(&self.hits);
+        let count = hits.entry(point.to_string()).or_insert(0);
+        *count += 1;
+        let now = *count;
+        self.specs
+            .iter()
+            .find(|s| s.point == point && s.at == now)
+            .map(|s| s.mode)
+    }
+
+    /// Hit `point` and deliver any armed fault. `Kill` and `Torn` both
+    /// die here (torn-write callers truncate *before* calling `hit`, via
+    /// [`FaultInjector::torn_len`] + [`FaultInjector::check`]); `Panic`
+    /// panics with a recognizable message.
+    pub fn hit(&self, point: &str) -> crate::Result<()> {
+        match self.check(point) {
+            None => Ok(()),
+            Some(FaultMode::Panic) => panic!("fault injected: {point} (panic)"),
+            Some(mode) => self.die(point, mode),
+        }
+    }
+
+    /// Deliver a kill-class fault that was already detected via `check`.
+    pub fn die(&self, point: &str, mode: FaultMode) -> crate::Result<()> {
+        if self.soft {
+            anyhow::bail!("fault injected: {point} ({})", mode.name());
+        }
+        eprintln!("fault injected: {point} ({}) — exiting", mode.name());
+        std::process::exit(137);
+    }
+
+    /// Seeded truncation length for a torn write of `len` bytes: some
+    /// strict prefix in `[0, len)`, varying with the point's hit count so
+    /// repeated torn faults tear at different offsets.
+    pub fn torn_len(&self, point: &str, len: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        let hits = crate::util::sync::lock_unpoisoned(&self.hits);
+        let count = hits.get(point).copied().unwrap_or(0);
+        let mut x = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(count)
+            .wrapping_mul(0x2545_F491_4F6C_DD1D);
+        x ^= x >> 33;
+        (x % len as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_specs() {
+        let s = FaultSpec::parse("pipeline.block_done@2").unwrap();
+        assert_eq!(s.point, "pipeline.block_done");
+        assert_eq!(s.at, 2);
+        assert_eq!(s.mode, FaultMode::Kill);
+        let s = FaultSpec::parse("checkpoint.append@1:torn").unwrap();
+        assert_eq!(s.mode, FaultMode::Torn);
+        let s = FaultSpec::parse("pipeline.layer_round@7:panic").unwrap();
+        assert_eq!(s.mode, FaultMode::Panic);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in ["", "p", "p@", "p@0", "p@x", "@1", "p@1:frob"] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn fires_on_exact_hit_only() {
+        let f = FaultInjector::new(
+            vec![FaultSpec::parse("p@3").unwrap()],
+            true,
+            7,
+        );
+        assert!(f.hit("p").is_ok());
+        assert!(f.hit("q").is_ok()); // other points independent
+        assert!(f.hit("p").is_ok());
+        let err = f.hit("p").unwrap_err().to_string();
+        assert!(err.contains("fault injected: p (kill)"), "{err}");
+        // Past the armed hit: quiet again.
+        assert!(f.hit("p").is_ok());
+    }
+
+    #[test]
+    fn panic_mode_panics_even_when_soft() {
+        let f = FaultInjector::new(
+            vec![FaultSpec::parse("w@1:panic").unwrap()],
+            true,
+            7,
+        );
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = f.hit("w");
+        }));
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn torn_len_is_deterministic_and_strict_prefix() {
+        let f = FaultInjector::new(Vec::new(), true, 42);
+        let g = FaultInjector::new(Vec::new(), true, 42);
+        for len in [1usize, 2, 17, 1024] {
+            let a = f.torn_len("checkpoint.append", len);
+            assert_eq!(a, g.torn_len("checkpoint.append", len));
+            assert!(a < len, "torn length must drop at least one byte");
+        }
+        assert_eq!(f.torn_len("x", 0), 0);
+    }
+
+    #[test]
+    fn torn_len_varies_with_hit_count() {
+        let f = FaultInjector::new(Vec::new(), true, 42);
+        let before = f.torn_len("p", 1 << 20);
+        let _ = f.check("p");
+        let _ = f.check("p");
+        let after = f.torn_len("p", 1 << 20);
+        assert_ne!(before, after);
+    }
+}

@@ -1,0 +1,98 @@
+//! Crash-safe filesystem helpers.
+//!
+//! Every durable artifact in the tree (`.qz` models, `QCKP` checkpoints,
+//! token streams, result JSON, Chrome traces, the `.qzp` quantization
+//! journal manifest) goes through [`atomic_write`]: the bytes land in a
+//! sibling temp file, are fsynced, and are renamed over the destination
+//! in one step. A process killed mid-save therefore leaves either the old
+//! file or the new file — never a truncated hybrid that later loads as
+//! "corrupt artifact". The preflight `atomic-writes` check enforces that
+//! non-test code never calls bare `std::fs::write` outside this module.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write `data` to `path` atomically: create parent directories, write
+/// `path.tmp.<pid>`, fsync, then rename over `path`. On any error the
+/// temp file is removed and `path` is left untouched.
+pub fn atomic_write(path: &Path, data: &[u8]) -> crate::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("atomic_write: path {path:?} has no file name"))?;
+    // Pid-suffixed so concurrent writers of the same artifact never
+    // clobber each other's temp file mid-flight.
+    let tmp = path.with_file_name(format!(
+        "{}.tmp.{}",
+        file_name.to_string_lossy(),
+        std::process::id()
+    ));
+    let write = || -> crate::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(data)?;
+        // Durability barrier: the rename below must never expose a file
+        // whose bytes are still in the page cache only.
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    };
+    write().map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::anyhow!("atomic write of {path:?} failed: {e}")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("quip_fsx_{tag}"));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let dir = tmpdir("basic");
+        let path = dir.join("a.bin");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second — longer payload").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second — longer payload");
+    }
+
+    #[test]
+    fn creates_missing_parents() {
+        let dir = tmpdir("parents").join("x").join("y");
+        let path = dir.join("deep.bin");
+        atomic_write(&path, b"ok").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"ok");
+    }
+
+    #[test]
+    fn no_temp_file_left_behind() {
+        let dir = tmpdir("clean");
+        let path = dir.join("b.bin");
+        atomic_write(&path, &vec![7u8; 4096]).unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+    }
+
+    #[test]
+    fn directory_target_is_clean_error() {
+        let dir = tmpdir("direrr");
+        let err = atomic_write(&dir, b"x").unwrap_err().to_string();
+        assert!(err.contains("atomic write"), "{err}");
+        // The original directory is intact.
+        assert!(dir.is_dir());
+    }
+}

@@ -4,6 +4,8 @@
 
 pub mod bytes;
 pub mod crc32;
+pub mod fault;
+pub mod fsx;
 pub mod rng;
 pub mod sync;
 pub mod json;

@@ -6,6 +6,7 @@ but --only parsing and docs follow this list).
 """
 
 from . import (
+    atomicwrites,
     clippydrift,
     delimiters,
     determinism,
@@ -29,6 +30,7 @@ ALL_CHECKS = [
     panicpolicy,
     clippydrift,
     metricnames,
+    atomicwrites,
 ]
 
 

@@ -1,0 +1,72 @@
+"""Durable artifacts must not be written with bare `fs::write`.
+
+A process killed mid-`std::fs::write` leaves a torn file at the final
+path: the next reader sees a truncated quantized model, manifest, or
+sweep result and fails in a confusing place (or worse, silently loads
+garbage). `crate::util::fsx::atomic_write` stages the bytes in a
+sibling temp file, fsyncs, and renames into place so every observer
+sees either the old contents or the complete new ones (DESIGN.md §10).
+
+Test code gets a free pass (tests write scratch files whose torn state
+nobody ever reloads), as does `util/fsx.rs` itself — the rename trick
+has to bottom out in a real write somewhere. Deliberate non-durable
+writes are annotated in place:
+
+    // preflight: allow(atomic-writes, "scratch file, rebuilt on startup")
+"""
+
+from ..findings import Finding
+from ..spans import in_spans, test_spans
+
+NAME = "atomic-writes"
+DESCRIPTION = "no bare fs::write outside util/fsx.rs, test code, or annotated sites"
+
+# The one module allowed to call fs::write — it implements atomic_write.
+IMPL_FILE = "rust/src/util/fsx.rs"
+
+
+def run(ctx):
+    findings = []
+    for _crate, rel, lexed in ctx.lexed_files():
+        if rel == IMPL_FILE:
+            continue
+        findings.extend(_scan_file(rel, lexed))
+    return findings
+
+
+def _scan_file(rel, lexed):
+    findings = []
+    toks = lexed.tokens
+    n = len(toks)
+    spans = test_spans(toks)
+
+    for i, t in enumerate(toks):
+        # matches the tail of both `std::fs::write(` and `fs::write(`
+        if t.kind != "ident" or t.value != "write":
+            continue
+        if not (
+            i >= 2
+            and toks[i - 1].kind == "punct"
+            and toks[i - 1].value == "::"
+            and toks[i - 2].kind == "ident"
+            and toks[i - 2].value == "fs"
+        ):
+            continue
+        if not (i + 1 < n and toks[i + 1].kind == "punct" and toks[i + 1].value == "("):
+            continue
+        if in_spans(spans, t.line):
+            continue
+        if lexed.allowed(NAME, t.line):
+            continue
+        findings.append(
+            Finding(
+                NAME,
+                rel,
+                t.line,
+                "bare `fs::write` — a crash mid-write leaves a torn file "
+                "at the final path; use `crate::util::fsx::atomic_write` "
+                "(temp + fsync + rename), or annotate a deliberate "
+                'non-durable write: // preflight: allow(atomic-writes, "reason")',
+            )
+        )
+    return findings

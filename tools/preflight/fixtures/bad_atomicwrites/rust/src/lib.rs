@@ -1,0 +1,27 @@
+//! Fixture: bare `fs::write` of durable artifacts. Fires atomic-writes
+//! twice (a fully-qualified `std::fs::write` and an imported
+//! `fs::write`); the annotated call and the test-only call are exempt.
+//! Clean under every other check.
+
+use std::fs;
+
+pub fn save_report(path: &str, body: &[u8]) -> std::io::Result<()> {
+    std::fs::write(path, body)
+}
+
+pub fn save_index(path: &str, body: &[u8]) -> std::io::Result<()> {
+    fs::write(path, body)
+}
+
+pub fn save_scratch(path: &str, body: &[u8]) -> std::io::Result<()> {
+    // preflight: allow(atomic-writes, "scratch file, rebuilt on startup")
+    fs::write(path, body)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn scratch_roundtrip() {
+        std::fs::write("/tmp/quip_fixture_scratch", b"fixture").unwrap();
+    }
+}
