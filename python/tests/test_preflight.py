@@ -124,6 +124,83 @@ def test_annotations_suppress_inside_clean_tree():
         assert "panic-policy" in names
 
 
+# --- aux-tree sweep: rust/tests and rust/benches are analyzed too ------
+
+
+def _clean_copy(tmp):
+    import shutil
+
+    shutil.copytree(fixture("clean"), tmp, dirs_exist_ok=True)
+
+
+def _write(root, rel, text):
+    path = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        fh.write(text)
+
+
+def test_aux_crates_cover_tests_and_benches_trees():
+    """Top-level files under rust/tests and rust/benches load as aux
+    crates (Family-A sweep), and well-formed ones add zero findings."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        _clean_copy(tmp)
+        _write(
+            tmp,
+            "rust/tests/smoke.rs",
+            "use fixture::sum;\n\nfn check() -> f64 {\n    sum(&[1.0, 2.0])\n}\n",
+        )
+        _write(
+            tmp,
+            "rust/benches/perf.rs",
+            "use fixture::sum;\n\nfn main() {\n    let _ = sum(&[3.0]);\n}\n",
+        )
+        ctx = Context(tmp)
+        names = {c.name for c in ctx.aux_crates}
+        assert {"smoke", "perf"} <= names, names
+        swept = {rel for _, rel, _ in ctx.lexed_files()}
+        assert "rust/tests/smoke.rs" in swept
+        assert "rust/benches/perf.rs" in swept
+        assert run_checks(tmp) == [], [f.render() for f in run_checks(tmp)]
+
+
+def test_orphan_under_tests_tree_fires_modgraph():
+    """A support module under rust/tests/ that no test root declares is
+    an orphan — the widened glob catches it like an orphan under src."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        _clean_copy(tmp)
+        _write(tmp, "rust/tests/smoke.rs", "use fixture::sum;\n\nfn f() -> f64 {\n    sum(&[])\n}\n")
+        _write(tmp, "rust/tests/helpers/unused.rs", "pub fn lonely() {}\n")
+        findings = run_checks(tmp)
+        assert any(
+            f.check == "modgraph" and f.path == "rust/tests/helpers/unused.rs"
+            for f in findings
+        ), [f.render() for f in findings]
+
+
+def test_unresolved_import_in_tests_tree_fires_use_resolution():
+    """A stale `use` in an integration test (the seed-test failure mode)
+    is caught without a toolchain, same as in src."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        _clean_copy(tmp)
+        _write(
+            tmp,
+            "rust/tests/stale.rs",
+            "use fixture::no_such_module::Thing;\n\nfn f() -> Thing {\n    unimplemented!()\n}\n",
+        )
+        findings = run_checks(tmp)
+        assert any(
+            f.check == "use-resolution" and f.path == "rust/tests/stale.rs"
+            for f in findings
+        ), [f.render() for f in findings]
+
+
 # --- lexer torture ------------------------------------------------------
 
 

@@ -61,6 +61,16 @@ pub struct Fingerprint {
     /// CRC-32 of the model config JSON — catches shape mismatches even
     /// when two configs share a name.
     pub shape_hash: u32,
+    /// Sharded-collection layout (DESIGN.md §11): the Hessian residency
+    /// budget in bytes (0 = unlimited) and the across-layer worker count
+    /// (0 = auto). Neither changes quantized bytes — the differential
+    /// determinism suite pins that — but resume refuses a mismatch
+    /// anyway: a session resumed under a different shard layout has
+    /// different spill files and memory behavior than the journal's
+    /// provenance claims, and the cheap, safe contract is "resume means
+    /// the same run".
+    pub hessian_mem_budget: u64,
+    pub layer_workers: usize,
 }
 
 impl Fingerprint {
@@ -78,6 +88,11 @@ impl Fingerprint {
         j.set("calib_seq_len", Json::Num(self.calib_seq_len as f64));
         j.set("model", Json::Str(self.model.clone()));
         j.set("shape_hash", Json::Str(format!("{:08x}", self.shape_hash)));
+        j.set(
+            "hessian_mem_budget",
+            Json::Str(format!("{:016x}", self.hessian_mem_budget)),
+        );
+        j.set("layer_workers", Json::Num(self.layer_workers as f64));
         j
     }
 
@@ -104,6 +119,16 @@ impl Fingerprint {
             calib_seq_len: j.req_usize("calib_seq_len")?,
             model: j.req_str("model")?.to_string(),
             shape_hash: hex_u64("shape_hash")? as u32,
+            // Absent in pre-§11 manifests; those were collected with the
+            // unlimited in-memory layout, which the defaults name.
+            hessian_mem_budget: match j.get("hessian_mem_budget") {
+                Some(_) => hex_u64("hessian_mem_budget")?,
+                None => 0,
+            },
+            layer_workers: match j.get("layer_workers") {
+                Some(_) => j.req_usize("layer_workers")?,
+                None => 0,
+            },
         })
     }
 
@@ -146,6 +171,12 @@ impl Fingerprint {
         }
         if self.shape_hash != stored.shape_hash {
             d.push("shape_hash");
+        }
+        if self.hessian_mem_budget != stored.hessian_mem_budget {
+            d.push("hessian_mem_budget");
+        }
+        if self.layer_workers != stored.layer_workers {
+            d.push("layer_workers");
         }
         d
     }
@@ -423,6 +454,8 @@ mod tests {
             calib_seq_len: 24,
             model: "t".into(),
             shape_hash: 0x1234_ABCD,
+            hessian_mem_budget: 1 << 20,
+            layer_workers: 3,
         }
     }
 
@@ -470,6 +503,39 @@ mod tests {
         other.bits = 4;
         other.seed ^= 1;
         assert_eq!(fp.diff(&other), vec!["bits", "seed"]);
+        // Shard-layout fields participate in diff and name themselves.
+        let mut other = fp.clone();
+        other.hessian_mem_budget = 0;
+        other.layer_workers = 8;
+        assert_eq!(fp.diff(&other), vec!["hessian_mem_budget", "layer_workers"]);
+    }
+
+    #[test]
+    fn manifest_without_shard_fields_defaults_to_unlimited() {
+        // Pre-§11 manifests (no shard-layout fields) parse as the
+        // unlimited in-memory layout, so old checkpoints resume under a
+        // default-config session and refuse under a budgeted one.
+        let j = test_fp().to_json();
+        let mut legacy = Json::obj();
+        for key in [
+            "bits",
+            "rounder",
+            "transform",
+            "incoherent",
+            "stochastic",
+            "greedy_passes",
+            "alg5_c",
+            "seed",
+            "calib_seqs",
+            "calib_seq_len",
+            "model",
+            "shape_hash",
+        ] {
+            legacy.set(key, j.get(key).unwrap().clone());
+        }
+        let fp = Fingerprint::from_json(&legacy).unwrap();
+        assert_eq!(fp.hessian_mem_budget, 0);
+        assert_eq!(fp.layer_workers, 0);
     }
 
     #[test]

@@ -20,18 +20,33 @@
 //! only its block: the block is retried once with escalated damping, then
 //! reported via [`PipelineEvent::BlockFailed`] while the session degrades
 //! gracefully. [`quantize_model`] is the one-shot wrapper.
+//!
+//! Internally [`step`](QuantSession::step) runs *sharded* (DESIGN.md
+//! §11): activations stream into a budget-bounded
+//! [`ShardedHessianStore`](crate::hessian::sharded::ShardedHessianStore)
+//! that spills cold accumulators to CRC-framed files
+//! (`--hessian-mem-budget`), and the block's layers are quantized by a
+//! work-stealing across-layer worker pool (`--layer-workers`) that loads
+//! each layer's finished Hessian on demand. Spill schedule, flush
+//! boundaries, and per-layer seeds are pure functions of the stream and
+//! spec order — never of worker timing — so quantized bytes are
+//! bit-identical for any budget × worker count × spill state
+//! (`rust/tests/determinism.rs`).
 
 use super::checkpoint::{BlockRecord, CheckpointJournal, Fingerprint, LayerRecord};
-use crate::hessian::HessianSet;
+use crate::hessian::sharded::{ShardMetrics, ShardedHessianStore};
+use crate::hessian::{HessianAccum, HessianSet};
 use crate::linalg::Mat;
 use crate::model::quantized::QuantizedModel;
 use crate::model::weights::Checkpoint;
 use crate::model::{LinearSpec, Transformer};
+use crate::obs::registry::MetricRegistry;
 use crate::obs::trace::TraceSink;
 use crate::quant::packed::QuantizedLayer;
 use crate::quant::{quantize_layer_with, QuantConfig, Rounder};
 use crate::util::json::Json;
-use crate::util::threadpool::{default_threads, parallel_map};
+use crate::util::threadpool::{default_threads, parallel_map, parallel_map_traced, ItemTiming};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -45,6 +60,16 @@ pub struct PipelineConfig {
     /// Armed fault points (`--inject-fault point@n[:mode]`) for
     /// crash-safety testing; `None` in production runs.
     pub faults: Option<Arc<crate::util::fault::FaultInjector>>,
+    /// Resident-byte budget for the block's Hessian accumulators
+    /// (`--hessian-mem-budget`, DESIGN.md §11); 0 = unlimited (nothing
+    /// spills). Accumulators over budget spill to CRC-framed files and
+    /// stream back on demand — quantized bytes are identical either way
+    /// (pinned by `rust/tests/determinism.rs`).
+    pub hessian_mem_budget: usize,
+    /// Across-layer worker count for the block's quantization pool
+    /// (`--layer-workers`); 0 = auto
+    /// ([`default_threads`]).
+    pub layer_workers: usize,
 }
 
 impl Default for PipelineConfig {
@@ -55,6 +80,8 @@ impl Default for PipelineConfig {
             calib_seq_len: 128,
             seed: 0x5155_4950,
             faults: None,
+            hessian_mem_budget: 0,
+            layer_workers: 0,
         }
     }
 }
@@ -203,6 +230,10 @@ struct LayerResult {
     damped: Option<f64>,
     accumulate_seconds: f64,
     accumulate_gbps: f64,
+    /// Worker-pool scheduling of this layer's job (sharded path only;
+    /// `None` through the legacy staged API). Observability, never an
+    /// input to quantized bytes.
+    pool: Option<ItemTiming>,
 }
 
 /// The quantized output of one block, produced by
@@ -333,6 +364,7 @@ pub struct QuantSession<'a> {
     trace: Option<Arc<TraceSink>>,
     journal: Option<CheckpointJournal>,
     failed: Vec<(usize, String)>,
+    metrics: Option<Arc<MetricRegistry>>,
 }
 
 impl<'a> QuantSession<'a> {
@@ -350,6 +382,7 @@ impl<'a> QuantSession<'a> {
             trace: None,
             journal: None,
             failed: Vec::new(),
+            metrics: None,
             ck,
             cfg,
         })
@@ -374,6 +407,8 @@ impl<'a> QuantSession<'a> {
             shape_hash: crate::util::crc32::crc32(
                 self.ck.config.to_json().to_string().as_bytes(),
             ),
+            hessian_mem_budget: self.cfg.hessian_mem_budget as u64,
+            layer_workers: self.cfg.layer_workers,
         }
     }
 
@@ -474,6 +509,14 @@ impl<'a> QuantSession<'a> {
         self
     }
 
+    /// Attach a metric registry: the sharded Hessian store reports its
+    /// peak resident bytes (`quip_hessian_peak_bytes`, a cross-block
+    /// high-water mark) and spill counters through it (DESIGN.md §11).
+    pub fn with_metrics(mut self, registry: Arc<MetricRegistry>) -> Self {
+        self.metrics = Some(registry);
+        self
+    }
+
     pub fn n_blocks(&self) -> usize {
         self.ck.config.n_layers
     }
@@ -507,7 +550,16 @@ impl<'a> QuantSession<'a> {
         calib: &[Vec<u32>],
     ) -> crate::Result<HessianSet> {
         let prefix = Self::block_prefix(block);
-        let mut hset = HessianSet::for_model(&self.ck.config);
+        // Allocate accumulators for this block's hkeys only (not the
+        // whole model's): the sink filters on the block prefix anyway,
+        // and an n-block model does not need n× the accumulator memory.
+        let mut accums = BTreeMap::new();
+        for spec in self.specs.iter().filter(|s| s.name.starts_with(&prefix)) {
+            accums
+                .entry(spec.hkey.clone())
+                .or_insert_with(|| HessianAccum::new(spec.in_dim));
+        }
+        let mut hset = HessianSet { accums };
         {
             let mut sink = |hkey: &str, rows: &[f32], n: usize| {
                 if hkey.starts_with(&prefix) {
@@ -613,6 +665,146 @@ impl<'a> QuantSession<'a> {
                     damped,
                     accumulate_seconds,
                     accumulate_gbps,
+                    pool: None,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(BlockOutput {
+            block,
+            specs: block_specs,
+            results,
+        })
+    }
+
+    /// Where this session's sharded store spills: under the checkpoint
+    /// directory when journaling (so one run's scratch state lives with
+    /// its durable state), else a per-process temp directory. Spill files
+    /// are scratch, cleaned up by the store's `Drop`; stale files from a
+    /// killed process are simply overwritten on re-collection.
+    fn spill_dir(&self) -> std::path::PathBuf {
+        match &self.journal {
+            Some(j) => j.dir().join("spill"),
+            None => std::env::temp_dir().join(format!(
+                "quip_spill_{}_{:016x}",
+                std::process::id(),
+                self.cfg.seed
+            )),
+        }
+    }
+
+    /// Sharded stage 1 (DESIGN.md §11): stream the calibration set's
+    /// activations into a budget-bounded [`ShardedHessianStore`] instead
+    /// of an all-resident [`HessianSet`]. Flush boundaries and spill
+    /// schedule are pure functions of the stream, so the finished
+    /// Hessians are bit-identical to the in-memory path for any budget.
+    fn collect_block_store(
+        &mut self,
+        block: usize,
+        calib: &[Vec<u32>],
+    ) -> crate::Result<ShardedHessianStore> {
+        let prefix = Self::block_prefix(block);
+        let mut keys: Vec<(String, usize)> = Vec::new();
+        for spec in self.specs.iter().filter(|s| s.name.starts_with(&prefix)) {
+            if !keys.iter().any(|(k, _)| k == &spec.hkey) {
+                keys.push((spec.hkey.clone(), spec.in_dim));
+            }
+        }
+        let mut store =
+            ShardedHessianStore::new(&keys, self.cfg.hessian_mem_budget, &self.spill_dir())
+                .with_faults(self.cfg.faults.clone())
+                .with_metrics(self.metrics.as_ref().map(|r| ShardMetrics::register(r)));
+        {
+            let mut sink = |hkey: &str, rows: &[f32], n: usize| {
+                if hkey.starts_with(&prefix) {
+                    store.add_rows(hkey, rows, n);
+                }
+            };
+            for seq in calib {
+                self.model.forward(seq, Some(&mut sink));
+            }
+        }
+        // The capture sink cannot return errors; spill failures (or an
+        // armed soft `hessian.spill` fault) surface here, after the
+        // in-flight forward pass completes.
+        store.check()?;
+        Ok(store)
+    }
+
+    /// Sharded stage 2: quantize the block's layers on a work-stealing
+    /// across-layer pool, each worker loading its layer's finished
+    /// Hessian from the store on demand — at most `layer_workers`
+    /// finished n×n Hessians are resident at once, instead of one per
+    /// layer. Results are collected in spec order and each layer's seed
+    /// depends only on (session seed, block, spec index), so quantized
+    /// bytes are identical for any worker count (pinned by
+    /// `rust/tests/determinism.rs`).
+    fn quantize_block_store(
+        &mut self,
+        block: usize,
+        store: &ShardedHessianStore,
+        qcfg: QuantConfig,
+    ) -> crate::Result<BlockOutput> {
+        let prefix = Self::block_prefix(block);
+        let block_specs: Vec<LinearSpec> = self
+            .specs
+            .iter()
+            .filter(|s| s.name.starts_with(&prefix))
+            .cloned()
+            .collect();
+        let weights: Vec<Mat> = block_specs
+            .iter()
+            .map(|s| {
+                let wdata = self.model.get_weight(&s.name)?;
+                Ok(Mat {
+                    rows: s.out_dim,
+                    cols: s.in_dim,
+                    data: wdata.iter().map(|&x| x as f64).collect(),
+                })
+            })
+            .collect::<crate::Result<_>>()?;
+
+        let seed = self.cfg.seed;
+        let faults = self.cfg.faults.clone();
+        let rounder = Arc::clone(&self.rounder);
+        let workers = if self.cfg.layer_workers == 0 {
+            default_threads()
+        } else {
+            self.cfg.layer_workers
+        };
+        let results = parallel_map_traced(block_specs.len(), workers, |i| {
+            let t = Instant::now();
+            // Identical to the legacy path's seed derivation: quantized
+            // bytes must not depend on which path — or worker — ran.
+            let layer_seed = seed
+                .wrapping_mul(0x100000001B3)
+                .wrapping_add((block * 16 + i) as u64);
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if let Some(f) = &faults {
+                    f.hit("pipeline.layer_round")?;
+                }
+                // On-demand Hessian: finish() reads the spill file when
+                // the accumulator was evicted, so a worker only ever
+                // materializes the layer it is currently rounding.
+                let h = store.finish(&block_specs[i].hkey)?;
+                quantize_layer_robust(rounder.as_ref(), &weights[i], &h, &qcfg, layer_seed)
+            }))
+            .unwrap_or_else(|p| Err(anyhow::anyhow!("worker panic: {}", panic_text(&p))));
+            (out, t.elapsed().as_secs_f64())
+        });
+        let results = results
+            .into_iter()
+            .zip(&block_specs)
+            .map(|(((out, secs), timing), spec)| {
+                let (lq, damped) = out
+                    .map_err(|e| anyhow::anyhow!("layer {}: {e}", spec.name))?;
+                let (accumulate_seconds, accumulate_gbps) = store.stats(&spec.hkey);
+                Ok(LayerResult {
+                    lq,
+                    seconds: secs,
+                    damped,
+                    accumulate_seconds,
+                    accumulate_gbps,
+                    pool: Some(timing),
                 })
             })
             .collect::<crate::Result<Vec<_>>>()?;
@@ -651,7 +843,31 @@ impl<'a> QuantSession<'a> {
                 damped,
                 accumulate_seconds,
                 accumulate_gbps,
+                pool,
             } = res;
+            if let (Some(trace), Some(pt)) = (&self.trace, pool) {
+                // Pool scheduling on its own cat ("quantize_pool", one
+                // tid lane per *worker*): queue wait + run of each layer
+                // job, kept separate from the per-block "quantize" lanes
+                // so existing span consumers see an unchanged stream.
+                let end = trace.now_us();
+                let run = (pt.run_seconds.max(0.0) * 1e6) as u64;
+                trace.complete(
+                    pt.worker as u64,
+                    "layer_job",
+                    "quantize_pool",
+                    end.saturating_sub(run),
+                    run,
+                    vec![
+                        ("layer".to_string(), Json::Str(spec.name.clone())),
+                        ("block".to_string(), Json::Num(block as f64)),
+                        (
+                            "queued_ms".to_string(),
+                            Json::Num(pt.start_seconds.max(0.0) * 1e3),
+                        ),
+                    ],
+                );
+            }
             if let Some(alpha) = damped {
                 crate::log_warn!(
                     "layer {}: Hessian not PD at configured damping; escalated to α = {alpha}",
@@ -786,8 +1002,13 @@ impl<'a> QuantSession<'a> {
             return Ok(PipelineControl::Stop);
         }
         let t_block = Instant::now();
-        let hset = self.collect_hessians(block, calib)?;
-        let out = match self.quantize_block(block, &hset) {
+        // The driving path is the sharded one (DESIGN.md §11): budget 0
+        // simply means nothing ever spills. The staged public API
+        // (collect_hessians / quantize_block) keeps the all-resident
+        // HessianSet, so `staged_api_matches_one_shot_wrapper` pins the
+        // two paths byte-identical.
+        let store = self.collect_block_store(block, calib)?;
+        let out = match self.quantize_block_store(block, &store, self.cfg.quant.clone()) {
             Ok(out) => Ok(out),
             Err(first) => {
                 // Failure isolation: retry the poisoned block once with
@@ -799,9 +1020,10 @@ impl<'a> QuantSession<'a> {
                 );
                 let mut qcfg = self.cfg.quant.clone();
                 qcfg.processing.alpha = qcfg.processing.alpha.max(1e-3) * 10.0;
-                self.quantize_block_with(block, &hset, qcfg)
+                self.quantize_block_store(block, &store, qcfg)
             }
         };
+        drop(store);
         let mut control = match out {
             Ok(out) => {
                 let control = self.swap_weights(out)?;
@@ -924,7 +1146,7 @@ mod tests {
             calib_seqs: 4,
             calib_seq_len: 24,
             seed: 7,
-            faults: None,
+            ..Default::default()
         };
         let (qm, report) = quantize_model(&ck, &calib, &pcfg).unwrap();
         (qm, report, ck)
@@ -944,7 +1166,7 @@ mod tests {
             calib_seqs: 4,
             calib_seq_len: 24,
             seed: 7,
-            faults: None,
+            ..Default::default()
         };
         (ck, calib, pcfg)
     }
@@ -1280,6 +1502,51 @@ mod tests {
         assert_eq!(tids.len(), ck.config.n_layers, "one tid lane per block");
     }
 
+    #[test]
+    fn pool_spans_land_in_their_own_cat() {
+        // The sharded path's queue spans ride a separate cat
+        // ("quantize_pool", one tid per worker) so the per-block
+        // "quantize" lanes asserted above stay untouched; every span
+        // names its layer and carries the queue wait.
+        let (ck, calib, pcfg) = tiny_setup();
+        let sink = TraceSink::shared(4096);
+        let (qm, _report) = QuantSession::new(&ck, pcfg)
+            .unwrap()
+            .with_trace(Arc::clone(&sink))
+            .run(&calib)
+            .unwrap();
+        let json = Json::parse(&sink.to_chrome_json().to_string()).unwrap();
+        let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+        let pool_spans: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("cat").and_then(|c| c.as_str()) == Some("quantize_pool"))
+            .collect();
+        assert_eq!(pool_spans.len(), qm.layers.len(), "one pool span per layer");
+        for s in &pool_spans {
+            assert_eq!(s.get("name").and_then(|n| n.as_str()), Some("layer_job"));
+            assert!(s.get("args").unwrap().get("layer").is_some());
+            assert!(s.get("args").unwrap().get("queued_ms").is_some());
+        }
+    }
+
+    #[test]
+    fn budget_and_workers_do_not_change_bytes() {
+        // In-module smoke of the tentpole invariant (the full grid lives
+        // in rust/tests/determinism.rs): a spill-forcing budget and a
+        // fixed worker count produce the exact bytes of the defaults.
+        let (ck, calib, pcfg) = tiny_setup();
+        let (reference, _) = quantize_model(&ck, &calib, &pcfg).unwrap();
+        let mut sharded = pcfg.clone();
+        sharded.hessian_mem_budget = 64 * 64 * 8 + 4096; // < the block's accumulators
+        sharded.layer_workers = 3;
+        let (qm, report) = quantize_model(&ck, &calib, &sharded).unwrap();
+        assert!(report.failed_blocks.is_empty());
+        assert_eq!(
+            qm.to_bytes(crate::model::quantized::QZ_VERSION),
+            reference.to_bytes(crate::model::quantized::QZ_VERSION)
+        );
+    }
+
     use crate::model::quantized::QZ_VERSION;
     use crate::util::fault::{FaultInjector, FaultSpec};
 
@@ -1396,6 +1663,18 @@ mod tests {
             ("seed", {
                 let mut c = pcfg.clone();
                 c.seed = 8;
+                c
+            }),
+            // Shard-layout knobs don't change quantized bytes, but resume
+            // still refuses them: "resume" means "the same run".
+            ("hessian_mem_budget", {
+                let mut c = pcfg.clone();
+                c.hessian_mem_budget = 1 << 20;
+                c
+            }),
+            ("layer_workers", {
+                let mut c = pcfg.clone();
+                c.layer_workers = 3;
                 c
             }),
         ];

@@ -88,7 +88,7 @@ impl Env {
             calib_seqs: self.calib_seqs,
             calib_seq_len: 128,
             seed: 0x5155_4950,
-            faults: None,
+            ..Default::default()
         };
         let (qm, report) = quantize_model(&ck, &calib, &pcfg)?;
         Ok((qm, report.total_proxy()))

@@ -37,7 +37,11 @@
 //! quantize with a `.qzp` journal, kill at a seeded block boundary,
 //! resume, verify the artifact is byte-identical to an uninterrupted
 //! run, and report the crash-path cost vs a cold start (EXPERIMENTS.md
-//! §Robustness).
+//! §Robustness) — followed by the sharded-memory phase (DESIGN.md §11):
+//! the same quantization under a Hessian budget small enough to force
+//! spills plus a 3-worker layer pool, reporting peak resident bytes and
+//! spill count and requiring the artifact byte-identical to the
+//! unlimited run (EXPERIMENTS.md §Perf 7).
 //!
 //! `quip sweep <rho|calib|greedy|batch|transform|quant|codebook|serve|session>
 //! [--model s0] [--bits 2]`. `batch`, `transform`, `quant`, `codebook`,
@@ -76,8 +80,10 @@ pub fn run_sweep(which: &str, args: &Args) -> crate::Result<()> {
 /// (soft fault — the journal on disk is exactly what a process kill
 /// would leave), resume, and require the final artifact byte-identical
 /// to an uninterrupted run. Reports the crash-path cost (interrupted +
-/// resume wall-clock) against the cold run. Artifact-free; CI runs it
-/// with `--fast`.
+/// resume wall-clock) against the cold run. A second phase reruns the
+/// quantization budget-capped (spilling Hessians, 3 layer workers) and
+/// pins peak resident bytes, spill count, and byte-identity (DESIGN.md
+/// §11). Artifact-free; CI runs it with `--fast`.
 fn sweep_session(args: &Args) -> crate::Result<()> {
     use crate::coordinator::QuantSession;
     use crate::data::gen::markov_stream;
@@ -108,7 +114,7 @@ fn sweep_session(args: &Args) -> crate::Result<()> {
         calib_seqs: 4,
         calib_seq_len: 24,
         seed: 7,
-        faults: None,
+        ..Default::default()
     };
     let n_blocks = cfg.n_layers;
     println!(
@@ -202,6 +208,79 @@ fn sweep_session(args: &Args) -> crate::Result<()> {
     out.set("resume_s", Json::Num(resume_s));
     out.set("crash_path_x", Json::Num(crash_path_x));
     out.set("byte_identical", Json::Num(1.0));
+
+    // Sharded phase (DESIGN.md §11): rerun the same quantization with a
+    // Hessian budget too small to hold one block's accumulators resident
+    // (forcing spills) and a 3-worker layer pool, and require the artifact
+    // byte-identical to the unlimited in-memory run above. Reports the
+    // measured peak resident bytes (gauge `quip_hessian_peak_bytes`) and
+    // spill count scraped from a fresh metric registry.
+    let d = cfg.d_model;
+    let budget = d * d * 8 + d * d * 4; // 1.5 accumulators: spills guaranteed
+    let mut shard_cfg = pcfg.clone();
+    shard_cfg.hessian_mem_budget = budget;
+    shard_cfg.layer_workers = 3;
+    let registry = Arc::new(crate::obs::registry::MetricRegistry::new());
+    let t3 = Instant::now();
+    let (sharded, sreport) = QuantSession::new(&ck, shard_cfg)?
+        .with_metrics(Arc::clone(&registry))
+        .run(&calib)?;
+    let sharded_s = t3.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        sreport.failed_blocks.is_empty(),
+        "sharded session reported failed blocks: {:?}",
+        sreport.failed_blocks
+    );
+    anyhow::ensure!(
+        sharded.to_bytes(QZ_VERSION) == cold_bytes,
+        "budget-capped sharded artifact differs from the in-memory run"
+    );
+    let scrape = registry.render_prometheus();
+    let metric = |name: &str| -> f64 {
+        scrape
+            .lines()
+            .find(|l| l.split_whitespace().next() == Some(name))
+            .and_then(|l| l.split_whitespace().last())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.0)
+    };
+    let peak = metric("quip_hessian_peak_bytes");
+    let spills = metric("quip_hessian_spill_total");
+    let ceiling = budget.max(d * d * 8 + crate::hessian::PANEL * d * 4);
+    anyhow::ensure!(
+        peak > 0.0 && peak <= ceiling as f64,
+        "peak Hessian bytes {peak} outside (0, {ceiling}] — budget not enforced"
+    );
+    anyhow::ensure!(spills >= 1.0, "tiny budget produced no spills");
+    let s_per_layer = sharded_s / sharded.layers.len().max(1) as f64;
+    let mut st = TablePrinter::new(&[
+        "budget B", "workers", "peak Hessian B", "spills", "s/layer", "identical",
+    ]);
+    st.row(vec![
+        budget.to_string(),
+        "3".to_string(),
+        format!("{peak:.0}"),
+        format!("{spills:.0}"),
+        format!("{s_per_layer:.3}"),
+        "yes".to_string(),
+    ]);
+    println!();
+    st.print();
+    println!(
+        "\nsharded phase: {:.0} peak resident Hessian bytes under a {budget}-byte \
+         budget ({spills:.0} spills), artifact byte-identical to the in-memory run.",
+        peak
+    );
+    let mut so = Json::obj();
+    so.set("budget_bytes", Json::Num(budget as f64));
+    so.set("layer_workers", Json::Num(3.0));
+    so.set("peak_hessian_bytes", Json::Num(peak));
+    so.set("spills", Json::Num(spills));
+    so.set("sharded_s", Json::Num(sharded_s));
+    so.set("s_per_layer", Json::Num(s_per_layer));
+    so.set("byte_identical", Json::Num(1.0));
+    out.set("sharded", so);
+
     write_result("sweep_session", &out)?;
     Ok(())
 }
@@ -267,7 +346,7 @@ fn sweep_calib(args: &Args) -> crate::Result<()> {
             calib_seqs: segs,
             calib_seq_len: 128,
             seed: 0x5155_4950,
-            faults: None,
+            ..Default::default()
         };
         let (qm, _) = quantize_model(&ck, &calib, &pcfg)?;
         let mut m = Transformer::from_checkpoint(&ck)?;

@@ -14,8 +14,11 @@
 
 use crate::linalg::gemm::{mirror_upper, syrk_acc_upper};
 use crate::linalg::Mat;
+use crate::util::bytes::{Reader, Writer};
 use std::collections::BTreeMap;
 use std::time::Instant;
+
+pub mod sharded;
 
 /// Rows per rank-k flush. Fixed (not tunable) so that flush boundaries —
 /// and therefore f64 summation order — are a pure function of the stream
@@ -107,6 +110,63 @@ impl HessianAccum {
             1.0
         };
         h.scale(scale)
+    }
+
+    /// Resident bytes of this accumulator's deterministic state: the n×n
+    /// f64 sum plus the buffered sub-panel f32 rows. This is the figure
+    /// the sharded store's memory budget accounts against — fixed-size
+    /// bookkeeping (counts, the reusable conversion buffer) is excluded
+    /// so the accounting is a pure function of (n, stream position) and
+    /// identical across runs.
+    pub fn mem_bytes(&self) -> usize {
+        self.n * self.n * 8 + self.pending.len() * 4
+    }
+
+    /// Serialize the complete streaming state. [`restore`](Self::restore)
+    /// rebuilds an accumulator that continues the stream — and finishes —
+    /// bit-identically to one that never left memory: the f64 sum and the
+    /// pending f32 rows roundtrip exactly, and flush boundaries depend
+    /// only on the stream position, which `count` preserves.
+    pub fn snapshot(&self, w: &mut Writer) {
+        w.u64(self.n as u64);
+        w.u64(self.count as u64);
+        w.u64(self.flushed as u64);
+        w.f64(self.seconds);
+        w.f64s(&self.sum.data);
+        w.f32s(&self.pending);
+    }
+
+    /// Rebuild an accumulator from a [`snapshot`](Self::snapshot).
+    pub fn restore(r: &mut Reader) -> crate::Result<HessianAccum> {
+        let n = r.u64()? as usize;
+        let count = r.u64()? as usize;
+        let flushed = r.u64()? as usize;
+        let seconds = r.f64()?;
+        let data = r.f64s()?;
+        anyhow::ensure!(
+            n >= 1 && data.len() == n * n,
+            "hessian snapshot: sum has {} entries, expected {n}×{n}",
+            data.len()
+        );
+        let pending = r.f32s()?;
+        anyhow::ensure!(
+            pending.len() % n == 0 && pending.len() < PANEL * n,
+            "hessian snapshot: pending buffer of {} f32s is not a sub-panel of {n}-wide rows",
+            pending.len()
+        );
+        Ok(HessianAccum {
+            n,
+            sum: Mat {
+                rows: n,
+                cols: n,
+                data,
+            },
+            count,
+            pending,
+            panel: Vec::new(),
+            flushed,
+            seconds,
+        })
     }
 
     /// Effective accumulate bandwidth in GB/s: each accumulated row
@@ -313,6 +373,55 @@ mod tests {
         let mut whole = HessianAccum::new(n);
         whole.add_rows(&x, n);
         assert_eq!(acc.finish().data, whole.finish().data);
+    }
+
+    #[test]
+    fn snapshot_restore_mid_stream_is_bit_identical() {
+        // Spill fidelity: freeze the accumulator mid-stream (partial
+        // panel pending), restore it, continue streaming — the final H
+        // must match an uninterrupted accumulator bit for bit, and the
+        // bandwidth bookkeeping must survive the roundtrip.
+        let mut rng = Rng::new(12);
+        let n = 16;
+        let total = PANEL + 53;
+        let x: Vec<f32> = (0..total * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let split = PANEL + 11; // mid-stream, partial panel pending
+        let mut acc = HessianAccum::new(n);
+        acc.add_rows(&x[..split * n], n);
+        let mut w = crate::util::bytes::Writer::new();
+        acc.snapshot(&mut w);
+        let bytes_before = acc.mem_bytes();
+        drop(acc);
+        let mut back =
+            HessianAccum::restore(&mut crate::util::bytes::Reader::new(&w.buf)).unwrap();
+        assert_eq!(back.count, split);
+        assert_eq!(back.mem_bytes(), bytes_before);
+        back.add_rows(&x[split * n..], n);
+        let mut whole = HessianAccum::new(n);
+        whole.add_rows(&x, n);
+        assert_eq!(back.finish().data, whole.finish().data);
+        assert_eq!(back.count, whole.count);
+    }
+
+    #[test]
+    fn restore_rejects_malformed_snapshots() {
+        let mut acc = HessianAccum::new(4);
+        acc.add_rows(&[1.0; 8], 4);
+        let mut w = crate::util::bytes::Writer::new();
+        acc.snapshot(&mut w);
+        // Truncation anywhere inside the snapshot is a clean error.
+        for cut in [0, 8, 20, w.buf.len() - 1] {
+            assert!(
+                HessianAccum::restore(&mut crate::util::bytes::Reader::new(&w.buf[..cut]))
+                    .is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+        // A sum-length/n mismatch is caught, not trusted.
+        let mut bad = crate::util::bytes::Writer::new();
+        bad.u64(5); // n = 5 but the 4×4 sum follows
+        bad.bytes(&w.buf[8..]);
+        assert!(HessianAccum::restore(&mut crate::util::bytes::Reader::new(&bad.buf)).is_err());
     }
 
     #[test]

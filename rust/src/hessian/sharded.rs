@@ -1,0 +1,708 @@
+//! Budget-bounded Hessian accumulation: the spill/stream layer under the
+//! sharded quantization pipeline (DESIGN.md §11).
+//!
+//! A [`ShardedHessianStore`] owns one [`HessianAccum`] per Hessian-sharing
+//! key of the block being calibrated and keeps their total resident bytes
+//! under a configured budget: when an `add_rows` pushes residency over
+//! the line, least-recently-streamed accumulators are *spilled* — their
+//! exact streaming state serialized through
+//! [`HessianAccum::snapshot`] and written with
+//! [`crate::util::fsx::atomic_write`] — and transparently reloaded the
+//! next time their key streams rows or is finished. Because the snapshot
+//! roundtrips the f64 sum and pending f32 rows exactly, and panel flush
+//! boundaries depend only on the stream position, a spilled-and-reloaded
+//! accumulator finishes **bit-identically** to one that never left
+//! memory, for any budget and any chunking of the row stream (pinned by
+//! the tests below and by `rust/tests/determinism.rs`).
+//!
+//! Spill files are CRC-framed like `.qzp` journal records:
+//!
+//! ```text
+//! file := magic "QSP1" | len u32 | crc u32 | payload (len bytes)
+//! payload := HessianAccum snapshot        (crc = crc32(payload))
+//! ```
+//!
+//! A short file is a torn write (the atomic rename makes this close to
+//! impossible, but the `hessian.spill` fault point can produce one on
+//! purpose) and a full-length file with a bad CRC is bit rot; both are
+//! clean, distinguishable errors — never garbage Hessians. Eviction order
+//! is deterministic (a monotone use counter, ties broken by `BTreeMap`
+//! key order), so which keys spill — and therefore every byte that
+//! touches disk — is a pure function of the stream, not of timing.
+
+use super::HessianAccum;
+use crate::linalg::Mat;
+use crate::obs::registry::{Counter, Gauge, MetricRegistry};
+use crate::util::bytes::{Reader, Writer};
+use crate::util::crc32::crc32;
+use crate::util::fault::{FaultInjector, FaultMode};
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Magic prefix of a spill file.
+const SPILL_MAGIC: &[u8; 4] = b"QSP1";
+
+/// The store's metric handles (DESIGN.md §9 registry). Registering twice
+/// on the same registry returns the same underlying handles, so the
+/// peak-bytes gauge keeps its high-water mark across per-block stores.
+pub struct ShardMetrics {
+    /// High-water mark of resident accumulator bytes (post-eviction).
+    pub peak_bytes: Gauge,
+    /// Accumulator spill writes.
+    pub spill_total: Counter,
+    /// Bytes written to spill files.
+    pub spill_bytes_total: Counter,
+    /// Accumulator reloads from spill files (streaming or finishing).
+    pub spill_load_total: Counter,
+}
+
+impl ShardMetrics {
+    pub fn register(reg: &MetricRegistry) -> ShardMetrics {
+        ShardMetrics {
+            peak_bytes: reg.gauge(
+                "quip_hessian_peak_bytes",
+                "High-water mark of resident Hessian accumulator bytes",
+            ),
+            spill_total: reg.counter(
+                "quip_hessian_spill_total",
+                "Hessian accumulator spill writes",
+            ),
+            spill_bytes_total: reg.counter(
+                "quip_hessian_spill_bytes_total",
+                "Bytes written to Hessian spill files",
+            ),
+            spill_load_total: reg.counter(
+                "quip_hessian_spill_load_total",
+                "Hessian accumulator reloads from spill files",
+            ),
+        }
+    }
+}
+
+/// One key's accumulator: resident (`accum` is `Some`) or spilled to its
+/// spill file (`accum` is `None`).
+struct Slot {
+    dim: usize,
+    accum: Option<HessianAccum>,
+    /// A spill file for this key exists on disk (for `Drop` cleanup; the
+    /// file is only *read* while `accum` is `None`).
+    ever_spilled: bool,
+    /// Deterministic recency: the store's use counter at the key's last
+    /// `add_rows`. Never-streamed slots stay at 0 and evict first, in
+    /// `BTreeMap` key order.
+    last_use: u64,
+    /// Accumulation stats mirrored after every `add_rows` so per-layer
+    /// stage timings survive spills.
+    seconds: f64,
+    gbps: f64,
+}
+
+/// Deterministic, budget-bounded set of streaming Hessian accumulators
+/// with LRU spill to CRC-framed files. See the module docs.
+pub struct ShardedHessianStore {
+    slots: BTreeMap<String, Slot>,
+    /// Resident-byte budget; 0 means unlimited (nothing ever spills).
+    budget: usize,
+    dir: PathBuf,
+    faults: Option<Arc<FaultInjector>>,
+    metrics: Option<ShardMetrics>,
+    clock: u64,
+    peak: usize,
+    spills: usize,
+    /// First deferred error. The activation-capture sink cannot return
+    /// `Result`, so `add_rows` records failures here and
+    /// [`check`](Self::check) surfaces them after the forward pass.
+    poisoned: Option<String>,
+}
+
+impl ShardedHessianStore {
+    /// One accumulator per `(hkey, input dim)`; `budget_bytes = 0` means
+    /// unlimited. `dir` holds spill files and is only created when
+    /// something actually spills.
+    pub fn new(keys: &[(String, usize)], budget_bytes: usize, dir: &Path) -> ShardedHessianStore {
+        let mut slots = BTreeMap::new();
+        for (key, dim) in keys {
+            slots.entry(key.clone()).or_insert_with(|| Slot {
+                dim: *dim,
+                accum: Some(HessianAccum::new(*dim)),
+                ever_spilled: false,
+                last_use: 0,
+                seconds: 0.0,
+                gbps: 0.0,
+            });
+        }
+        ShardedHessianStore {
+            slots,
+            budget: budget_bytes,
+            dir: dir.to_path_buf(),
+            faults: None,
+            metrics: None,
+            clock: 0,
+            peak: 0,
+            spills: 0,
+            poisoned: None,
+        }
+    }
+
+    /// Arm the `hessian.spill` fault point (fires per spill write).
+    pub fn with_faults(mut self, faults: Option<Arc<FaultInjector>>) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Attach metric handles (peak gauge + spill counters).
+    pub fn with_metrics(mut self, metrics: Option<ShardMetrics>) -> Self {
+        self.metrics = metrics;
+        self
+    }
+
+    /// The spill file for `key`: a sanitized name plus the key's CRC so
+    /// distinct keys can never collide after sanitization.
+    fn spill_path(dir: &Path, key: &str) -> PathBuf {
+        let safe: String = key
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        dir.join(format!("{safe}_{:08x}.qsp", crc32(key.as_bytes())))
+    }
+
+    /// Stream activation rows into `hkey`'s accumulator, reloading it
+    /// from its spill file if necessary and spilling others to stay under
+    /// budget. Unknown keys are ignored (the capture sink sees every
+    /// hkey; the store only tracks its block's). Errors are deferred —
+    /// call [`check`](Self::check) after the forward pass.
+    pub fn add_rows(&mut self, hkey: &str, rows: &[f32], n: usize) {
+        if self.poisoned.is_some() {
+            return;
+        }
+        if let Err(e) = self.try_add(hkey, rows, n) {
+            self.poisoned = Some(format!("hessian store, key '{hkey}': {e}"));
+        }
+    }
+
+    fn try_add(&mut self, hkey: &str, rows: &[f32], n: usize) -> crate::Result<()> {
+        if !self.slots.contains_key(hkey) {
+            return Ok(());
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let loaded = {
+            let slot = self.slots.get_mut(hkey).expect("checked above");
+            anyhow::ensure!(
+                slot.dim == n,
+                "activation dim {n} does not match accumulator dim {}",
+                slot.dim
+            );
+            let loaded = if slot.accum.is_none() {
+                slot.accum = Some(read_spill(&Self::spill_path(&self.dir, hkey))?);
+                true
+            } else {
+                false
+            };
+            let acc = slot.accum.as_mut().expect("just ensured resident");
+            acc.add_rows(rows, n);
+            slot.seconds = acc.seconds;
+            slot.gbps = acc.effective_gbps();
+            slot.last_use = clock;
+            loaded
+        };
+        if loaded {
+            if let Some(m) = &self.metrics {
+                m.spill_load_total.inc();
+            }
+        }
+        self.enforce_budget(hkey)?;
+        let resident = self.resident_bytes();
+        if resident > self.peak {
+            self.peak = resident;
+        }
+        if let Some(m) = &self.metrics {
+            m.peak_bytes.fetch_max(resident as u64, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Surface any error deferred by [`add_rows`](Self::add_rows). Call
+    /// once per captured forward pass; the store stays poisoned (further
+    /// `add_rows` are no-ops) after the first failure.
+    pub fn check(&self) -> crate::Result<()> {
+        match &self.poisoned {
+            Some(e) => anyhow::bail!("{e}"),
+            None => Ok(()),
+        }
+    }
+
+    /// Spill least-recently-streamed accumulators (never `keep`, which
+    /// just streamed) until residency fits the budget. With only `keep`
+    /// resident the loop stops, so the effective bound is
+    /// `max(budget, largest single accumulator)`.
+    fn enforce_budget(&mut self, keep: &str) -> crate::Result<()> {
+        if self.budget == 0 {
+            return Ok(());
+        }
+        while self.resident_bytes() > self.budget {
+            let victim = self
+                .slots
+                .iter()
+                .filter(|(k, s)| s.accum.is_some() && k.as_str() != keep)
+                .min_by_key(|(_, s)| s.last_use)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => self.spill(&k)?,
+                None => break,
+            }
+        }
+        Ok(())
+    }
+
+    /// Write one slot's streaming state to its spill file and drop the
+    /// resident accumulator. The `hessian.spill` fault point fires here.
+    fn spill(&mut self, key: &str) -> crate::Result<()> {
+        let path = Self::spill_path(&self.dir, key);
+        let slot = self
+            .slots
+            .get_mut(key)
+            .ok_or_else(|| anyhow::anyhow!("spill of unknown key '{key}'"))?;
+        let acc = slot
+            .accum
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("spill of non-resident key '{key}'"))?;
+        slot.ever_spilled = true;
+        let wrote = write_spill(&path, &acc, self.faults.as_deref())?;
+        self.spills += 1;
+        if let Some(m) = &self.metrics {
+            m.spill_total.inc();
+            m.spill_bytes_total.fetch_add(wrote as u64, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Finalize `hkey`'s Hessian: `finish()` on the resident accumulator,
+    /// or read + finish its spill file. Takes `&self` so a worker pool
+    /// can finish different keys concurrently; at most one finished n×n
+    /// matrix per worker is ever materialized at once.
+    pub fn finish(&self, hkey: &str) -> crate::Result<Mat> {
+        let slot = self
+            .slots
+            .get(hkey)
+            .ok_or_else(|| anyhow::anyhow!("no Hessian accumulator for '{hkey}'"))?;
+        match &slot.accum {
+            Some(acc) => Ok(acc.finish()),
+            None => {
+                let acc = read_spill(&Self::spill_path(&self.dir, hkey))?;
+                anyhow::ensure!(
+                    acc.n == slot.dim,
+                    "spill file for '{hkey}' has dim {} instead of {}",
+                    acc.n,
+                    slot.dim
+                );
+                if let Some(m) = &self.metrics {
+                    m.spill_load_total.inc();
+                }
+                Ok(acc.finish())
+            }
+        }
+    }
+
+    /// Accumulation stats for `hkey` — (seconds, effective GB/s) —
+    /// mirrored at the last `add_rows`, so they survive spills.
+    pub fn stats(&self, hkey: &str) -> (f64, f64) {
+        self.slots
+            .get(hkey)
+            .map(|s| (s.seconds, s.gbps))
+            .unwrap_or((0.0, 0.0))
+    }
+
+    /// Bytes of currently-resident accumulator state (the budget's view:
+    /// n×n f64 sums + pending sub-panel rows).
+    pub fn resident_bytes(&self) -> usize {
+        self.slots
+            .values()
+            .filter_map(|s| s.accum.as_ref())
+            .map(|a| a.mem_bytes())
+            .sum()
+    }
+
+    /// High-water mark of [`resident_bytes`](Self::resident_bytes) over
+    /// the store's lifetime (measured post-eviction, so it is bounded by
+    /// `max(budget, largest single accumulator)`).
+    pub fn peak_bytes(&self) -> usize {
+        self.peak
+    }
+
+    /// Number of spill writes performed.
+    pub fn spill_count(&self) -> usize {
+        self.spills
+    }
+}
+
+impl Drop for ShardedHessianStore {
+    fn drop(&mut self) {
+        // Best-effort cleanup: spill files are scratch state, not
+        // artifacts. A killed process skips this; a later session simply
+        // overwrites the stale files (they are never read unless this
+        // store spilled them itself).
+        let mut any = false;
+        for (key, slot) in &self.slots {
+            if slot.ever_spilled {
+                let _ = std::fs::remove_file(Self::spill_path(&self.dir, key));
+                any = true;
+            }
+        }
+        if any {
+            let _ = std::fs::remove_dir(&self.dir);
+        }
+    }
+}
+
+/// Serialize `acc` and write it to `path` (atomically, except under an
+/// armed `hessian.spill` torn fault, which persists a seeded prefix in
+/// place — the on-disk state a power cut would leave). Returns the bytes
+/// written.
+fn write_spill(
+    path: &Path,
+    acc: &HessianAccum,
+    faults: Option<&FaultInjector>,
+) -> crate::Result<usize> {
+    let mut w = Writer::new();
+    acc.snapshot(&mut w);
+    let payload = w.buf;
+    let mut bytes = Vec::with_capacity(12 + payload.len());
+    bytes.extend_from_slice(SPILL_MAGIC);
+    bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    bytes.extend_from_slice(&crc32(&payload).to_le_bytes());
+    bytes.extend_from_slice(&payload);
+    if let Some(f) = faults {
+        match f.check("hessian.spill") {
+            Some(FaultMode::Torn) => {
+                let keep = f.torn_len("hessian.spill", bytes.len());
+                if let Some(parent) = path.parent() {
+                    std::fs::create_dir_all(parent)?;
+                }
+                let mut file = std::fs::File::create(path)?;
+                file.write_all(&bytes[..keep])?;
+                file.sync_data()?;
+                return f.die("hessian.spill", FaultMode::Torn).map(|_| 0);
+            }
+            // preflight: allow(panic, "the panic fault mode exists to panic on purpose")
+            Some(FaultMode::Panic) => panic!("fault injected: hessian.spill (panic)"),
+            Some(mode) => return f.die("hessian.spill", mode).map(|_| 0),
+            None => {}
+        }
+    }
+    crate::util::fsx::atomic_write(path, &bytes)?;
+    Ok(bytes.len())
+}
+
+/// Read and validate one spill file. A short file is reported as torn, a
+/// full-length file with a CRC mismatch as corruption; both refuse
+/// cleanly rather than feed a damaged Hessian to the rounder.
+pub fn read_spill(path: &Path) -> crate::Result<HessianAccum> {
+    let buf = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading spill file {path:?}: {e}"))?;
+    anyhow::ensure!(
+        buf.len() >= 12,
+        "spill file {path:?}: {} bytes is shorter than the header (torn write?)",
+        buf.len()
+    );
+    anyhow::ensure!(
+        &buf[..4] == SPILL_MAGIC,
+        "spill file {path:?}: bad magic {:02x?}",
+        &buf[..4]
+    );
+    let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    let stored_crc = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+    anyhow::ensure!(
+        buf.len() == 12 + len,
+        "spill file {path:?}: payload is {} of {len} bytes (torn write?)",
+        buf.len().saturating_sub(12)
+    );
+    let payload = &buf[12..];
+    let actual = crc32(payload);
+    anyhow::ensure!(
+        stored_crc == actual,
+        "spill file {path:?}: CRC mismatch (stored {stored_crc:08x}, computed {actual:08x}) \
+         — refusing to accumulate on a damaged Hessian"
+    );
+    let mut r = Reader::new(payload);
+    let acc = HessianAccum::restore(&mut r)?;
+    anyhow::ensure!(
+        r.remaining() == 0,
+        "spill file {path:?}: {} trailing bytes",
+        r.remaining()
+    );
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hessian::PANEL;
+    use crate::util::fault::FaultSpec;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("quip_spill_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Per-key row streams: three 16-dim keys with different lengths so
+    /// spills interleave with partial panels.
+    fn streams(n: usize) -> Vec<(String, Vec<f32>)> {
+        let mut rng = Rng::new(77);
+        ["a", "b", "c"]
+            .iter()
+            .enumerate()
+            .map(|(i, k)| {
+                let rows = PANEL + 11 * (i + 1);
+                let data: Vec<f32> =
+                    (0..rows * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+                (k.to_string(), data)
+            })
+            .collect()
+    }
+
+    fn keys(n: usize) -> Vec<(String, usize)> {
+        vec![("a".into(), n), ("b".into(), n), ("c".into(), n)]
+    }
+
+    /// Budget that fits roughly one-and-a-half 16-dim accumulators, so a
+    /// three-key stream must spill.
+    fn tiny_budget(n: usize) -> usize {
+        n * n * 8 * 3 / 2
+    }
+
+    #[test]
+    fn finish_is_bit_identical_across_chunkings_and_budgets() {
+        // The tentpole invariant at store granularity: any chunking of
+        // the interleaved row stream {1 row at a time, ragged, all at
+        // once} × {unlimited, spill-forcing} budgets must finish every
+        // key bit-identically to a plain in-memory accumulator.
+        let n = 16;
+        let streams = streams(n);
+        let reference: Vec<Vec<f64>> = streams
+            .iter()
+            .map(|(_, data)| {
+                let mut acc = HessianAccum::new(n);
+                acc.add_rows(data, n);
+                acc.finish().data
+            })
+            .collect();
+        let chunkings: &[&[usize]] = &[&[1], &[7, 30, 130, 1], &[usize::MAX]];
+        for (ci, chunking) in chunkings.iter().enumerate() {
+            for &budget in &[0usize, tiny_budget(n)] {
+                let dir = tmpdir(&format!("chunk{ci}_{budget}"));
+                let mut store = ShardedHessianStore::new(&keys(n), budget, &dir);
+                // Interleave keys round-robin, each advancing through its
+                // own stream by the chunking's repeating pattern.
+                let mut offsets = vec![0usize; streams.len()];
+                let mut pat = vec![0usize; streams.len()];
+                loop {
+                    let mut progressed = false;
+                    for (si, (key, data)) in streams.iter().enumerate() {
+                        let total = data.len() / n;
+                        if offsets[si] >= total {
+                            continue;
+                        }
+                        let want = chunking[pat[si] % chunking.len()];
+                        pat[si] += 1;
+                        let take = want.min(total - offsets[si]);
+                        let lo = offsets[si] * n;
+                        store.add_rows(key, &data[lo..lo + take * n], n);
+                        offsets[si] += take;
+                        progressed = true;
+                    }
+                    if !progressed {
+                        break;
+                    }
+                }
+                store.check().unwrap();
+                if budget > 0 {
+                    assert!(store.spill_count() > 0, "tiny budget must force spills");
+                    assert!(
+                        store.peak_bytes() <= budget.max(n * n * 8 + PANEL * n * 4),
+                        "peak {} over bound",
+                        store.peak_bytes()
+                    );
+                } else {
+                    assert_eq!(store.spill_count(), 0, "unlimited budget never spills");
+                }
+                for ((key, _), want) in streams.iter().zip(&reference) {
+                    let h = store.finish(key).unwrap();
+                    assert_eq!(
+                        &h.data, want,
+                        "chunking {ci} budget {budget} key {key} changed bits"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stats_survive_spills() {
+        let n = 16;
+        let dir = tmpdir("stats");
+        let mut store = ShardedHessianStore::new(&keys(n), tiny_budget(n), &dir);
+        for (key, data) in &streams(n) {
+            store.add_rows(key, data, n);
+        }
+        store.check().unwrap();
+        assert!(store.spill_count() > 0);
+        for (key, _) in &streams(n) {
+            let (seconds, gbps) = store.stats(key);
+            assert!(seconds > 0.0, "{key}: accumulate seconds lost across spill");
+            assert!(gbps.is_finite() && gbps >= 0.0);
+        }
+        assert_eq!(store.stats("nope"), (0.0, 0.0));
+    }
+
+    #[test]
+    fn unknown_keys_are_ignored_and_dim_mismatch_poisons() {
+        let n = 16;
+        let dir = tmpdir("poison");
+        let mut store = ShardedHessianStore::new(&keys(n), 0, &dir);
+        store.add_rows("unknown", &vec![1.0; 8], 8);
+        store.check().unwrap();
+        store.add_rows("a", &vec![1.0; 8], 8); // dim 8 ≠ 16
+        let err = store.check().unwrap_err().to_string();
+        assert!(err.contains("dim"), "{err}");
+        // Poisoned stores stay poisoned; later good rows don't mask it.
+        store.add_rows("a", &vec![1.0; n], n);
+        assert!(store.check().is_err());
+    }
+
+    #[test]
+    fn spill_files_torture_truncated_corrupt_magic() {
+        // Mirror the .qzp torn-tail tests: every damaged-file shape must
+        // be a clean, named error.
+        let n = 8;
+        let dir = tmpdir("torture");
+        let mut acc = HessianAccum::new(n);
+        let mut rng = Rng::new(5);
+        let rows: Vec<f32> = (0..(PANEL + 3) * n).map(|_| rng.normal() as f32).collect();
+        acc.add_rows(&rows, n);
+        let path = dir.join("victim.qsp");
+        write_spill(&path, &acc, None).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // Pristine file roundtrips bit-identically.
+        assert_eq!(read_spill(&path).unwrap().finish().data, acc.finish().data);
+        // Truncation at every framing boundary and mid-payload: torn.
+        for cut in [0usize, 3, 11, 12, good.len() / 2, good.len() - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            let err = read_spill(&path).unwrap_err().to_string();
+            assert!(err.contains("torn") || err.contains("truncated"), "cut {cut}: {err}");
+        }
+        // Full-length, one payload bit flipped: CRC refusal.
+        let mut bad = good.clone();
+        let mid = 12 + (bad.len() - 12) / 2;
+        bad[mid] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_spill(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_spill(&path).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        // Missing file.
+        std::fs::remove_file(&path).unwrap();
+        assert!(read_spill(&path).is_err());
+    }
+
+    #[test]
+    fn spill_fault_point_kills_and_tears() {
+        let n = 16;
+        // Kill mode: the spill write dies before touching disk and the
+        // error surfaces through check(), naming the point.
+        let dir = tmpdir("fault_kill");
+        let faults = Arc::new(FaultInjector::new(
+            vec![FaultSpec::parse("hessian.spill@1").unwrap()],
+            true,
+            0x5EED,
+        ));
+        let mut store = ShardedHessianStore::new(&keys(n), tiny_budget(n), &dir)
+            .with_faults(Some(Arc::clone(&faults)));
+        for (key, data) in &streams(n) {
+            store.add_rows(key, data, n);
+        }
+        let err = store.check().unwrap_err().to_string();
+        assert!(err.contains("fault injected: hessian.spill"), "{err}");
+
+        // Torn mode: a seeded prefix lands on disk, read_spill refuses
+        // it, and a clean re-run overwrites it and finishes identically.
+        let dir = tmpdir("fault_torn");
+        let faults = Arc::new(FaultInjector::new(
+            vec![FaultSpec::parse("hessian.spill@1:torn").unwrap()],
+            true,
+            0x5EED,
+        ));
+        let mut store = ShardedHessianStore::new(&keys(n), tiny_budget(n), &dir)
+            .with_faults(Some(Arc::clone(&faults)));
+        let streams = streams(n);
+        for (key, data) in &streams {
+            store.add_rows(key, data, n);
+        }
+        assert!(store.check().is_err());
+        let torn: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        assert_eq!(torn.len(), 1, "exactly the torn spill file on disk");
+        assert!(read_spill(&torn[0]).is_err(), "torn spill must not read back");
+        drop(store);
+        // The wreck re-collects cleanly: same dir, no faults, stale torn
+        // file overwritten, bit-identical finish.
+        let mut store = ShardedHessianStore::new(&keys(n), tiny_budget(n), &dir);
+        for (key, data) in &streams {
+            store.add_rows(key, data, n);
+        }
+        store.check().unwrap();
+        for (key, data) in &streams {
+            let mut acc = HessianAccum::new(n);
+            acc.add_rows(data, n);
+            assert_eq!(store.finish(key).unwrap().data, acc.finish().data);
+        }
+    }
+
+    #[test]
+    fn metrics_report_peak_and_spills() {
+        let n = 16;
+        let reg = MetricRegistry::new();
+        let dir = tmpdir("metrics");
+        let mut store = ShardedHessianStore::new(&keys(n), tiny_budget(n), &dir)
+            .with_metrics(Some(ShardMetrics::register(&reg)));
+        for (key, data) in &streams(n) {
+            store.add_rows(key, data, n);
+        }
+        store.check().unwrap();
+        let m = ShardMetrics::register(&reg); // same handles
+        assert_eq!(m.peak_bytes.get() as usize, store.peak_bytes());
+        assert!(m.peak_bytes.get() > 0);
+        assert_eq!(m.spill_total.get() as usize, store.spill_count());
+        assert!(m.spill_bytes_total.get() > 0);
+        let text = reg.render_prometheus();
+        assert!(text.contains("quip_hessian_peak_bytes"), "{text}");
+        assert!(text.contains("quip_hessian_spill_total"), "{text}");
+    }
+
+    #[test]
+    fn drop_cleans_spill_files() {
+        let n = 16;
+        let dir = tmpdir("cleanup");
+        {
+            let mut store = ShardedHessianStore::new(&keys(n), tiny_budget(n), &dir);
+            for (key, data) in &streams(n) {
+                store.add_rows(key, data, n);
+            }
+            store.check().unwrap();
+            assert!(store.spill_count() > 0);
+            assert!(dir.exists(), "spill dir created on demand");
+        }
+        assert!(!dir.exists(), "drop removes spill files and the empty dir");
+    }
+}

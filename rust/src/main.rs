@@ -4,12 +4,18 @@
 //! quip quantize --model s1 --bits 2 [--rounder ldlq] [--transform kron]
 //!               [--baseline] [--out path.qz]
 //!               [--checkpoint-dir DIR [--resume]]
+//!               [--hessian-mem-budget BYTES] [--layer-workers N]
 //!               [--inject-fault point@n[:kill|torn|panic]]...
 //!               # --checkpoint-dir journals each finished block (.qzp +
 //!               # manifest, DESIGN.md §10); --resume replays it and
 //!               # continues — byte-identical to an uninterrupted run.
-//!               # --inject-fault (repeatable) arms deterministic crash
-//!               # points (hard mode: the process exits 137).
+//!               # --hessian-mem-budget caps resident Hessian accumulator
+//!               # bytes (k/m/g suffixes; 0 = unlimited), spilling cold
+//!               # accumulators to CRC-framed files; --layer-workers sets
+//!               # the across-layer quantization pool size (0 = auto).
+//!               # Either way the artifact is bit-identical (DESIGN.md
+//!               # §11). --inject-fault (repeatable) arms deterministic
+//!               # crash points (hard mode: the process exits 137).
 //! quip eval     --model s1 [--qz path.qz]
 //! quip gen      --model s1 [--qz path.qz] --prompt "3,17,9" --max-tokens 32
 //! quip serve    --model s1 [--qz path.qz] [--addr 127.0.0.1:7077]
@@ -166,6 +172,8 @@ fn quantize_with_session(
         calib_seq_len: 128,
         seed: 0x5155_4950,
         faults,
+        hessian_mem_budget: args.opt_bytes("hessian-mem-budget", 0),
+        layer_workers: args.opt_usize("layer-workers", 0),
     };
     let session = match args.opt("checkpoint-dir") {
         None => {
@@ -205,6 +213,8 @@ fn cmd_quantize(args: &Args) -> quip::Result<()> {
     let t0 = std::time::Instant::now();
     let (qm, proxy) = if args.opt("checkpoint-dir").is_some()
         || args.flag("resume")
+        || args.opt("hessian-mem-budget").is_some()
+        || args.opt("layer-workers").is_some()
         || !fault_specs(args).is_empty()
     {
         quantize_with_session(args, &env, &model, cfg)?

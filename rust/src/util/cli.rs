@@ -70,6 +70,16 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// A byte-size option accepting `k`/`m`/`g` suffixes (binary units,
+    /// case-insensitive): `--hessian-mem-budget 512m`. A bare number is
+    /// bytes; unparsable values fall back to the default, like the other
+    /// typed accessors.
+    pub fn opt_bytes(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .and_then(parse_bytes)
+            .unwrap_or(default)
+    }
+
     /// A boolean `--flag` (also accepts `--key true/false`).
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
@@ -82,6 +92,19 @@ impl Args {
     pub fn pos(&self, idx: usize) -> Option<&str> {
         self.positional.get(idx).map(|s| s.as_str())
     }
+}
+
+/// Parse `123`, `64k`, `512M`, `2g` (binary multipliers) into bytes.
+fn parse_bytes(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (digits, mult) = match s.char_indices().last()? {
+        (i, 'k') | (i, 'K') => (&s[..i], 1usize << 10),
+        (i, 'm') | (i, 'M') => (&s[..i], 1usize << 20),
+        (i, 'g') | (i, 'G') => (&s[..i], 1usize << 30),
+        _ => (s, 1),
+    };
+    let n: usize = digits.parse().ok()?;
+    n.checked_mul(mult)
 }
 
 #[cfg(test)]
@@ -121,5 +144,22 @@ mod tests {
         let a = parse("x --alpha -0.5");
         // "-0.5" does not start with --, so it binds as the value.
         assert_eq!(a.opt_f64("alpha", 0.0), -0.5);
+    }
+
+    #[test]
+    fn byte_sizes_parse_with_suffixes() {
+        assert_eq!(parse_bytes("0"), Some(0));
+        assert_eq!(parse_bytes("4096"), Some(4096));
+        assert_eq!(parse_bytes("64k"), Some(64 << 10));
+        assert_eq!(parse_bytes("512M"), Some(512 << 20));
+        assert_eq!(parse_bytes("2g"), Some(2 << 30));
+        assert_eq!(parse_bytes(""), None);
+        assert_eq!(parse_bytes("k"), None);
+        assert_eq!(parse_bytes("12q"), None);
+        assert_eq!(parse_bytes("-5"), None);
+        let a = parse("x --hessian-mem-budget 64k --layer-workers 3");
+        assert_eq!(a.opt_bytes("hessian-mem-budget", 0), 64 << 10);
+        assert_eq!(a.opt_bytes("missing", 7), 7);
+        assert_eq!(a.opt_usize("layer-workers", 0), 3);
     }
 }

@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::Instant;
 
 /// Number of worker threads to use by default (bounded: quantization jobs
 /// are memory-bandwidth heavy, more threads than cores only adds noise).
@@ -77,6 +78,69 @@ where
             let v = f(i);
             **slots[i].lock().unwrap() = Some(v);
         });
+    }
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+/// Where and when one work item of [`parallel_map_traced`] ran, for
+/// bridging pool scheduling onto observability spans (queue time vs run
+/// time, which worker lane). Timestamps are seconds since the dispatch
+/// call's start, so they are directly comparable across items.
+#[derive(Clone, Copy, Debug)]
+pub struct ItemTiming {
+    /// Index of the worker thread that claimed the item (0-based).
+    pub worker: usize,
+    /// Seconds from dispatch start until the item was claimed.
+    pub start_seconds: f64,
+    /// Seconds the item's closure ran.
+    pub run_seconds: f64,
+}
+
+/// [`parallel_map`] plus per-item [`ItemTiming`]. Work-stealing over an
+/// atomic cursor exactly like `parallel_for`, so which *worker* runs an
+/// item is racy — but item order, and therefore any result the caller
+/// derives from `f` alone, is not. Callers must treat the timings as
+/// observability, never as inputs to deterministic outputs.
+pub fn parallel_map_traced<T, F>(n: usize, threads: usize, f: F) -> Vec<(T, ItemTiming)>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<(T, ItemTiming)>> = (0..n).map(|_| None).collect();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    let t0 = Instant::now();
+    let cursor = AtomicUsize::new(0);
+    {
+        let slots: Vec<Mutex<&mut Option<(T, ItemTiming)>>> =
+            out.iter_mut().map(Mutex::new).collect();
+        let worker = |w: usize| loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let start_seconds = t0.elapsed().as_secs_f64();
+            let run = Instant::now();
+            let v = f(i);
+            let timing = ItemTiming {
+                worker: w,
+                start_seconds,
+                run_seconds: run.elapsed().as_secs_f64(),
+            };
+            **slots[i].lock().unwrap() = Some((v, timing));
+        };
+        if threads == 1 {
+            worker(0);
+        } else {
+            thread::scope(|s| {
+                for w in 0..threads {
+                    let worker = &worker;
+                    s.spawn(move || worker(w));
+                }
+            });
+        }
     }
     out.into_iter().map(|v| v.unwrap()).collect()
 }
@@ -185,6 +249,49 @@ mod tests {
     fn parallel_map_preserves_order() {
         let out = parallel_map(100, 8, |i| i * i);
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_traced_matches_untraced_results() {
+        // Same ordered results as parallel_map, any worker count; the
+        // timing side-channel never perturbs the values.
+        let want: Vec<usize> = (0..57).map(|i| i * 3 + 1).collect();
+        for threads in [1usize, 3, 8] {
+            let out = parallel_map_traced(57, threads, |i| i * 3 + 1);
+            let vals: Vec<usize> = out.iter().map(|(v, _)| *v).collect();
+            assert_eq!(vals, want, "threads={threads}");
+            for (_, t) in &out {
+                assert!(t.worker < threads.max(1));
+                assert!(t.start_seconds >= 0.0);
+                assert!(t.run_seconds >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_traced_uses_multiple_workers() {
+        // With more items than workers and non-trivial work, at least two
+        // worker lanes claim items (work-stealing is real, not serial).
+        let out = parallel_map_traced(64, 4, |i| {
+            let mut x = i as u64;
+            for _ in 0..50_000 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            }
+            x
+        });
+        let mut workers: Vec<usize> = out.iter().map(|(_, t)| t.worker).collect();
+        workers.sort_unstable();
+        workers.dedup();
+        assert!(workers.len() >= 2, "only workers {workers:?} ran");
+    }
+
+    #[test]
+    fn parallel_map_traced_empty_and_single() {
+        assert!(parallel_map_traced(0, 4, |i| i).is_empty());
+        let out = parallel_map_traced(1, 4, |i| i + 10);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, 10);
+        assert_eq!(out[0].1.worker, 0);
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Differential determinism suite (DESIGN.md §11): the sharded streaming
+//! Hessian path — budget-bounded accumulation with spill files plus the
+//! across-layer worker pool — must produce artifacts **byte-identical**
+//! to the in-memory path. These tests pin the tentpole invariant from
+//! outside the crate, across the full grid the issue names: calibration
+//! splits {1 row, ragged, all-at-once} × worker counts {1, 3, 8} × spill
+//! forced on/off, at 2 and 4 bits for both the scalar `ldlq` and the
+//! vector `vq` rounders, plus a kill-during-spill crash-resume drill
+//! composing with the `--inject-fault` machinery (fault point
+//! `hessian.spill`).
+
+use quip::coordinator::pipeline::{quantize_model, PipelineConfig};
+use quip::coordinator::QuantSession;
+use quip::data::gen::markov_stream;
+use quip::hessian::sharded::ShardedHessianStore;
+use quip::hessian::{HessianAccum, PANEL};
+use quip::model::quantized::QZ_VERSION;
+use quip::model::weights::Checkpoint;
+use quip::model::ModelConfig;
+use quip::quant::{Method, Processing, QuantConfig};
+use quip::util::fault::{FaultInjector, FaultSpec};
+use std::sync::Arc;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig::sized("dt", 32, 2, 4, 64)
+}
+
+fn base_cfg(bits: u32, method: Method) -> PipelineConfig {
+    PipelineConfig {
+        quant: QuantConfig {
+            bits,
+            method,
+            processing: Processing::incoherent(),
+            greedy_passes: 2,
+            ..Default::default()
+        },
+        calib_seqs: 4,
+        calib_seq_len: 24,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+/// Budget holding ~1.5 of the tiny model's d×d accumulators: each block
+/// has four Hessian-sharing keys, so collection under this budget must
+/// spill.
+fn spill_budget(d: usize) -> usize {
+    d * d * 8 * 3 / 2
+}
+
+fn quantize_bytes(ck: &Checkpoint, calib: &[Vec<u32>], pcfg: &PipelineConfig) -> Vec<u8> {
+    let (qm, report) = quantize_model(ck, calib, pcfg).unwrap();
+    assert!(
+        report.failed_blocks.is_empty(),
+        "failed blocks: {:?}",
+        report.failed_blocks
+    );
+    qm.to_bytes(QZ_VERSION)
+}
+
+#[test]
+fn qz_bytes_identical_across_worker_counts_budgets_bits_and_rounders() {
+    // The e2e half of the grid: for each (bits, rounder) cell, the
+    // default in-memory single-threaded run is the reference; every
+    // (worker count × budget) combination must reproduce its `.qz`
+    // bytes exactly — spills, reloads and pool scheduling included.
+    let cfg = tiny_cfg();
+    let ck = Checkpoint::random(&cfg, 42);
+    let stream = markov_stream(cfg.vocab as u32, 5_000, 3);
+    let calib = stream.calibration(24, 4, 9);
+    let d = cfg.d_model;
+    for (bits, method) in [
+        (2, Method::Ldlq),
+        (4, Method::Ldlq),
+        (2, Method::Vq),
+        (4, Method::Vq),
+    ] {
+        let reference = quantize_bytes(&ck, &calib, &base_cfg(bits, method));
+        for workers in [1usize, 3, 8] {
+            for budget in [0usize, spill_budget(d)] {
+                let mut pcfg = base_cfg(bits, method);
+                pcfg.layer_workers = workers;
+                pcfg.hessian_mem_budget = budget;
+                let bytes = quantize_bytes(&ck, &calib, &pcfg);
+                assert!(
+                    bytes == reference,
+                    "artifact bytes changed: bits={bits} method={method:?} \
+                     workers={workers} budget={budget}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_store_matches_in_memory_across_calib_splits_and_budgets() {
+    // The calib-split half of the grid, through the public store API:
+    // the same per-key row streams delivered {1 row at a time, in a
+    // ragged repeating pattern, all at once}, interleaved round-robin
+    // across keys so spills land mid-stream, under {unlimited,
+    // spill-forcing} budgets — every finished Hessian must match a plain
+    // in-memory accumulator bit for bit.
+    let n = 24;
+    let keys: Vec<(String, usize)> =
+        ["q", "r", "s"].iter().map(|k| (k.to_string(), n)).collect();
+    let mut rng = quip::util::rng::Rng::new(0xD7);
+    let streams: Vec<(String, Vec<f32>)> = keys
+        .iter()
+        .enumerate()
+        .map(|(i, (k, _))| {
+            let rows = PANEL + 17 * (i + 1);
+            let data: Vec<f32> =
+                (0..rows * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            (k.clone(), data)
+        })
+        .collect();
+    let reference: Vec<Vec<f64>> = streams
+        .iter()
+        .map(|(_, data)| {
+            let mut acc = HessianAccum::new(n);
+            acc.add_rows(data, n);
+            acc.finish().data
+        })
+        .collect();
+    let splits: &[&[usize]] = &[&[1], &[5, 19, 64, 2], &[usize::MAX]];
+    for (si, split) in splits.iter().enumerate() {
+        for &budget in &[0usize, n * n * 8 * 3 / 2] {
+            let dir = std::env::temp_dir().join(format!(
+                "quip_dt_store_{}_{si}_{budget}",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let mut store = ShardedHessianStore::new(&keys, budget, &dir);
+            let mut offsets = vec![0usize; streams.len()];
+            let mut pat = vec![0usize; streams.len()];
+            loop {
+                let mut progressed = false;
+                for (i, (key, data)) in streams.iter().enumerate() {
+                    let total = data.len() / n;
+                    if offsets[i] >= total {
+                        continue;
+                    }
+                    let want = split[pat[i] % split.len()];
+                    pat[i] += 1;
+                    let take = want.min(total - offsets[i]);
+                    let lo = offsets[i] * n;
+                    store.add_rows(key, &data[lo..lo + take * n], n);
+                    offsets[i] += take;
+                    progressed = true;
+                }
+                if !progressed {
+                    break;
+                }
+            }
+            store.check().unwrap();
+            if budget > 0 {
+                assert!(store.spill_count() > 0, "split {si}: tiny budget never spilled");
+                assert!(
+                    store.peak_bytes() <= budget.max(n * n * 8 + PANEL * n * 4),
+                    "split {si}: peak {} over bound",
+                    store.peak_bytes()
+                );
+            } else {
+                assert_eq!(store.spill_count(), 0, "split {si}: unlimited budget spilled");
+            }
+            for ((key, _), want) in streams.iter().zip(&reference) {
+                assert!(
+                    store.finish(key).unwrap().data == *want,
+                    "split {si} budget {budget} key {key}: Hessian bits changed"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn kill_during_spill_resumes_byte_identical() {
+    // Crash-resume composition: a soft `hessian.spill` kill aborts the
+    // session mid-collection (stale spill files left on disk, zero or
+    // more blocks journaled); resuming with the same config must finish
+    // byte-identical to an uninterrupted budget-capped run — which the
+    // grid test above already pinned to the in-memory bytes.
+    let cfg = tiny_cfg();
+    let ck = Checkpoint::random(&cfg, 42);
+    let stream = markov_stream(cfg.vocab as u32, 5_000, 3);
+    let calib = stream.calibration(24, 4, 9);
+    let mut pcfg = base_cfg(2, Method::Ldlq);
+    pcfg.hessian_mem_budget = spill_budget(cfg.d_model);
+    pcfg.layer_workers = 3;
+    let cold = quantize_bytes(&ck, &calib, &pcfg);
+
+    let dir = std::env::temp_dir().join(format!("quip_dt_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut kill_cfg = pcfg.clone();
+    kill_cfg.faults = Some(Arc::new(FaultInjector::new(
+        vec![FaultSpec::parse("hessian.spill@2").unwrap()],
+        true,
+        0xD1E,
+    )));
+    let killed = QuantSession::new(&ck, kill_cfg)
+        .unwrap()
+        .with_checkpoint_dir(&dir)
+        .unwrap()
+        .run(&calib);
+    let err = killed.err().expect("kill during spill must abort the session");
+    assert!(
+        err.to_string().contains("hessian.spill"),
+        "unexpected abort: {err}"
+    );
+
+    let (qm, report) = QuantSession::resume(&ck, pcfg.clone(), &dir)
+        .unwrap()
+        .run(&calib)
+        .unwrap();
+    assert!(
+        report.failed_blocks.is_empty(),
+        "failed blocks: {:?}",
+        report.failed_blocks
+    );
+    assert!(
+        qm.to_bytes(QZ_VERSION) == cold,
+        "resume after kill-during-spill changed artifact bytes"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_refuses_a_different_shard_layout() {
+    // The Fingerprint now covers the memory budget and worker count:
+    // "resume means the same run", so a journal written under one shard
+    // layout refuses a resume under another instead of silently mixing
+    // configurations.
+    let cfg = tiny_cfg();
+    let ck = Checkpoint::random(&cfg, 42);
+    let stream = markov_stream(cfg.vocab as u32, 5_000, 3);
+    let calib = stream.calibration(24, 4, 9);
+    let mut pcfg = base_cfg(2, Method::Ldlq);
+    pcfg.hessian_mem_budget = spill_budget(cfg.d_model);
+    let dir = std::env::temp_dir().join(format!("quip_dt_refuse_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    QuantSession::new(&ck, pcfg.clone())
+        .unwrap()
+        .with_checkpoint_dir(&dir)
+        .unwrap()
+        .run(&calib)
+        .unwrap();
+    let mut other = pcfg.clone();
+    other.hessian_mem_budget = 0;
+    let err = QuantSession::resume(&ck, other, &dir)
+        .err()
+        .expect("resume under a different budget must refuse");
+    assert!(err.to_string().contains("hessian_mem_budget"), "{err}");
+    let mut other = pcfg;
+    other.layer_workers = 7;
+    let err = QuantSession::resume(&ck, other, &dir)
+        .err()
+        .expect("resume under a different worker count must refuse");
+    assert!(err.to_string().contains("layer_workers"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -29,7 +29,7 @@ fn pipeline(bits: u32, method: Method, processing: Processing) -> (Checkpoint, Q
         calib_seqs: 6,
         calib_seq_len: 32,
         seed: 5,
-        faults: None,
+        ..Default::default()
     };
     let (qm, _) = quantize_model(&ck, &calib, &pcfg).unwrap();
     (ck, qm)
@@ -176,7 +176,7 @@ fn incp_beats_baseline_on_trained_like_weights_at_2_bits() {
             calib_seqs: 4,
             calib_seq_len: 24,
             seed: 5,
-            faults: None,
+            ..Default::default()
         };
         let (_, report) = quantize_model(&ck, &calib, &pcfg).unwrap();
         report.total_proxy()

@@ -69,16 +69,21 @@ class Context:
         self.resolver = Resolver(self.crates)
 
         # orphan detection: every .rs under rust/src must be reachable from
-        # the lib or bin root
+        # the lib or bin root, and every .rs under rust/tests / rust/benches
+        # from some aux root (top-level files there are roots themselves;
+        # support modules in subdirectories must be declared by one).
         reachable = set()
         for crate in list(self.crates.values()) + self.aux_crates:
             reachable.update(crate.files)
-        for path in sorted(
-            glob.glob(os.path.join(self.repo_root, "rust", "src", "**", "*.rs"), recursive=True)
-        ):
-            rel = os.path.relpath(path, self.repo_root).replace(os.sep, "/")
-            if rel not in reachable:
-                self.orphans.append(rel)
+        for tree in (("rust", "src"), ("rust", "tests"), ("rust", "benches")):
+            for path in sorted(
+                glob.glob(
+                    os.path.join(self.repo_root, *tree, "**", "*.rs"), recursive=True
+                )
+            ):
+                rel = os.path.relpath(path, self.repo_root).replace(os.sep, "/")
+                if rel not in reachable:
+                    self.orphans.append(rel)
 
     # -- iteration helpers -------------------------------------------------
 
